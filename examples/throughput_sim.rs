@@ -1,0 +1,50 @@
+//! Cluster-throughput simulation (paper Table 2 / Fig 1a / Fig 13c):
+//! sweep per-GPU batch size and optimizer on the simulated 2× A800-80GB
+//! cluster; show where each optimizer OOMs and what that costs.
+//!
+//! Run: `cargo run --release --example throughput_sim`
+
+use adam_mini::cluster::{Job, ADAFACTOR_PROFILE, ADAM_MINI_PROFILE,
+                         ADAMW_PROFILE};
+use adam_mini::memmodel::table1_models;
+
+fn main() {
+    println!("=== Llama 2-7B on 2x A800-80GB (simulated) ===\n");
+    println!("{:<11} {:>4} {:>11} {:>8} {:>14}", "optimizer", "bs",
+             "mem/GPU", "MFU", "tokens/s");
+    for opt in [ADAMW_PROFILE, ADAM_MINI_PROFILE] {
+        let job = Job::llama7b(opt);
+        for bs in 1..=6 {
+            let mem = job.mem_per_gpu(bs);
+            let fits = mem <= job.gpu.mem_bytes;
+            println!("{:<11} {:>4} {:>9.1}GB {:>7.1}% {:>14}", opt.name,
+                     bs, mem / 1e9, job.mfu(bs) * 100.0,
+                     if fits { format!("{:.0}", job.throughput(bs)) }
+                     else { "OOM".into() });
+        }
+        println!();
+    }
+
+    println!("=== GPU-hours to a token budget (Table 2 bottom) ===\n");
+    println!("{:<22} {:>12} {:>12} {:>8}", "tokens", "AdamW (h)",
+             "Adam-mini (h)", "saved");
+    let aw = Job::llama7b(ADAMW_PROFILE);
+    let am = Job::llama7b(ADAM_MINI_PROFILE);
+    for tokens in [1e9, 70e9, 140e9] {
+        let (h_aw, h_am) = (aw.gpu_hours(tokens).unwrap(),
+                            am.gpu_hours(tokens).unwrap());
+        println!("{:<22} {:>12.1} {:>12.1} {:>7.1}%",
+                 format!("{:.0}B", tokens / 1e9), h_aw, h_am,
+                 100.0 * (1.0 - h_am / h_aw));
+    }
+
+    println!("\n=== Fig 13c: optimizer-step latency at Llama 2-1B ===\n");
+    let arch = &table1_models()[1];
+    for opt in [ADAM_MINI_PROFILE, ADAMW_PROFILE, ADAFACTOR_PROFILE] {
+        let job = Job::from_arch(arch, 2, opt);
+        let (bs, thr) = job.best_throughput().unwrap();
+        println!("{:<11} opt-step {:>6.1} ms   best bs {:>3}   \
+                  {:>8.0} tok/s", opt.name,
+                 job.opt_step_time() * 1e3, bs, thr);
+    }
+}

@@ -1,0 +1,267 @@
+"""AOT exporter: lower every (model, graph) pair to HLO text + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--models a,b,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optim as O
+from .partition import STRATEGIES, partition_spec, v_reduction_ratio
+from .zoo import model_zoo
+
+HP = O.OptHyper()
+
+# Which graphs to export per model. The `grad` artifact is the universal
+# substrate (all Rust-side optimizers consume it); fused train steps are
+# exported where the experiments A/B them (see DESIGN.md §5/§6).
+_FULL_TRAIN_MODELS = ("t295k", "m11")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape),
+                                jnp.int32 if dtype == "i32" else jnp.float32)
+
+
+def _io_entry(name, shape, dtype="f32", role="param"):
+    return {"name": name, "shape": list(shape), "dtype": dtype, "role": role}
+
+
+def _param_entries(cfg: M.ModelConfig, role: str):
+    return [_io_entry(n, s, role=role)
+            for n, s in cfg.param_shapes().items()]
+
+
+def _state_entries(cfg: M.ModelConfig, optimizer: str, strategy: str):
+    """m then v entries for the train-step ABI."""
+    entries = [_io_entry("m." + n, s, role="m")
+               for n, s in cfg.param_shapes().items()]
+    if optimizer == "adamw":
+        entries += [_io_entry("v." + n, s, role="v")
+                    for n, s in cfg.param_shapes().items()]
+    else:
+        spec = partition_spec(cfg.param_shapes(), cfg.n_heads,
+                              cfg.stacked_names(), strategy=strategy)
+        entries += [_io_entry("v." + b.name, (b.num_blocks,), role="v")
+                    for b in spec]
+    return entries
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: Dict = {
+            "version": 1,
+            "hyper": {"beta1": HP.beta1, "beta2": HP.beta2, "eps": HP.eps,
+                      "weight_decay": HP.weight_decay},
+            "models": {},
+        }
+        os.makedirs(out_dir, exist_ok=True)
+
+    def _write_hlo(self, name: str, lowered) -> str:
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        print(f"  wrote {fname} ({len(text) // 1024} KiB)", flush=True)
+        return fname
+
+    def model_entry(self, cfg: M.ModelConfig) -> Dict:
+        shapes = cfg.param_shapes()
+        params = []
+        for name, shape in shapes.items():
+            entry = {"name": name, "shape": list(shape)}
+            for strat in STRATEGIES:
+                from .partition import block_view
+                bv = block_view(name, shape, cfg.n_heads,
+                                stacked=name in cfg.stacked_names(),
+                                strategy=strat)
+                entry[strat] = [bv.num_blocks, bv.block_size]
+                if strat == "hessian":
+                    entry["category"] = bv.category
+            params.append(entry)
+        spec = partition_spec(shapes, cfg.n_heads, cfg.stacked_names())
+        return {
+            "family": cfg.family, "vocab": cfg.vocab,
+            "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len, "batch_size": cfg.batch_size,
+            "n_params": cfg.n_params,
+            "v_reduction": v_reduction_ratio(spec),
+            "params": params,
+            "artifacts": {},
+        }
+
+    def export_model(self, cfg: M.ModelConfig):
+        t0 = time.time()
+        print(f"[aot] {cfg.name}: {cfg.n_params} params", flush=True)
+        entry = self.model_entry(cfg)
+        shapes = cfg.param_shapes()
+        b, s = cfg.batch_size, cfg.seq_len
+        tok = _spec((b, s), "i32")
+        tgt = _spec((b, s), "i32")
+        scal = _spec((), "f32")
+        pspecs = [_spec(sh) for sh in shapes.values()]
+        batch_io = [_io_entry("tokens", (b, s), "i32", "batch"),
+                    _io_entry("targets", (b, s), "i32", "batch")]
+        scal_io = [_io_entry("lr", (), "f32", "scalar"),
+                   _io_entry("t", (), "f32", "scalar")]
+
+        # --- grad: the universal substrate -------------------------------
+        g = O.make_grad_step(cfg, kernels="ref")
+        lowered = jax.jit(g).lower(tok, tgt, *pspecs)
+        entry["artifacts"]["grad"] = {
+            "file": self._write_hlo(f"{cfg.name}_grad", lowered),
+            "inputs": batch_io + _param_entries(cfg, "param"),
+            "outputs": [_io_entry("loss", (), "f32", "loss")]
+            + _param_entries(cfg, "grad"),
+        }
+
+        # --- eval ---------------------------------------------------------
+        e = O.make_eval_step(cfg, kernels="ref")
+        lowered = jax.jit(e).lower(tok, tgt, *pspecs)
+        entry["artifacts"]["eval"] = {
+            "file": self._write_hlo(f"{cfg.name}_eval", lowered),
+            "inputs": batch_io + _param_entries(cfg, "param"),
+            "outputs": [_io_entry("loss", (), "f32", "loss")],
+        }
+
+        # --- weighted grad (SFT masking / ReMax advantages) ---------------
+        wg = O.make_weighted_grad_step(cfg, kernels="ref")
+        wspec = _spec((b, s), "f32")
+        lowered = jax.jit(wg).lower(tok, tgt, wspec, *pspecs)
+        entry["artifacts"]["grad_weighted"] = {
+            "file": self._write_hlo(f"{cfg.name}_grad_weighted", lowered),
+            "inputs": batch_io
+            + [_io_entry("weights", (b, s), "f32", "batch")]
+            + _param_entries(cfg, "param"),
+            "outputs": [_io_entry("loss", (), "f32", "loss")]
+            + _param_entries(cfg, "grad"),
+        }
+
+        # --- logits (sampling / analysis) ----------------------------------
+        lg = O.make_logits_step(cfg, kernels="ref")
+        lowered = jax.jit(lg).lower(tok, *pspecs)
+        entry["artifacts"]["logits"] = {
+            "file": self._write_hlo(f"{cfg.name}_logits", lowered),
+            "inputs": [batch_io[0]] + _param_entries(cfg, "param"),
+            "outputs": [_io_entry("logits", (b, s, cfg.vocab), "f32",
+                                  "logits")],
+        }
+
+        # --- LoRA adapter grads (Fig 22 / Table 5 SFT-LoRA) ----------------
+        if cfg.name in ("t48k", "t134k"):
+            rank = 4
+            lg = O.make_lora_grad_step(cfg, rank=rank, kernels="ref")
+            a_shapes, b_shapes = O.lora_shapes(cfg, rank)
+            a_specs = [_spec(s) for s in a_shapes]
+            b_specs = [_spec(s) for s in b_shapes]
+            lowered = jax.jit(lg).lower(tok, tgt, *pspecs, *a_specs,
+                                        *b_specs)
+            a_io = [_io_entry(f"lora_a.{t}", s, role="lora")
+                    for t, s in zip(O.LORA_TARGETS, a_shapes)]
+            b_io = [_io_entry(f"lora_b.{t}", s, role="lora")
+                    for t, s in zip(O.LORA_TARGETS, b_shapes)]
+            entry["artifacts"]["grad_lora"] = {
+                "file": self._write_hlo(f"{cfg.name}_grad_lora", lowered),
+                "inputs": batch_io + _param_entries(cfg, "param")
+                + a_io + b_io,
+                "outputs": [_io_entry("loss", (), "f32", "loss")]
+                + [_io_entry("g." + e["name"], e["shape"], "f32", "grad")
+                   for e in a_io + b_io],
+            }
+
+        # --- fused train steps ---------------------------------------------
+        if cfg.name in _FULL_TRAIN_MODELS:
+            variants = [("adamw", "hessian", "pallas"),
+                        ("adam_mini", "hessian", "pallas"),
+                        ("adamw", "hessian", "ref"),
+                        ("adam_mini", "hessian", "ref"),
+                        ("adam_mini", "default", "pallas")]
+        else:
+            variants = []
+        for optimizer, strategy, kern in variants:
+            key = f"train_{optimizer}"
+            if strategy != "hessian":
+                key += f"_{strategy}"
+            if kern != "pallas":
+                key += f"_{kern}"
+            if optimizer == "adamw":
+                step = O.make_train_step_adamw(cfg, HP, kernels=kern)
+                mspecs = pspecs
+                vspecs = pspecs
+            else:
+                step, spec = O.make_train_step_adam_mini(
+                    cfg, HP, strategy=strategy, kernels=kern)
+                mspecs = pspecs
+                vspecs = [_spec((bv.num_blocks,)) for bv in spec]
+            lowered = jax.jit(step).lower(tok, tgt, scal, scal,
+                                          *pspecs, *mspecs, *vspecs)
+            out_state = (_param_entries(cfg, "param")
+                         + _state_entries(cfg, optimizer, strategy))
+            entry["artifacts"][key] = {
+                "file": self._write_hlo(f"{cfg.name}_{key}", lowered),
+                "optimizer": optimizer, "strategy": strategy,
+                "kernels": kern,
+                "inputs": batch_io + scal_io
+                + _param_entries(cfg, "param")
+                + _state_entries(cfg, optimizer, strategy),
+                "outputs": [_io_entry("loss", (), "f32", "loss")]
+                + out_state,
+            }
+
+        self.manifest["models"][cfg.name] = entry
+        print(f"[aot] {cfg.name} done in {time.time() - t0:.1f}s",
+              flush=True)
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"[aot] wrote manifest.json "
+              f"({len(self.manifest['models'])} models)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="",
+                    help="comma-separated subset (default: all)")
+    args = ap.parse_args(argv)
+    zoo = model_zoo()
+    names = [n for n in args.models.split(",") if n] or list(zoo)
+    ex = Exporter(args.out_dir)
+    for name in names:
+        ex.export_model(zoo[name])
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

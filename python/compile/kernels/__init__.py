@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+Every kernel has a pure-jnp oracle in :mod:`.ref` and is validated against
+it by ``python/tests/`` (pytest + hypothesis). All kernels run under
+``interpret=True`` on this CPU-PJRT testbed — see DESIGN.md
+§Hardware-Adaptation for the TPU mapping.
+"""
+
+from . import ref  # noqa: F401
+from .attention import attention, attention_fwd_kernel  # noqa: F401
+from .cross_entropy import cross_entropy, cross_entropy_fwd_kernel  # noqa: F401
+from .optim import adam_mini_update, adamw_update  # noqa: F401
+from .rmsnorm import rmsnorm, rmsnorm_fwd_kernel  # noqa: F401

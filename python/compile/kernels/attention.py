@@ -1,0 +1,99 @@
+"""Pallas causal flash-attention kernel (forward) with a custom VJP.
+
+The grid is ``(batch*heads, num_q_tiles)``: each program owns one q-row
+tile of one head, streams the full K/V for that head through VMEM, and
+computes an online-softmax accumulation — the standard flash-attention
+schedule re-expressed with ``BlockSpec`` instead of CUDA threadblocks
+(DESIGN.md §Hardware-Adaptation). Causality is enforced with an iota mask
+per tile.
+
+Backward is the analytic attention VJP in jnp (registered via
+``jax.custom_vjp``): recompute-in-backward, the same rematerialization
+choice flash attention makes, so no (S, S) score tensor is ever stored.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .optim import INTERPRET, _pick_row_tile
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, q_tile):
+    qt = pl.program_id(1)
+    q = q_ref[0]                     # (q_tile, dh)
+    k = k_ref[0]                     # (S, dh)
+    v = v_ref[0]                     # (S, dh)
+    s = k.shape[0]
+    scores = jnp.dot(q, k.T) * scale  # (q_tile, S)
+    q_pos = qt * q_tile + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(k_pos <= q_pos, scores, NEG_INF)
+    # Online-softmax normalization (single K pass; max/sum held in VMEM).
+    mx = jnp.max(scores, axis=1, keepdims=True)
+    p = jnp.exp(scores - mx)
+    denom = jnp.sum(p, axis=1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v) / denom
+
+
+def attention_fwd_kernel(q, k, v, *, scale=None, q_tile=None):
+    """Causal attention forward. q,k,v: (BH, S, Dh) -> (BH, S, Dh)."""
+    bh, s, dh = q.shape
+    if scale is None:
+        scale = 1.0 / float(dh) ** 0.5
+    tile = q_tile or _pick_row_tile(s, max_tile=32)
+    kernel = functools.partial(_attn_kernel, scale=scale, q_tile=tile)
+    q_spec = pl.BlockSpec((1, tile, dh), lambda b, i: (b, i, 0))
+    kv_spec = pl.BlockSpec((1, s, dh), lambda b, i: (b, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // tile),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Differentiable causal attention with a Pallas forward.
+
+    q, k, v: (B, H, S, Dh). Returns (B, H, S, Dh).
+    """
+    b, h, s, dh = q.shape
+    o = attention_fwd_kernel(q.reshape(b * h, s, dh),
+                             k.reshape(b * h, s, dh),
+                             v.reshape(b * h, s, dh))
+    return o.reshape(b, h, s, dh)
+
+
+def _attn_ref(q, k, v):
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    s = q.shape[-2]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def _attention_fwd(q, k, v):
+    return attention(q, k, v), (q, k, v)
+
+
+def _attention_bwd(res, go):
+    q, k, v = res
+    # Recompute-in-backward: differentiate the reference formulation.
+    _, vjp = jax.vjp(_attn_ref, q, k, v)
+    return vjp(go)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

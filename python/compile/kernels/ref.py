@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: each Pallas kernel in
+``python/compile/kernels/`` must match its oracle here to tight tolerance
+(pytest + hypothesis sweeps in ``python/tests/``).
+
+All optimizer math follows the paper's Algorithms 1/2 (Adam-mini) and
+Algorithm 6 (AdamW), with decoupled weight decay.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Optimizer updates
+# ---------------------------------------------------------------------------
+
+def adamw_update_ref(p, g, m, v, lr, t, *, beta1=0.9, beta2=0.95,
+                     eps=1e-8, weight_decay=0.1):
+    """AdamW (paper Algorithm 6), one step. ``t`` is 1-based step count.
+
+    Returns (p_new, m_new, v_new).
+    """
+    t = jnp.asarray(t, jnp.float32)
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 / (1.0 - beta1 ** t)
+    bc2 = 1.0 / (1.0 - beta2 ** t)
+    p_new = p * (1.0 - lr * weight_decay)
+    p_new = p_new - lr * (m_new * bc1) / (jnp.sqrt(v_new * bc2) + eps)
+    return p_new, m_new, v_new
+
+
+def adam_mini_update_ref(p, g, m, vb, lr, t, *, beta1=0.9, beta2=0.95,
+                         eps=1e-8, weight_decay=0.1):
+    """Adam-mini (paper Algorithm 1), one step over a 2-D block view.
+
+    ``p, g, m``: (num_blocks, block_size) — each row is one Hessian block.
+    ``vb``:      (num_blocks,) — one second-moment scalar per block.
+
+    v_b <- beta2 * v_b + (1-beta2) * mean(g_b ** 2); update uses
+    lr * m_hat / (sqrt(v_hat_b) + eps) broadcast across the block row.
+    Returns (p_new, m_new, vb_new).
+    """
+    t = jnp.asarray(t, jnp.float32)
+    m_new = beta1 * m + (1.0 - beta1) * g
+    vb_new = beta2 * vb + (1.0 - beta2) * jnp.mean(g * g, axis=-1)
+    bc1 = 1.0 / (1.0 - beta1 ** t)
+    bc2 = 1.0 / (1.0 - beta2 ** t)
+    denom = jnp.sqrt(vb_new * bc2)[:, None] + eps
+    p_new = p * (1.0 - lr * weight_decay)
+    p_new = p_new - lr * (m_new * bc1) / denom
+    return p_new, m_new, vb_new
+
+
+# ---------------------------------------------------------------------------
+# Model kernels
+# ---------------------------------------------------------------------------
+
+def rmsnorm_ref(x, w, *, eps=1e-5):
+    """RMSNorm over the last axis. x: (..., d), w: (d,)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def attention_ref(q, k, v, *, causal=True, scale=None):
+    """Multi-head scaled-dot-product attention.
+
+    q, k, v: (B, H, S, Dh). Returns (B, H, S, Dh).
+    """
+    dh = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        s = q.shape[-2]
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def cross_entropy_ref(logits, targets):
+    """Per-row token cross-entropy. logits: (N, V), targets: (N,) int32.
+
+    Returns per-row loss (N,).
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[:, None].astype(jnp.int32),
+                              axis=-1)[:, 0]
+    return lse - tgt
+
+
+def softmax_ref(x):
+    """Numerically-stable softmax over last axis (kernel-test helper)."""
+    return jax.nn.softmax(x, axis=-1)

@@ -1,0 +1,195 @@
+"""L2: JAX transformer language models (GPT-2 and Llama families).
+
+Build-time only — these functions are lowered once by :mod:`compile.aot`
+to HLO text and executed from the Rust coordinator; Python never runs on
+the training step path.
+
+Design notes:
+
+- Parameters are a *flat ordered list* of layer-stacked tensors (axis 0 =
+  n_layers for per-layer weights) so the whole depth lowers as one
+  ``lax.scan`` — small HLO, fast PJRT compile, and a stable positional
+  ABI for the Rust runtime (the manifest records the order).
+- Weights are stored (out, in) like ``torch.nn.Linear``, which makes the
+  paper's partition classes (head rows / output-neuron rows / token rows)
+  contiguous row ranges — the same layout the Pallas optimizer kernels
+  tile over.
+- ``kernels='pallas'`` routes rmsnorm / attention / cross-entropy through
+  the Pallas kernels (with custom VJPs); ``kernels='ref'`` uses the jnp
+  oracles. Both lower to the same interface and are exported for A/B
+  benchmarking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+from .kernels import ref as R
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyperparameters (mirrors paper Table 8, scaled)."""
+
+    name: str
+    family: str  # 'llama' | 'gpt2'
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch_size: int
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        """Ordered name -> shape map; THE positional ABI for artifacts."""
+        l, d, ff, v = self.n_layers, self.d_model, self.d_ff, self.vocab
+        shapes: Dict[str, Tuple[int, ...]] = {"embed": (v, d)}
+        if self.family == "gpt2":
+            shapes["pos_emb"] = (self.seq_len, d)
+        shapes.update({
+            "wq": (l, d, d), "wk": (l, d, d), "wv": (l, d, d),
+            "wo": (l, d, d),
+        })
+        if self.family == "llama":
+            shapes.update({"w1": (l, ff, d), "w3": (l, ff, d),
+                           "w2": (l, d, ff)})
+        else:
+            shapes.update({"w_in": (l, ff, d), "w_out": (l, d, ff)})
+        shapes.update({
+            "attn_norm": (l, d), "mlp_norm": (l, d), "final_norm": (d,),
+            "output": (v, d),
+        })
+        return shapes
+
+    def stacked_names(self) -> List[str]:
+        return [n for n, s in self.param_shapes().items()
+                if len(s) >= 2 and s[0] == self.n_layers
+                and n not in ("embed", "output", "pos_emb")]
+
+    @property
+    def n_params(self) -> int:
+        return sum(math.prod(s) for s in self.param_shapes().values())
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """GPT-2-style init: N(0, 0.02), residual-out mats scaled by 1/sqrt(2L)."""
+    key = jax.random.PRNGKey(seed)
+    shapes = cfg.param_shapes()
+    keys = jax.random.split(key, len(shapes))
+    out = []
+    resid_scaled = ("wo", "w2", "w_out")
+    for (name, shape), k in zip(shapes.items(), keys):
+        if "norm" in name:
+            p = jnp.ones(shape, jnp.float32)
+        else:
+            std = 0.02
+            if name in resid_scaled:
+                std /= math.sqrt(2 * cfg.n_layers)
+            p = std * jax.random.normal(k, shape, jnp.float32)
+        out.append(p)
+    return out
+
+
+def _rope_tables(seq_len: int, d_head: int):
+    """Rotary embedding cos/sin tables, (S, d_head/2)."""
+    half = d_head // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = jnp.arange(seq_len, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rope(x, cos, sin):
+    """x: (B, H, S, Dh); rotate pairs (x1, x2) = split-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _norm(x, w, use_pallas: bool):
+    if use_pallas:
+        return K.rmsnorm(x, w)
+    return R.rmsnorm_ref(x, w)
+
+
+def _attn(q, k, v, use_pallas: bool):
+    if use_pallas:
+        return K.attention(q, k, v)
+    return R.attention_ref(q, k, v)
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array,
+            kernels: str = "ref") -> jax.Array:
+    """Token ids (B, S) -> logits (B, S, V)."""
+    use_pallas = kernels == "pallas"
+    names = list(cfg.param_shapes().keys())
+    p = dict(zip(names, params))
+    b, s = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    x = p["embed"][tokens]  # (B, S, d)
+    if cfg.family == "gpt2":
+        x = x + p["pos_emb"][None, :s, :]
+        cos = sin = None
+    else:
+        cos, sin = _rope_tables(s, dh)
+
+    stacked = [p[n] for n in cfg.stacked_names()]
+    names_stacked = cfg.stacked_names()
+
+    def layer(x, layer_params):
+        lp = dict(zip(names_stacked, layer_params))
+        hn = _norm(x, lp["attn_norm"], use_pallas)
+        # (B, S, d) @ (d, d)^T; weights stored (out, in).
+        q = (hn @ lp["wq"].T).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        k = (hn @ lp["wk"].T).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        v = (hn @ lp["wv"].T).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        if cfg.family == "llama":
+            q = _apply_rope(q, cos, sin)
+            k = _apply_rope(k, cos, sin)
+        a = _attn(q, k, v, use_pallas)
+        a = a.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        x = x + a @ lp["wo"].T
+        hn2 = _norm(x, lp["mlp_norm"], use_pallas)
+        if cfg.family == "llama":
+            ff = jax.nn.silu(hn2 @ lp["w1"].T) * (hn2 @ lp["w3"].T)
+            x = x + ff @ lp["w2"].T
+        else:
+            x = x + jax.nn.gelu(hn2 @ lp["w_in"].T) @ lp["w_out"].T
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, stacked)
+    x = _norm(x, p["final_norm"], use_pallas)
+    return x @ p["output"].T
+
+
+def loss_fn(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array,
+            targets: jax.Array, kernels: str = "ref") -> jax.Array:
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, tokens, kernels=kernels)
+    flat = logits.reshape(-1, cfg.vocab)
+    tgt = targets.reshape(-1)
+    if kernels == "pallas":
+        losses = K.cross_entropy(flat, tgt)
+    else:
+        losses = R.cross_entropy_ref(flat, tgt)
+    return jnp.mean(losses)
+
+
+def grad_fn(cfg: ModelConfig, kernels: str = "ref"):
+    """Returns f(params, tokens, targets) -> (loss, grads-list)."""
+    def f(params, tokens, targets):
+        return loss_fn(cfg, params, tokens, targets, kernels=kernels)
+    return jax.value_and_grad(f)

@@ -1,0 +1,258 @@
+"""L2: optimizer update graphs (AdamW / Adam-mini) and fused train steps.
+
+These compose the model gradients with the L1 Pallas update kernels (or
+their jnp oracles) into a single jitted ``train_step`` that the Rust
+coordinator executes per step. The learning-rate *schedule* lives in Rust;
+the graph takes the current scalar ``lr`` and 1-based step ``t`` as inputs.
+
+State layout (the artifact ABI, recorded in the manifest):
+
+- AdamW:     m_i, v_i mirror every parameter tensor.
+- Adam-mini: m_i mirrors parameters; v is a list of tiny per-tensor
+  vectors of shape ``(num_blocks_i,)`` from :mod:`compile.partition` —
+  the >=99.9% reduction of Table 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .kernels import optim as pk
+from .kernels import ref as R
+from .partition import BlockView, partition_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class OptHyper:
+    """Optimizer hyperparameters baked into the artifact as constants.
+
+    Paper defaults for LLM pre-training: beta1=0.9, beta2=0.95, eps=1e-8,
+    weight_decay=0.1. Adam-mini deliberately reuses AdamW's values
+    (paper §3.4: "the same hyperparameters as AdamW").
+    """
+
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params: Sequence[jax.Array]):
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    return m, v
+
+
+def adam_mini_init(params: Sequence[jax.Array], spec: Sequence[BlockView]):
+    m = [jnp.zeros_like(p) for p in params]
+    vb = [jnp.zeros((b.num_blocks,), jnp.float32) for b in spec]
+    return m, vb
+
+
+def adamw_step(params, grads, m, v, lr, t, hp: OptHyper,
+               use_pallas: bool = True):
+    """One AdamW update over the whole parameter list."""
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        shp = p.shape
+        if use_pallas:
+            n = p.size
+            # 2-D view for the tiled kernel; elementwise so any view works.
+            rows = _best_rows(n)
+            p2, g2 = p.reshape(rows, n // rows), g.reshape(rows, n // rows)
+            m2, v2 = mi.reshape(rows, n // rows), vi.reshape(rows, n // rows)
+            po, mo, vo = pk.adamw_update(
+                p2, g2, m2, v2, lr, t, beta1=hp.beta1, beta2=hp.beta2,
+                eps=hp.eps, weight_decay=hp.weight_decay)
+        else:
+            po, mo, vo = R.adamw_update_ref(
+                p, g, mi, vi, lr, t, beta1=hp.beta1, beta2=hp.beta2,
+                eps=hp.eps, weight_decay=hp.weight_decay)
+        new_p.append(po.reshape(shp))
+        new_m.append(mo.reshape(shp))
+        new_v.append(vo.reshape(shp))
+    return new_p, new_m, new_v
+
+
+def adam_mini_step(params, grads, m, vb, lr, t, spec: Sequence[BlockView],
+                   hp: OptHyper, use_pallas: bool = True):
+    """One Adam-mini update; each tensor reshaped to its block view."""
+    new_p, new_m, new_vb = [], [], []
+    for p, g, mi, vbi, bv in zip(params, grads, m, vb, spec):
+        shp = p.shape
+        p2 = p.reshape(bv.num_blocks, bv.block_size)
+        g2 = g.reshape(bv.num_blocks, bv.block_size)
+        m2 = mi.reshape(bv.num_blocks, bv.block_size)
+        if use_pallas:
+            po, mo, vbo = pk.adam_mini_update(
+                p2, g2, m2, vbi, lr, t, beta1=hp.beta1, beta2=hp.beta2,
+                eps=hp.eps, weight_decay=hp.weight_decay)
+        else:
+            po, mo, vbo = R.adam_mini_update_ref(
+                p2, g2, m2, vbi, lr, t, beta1=hp.beta1, beta2=hp.beta2,
+                eps=hp.eps, weight_decay=hp.weight_decay)
+        new_p.append(po.reshape(shp))
+        new_m.append(mo.reshape(shp))
+        new_vb.append(vbo)
+    return new_p, new_m, new_vb
+
+
+def _best_rows(n: int, max_tile: int = 4096) -> int:
+    """Factor n into (rows, cols) with cols <= max_tile for kernel tiling."""
+    rows = 1
+    while n // rows > max_tile and n % (rows * 2) == 0:
+        rows *= 2
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fused train steps (the exported artifacts)
+# ---------------------------------------------------------------------------
+
+def make_train_step_adamw(cfg: M.ModelConfig, hp: OptHyper,
+                          kernels: str = "ref"):
+    """f(tokens, targets, lr, t, *params, *m, *v) -> (loss, params, m, v)."""
+    vg = M.grad_fn(cfg, kernels=kernels)
+    n = len(cfg.param_shapes())
+    use_pallas = kernels == "pallas"
+
+    def step(tokens, targets, lr, t, *state):
+        params = list(state[:n])
+        m = list(state[n:2 * n])
+        v = list(state[2 * n:3 * n])
+        loss, grads = vg(params, tokens, targets)
+        new_p, new_m, new_v = adamw_step(params, grads, m, v, lr, t, hp,
+                                         use_pallas=use_pallas)
+        return tuple([loss] + new_p + new_m + new_v)
+
+    return step
+
+
+def make_train_step_adam_mini(cfg: M.ModelConfig, hp: OptHyper,
+                              strategy: str = "hessian",
+                              kernels: str = "ref"):
+    """Same ABI as AdamW step, but v entries are (num_blocks_i,) vectors."""
+    vg = M.grad_fn(cfg, kernels=kernels)
+    spec = partition_spec(cfg.param_shapes(), cfg.n_heads,
+                          cfg.stacked_names(), strategy=strategy)
+    n = len(cfg.param_shapes())
+    use_pallas = kernels == "pallas"
+
+    def step(tokens, targets, lr, t, *state):
+        params = list(state[:n])
+        m = list(state[n:2 * n])
+        vb = list(state[2 * n:3 * n])
+        loss, grads = vg(params, tokens, targets)
+        new_p, new_m, new_vb = adam_mini_step(
+            params, grads, m, vb, lr, t, spec, hp, use_pallas=use_pallas)
+        return tuple([loss] + new_p + new_m + new_vb)
+
+    return step, spec
+
+
+def make_grad_step(cfg: M.ModelConfig, kernels: str = "ref"):
+    """f(tokens, targets, *params) -> (loss, *grads).
+
+    Consumed by Rust-side optimizers (Adafactor/CAME/SM3/Lion/LAMB/
+    blockwise-GD and all grid-search experiments) so one artifact serves
+    every optimizer variant.
+    """
+    vg = M.grad_fn(cfg, kernels=kernels)
+
+    def step(tokens, targets, *params):
+        loss, grads = vg(list(params), tokens, targets)
+        return tuple([loss] + list(grads))
+
+    return step
+
+
+def make_weighted_grad_step(cfg: M.ModelConfig, kernels: str = "ref"):
+    """f(tokens, targets, weights, *params) -> (loss, *grads).
+
+    loss = mean over (B, S) of weights ⊙ per-token CE. Used by the Rust
+    coordinator for SFT prompt masking and for ReMax/REINFORCE advantage
+    weighting (weights[b, s] = advantage_b on response tokens, 0 on the
+    prompt).
+    """
+    def wloss(params, tokens, targets, weights):
+        logits = M.forward(cfg, list(params), tokens, kernels=kernels)
+        flat = logits.reshape(-1, cfg.vocab)
+        tgt = targets.reshape(-1)
+        from .kernels import ref as KR
+        losses = KR.cross_entropy_ref(flat, tgt)
+        return jnp.mean(losses * weights.reshape(-1))
+
+    vg = jax.value_and_grad(wloss)
+
+    def step(tokens, targets, weights, *params):
+        loss, grads = vg(list(params), tokens, targets, weights)
+        return tuple([loss] + list(grads))
+
+    return step
+
+
+def make_logits_step(cfg: M.ModelConfig, kernels: str = "ref"):
+    """f(tokens, *params) -> (logits,) — used for sampling (RLHF
+    rollouts) and analysis from the Rust side."""
+    def step(tokens, *params):
+        return (M.forward(cfg, list(params), tokens, kernels=kernels),)
+    return step
+
+
+LORA_TARGETS = ("wq", "wk", "wv", "wo")
+
+
+def make_lora_grad_step(cfg: M.ModelConfig, rank: int = 4,
+                        kernels: str = "ref"):
+    """f(tokens, targets, *base, *A, *B) -> (loss, *gA, *gB).
+
+    LoRA (Hu et al. 2021) on the attention matrices: effective weight
+    W' = W + (2/r)·B·A with A: (L, r, d), B: (L, d, r). Gradients flow
+    to the adapters only (base frozen) — the paper's Fig 22 / Table 5
+    SFT-LoRA setting, where the Adam steps on the adapters are replaced
+    by Adam-mini.
+    """
+    names = list(cfg.param_shapes().keys())
+    scale = 2.0 / rank
+
+    def loss(adapters, base, tokens, targets):
+        a_list, b_list = adapters
+        eff = list(base)
+        for t, a, bmat in zip(LORA_TARGETS, a_list, b_list):
+            i = names.index(t)
+            # (L, d, r) @ (L, r, d) -> (L, d, d)
+            delta = jnp.einsum("ldr,lre->lde", bmat, a)
+            eff[i] = eff[i] + scale * delta.reshape(eff[i].shape)
+        return M.loss_fn(cfg, eff, tokens, targets, kernels=kernels)
+
+    vg = jax.value_and_grad(loss)
+    k = len(LORA_TARGETS)
+
+    def step(tokens, targets, *args):
+        base = list(args[: len(names)])
+        a_list = list(args[len(names): len(names) + k])
+        b_list = list(args[len(names) + k:])
+        val, (ga, gb) = vg((a_list, b_list), base, tokens, targets)
+        return tuple([val] + list(ga) + list(gb))
+
+    return step
+
+
+def lora_shapes(cfg: M.ModelConfig, rank: int = 4):
+    """(A shapes, B shapes) for the LoRA adapters."""
+    l, d = cfg.n_layers, cfg.d_model
+    return ([(l, rank, d)] * len(LORA_TARGETS),
+            [(l, d, rank)] * len(LORA_TARGETS))
+
+
+def make_eval_step(cfg: M.ModelConfig, kernels: str = "ref"):
+    """f(tokens, targets, *params) -> (loss,)."""
+    def step(tokens, targets, *params):
+        return (M.loss_fn(cfg, list(params), tokens, targets,
+                          kernels=kernels),)
+    return step

@@ -1,0 +1,54 @@
+"""Model zoo: the named configurations every experiment runs on.
+
+Scaled-down analogues of the paper's workloads (DESIGN.md §4 records the
+substitutions). The Llama ladder mirrors paper Table 8's geometry
+(d_model/n_layers/n_heads growth at fixed seq) for the scaling-law
+experiments (Fig 11 / Table 4); the GPT-2 family mirrors the
+nanoGPT-style runs of Fig 8; ``h1t`` is the exact 1-layer transformer of
+Fig 7 (n_emb 16, 4 heads, mlp width 32, vocab 8); ``m11`` is the
+multi-million-parameter end-to-end driver model.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from .model import ModelConfig
+
+# Llama-style scaling ladder (RoPE + RMSNorm + SwiGLU), vocab 256, seq 64.
+_LADDER = [
+    # name,   d,  L, H, ff
+    ("t48k", 32, 2, 2, 128),
+    ("t134k", 48, 3, 4, 192),
+    ("t295k", 64, 4, 4, 256),
+    ("t786k", 96, 5, 6, 384),
+    ("t1m6", 128, 6, 8, 512),
+]
+
+# GPT-2-style family (learned positions + GELU MLP), vocab 256, seq 64.
+_GPT2 = [
+    ("gpt2s", 64, 4, 4, 256),
+    ("gpt2m", 96, 6, 6, 384),
+    ("gpt2l", 128, 8, 8, 512),
+]
+
+
+def model_zoo() -> Dict[str, ModelConfig]:
+    zoo: Dict[str, ModelConfig] = {}
+    for name, d, l, h, ff in _LADDER:
+        zoo[name] = ModelConfig(name=name, family="llama", vocab=256,
+                                d_model=d, n_layers=l, n_heads=h, d_ff=ff,
+                                seq_len=64, batch_size=16)
+    for name, d, l, h, ff in _GPT2:
+        zoo[name] = ModelConfig(name=name, family="gpt2", vocab=256,
+                                d_model=d, n_layers=l, n_heads=h, d_ff=ff,
+                                seq_len=64, batch_size=16)
+    # Fig 7 / Table 3 Hessian-analysis transformer (paper Appendix F.2).
+    zoo["h1t"] = ModelConfig(name="h1t", family="llama", vocab=8,
+                             d_model=16, n_layers=1, n_heads=4, d_ff=32,
+                             seq_len=8, batch_size=8)
+    # End-to-end driver: multi-M-param pre-train (examples/pretrain_e2e).
+    zoo["m11"] = ModelConfig(name="m11", family="llama", vocab=512,
+                             d_model=256, n_layers=10, n_heads=8, d_ff=1024,
+                             seq_len=128, batch_size=4)
+    return zoo

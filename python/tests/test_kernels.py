@@ -1,0 +1,236 @@
+"""Pallas kernels vs pure-jnp oracles — the L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes/hyperparameters; every kernel must match
+its oracle in ``compile.kernels.ref`` to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - environment-dependent
+    HAVE_HYPOTHESIS = False
+
+from compile.kernels import optim as pk
+from compile.kernels import ref as R
+from compile.kernels.attention import attention, attention_fwd_kernel
+from compile.kernels.cross_entropy import cross_entropy
+from compile.kernels.rmsnorm import rmsnorm
+
+RNG = np.random.default_rng(0)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+def assert_close(a, b, atol=2e-5, rtol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol,
+                               rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer kernels
+# ---------------------------------------------------------------------------
+
+class TestAdamMiniKernel:
+    def test_matches_ref_basic(self):
+        p, g, m = randf(12, 20), randf(12, 20), randf(12, 20)
+        vb = jnp.abs(randf(12))
+        out_k = pk.adam_mini_update(p, g, m, vb, 1e-3, 3.0)
+        out_r = R.adam_mini_update_ref(p, g, m, vb, 1e-3, 3.0)
+        for a, b in zip(out_k, out_r):
+            assert_close(a, b)
+
+    def test_single_block(self):
+        p, g, m = randf(1, 64), randf(1, 64), randf(1, 64)
+        vb = jnp.zeros(1)
+        out_k = pk.adam_mini_update(p, g, m, vb, 1e-2, 1.0)
+        out_r = R.adam_mini_update_ref(p, g, m, vb, 1e-2, 1.0)
+        for a, b in zip(out_k, out_r):
+            assert_close(a, b)
+
+    def test_vb_is_mean_of_gsq_at_t1(self):
+        g = randf(4, 8)
+        p = jnp.zeros((4, 8))
+        m = jnp.zeros((4, 8))
+        vb = jnp.zeros(4)
+        _, _, vb1 = pk.adam_mini_update(p, g, m, vb, 1e-3, 1.0,
+                                        beta2=0.95)
+        expect = 0.05 * jnp.mean(g * g, axis=1)
+        assert_close(vb1, expect)
+
+    def test_under_jit(self):
+        p, g, m = randf(8, 16), randf(8, 16), randf(8, 16)
+        vb = jnp.abs(randf(8))
+        f = jax.jit(lambda *a: pk.adam_mini_update(*a, 1e-3, 2.0))
+        out_k = f(p, g, m, vb)
+        out_r = R.adam_mini_update_ref(p, g, m, vb, 1e-3, 2.0)
+        for a, b in zip(out_k, out_r):
+            assert_close(a, b)
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=25, deadline=None)
+        @given(nb=st.integers(1, 33), bs=st.integers(1, 65),
+               t=st.integers(1, 1000),
+               lr=st.floats(1e-5, 1e-1),
+               seed=st.integers(0, 2**31))
+        def test_shapes_hypothesis(self, nb, bs, t, lr, seed):
+            rng = np.random.default_rng(seed)
+            p = jnp.asarray(rng.standard_normal((nb, bs)), jnp.float32)
+            g = jnp.asarray(rng.standard_normal((nb, bs)), jnp.float32)
+            m = jnp.asarray(rng.standard_normal((nb, bs)), jnp.float32)
+            vb = jnp.asarray(rng.random(nb), jnp.float32)
+            out_k = pk.adam_mini_update(p, g, m, vb, lr, float(t))
+            out_r = R.adam_mini_update_ref(p, g, m, vb, lr, float(t))
+            for a, b in zip(out_k, out_r):
+                assert_close(a, b, atol=1e-4, rtol=1e-4)
+
+
+class TestAdamWKernel:
+    def test_matches_ref(self):
+        p, g, m = randf(12, 20), randf(12, 20), randf(12, 20)
+        v = jnp.abs(randf(12, 20))
+        out_k = pk.adamw_update(p, g, m, v, 1e-3, 5.0)
+        out_r = R.adamw_update_ref(p, g, m, v, 1e-3, 5.0)
+        for a, b in zip(out_k, out_r):
+            assert_close(a, b)
+
+    def test_weight_decay_decoupled(self):
+        p = jnp.ones((2, 4))
+        z = jnp.zeros((2, 4))
+        po, _, _ = pk.adamw_update(p, z, z, z, 0.1, 1.0,
+                                   weight_decay=0.5)
+        assert_close(po, jnp.full((2, 4), 0.95))
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=20, deadline=None)
+        @given(nb=st.integers(1, 17), bs=st.integers(1, 50),
+               seed=st.integers(0, 2**31))
+        def test_shapes_hypothesis(self, nb, bs, seed):
+            rng = np.random.default_rng(seed)
+            p, g, m = (jnp.asarray(rng.standard_normal((nb, bs)),
+                                   jnp.float32) for _ in range(3))
+            v = jnp.asarray(rng.random((nb, bs)), jnp.float32)
+            out_k = pk.adamw_update(p, g, m, v, 3e-4, 7.0)
+            out_r = R.adamw_update_ref(p, g, m, v, 3e-4, 7.0)
+            for a, b in zip(out_k, out_r):
+                assert_close(a, b, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Model kernels
+# ---------------------------------------------------------------------------
+
+class TestRmsnorm:
+    def test_matches_ref(self):
+        x, w = randf(4, 6, 16), randf(16)
+        assert_close(rmsnorm(x, w), R.rmsnorm_ref(x, w))
+
+    def test_grad_matches_ref(self):
+        x, w = randf(3, 8), randf(8)
+        f_k = lambda x, w: jnp.sum(jnp.sin(rmsnorm(x, w)))
+        f_r = lambda x, w: jnp.sum(jnp.sin(R.rmsnorm_ref(x, w)))
+        gx_k, gw_k = jax.grad(f_k, argnums=(0, 1))(x, w)
+        gx_r, gw_r = jax.grad(f_r, argnums=(0, 1))(x, w)
+        assert_close(gx_k, gx_r, atol=1e-4, rtol=1e-4)
+        assert_close(gw_k, gw_r, atol=1e-4, rtol=1e-4)
+
+    def test_scale_equivariance(self):
+        # rmsnorm(a*x, w) == rmsnorm(x, w) for a > 0 (eps-small regime).
+        x, w = 10 * randf(4, 32), randf(32)
+        assert_close(rmsnorm(3.0 * x, w), rmsnorm(x, w), atol=1e-4,
+                     rtol=1e-4)
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=20, deadline=None)
+        @given(n=st.integers(1, 40), d=st.integers(1, 96),
+               seed=st.integers(0, 2**31))
+        def test_shapes_hypothesis(self, n, d, seed):
+            rng = np.random.default_rng(seed)
+            x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+            w = jnp.asarray(rng.standard_normal(d), jnp.float32)
+            assert_close(rmsnorm(x, w), R.rmsnorm_ref(x, w), atol=1e-4,
+                         rtol=1e-4)
+
+
+class TestAttention:
+    def test_matches_ref(self):
+        q, k, v = randf(2, 2, 16, 8), randf(2, 2, 16, 8), randf(2, 2, 16, 8)
+        assert_close(attention(q, k, v), R.attention_ref(q, k, v),
+                     atol=1e-4, rtol=1e-4)
+
+    def test_causality(self):
+        # Changing future K/V must not change earlier outputs.
+        q, k, v = randf(1, 1, 8, 4), randf(1, 1, 8, 4), randf(1, 1, 8, 4)
+        o1 = attention(q, k, v)
+        k2 = k.at[:, :, 6:, :].set(99.0)
+        v2 = v.at[:, :, 6:, :].set(-99.0)
+        o2 = attention(q, k2, v2)
+        assert_close(o1[:, :, :6], o2[:, :, :6], atol=1e-5, rtol=1e-5)
+
+    def test_grad_matches_ref(self):
+        q, k, v = randf(1, 2, 8, 4), randf(1, 2, 8, 4), randf(1, 2, 8, 4)
+        f_k = lambda q, k, v: jnp.sum(attention(q, k, v) ** 2)
+        f_r = lambda q, k, v: jnp.sum(R.attention_ref(q, k, v) ** 2)
+        gk = jax.grad(f_k, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gk, gr):
+            assert_close(a, b, atol=1e-4, rtol=1e-4)
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=15, deadline=None)
+        @given(bh=st.integers(1, 6), s=st.sampled_from([4, 8, 16, 32]),
+               dh=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31))
+        def test_shapes_hypothesis(self, bh, s, dh, seed):
+            rng = np.random.default_rng(seed)
+            mk = lambda: jnp.asarray(rng.standard_normal((bh, s, dh)),
+                                     jnp.float32)
+            q, k, v = mk(), mk(), mk()
+            got = attention_fwd_kernel(q, k, v)
+            want = R.attention_ref(q[:, None], k[:, None],
+                                   v[:, None])[:, 0]
+            assert_close(got, want, atol=1e-4, rtol=1e-4)
+
+
+class TestCrossEntropy:
+    def test_matches_ref(self):
+        logits = randf(8, 32)
+        tgt = jnp.asarray(RNG.integers(0, 32, 8), jnp.int32)
+        assert_close(cross_entropy(logits, tgt),
+                     R.cross_entropy_ref(logits, tgt))
+
+    def test_uniform_logits_give_log_v(self):
+        logits = jnp.zeros((4, 100))
+        tgt = jnp.asarray([0, 1, 50, 99], jnp.int32)
+        assert_close(cross_entropy(logits, tgt),
+                     jnp.full(4, np.log(100.0)), atol=1e-5, rtol=1e-5)
+
+    def test_grad_is_softmax_minus_onehot(self):
+        logits = randf(4, 16)
+        tgt = jnp.asarray([3, 1, 0, 15], jnp.int32)
+        g = jax.grad(lambda l: jnp.sum(cross_entropy(l, tgt)))(logits)
+        want = jax.nn.softmax(logits, -1) - jax.nn.one_hot(tgt, 16)
+        assert_close(g, want, atol=1e-5, rtol=1e-5)
+
+    def test_numerical_stability_large_logits(self):
+        logits = 1e4 * randf(4, 16)
+        tgt = jnp.asarray([0, 5, 9, 2], jnp.int32)
+        out = cross_entropy(logits, tgt)
+        assert np.isfinite(np.asarray(out)).all()
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=20, deadline=None)
+        @given(n=st.integers(1, 30), v=st.integers(2, 80),
+               seed=st.integers(0, 2**31))
+        def test_shapes_hypothesis(self, n, v, seed):
+            rng = np.random.default_rng(seed)
+            logits = jnp.asarray(rng.standard_normal((n, v)), jnp.float32)
+            tgt = jnp.asarray(rng.integers(0, v, n), jnp.int32)
+            assert_close(cross_entropy(logits, tgt),
+                         R.cross_entropy_ref(logits, tgt), atol=1e-4,
+                         rtol=1e-4)

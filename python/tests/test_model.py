@@ -1,0 +1,207 @@
+"""L2 model + optimizer-graph contracts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import optim as O
+from compile.partition import partition_spec, v_reduction_ratio
+from compile.zoo import model_zoo
+
+ZOO = model_zoo()
+CFG = ZOO["h1t"]
+RNG = np.random.default_rng(1)
+
+
+def tiny_batch(cfg):
+    tok = jnp.asarray(RNG.integers(0, cfg.vocab,
+                                   (cfg.batch_size, cfg.seq_len)),
+                      jnp.int32)
+    tgt = jnp.asarray(RNG.integers(0, cfg.vocab,
+                                   (cfg.batch_size, cfg.seq_len)),
+                      jnp.int32)
+    return tok, tgt
+
+
+class TestModel:
+    def test_param_shapes_cover_all(self):
+        for name, cfg in ZOO.items():
+            shapes = cfg.param_shapes()
+            total = sum(int(np.prod(s)) for s in shapes.values())
+            assert total == cfg.n_params, name
+            assert "embed" in shapes and "output" in shapes
+
+    def test_forward_shape_and_loss_level(self):
+        params = M.init_params(CFG, 0)
+        tok, _ = tiny_batch(CFG)
+        logits = M.forward(CFG, params, tok)
+        assert logits.shape == (CFG.batch_size, CFG.seq_len, CFG.vocab)
+        loss = M.loss_fn(CFG, params, tok, tok)
+        # At init the model is near-uniform: loss ≈ ln(vocab).
+        assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+    def test_pallas_and_ref_paths_agree(self):
+        params = M.init_params(CFG, 0)
+        tok, tgt = tiny_batch(CFG)
+        l_ref = M.loss_fn(CFG, params, tok, tgt, kernels="ref")
+        l_pal = M.loss_fn(CFG, params, tok, tgt, kernels="pallas")
+        np.testing.assert_allclose(float(l_ref), float(l_pal), rtol=1e-5)
+
+    def test_grads_match_finite_difference(self):
+        params = M.init_params(CFG, 0)
+        tok, tgt = tiny_batch(CFG)
+        loss, grads = M.grad_fn(CFG)(params, tok, tgt)
+        eps = 1e-3
+        f = lambda p0: M.loss_fn(CFG, [p0] + params[1:], tok, tgt)
+        for idx in [(0, 1), (3, 5)]:
+            e = np.zeros(params[0].shape, np.float32)
+            e[idx] = 1.0
+            fd = (f(params[0] + eps * e) - f(params[0] - eps * e)) / (
+                2 * eps)
+            assert abs(float(fd) - float(grads[0][idx])) < 5e-3
+
+    def test_grads_pallas_match_ref(self):
+        params = M.init_params(CFG, 0)
+        tok, tgt = tiny_batch(CFG)
+        _, g_ref = M.grad_fn(CFG, kernels="ref")(params, tok, tgt)
+        _, g_pal = M.grad_fn(CFG, kernels="pallas")(params, tok, tgt)
+        for a, b in zip(g_ref, g_pal):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-4, rtol=2e-3)
+
+    def test_causality_of_lm(self):
+        # Changing a later input token must not change earlier logits.
+        params = M.init_params(CFG, 0)
+        tok, _ = tiny_batch(CFG)
+        logits1 = M.forward(CFG, params, tok)
+        tok2 = tok.at[:, -1].set((tok[:, -1] + 1) % CFG.vocab)
+        logits2 = M.forward(CFG, params, tok2)
+        np.testing.assert_allclose(np.asarray(logits1[:, :-1]),
+                                   np.asarray(logits2[:, :-1]),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_gpt2_family_builds(self):
+        cfg = ZOO["gpt2s"]
+        params = M.init_params(cfg, 0)
+        tok = jnp.zeros((cfg.batch_size, cfg.seq_len), jnp.int32)
+        logits = M.forward(cfg, params, tok)
+        assert logits.shape[-1] == cfg.vocab
+
+
+class TestPartition:
+    def test_reduction_over_999_permille_at_scale(self):
+        cfg = ZOO["m11"]
+        spec = partition_spec(cfg.param_shapes(), cfg.n_heads,
+                              cfg.stacked_names())
+        assert v_reduction_ratio(spec) > 0.99
+
+    def test_block_elements_cover_params(self):
+        for name, cfg in ZOO.items():
+            for strat in ("hessian", "default", "value_whole"):
+                spec = partition_spec(cfg.param_shapes(), cfg.n_heads,
+                                      cfg.stacked_names(), strat)
+                assert sum(b.n_elements for b in spec) == cfg.n_params, (
+                    name, strat)
+
+    def test_head_partition(self):
+        from compile.partition import block_view
+        bv = block_view("wq", (4, 64, 64), 4, stacked=True)
+        assert (bv.num_blocks, bv.block_size) == (16, 1024)
+        bv = block_view("wv", (4, 64, 64), 4, stacked=True,
+                        strategy="value_whole")
+        assert bv.num_blocks == 4
+
+
+class TestTrainSteps:
+    def test_adamw_step_matches_manual(self):
+        hp = O.OptHyper()
+        step = O.make_train_step_adamw(CFG, hp, kernels="ref")
+        params = M.init_params(CFG, 0)
+        m, v = O.adamw_init(params)
+        tok, tgt = tiny_batch(CFG)
+        out = step(tok, tgt, jnp.float32(1e-3), jnp.float32(1.0),
+                   *params, *m, *v)
+        n = len(params)
+        loss, new_p = out[0], out[1:1 + n]
+        # Recompute manually: grads then ref update.
+        _, grads = M.grad_fn(CFG)(params, tok, tgt)
+        for p, g, mi, vi, np_ in zip(params, grads, m, v, new_p):
+            want, _, _ = __import__(
+                "compile.kernels.ref", fromlist=["x"]
+            ).adamw_update_ref(p, g, mi, vi, 1e-3, 1.0,
+                               beta1=hp.beta1, beta2=hp.beta2,
+                               eps=hp.eps, weight_decay=hp.weight_decay)
+            np.testing.assert_allclose(np.asarray(np_), np.asarray(want),
+                                       atol=1e-6, rtol=1e-5)
+        assert float(loss) > 0
+
+    def test_adam_mini_pallas_matches_ref_step(self):
+        hp = O.OptHyper()
+        step_p, spec = O.make_train_step_adam_mini(CFG, hp,
+                                                   kernels="pallas")
+        step_r, _ = O.make_train_step_adam_mini(CFG, hp, kernels="ref")
+        params = M.init_params(CFG, 0)
+        m, vb = O.adam_mini_init(params, spec)
+        tok, tgt = tiny_batch(CFG)
+        args = (tok, tgt, jnp.float32(2e-3), jnp.float32(1.0),
+                *params, *m, *vb)
+        out_p = step_p(*args)
+        out_r = step_r(*args)
+        for a, b in zip(out_p, out_r):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-4, rtol=2e-3)
+
+    def test_mini_state_is_small(self):
+        _, spec = O.make_train_step_adam_mini(CFG, O.OptHyper())
+        n_blocks = sum(b.num_blocks for b in spec)
+        assert n_blocks < CFG.n_params / 5
+
+    def test_training_reduces_loss(self):
+        # 30 jitted fused steps on structured data must cut the loss.
+        cfg = CFG
+        hp = O.OptHyper(weight_decay=0.0)
+        step, spec = O.make_train_step_adam_mini(cfg, hp, kernels="ref")
+        jstep = jax.jit(step)
+        params = M.init_params(cfg, 0)
+        m, vb = O.adam_mini_init(params, spec)
+        n = len(params)
+        rng = np.random.default_rng(0)
+        # Highly-structured data: alternate tokens.
+        base = np.tile(np.arange(cfg.vocab, dtype=np.int32),
+                       cfg.seq_len)[:cfg.seq_len]
+        tok = jnp.asarray(np.tile(base, (cfg.batch_size, 1)))
+        tgt = jnp.roll(tok, -1, axis=1)
+        first = None
+        state = list(params) + list(m) + list(vb)
+        for t in range(1, 31):
+            out = jstep(tok, tgt, jnp.float32(5e-3), jnp.float32(t),
+                        *state)
+            loss, state = out[0], list(out[1:])
+            if first is None:
+                first = float(loss)
+        assert float(loss) < 0.5 * first, (first, float(loss))
+        del rng
+
+    def test_weighted_grad_zero_weights_zero_grads(self):
+        step = O.make_weighted_grad_step(CFG)
+        params = M.init_params(CFG, 0)
+        tok, tgt = tiny_batch(CFG)
+        w = jnp.zeros((CFG.batch_size, CFG.seq_len))
+        out = step(tok, tgt, w, *params)
+        assert float(out[0]) == 0.0
+        for g in out[1:]:
+            assert float(jnp.max(jnp.abs(g))) == 0.0
+
+    def test_weighted_grad_uniform_equals_plain(self):
+        wstep = O.make_weighted_grad_step(CFG)
+        gstep = O.make_grad_step(CFG)
+        params = M.init_params(CFG, 0)
+        tok, tgt = tiny_batch(CFG)
+        w = jnp.ones((CFG.batch_size, CFG.seq_len))
+        out_w = wstep(tok, tgt, w, *params)
+        out_g = gstep(tok, tgt, *params)
+        for a, b in zip(out_w, out_g):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6, rtol=1e-5)

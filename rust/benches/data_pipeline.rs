@@ -1,0 +1,37 @@
+//! Bench: data-pipeline throughput — corpus generation and batching
+//! must never be a bottleneck next to the XLA step (target: >100M
+//! tokens/s batching, i.e. >1000× faster than the step loop needs).
+
+use adam_mini::data::{Batcher, Corpus, SyntheticSpec};
+use adam_mini::partition::{partition_spec, Strategy};
+use adam_mini::util::timer::Bench;
+
+fn main() {
+    let bench = Bench::quick();
+
+    let spec = SyntheticSpec { n_tokens: 1 << 18, ..Default::default() };
+    let r = bench.run("data/synthetic_corpus_256k_tokens", || {
+        std::hint::black_box(Corpus::synthetic(&spec));
+    });
+    println!("  -> {:.1} M tokens/s generation\n",
+             (1 << 18) as f64 / (r.mean_ns / 1e9) / 1e6);
+
+    let corpus = Corpus::synthetic(&spec);
+    let mut batcher = Batcher::new(corpus, 16, 64, 0);
+    let r = bench.run("data/next_batch_16x64", || {
+        std::hint::black_box(batcher.next_batch());
+    });
+    println!("  -> {:.1} M tokens/s batching\n",
+             (16 * 64) as f64 / (r.mean_ns / 1e9) / 1e6);
+
+    // Partitioner on the Llama-2-7B inventory (runs once per training
+    // job; benched to keep it trivially cheap).
+    let arch = &adam_mini::memmodel::table1_models()[2];
+    let shapes = arch.param_shapes();
+    let stacked = arch.stacked_names();
+    bench.run("partition/llama7b_inventory", || {
+        std::hint::black_box(
+            partition_spec(&shapes, 32, &stacked, Strategy::Hessian)
+                .unwrap());
+    });
+}

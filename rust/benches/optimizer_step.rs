@@ -1,0 +1,52 @@
+//! Bench: host optimizer update latency per step (the Fig 13c /
+//! §3.4 "throughput comparison" microbench) across the whole roster,
+//! on a realistic tensor inventory.
+
+use adam_mini::optim::{self, Hyper, ModelMeta};
+use adam_mini::tensor::Tensor;
+use adam_mini::util::prng::Rng;
+use adam_mini::util::timer::Bench;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    // A ~1.6M-param inventory shaped like the t1m6 model.
+    let (l, d, ff, v) = (6usize, 128usize, 512usize, 256usize);
+    let params = vec![
+        Tensor::randn("embed", &[v, d], 0.02, &mut rng),
+        Tensor::randn("wq", &[l, d, d], 0.02, &mut rng),
+        Tensor::randn("wk", &[l, d, d], 0.02, &mut rng),
+        Tensor::randn("wv", &[l, d, d], 0.02, &mut rng),
+        Tensor::randn("wo", &[l, d, d], 0.02, &mut rng),
+        Tensor::randn("w1", &[l, ff, d], 0.02, &mut rng),
+        Tensor::randn("w3", &[l, ff, d], 0.02, &mut rng),
+        Tensor::randn("w2", &[l, d, ff], 0.02, &mut rng),
+        Tensor::ones("attn_norm", &[l, d]),
+        Tensor::ones("mlp_norm", &[l, d]),
+        Tensor::ones("final_norm", &[d]),
+        Tensor::randn("output", &[v, d], 0.02, &mut rng),
+    ];
+    let meta = ModelMeta {
+        n_heads: 8,
+        stacked: ["wq", "wk", "wv", "wo", "w1", "w3", "w2", "attn_norm",
+                  "mlp_norm"].iter().map(|s| s.to_string()).collect(),
+    };
+    let grads: Vec<Tensor> = params
+        .iter()
+        .map(|p| Tensor::randn(&*p.name, &p.shape, 0.01, &mut rng))
+        .collect();
+    let n: usize = params.iter().map(Tensor::numel).sum();
+    println!("inventory: {n} params across {} tensors\n", params.len());
+
+    let bench = Bench::default();
+    for name in optim::ROSTER {
+        let mut p = params.clone();
+        let mut opt =
+            optim::by_name(name, Hyper::default(), &p, &meta).unwrap();
+        let r = bench.run(&format!("optstep/{name}"), || {
+            opt.step(&mut p, &grads, 1e-4);
+        });
+        println!("  -> {name}: {:.2} ns/param, state {:.1} KB\n",
+                 r.mean_ns / n as f64,
+                 opt.state_bytes() as f64 / 1e3);
+    }
+}

@@ -1,0 +1,61 @@
+//! Bench: the analytic regenerators — Table 1 memory accounting,
+//! Table 2 cluster simulation, Fig 4 quadratic solvers, Fig 5
+//! preconditioner sweep, Fig 3 MLP Hessian — so their costs are
+//! tracked and regressions in the substrates show up in `cargo bench`.
+
+use adam_mini::cluster::{Job, ADAM_MINI_PROFILE, ADAMW_PROFILE};
+use adam_mini::hessian::mlp::{GaussianMixture, Mlp};
+use adam_mini::linalg::eigh;
+use adam_mini::memmodel::{memory_report, table1_models};
+use adam_mini::quadratic::fig4::{blockwise_gd_quadratic,
+                                 make_fig4_hessian};
+use adam_mini::quadratic::precond::precond_sweep;
+use adam_mini::util::prng::Rng;
+use adam_mini::util::timer::Bench;
+
+fn main() {
+    let bench = Bench::quick();
+
+    // Table 1: full memory accounting for all five published models.
+    bench.run("table1/memory_reports", || {
+        for arch in table1_models() {
+            std::hint::black_box(memory_report(&arch));
+        }
+    });
+
+    // Table 2: cluster sim operating-point search.
+    bench.run("table2/cluster_sim", || {
+        for opt in [ADAMW_PROFILE, ADAM_MINI_PROFILE] {
+            let job = Job::llama7b(opt);
+            std::hint::black_box(job.best_throughput());
+        }
+    });
+
+    // Fig 4: blockwise-GD on the 90-dim three-block quadratic.
+    let mut rng = Rng::new(0);
+    let (h, ranges) = make_fig4_hessian(&mut rng);
+    let w0: Vec<f64> = (0..h.rows).map(|_| rng.normal()).collect();
+    bench.run("fig4/blockwise_gd_300_steps", || {
+        std::hint::black_box(blockwise_gd_quadratic(&h, &ranges, &w0,
+                                                    300));
+    });
+
+    // Jacobi eigensolver on a 90x90 symmetric matrix.
+    bench.run("linalg/eigh_90x90", || {
+        std::hint::black_box(eigh(&h));
+    });
+
+    // Fig 5: one sweep point set at d=20.
+    bench.run("fig5/precond_sweep_d20", || {
+        let mut rng = Rng::new(1);
+        std::hint::black_box(precond_sweep(20, 500.0, &[0.0, 1.0], 2, 4,
+                                           &mut rng));
+    });
+
+    // Fig 3: exact MLP Hessian (24x24 here).
+    let data = GaussianMixture::generate(60, 6, 3, 0.4, 0);
+    let mut mlp = Mlp::init(6, 4, 3, 0);
+    bench.run("fig3/mlp_hessian_24x24", || {
+        std::hint::black_box(mlp.hessian_w(&data, 1e-2));
+    });
+}

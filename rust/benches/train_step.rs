@@ -1,0 +1,61 @@
+//! Bench: end-to-end training step latency (Table 2's "no extra
+//! compute per step" claim, measured) — fused Pallas vs fused jnp-ref
+//! vs host-optimizer paths, AdamW vs Adam-mini, on the t295k model.
+//!
+//! Needs `make artifacts`; exits 0 with a message otherwise.
+
+use adam_mini::data::{Batcher, Corpus, SyntheticSpec};
+use adam_mini::optim::{self, Optimizer};
+use adam_mini::runtime::{manifest, Engine, ModelRuntime};
+use adam_mini::util::timer::Bench;
+
+fn main() {
+    let Ok(engine) = Engine::new(manifest::default_dir()) else {
+        println!("BENCH train_step SKIPPED (run `make artifacts`)");
+        return;
+    };
+    let rt = ModelRuntime::new(&engine, "t295k").unwrap();
+    let corpus = Corpus::synthetic(&SyntheticSpec {
+        vocab: rt.mm.vocab,
+        n_tokens: 64 * rt.mm.batch_size * rt.mm.seq_len,
+        ..Default::default()
+    });
+    let mut batcher =
+        Batcher::new(corpus, rt.mm.batch_size, rt.mm.seq_len, 0);
+    let batch = batcher.next_batch();
+    let tokens = (rt.mm.batch_size * rt.mm.seq_len) as f64;
+    let bench = Bench { max_iters: 200, ..Bench::default() };
+
+    // Fused variants (grad + optimizer inside one XLA executable).
+    for key in ["train_adamw", "train_adam_mini", "train_adamw_ref",
+                "train_adam_mini_ref"] {
+        let mut params = rt.init_params(0);
+        let mut fused = rt.fused(key).unwrap();
+        // Warm the executable cache/compile before timing.
+        fused.step(&mut params, &batch, 1e-4).unwrap();
+        let r = bench.run(&format!("train_step/fused_hostsync/{key}"),
+                          || {
+            fused.step(&mut params, &batch, 1e-4).unwrap();
+        });
+        println!("  -> {:.0} tokens/s\n", tokens / (r.mean_ns / 1e9));
+        // Perf-pass fast path: literal-resident state, no host sync.
+        let r = bench.run(&format!("train_step/fused_device/{key}"), || {
+            fused.step_device(&params, &batch, 1e-4).unwrap();
+        });
+        println!("  -> {:.0} tokens/s\n", tokens / (r.mean_ns / 1e9));
+    }
+
+    // Host path: grad artifact + Rust optimizer.
+    for name in ["adamw", "adam_mini"] {
+        let mut params = rt.init_params(0);
+        let mut opt = optim::by_name(name, engine.manifest.hyper(),
+                                     &params, &rt.mm.meta())
+            .unwrap();
+        rt.grad(&params, &batch).unwrap(); // warm
+        let r = bench.run(&format!("train_step/host/{name}"), || {
+            let (_, grads) = rt.grad(&params, &batch).unwrap();
+            opt.step(&mut params, &grads, 1e-4);
+        });
+        println!("  -> {:.0} tokens/s\n", tokens / (r.mean_ns / 1e9));
+    }
+}

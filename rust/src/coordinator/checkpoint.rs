@@ -1,0 +1,143 @@
+//! Checkpointing: a simple self-describing binary tensor container.
+//!
+//! Layout (little endian): magic `AMCK`, u32 version, u32 tensor count,
+//! then per tensor: u32 name-length + name bytes, u32 ndim, u64 dims,
+//! f32 data.
+
+use std::fs::{self, File};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"AMCK";
+const VERSION: u32 = 1;
+
+pub fn save_checkpoint(path: impl AsRef<Path>, tensors: &[Tensor])
+    -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        let name = t.name.as_bytes();
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name)?;
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &x in &t.data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load_checkpoint(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
+    let mut r = BufReader::new(
+        File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an AMCK checkpoint");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let ndim = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        let mut buf = vec![0u8; n * 4];
+        r.read_exact(&mut buf)?;
+        for (i, c) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        tensors.push(Tensor::new(String::from_utf8(name)?, &shape, data));
+    }
+    Ok(tensors)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let tensors = vec![
+            Tensor::randn("embed", &[8, 4], 0.5, &mut rng),
+            Tensor::randn("final_norm", &[4], 1.0, &mut rng),
+            Tensor::zeros("empty-ish", &[1]),
+        ];
+        let path = std::env::temp_dir().join("amck_test/ckpt.bin");
+        save_checkpoint(&path, &tensors).unwrap();
+        let back = load_checkpoint(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        for (a, b) in tensors.iter().zip(&back) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data);
+        }
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("amck_test2/garbage.bin");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        use crate::util::prop::{check, prop_assert};
+        check(8, |rng| {
+            let n_tensors = 1 + rng.below(4);
+            let tensors: Vec<Tensor> = (0..n_tensors)
+                .map(|i| {
+                    let r = 1 + rng.below(6);
+                    let c = 1 + rng.below(6);
+                    Tensor::randn(format!("t{i}"), &[r, c], 1.0, rng)
+                })
+                .collect();
+            let path = std::env::temp_dir()
+                .join(format!("amck_prop/{}.bin", rng.next_u64()));
+            save_checkpoint(&path, &tensors).map_err(|e| e.to_string())?;
+            let back =
+                load_checkpoint(&path).map_err(|e| e.to_string())?;
+            std::fs::remove_file(&path).ok();
+            prop_assert(back == tensors, "checkpoint round-trip")
+        });
+    }
+}

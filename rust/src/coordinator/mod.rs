@@ -1,0 +1,8 @@
+//! Training coordinator (L3): the step loop that drives AOT executables,
+//! host or fused optimizers, schedules, metrics and checkpoints.
+
+pub mod checkpoint;
+pub mod trainer;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use trainer::{RunHistory, StepLog, Trainer, TrainerMode};

@@ -1,0 +1,351 @@
+//! The training loop.
+//!
+//! Two step modes share one interface:
+//!
+//! - **Host**: run the `grad` artifact, then a Rust [`Optimizer`] — the
+//!   path every roster optimizer and every grid-search experiment uses.
+//! - **Fused**: run a `train_*` artifact whose XLA graph contains both
+//!   the backward pass and the L1 Pallas optimizer kernel — the
+//!   production hot path.
+
+use anyhow::{bail, Result};
+
+use crate::config::TrainConfig;
+use crate::data::{Batch, Batcher, Corpus, SyntheticSpec};
+use crate::optim::{self, Optimizer, Schedule};
+use crate::runtime::{Engine, ModelRuntime};
+use crate::runtime::model::FusedTrainer;
+use crate::tensor::Tensor;
+use crate::util::csv::Csv;
+use crate::util::timer::Timer;
+
+/// Per-step record.
+#[derive(Debug, Clone)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+    pub val_loss: Option<f32>,
+}
+
+/// Full run record.
+#[derive(Debug, Clone, Default)]
+pub struct RunHistory {
+    pub name: String,
+    pub steps: Vec<StepLog>,
+    pub wall_secs: f64,
+    pub tokens_per_sec: f64,
+    pub opt_state_bytes: usize,
+}
+
+impl RunHistory {
+    pub fn final_train_loss(&self) -> f32 {
+        self.steps.last().map(|s| s.loss).unwrap_or(f32::NAN)
+    }
+
+    /// Last recorded validation loss.
+    pub fn final_val_loss(&self) -> f32 {
+        self.steps
+            .iter()
+            .rev()
+            .find_map(|s| s.val_loss)
+            .unwrap_or(f32::NAN)
+    }
+
+    /// Mean training loss over the last `k` logged steps (noise-robust).
+    pub fn tail_loss(&self, k: usize) -> f32 {
+        let n = self.steps.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let tail = &self.steps[n.saturating_sub(k)..];
+        tail.iter().map(|s| s.loss).sum::<f32>() / tail.len() as f32
+    }
+
+    /// True if any step showed a spike: loss > `factor` × running min.
+    pub fn has_spike(&self, factor: f32) -> bool {
+        let mut run_min = f32::MAX;
+        for s in &self.steps {
+            if s.loss.is_nan() || (run_min < f32::MAX
+                && s.loss > factor * run_min) {
+                return true;
+            }
+            run_min = run_min.min(s.loss);
+        }
+        false
+    }
+
+    /// Write the loss curve to `results/<name>.csv`.
+    pub fn write_csv(&self, dir: &str) -> Result<std::path::PathBuf> {
+        let mut csv = Csv::create(
+            format!("{dir}/{}.csv", self.name),
+            &["step", "loss", "lr", "val_loss"])?;
+        for s in &self.steps {
+            csv.row(&[s.step as f64, s.loss as f64, s.lr as f64,
+                      s.val_loss.map(|v| v as f64).unwrap_or(f64::NAN)])?;
+        }
+        csv.flush()?;
+        Ok(csv.path)
+    }
+}
+
+/// Which stepping engine a trainer uses.
+pub enum TrainerMode {
+    Host(Box<dyn Optimizer>),
+    Fused(FusedTrainer),
+}
+
+/// A configured training run.
+pub struct Trainer<'e> {
+    pub rt: ModelRuntime<'e>,
+    pub params: Vec<Tensor>,
+    pub mode: TrainerMode,
+    pub schedule: Schedule,
+    batcher: Batcher,
+    val_batches: Vec<Batch>,
+    cfg: TrainConfig,
+    step: usize,
+    /// Optional parameter-snapshot recording (Fig 9b trajectories):
+    /// (every_k, snapshots).
+    pub snapshots: Option<(usize, Vec<Vec<Tensor>>)>,
+}
+
+impl<'e> Trainer<'e> {
+    /// Build a trainer from a config against a loaded engine.
+    pub fn from_config(engine: &'e Engine, cfg: &TrainConfig)
+        -> Result<Trainer<'e>> {
+        let rt = ModelRuntime::new(engine, &cfg.model)?;
+        let params = rt.init_params(cfg.seed);
+        let corpus = make_corpus(&rt, cfg)?;
+        let (batcher, val_batches) = split_batches(
+            corpus, rt.mm.batch_size, rt.mm.seq_len, cfg.seed)?;
+        let schedule = cfg.schedule_for(cfg.steps)?;
+        let hp = optim::Hyper {
+            ..engine.manifest.hyper()
+        };
+
+        let mode = if cfg.fused {
+            let key = match cfg.optimizer.as_str() {
+                "adamw" => "train_adamw",
+                "adam_mini" => "train_adam_mini",
+                "adam_mini_default" => "train_adam_mini_default",
+                other => bail!("no fused artifact for optimizer {other:?}"),
+            };
+            TrainerMode::Fused(rt.fused(key)?)
+        } else if cfg.optimizer.starts_with("adam_mini")
+            && cfg.reduce_op != "mean"
+        {
+            // Fig 15 ablation path.
+            use crate::optim::{AdamMini, ReduceOp};
+            use crate::partition::Strategy;
+            let op = match cfg.reduce_op.as_str() {
+                "max" => ReduceOp::Max,
+                "min" => ReduceOp::Min,
+                "l1norm" => ReduceOp::L1Norm,
+                "l2norm" => ReduceOp::L2Norm,
+                other => bail!("unknown reduce op {other:?}"),
+            };
+            let spec = rt.mm.meta().spec_for(&params, Strategy::Hessian)?;
+            TrainerMode::Host(Box::new(AdamMini::new(hp, spec, op)))
+        } else {
+            TrainerMode::Host(optim::by_name(
+                &cfg.optimizer, hp, &params, &rt.mm.meta())?)
+        };
+
+        Ok(Trainer {
+            rt,
+            params,
+            mode,
+            schedule,
+            batcher,
+            val_batches,
+            cfg: cfg.clone(),
+            step: 0,
+            snapshots: None,
+        })
+    }
+
+    /// Enable parameter snapshots every `k` steps (Fig 9b).
+    pub fn record_snapshots(&mut self, every: usize) {
+        self.snapshots = Some((every, vec![self.params.clone()]));
+    }
+
+    /// Refresh host params from the fused trainer's literal state.
+    fn sync_params(&mut self) -> Result<()> {
+        if let TrainerMode::Fused(fused) = &self.mode {
+            fused.sync_params(&mut self.params)?;
+        }
+        Ok(())
+    }
+
+    /// Validation loss averaged over the held-out batches (syncs the
+    /// fused state first).
+    pub fn validate(&mut self) -> Result<f32> {
+        self.sync_params()?;
+        let mut acc = 0.0;
+        for b in &self.val_batches {
+            acc += self.rt.eval_loss(&self.params, b)?;
+        }
+        Ok(acc / self.val_batches.len() as f32)
+    }
+
+    /// One training step; returns the (averaged) batch loss.
+    pub fn step_once(&mut self) -> Result<f32> {
+        self.step += 1;
+        let lr = self.schedule.lr(self.step);
+        let loss = match &mut self.mode {
+            TrainerMode::Fused(fused) => {
+                // Fast path: state stays literal-resident; host params
+                // are refreshed lazily (validate / snapshots / end).
+                let batch = self.batcher.next_batch();
+                fused.step_device(&self.params, &batch, lr)?
+            }
+            TrainerMode::Host(opt) => {
+                // Gradient accumulation: average grads over micro-steps.
+                let accum = self.cfg.grad_accum.max(1);
+                let mut total_loss = 0.0;
+                let mut grads: Option<Vec<Tensor>> = None;
+                for _ in 0..accum {
+                    let batch = self.batcher.next_batch();
+                    let (loss, g) = self.rt.grad(&self.params, &batch)?;
+                    total_loss += loss;
+                    grads = Some(match grads {
+                        None => g,
+                        Some(mut acc) => {
+                            for (a, b) in acc.iter_mut().zip(&g) {
+                                a.axpy(1.0, b);
+                            }
+                            acc
+                        }
+                    });
+                }
+                let mut grads = grads.unwrap();
+                if accum > 1 {
+                    let inv = 1.0 / accum as f32;
+                    for g in grads.iter_mut() {
+                        for x in g.data.iter_mut() {
+                            *x *= inv;
+                        }
+                    }
+                }
+                opt.step(&mut self.params, &grads, lr);
+                total_loss / accum as f32
+            }
+        };
+        if self.snapshots.as_ref().is_some_and(
+            |(every, _)| self.step % every == 0)
+        {
+            self.sync_params()?;
+            if let Some((_, snaps)) = &mut self.snapshots {
+                snaps.push(self.params.clone());
+            }
+        }
+        Ok(loss)
+    }
+
+    /// Run the configured number of steps, logging per `log_every`.
+    pub fn train(&mut self, quiet: bool) -> Result<RunHistory> {
+        let timer = Timer::start();
+        let mut hist = RunHistory {
+            name: format!("{}_{}_s{}", self.cfg.model, self.cfg.optimizer,
+                          self.cfg.seed),
+            ..Default::default()
+        };
+        let tokens_per_step = (self.rt.mm.batch_size * self.rt.mm.seq_len
+            * self.cfg.grad_accum.max(1)) as f64;
+        for _ in 0..self.cfg.steps {
+            let loss = self.step_once()?;
+            let lr = self.schedule.lr(self.step);
+            let log_now = self.step % self.cfg.log_every.max(1) == 0
+                || self.step == 1 || self.step == self.cfg.steps;
+            if log_now {
+                let val = if self.cfg.eval_every > 0
+                    && (self.step % self.cfg.eval_every == 0
+                        || self.step == self.cfg.steps)
+                {
+                    Some(self.validate()?)
+                } else {
+                    None
+                };
+                if !quiet {
+                    match val {
+                        Some(v) => println!(
+                            "step {:>6}  loss {:.4}  val {:.4}  lr {:.2e}",
+                            self.step, loss, v, lr),
+                        None => println!(
+                            "step {:>6}  loss {:.4}  lr {:.2e}",
+                            self.step, loss, lr),
+                    }
+                }
+                hist.steps.push(StepLog {
+                    step: self.step, loss, lr, val_loss: val });
+            }
+            if !loss.is_finite() {
+                if !quiet {
+                    println!("step {}: loss diverged ({loss}); stopping",
+                             self.step);
+                }
+                hist.steps.push(StepLog {
+                    step: self.step, loss, lr, val_loss: None });
+                break;
+            }
+        }
+        self.sync_params()?;
+        hist.wall_secs = timer.secs();
+        hist.tokens_per_sec =
+            self.step as f64 * tokens_per_step / hist.wall_secs;
+        hist.opt_state_bytes = match &self.mode {
+            TrainerMode::Host(o) => o.state_bytes(),
+            TrainerMode::Fused(f) => f.state_bytes(),
+        };
+        Ok(hist)
+    }
+
+    pub fn current_step(&self) -> usize {
+        self.step
+    }
+}
+
+fn make_corpus(rt: &ModelRuntime, cfg: &TrainConfig) -> Result<Corpus> {
+    // Size the corpus to the run: enough windows for train + val
+    // without unintended epoch reuse dominating.
+    let need = (cfg.steps.max(64) * cfg.grad_accum.max(1) + 64)
+        * rt.mm.batch_size * rt.mm.seq_len / 4;
+    let n_tokens = need.clamp(1 << 16, 1 << 23);
+    Ok(match cfg.data.as_str() {
+        "synthetic" => Corpus::synthetic(&SyntheticSpec {
+            vocab: rt.mm.vocab,
+            n_tokens,
+            coherence: cfg.coherence,
+            seed: cfg.seed ^ 0xDA7A,
+            ..Default::default()
+        }),
+        "text" => {
+            if rt.mm.vocab < 256 {
+                bail!("text corpus needs vocab >= 256, model has {}",
+                      rt.mm.vocab);
+            }
+            Corpus::embedded_text(n_tokens)
+        }
+        other => bail!("unknown data kind {other:?}"),
+    })
+}
+
+/// Carve a held-out validation set (4 batches) from the corpus tail.
+fn split_batches(corpus: Corpus, bs: usize, seq: usize, seed: u64)
+    -> Result<(Batcher, Vec<Batch>)> {
+    let n = corpus.len();
+    let val_tokens = (4 * bs * seq + 1).min(n / 4);
+    let train = Corpus {
+        vocab: corpus.vocab,
+        tokens: corpus.tokens[..n - val_tokens].to_vec(),
+    };
+    let val = Corpus {
+        vocab: corpus.vocab,
+        tokens: corpus.tokens[n - val_tokens..].to_vec(),
+    };
+    let mut vb = Batcher::new(val, bs, seq, seed ^ 0x7A1);
+    let n_val = vb.batches_per_epoch().min(4).max(1);
+    let val_batches = (0..n_val).map(|_| vb.next_batch()).collect();
+    Ok((Batcher::new(train, bs, seq, seed), val_batches))
+}

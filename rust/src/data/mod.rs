@@ -1,0 +1,14 @@
+//! Data pipeline: corpora, tokenization, batching.
+//!
+//! Substitutes OpenWebText/C4 (DESIGN.md §4): a deterministic synthetic
+//! corpus with Zipfian unigrams + Markov bigram structure (so there is
+//! real next-token signal to learn), plus a small embedded English text
+//! for byte-level runs. All optimizers in a comparison consume the
+//! identical stream.
+
+pub mod batcher;
+pub mod corpus;
+pub mod text;
+
+pub use batcher::{Batch, Batcher};
+pub use corpus::{Corpus, SyntheticSpec};

@@ -1,0 +1,102 @@
+//! Embedded byte-level corpus for "real text" runs (DESIGN.md §4:
+//! substitutes OpenWebText/C4, which are unavailable offline).
+//!
+//! Original prose written for this repository — a plain-English primer
+//! on optimization for neural networks, which has the pleasant property
+//! that the models being trained are learning to predict text *about*
+//! the very algorithms training them.
+
+/// ~6 KiB of original English text; repeated by
+/// [`crate::data::Corpus::embedded_text`] to any requested length.
+pub const EMBEDDED_CORPUS: &str = "\
+Training a neural network is the business of turning a mountain of \
+examples into a single set of numbers. The numbers are the weights, the \
+mountain is the dataset, and the machinery that moves one toward the \
+other is the optimizer. Gradient descent is the oldest such machine. At \
+every step it asks the loss function which direction is downhill, takes \
+a small step that way, and asks again. The size of the step is the \
+learning rate, and choosing it well is most of the art. Too large and \
+the iterates ricochet across the valley walls; too small and training \
+crawls for weeks.
+
+Momentum was the first great refinement. Instead of following the raw \
+gradient, the optimizer follows a running average of recent gradients, \
+the way a heavy ball rolling through the valley ignores small bumps. \
+The second refinement was adaptivity. Different weights in a network \
+live in very different neighborhoods of the loss surface: some \
+directions are steep and narrow, others broad and flat. A single \
+learning rate must compromise between them. Adaptive methods keep a \
+running estimate of the typical squared gradient for every single \
+weight, and divide each step by the square root of that estimate. \
+Steep coordinates get small steps, flat coordinates get large ones.
+
+Adam combines both ideas: a momentum average of the gradient, and a \
+second average of the squared gradient, one scalar of each for every \
+parameter in the model. For a network with seven billion weights, that \
+is fourteen billion extra numbers that must live in accelerator memory \
+for the whole run. The model itself may be quantized, sharded, and \
+offloaded, but the optimizer state sits there stubbornly, often \
+costing more memory than the weights it serves.
+
+The curious thing, and the observation this corpus exists to \
+celebrate, is that most of those fourteen billion numbers may be \
+redundant. The loss surface of a neural network is not an arbitrary \
+bowl. Its curvature matrix, the Hessian, is very nearly block \
+diagonal: weights that feed the same neuron, or the same attention \
+head, curve together, while weights in different blocks barely \
+interact. Within one dense block, a single well-chosen learning rate \
+does the work of thousands of individual ones, and sometimes does it \
+better, because a diagonal preconditioner is a poor match for a dense \
+block of curvature anyway.
+
+So the recipe is simple to state. Partition the parameters along the \
+boundaries the Hessian already drew: queries and keys by attention \
+head, values and projections by output neuron, embeddings by token \
+row. Give each block one second-moment scalar, the average of the \
+squared gradients inside the block. Keep the momentum exactly as Adam \
+had it. The optimizer state shrinks by half, almost nothing of the \
+training curve changes, and on a crowded GPU the freed memory turns \
+into larger batches and fewer communication stalls, which is to say \
+into speed.
+
+None of this removes the need for care. The partition must respect \
+the architecture: cut along the wrong boundary and blocks mix \
+curvature that should stay separate, learning rates average over \
+incompatible scales, and the loss spikes at exactly the moment a \
+large run can least afford it. Embedding rows for rare tokens see \
+gradients only occasionally; transformer blocks near the output see \
+sharper curvature than those near the input. The structure is there, \
+but it must be read from the network, not imposed on it.
+
+There is a broader lesson in the episode. The fields of numerical \
+optimization and deep learning keep meeting in the same place: \
+structure. Convergence proofs lean on convexity that networks do not \
+have, yet the working heuristics that train them lean on structure \
+that networks genuinely do have, in their Hessians, their gradients, \
+and their data. Every byte of optimizer state is a bet about where \
+that structure lives. Spending fewer bytes, and placing them more \
+carefully, is how the bet is won.
+
+A language model reading this paragraph is, at this very moment, the \
+subject of the experiment it describes: its own weights are being \
+nudged, block by block, by an optimizer that keeps one learning rate \
+where its ancestor kept millions. If the loss that produced this \
+sentence is falling, the idea works.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_nontrivial_ascii() {
+        assert!(EMBEDDED_CORPUS.len() > 4000);
+        assert!(EMBEDDED_CORPUS.is_ascii());
+        // Contains enough distinct bytes to be a real LM target.
+        let mut seen = [false; 256];
+        for b in EMBEDDED_CORPUS.bytes() {
+            seen[b as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() > 25);
+    }
+}

@@ -1,0 +1,236 @@
+//! Fig 6 (Adam leave-x-out) and Fig 14 (blockwise GD beats AdamW on a
+//! 1-layer transformer) — the grid-search motivation experiments.
+
+use anyhow::Result;
+
+use super::quad::verdict;
+use super::RESULTS_DIR;
+use crate::data::{Batcher, Corpus, SyntheticSpec};
+use crate::optim::{AdamW, BlockwiseGd, Hyper, Optimizer, Schedule};
+use crate::partition::Strategy;
+use crate::runtime::{Engine, ModelRuntime};
+use crate::tensor::Tensor;
+use crate::util::csv::{ascii_table, Csv};
+
+/// Adam everywhere except `left_out` tensors, which get a single
+/// grid-searched learning-rate multiplier (the Fig 6 "Adam
+/// (leave-one-out)" method).
+struct LeaveOut {
+    adam: AdamW,
+    left_out: Vec<usize>,
+    /// Per-left-out-tensor lr multipliers (relative to the base lr).
+    lr_mults: Vec<f32>,
+    momentum: Vec<Tensor>,
+    beta1: f32,
+}
+
+impl LeaveOut {
+    fn new(hp: Hyper, params: &[Tensor], left_out: Vec<usize>,
+           lr_mults: Vec<f32>) -> LeaveOut {
+        assert_eq!(left_out.len(), lr_mults.len());
+        LeaveOut {
+            adam: AdamW::new(hp, params),
+            momentum: params
+                .iter()
+                .map(|p| Tensor::zeros(&*p.name, &p.shape))
+                .collect(),
+            left_out,
+            lr_mults,
+            beta1: hp.beta1,
+        }
+    }
+}
+
+impl Optimizer for LeaveOut {
+    fn name(&self) -> String {
+        format!("adam_leaveout_x{}", self.left_out.len())
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        // Save left-out tensors, let Adam update everything, then redo
+        // the left-out ones with single-lr momentum-SGD.
+        let saved: Vec<(usize, Tensor)> = self
+            .left_out
+            .iter()
+            .map(|&i| (i, params[i].clone()))
+            .collect();
+        self.adam.step(params, grads, lr);
+        for (k, (i, saved_p)) in saved.into_iter().enumerate() {
+            let m = &mut self.momentum[i];
+            let g = &grads[i];
+            let mult = self.lr_mults[k];
+            params[i] = saved_p;
+            for j in 0..params[i].data.len() {
+                m.data[j] =
+                    self.beta1 * m.data[j] + (1.0 - self.beta1) * g.data[j];
+                params[i].data[j] -= lr * mult * m.data[j];
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.adam.state_bytes()
+    }
+}
+
+fn train_with(engine: &Engine, model: &str, steps: usize,
+              mut opt: Box<dyn Optimizer>, peak_lr: f32, seed: u64)
+    -> Result<f32> {
+    let rt = ModelRuntime::new(engine, model)?;
+    let mut params = rt.init_params(seed);
+    let corpus = Corpus::synthetic(&SyntheticSpec {
+        vocab: rt.mm.vocab,
+        n_tokens: (steps + 8) * rt.mm.batch_size * rt.mm.seq_len / 2
+            + 4096,
+        seed: seed ^ 0xDA7A,
+        ..Default::default()
+    });
+    let mut batcher = Batcher::new(corpus, rt.mm.batch_size,
+                                   rt.mm.seq_len, seed);
+    let schedule = Schedule::llama(peak_lr, steps);
+    let mut tail = Vec::new();
+    for t in 1..=steps {
+        let b = batcher.next_batch();
+        let (loss, grads) = rt.grad(&params, &b)?;
+        opt.step(&mut params, &grads, schedule.lr(t));
+        if t + 3 > steps {
+            tail.push(loss);
+        }
+        if !loss.is_finite() {
+            return Ok(f32::NAN);
+        }
+    }
+    Ok(tail.iter().sum::<f32>() / tail.len() as f32)
+}
+
+/// Fig 6: leave-x-out for x = 1, 2, 3 on a 4-layer transformer.
+pub fn fig6(engine: &Engine, quick: bool) -> Result<()> {
+    let model = if quick { "t48k" } else { "t295k" };
+    let steps = if quick { 40 } else { 200 };
+    let grid: &[f32] = if quick { &[0.3, 1.0] }
+                       else { &[0.1, 0.3, 1.0, 3.0, 10.0] };
+    let hp = engine.manifest.hyper();
+    let rt = ModelRuntime::new(engine, model)?;
+    let params = rt.init_params(0);
+    let n_tensors = params.len();
+    drop(rt);
+
+    println!("Fig 6: Adam (leave-x-out) on {model}, {steps} steps, \
+              lr-mult grid {grid:?}");
+    let base = train_with(engine, model, steps,
+                          Box::new(AdamW::new(hp, &params)), 6e-3, 0)?;
+    println!("  Adam baseline loss: {base:.4}");
+
+    let mut csv = Csv::create(format!("{RESULTS_DIR}/fig6.csv"),
+                              &["x", "left_out", "best_mult",
+                                "best_loss", "adam_loss"])?;
+    let mut rows = Vec::new();
+    let mut all_close = true;
+    // Deterministic "random" block choices: spread across tensor list.
+    let choices: Vec<Vec<usize>> = vec![
+        vec![1 % n_tensors],
+        vec![1 % n_tensors, 5 % n_tensors],
+        vec![1 % n_tensors, 5 % n_tensors, 7 % n_tensors],
+    ];
+    let xs = if quick { &choices[..1] } else { &choices[..] };
+    for (x, left_out) in xs.iter().enumerate() {
+        // Sequential coordinate search: each left-out tensor gets its
+        // OWN lr multiplier (the paper searches one lr per block).
+        let mut mults = vec![1.0f32; left_out.len()];
+        let eval = |mults: &Vec<f32>| -> Result<f32> {
+            let opt = Box::new(LeaveOut::new(
+                hp, &params, left_out.clone(), mults.clone()));
+            train_with(engine, model, steps, opt, 6e-3, 0)
+        };
+        let mut best = eval(&mults)?;
+        for k in 0..left_out.len() {
+            for &mult in grid {
+                let mut cand = mults.clone();
+                cand[k] = mult;
+                let loss = eval(&cand)?;
+                if loss.is_finite() && loss < best {
+                    best = loss;
+                    mults = cand;
+                }
+            }
+        }
+        csv.row_str(&[(x + 1).to_string(), format!("{left_out:?}"),
+                      format!("{mults:?}"), format!("{best:.4}"),
+                      format!("{base:.4}")])?;
+        let close = best <= base + 0.05;
+        all_close &= close;
+        rows.push(vec![format!("leave-{}-out", x + 1),
+                       format!("{left_out:?}"),
+                       format!("{mults:?}"),
+                       format!("{best:.4}"),
+                       format!("{base:.4}")]);
+    }
+    csv.flush()?;
+    println!("{}", ascii_table(
+        &["method", "left-out tensors", "best lr-mult", "best loss",
+          "Adam loss"], &rows));
+    println!("{}", verdict(all_close,
+        "a single searched lr per left-out block matches Adam"));
+    println!("results: {RESULTS_DIR}/fig6.csv");
+    Ok(())
+}
+
+/// Fig 14 (Appendix D.1 Exp 2): blockwise GD with per-block searched
+/// lrs vs AdamW on the 1-layer transformer.
+pub fn fig14(engine: &Engine, quick: bool) -> Result<()> {
+    let model = "h1t";
+    let steps = if quick { 80 } else { 400 };
+    let hp = engine.manifest.hyper();
+    let rt = ModelRuntime::new(engine, model)?;
+    let params = rt.init_params(0);
+    let spec = rt.mm.meta().spec_for(&params, Strategy::Default)?;
+    drop(rt);
+
+    println!("Fig 14: blockwise GD (per-tensor searched lrs) vs AdamW \
+              on {model}");
+    let adam = train_with(engine, model, steps,
+                          Box::new(AdamW::new(hp, &params)), 6e-3, 0)?;
+
+    // Coordinate-descent grid search over per-tensor lr multipliers.
+    let grid: &[f32] = if quick { &[0.3, 1.0, 3.0] }
+                       else { &[0.1, 0.3, 1.0, 3.0, 10.0] };
+    let n = spec.len();
+    let mut mults = vec![1.0f32; n];
+    let base_lr = 0.5f32;
+    let eval = |mults: &[f32]| -> Result<f32> {
+        let lrs: Vec<Vec<f32>> = spec
+            .iter()
+            .zip(mults)
+            .map(|(s, &m)| vec![m; s.num_blocks])
+            .collect();
+        train_with(engine, model, steps,
+                   Box::new(BlockwiseGd::with_lrs(spec.clone(), lrs)),
+                   base_lr, 0)
+    };
+    let mut best = eval(&mults)?;
+    let rounds = if quick { 1 } else { 2 };
+    for _ in 0..rounds {
+        for i in 0..n {
+            for &g in grid {
+                let mut cand = mults.clone();
+                cand[i] = g;
+                let loss = eval(&cand)?;
+                if loss.is_finite() && loss < best {
+                    best = loss;
+                    mults = cand;
+                }
+            }
+        }
+    }
+    println!("  AdamW loss:        {adam:.4}");
+    println!("  blockwise GD loss: {best:.4}  (mults {mults:?})");
+    let mut csv = Csv::create(format!("{RESULTS_DIR}/fig14.csv"),
+                              &["method", "loss"])?;
+    csv.row_str(&["adamw".into(), format!("{adam:.4}")])?;
+    csv.row_str(&["blockwise_gd".into(), format!("{best:.4}")])?;
+    csv.flush()?;
+    println!("{}", verdict(best <= adam + 0.02,
+        "blockwise GD matches/beats AdamW with one lr per block"));
+    println!("results: {RESULTS_DIR}/fig14.csv");
+    Ok(())
+}

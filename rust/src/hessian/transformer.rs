@@ -1,0 +1,88 @@
+//! Transformer Hessian sub-blocks via the AOT `grad` artifact
+//! (paper Fig 7 and Table 3 / Appendix D.1 Exp 1).
+//!
+//! The `h1t` model mirrors the paper's Appendix F.2 probe: 1 layer,
+//! n_emb = 16, 4 heads, MLP width 32, vocab 8. Hessian columns come
+//! from central finite differences of the *analytic* gradients the
+//! artifact computes — each column costs two executable runs.
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::linalg::{cond_general, Mat};
+use crate::runtime::ModelRuntime;
+use crate::tensor::Tensor;
+
+/// Selection of a parameter sub-vector: tensor index + flat range.
+#[derive(Debug, Clone)]
+pub struct BlockSel {
+    pub label: String,
+    pub tensor: usize,
+    pub lo: usize,
+    pub len: usize,
+}
+
+impl BlockSel {
+    pub fn new(label: impl Into<String>, tensor: usize, lo: usize,
+               len: usize) -> BlockSel {
+        BlockSel { label: label.into(), tensor, lo, len }
+    }
+}
+
+/// Exact (O(ε²)) Hessian of the loss restricted to one parameter block:
+/// H[a][b] = ∂²L/∂θ_a∂θ_b for a, b in the selection.
+pub fn block_hessian(rt: &ModelRuntime, params: &[Tensor], batch: &Batch,
+                     sel: &BlockSel, eps: f32) -> Result<Mat> {
+    let n = sel.len;
+    let mut h = Mat::zeros(n, n);
+    let mut work = params.to_vec();
+    for col in 0..n {
+        let idx = sel.lo + col;
+        let orig = work[sel.tensor].data[idx];
+        work[sel.tensor].data[idx] = orig + eps;
+        let (_, gp) = rt.grad(&work, batch)?;
+        work[sel.tensor].data[idx] = orig - eps;
+        let (_, gm) = rt.grad(&work, batch)?;
+        work[sel.tensor].data[idx] = orig;
+        let gp = &gp[sel.tensor].data[sel.lo..sel.lo + n];
+        let gm = &gm[sel.tensor].data[sel.lo..sel.lo + n];
+        for row in 0..n {
+            h.set(row, col,
+                  ((gp[row] - gm[row]) / (2.0 * eps)) as f64);
+        }
+    }
+    h.symmetrize();
+    Ok(h)
+}
+
+/// Table 3 row: κ(H) and κ(D_Adam·H) for one block.
+///
+/// κ is the singular-value condition number (the transformer Hessian is
+/// indefinite at early training, so eigenvalue ratios are ill-posed).
+/// D_Adam = Diag(1/√v) with v the mean of g⊙g over `batches` — the
+/// bias-corrected early-training value of Adam's v.
+pub fn kappa_report(rt: &ModelRuntime, params: &[Tensor],
+                    batches: &[Batch], sel: &BlockSel, eps: f32)
+    -> Result<(f64, f64)> {
+    let h = block_hessian(rt, params, &batches[0], sel, eps)?;
+    let mut v = vec![0.0f64; sel.len];
+    for b in batches {
+        let (_, grads) = rt.grad(params, b)?;
+        let g = &grads[sel.tensor].data[sel.lo..sel.lo + sel.len];
+        for (vi, gi) in v.iter_mut().zip(g) {
+            *vi += (*gi as f64) * (*gi as f64);
+        }
+    }
+    let n = batches.len() as f64;
+    let dinv: Vec<f64> =
+        v.iter().map(|vi| 1.0 / (vi / n).sqrt().max(1e-12)).collect();
+    let kh = cond_general(&h);
+    let kdh = cond_general(&h.scale_rows(&dinv));
+    Ok((kh, kdh))
+}
+
+/// Off-block leakage metric for a full-tensor Hessian (Fig 7): fraction
+/// of squared mass inside the given diagonal blocks.
+pub fn block_structure(h: &Mat, blocks: &[(usize, usize)]) -> f64 {
+    crate::linalg::block_energy_ratio(h, blocks)
+}

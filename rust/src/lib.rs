@@ -1,0 +1,36 @@
+//! # adam-mini — Rust + JAX + Pallas reproduction of *Adam-mini* (ICLR 2025)
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! - **L3 (this crate)**: the training framework — config system, PJRT
+//!   runtime, data pipeline, training coordinator, the full optimizer
+//!   roster, and every analysis substrate the paper's evaluation needs
+//!   (Hessian structure, quadratic case studies, memory model, cluster
+//!   throughput simulator).
+//! - **L2/L1 (`python/compile/`)**: JAX transformer + Pallas kernels,
+//!   AOT-lowered once to `artifacts/*.hlo.txt`; never on the step path.
+//!
+//! The public API is organised so a downstream user can: load a model
+//! artifact ([`runtime`]), build a dataset ([`data`]), pick an optimizer
+//! ([`optim`] + [`partition`]), and train ([`coordinator`]) — or
+//! regenerate any paper table/figure ([`experiments`]).
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod hessian;
+pub mod linalg;
+pub mod memmodel;
+pub mod optim;
+pub mod partition;
+pub mod quadratic;
+pub mod rlhf;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,113 @@
+//! Dense linear algebra substrate (f64): matrices, a cyclic-Jacobi
+//! symmetric eigensolver, condition numbers, and the random
+//! positive-definite generators of the paper's §2 case studies
+//! (Fig 4 block Hessians, Fig 5 rotation-controlled H_b).
+//!
+//! Built from scratch — no LAPACK in the environment. The Jacobi solver
+//! is O(n³) per sweep, plenty for the paper's matrix sizes (d ≤ a few
+//! hundred).
+
+pub mod jacobi;
+pub mod mat;
+pub mod random;
+
+pub use jacobi::{eigh, Eigh};
+pub use mat::Mat;
+pub use random::{block_diag, random_pd_from_eigs, rotation_matrix};
+
+/// Condition number κ = λ_max/λ_min from a symmetric PD matrix.
+pub fn cond_sym(h: &Mat) -> f64 {
+    let e = eigh(h);
+    let max = e.values.iter().cloned().fold(f64::MIN, f64::max);
+    let min = e.values.iter().cloned().fold(f64::MAX, f64::min);
+    max / min
+}
+
+/// Condition number of a general (possibly non-symmetric) matrix A via
+/// singular values: κ(A) = σ_max/σ_min = sqrt(κ(AᵀA) eigenvalues).
+/// Needed for κ(D·H) where D·H is not symmetric (paper Eq. 2).
+pub fn cond_general(a: &Mat) -> f64 {
+    let ata = a.transpose().matmul(a);
+    let e = eigh(&ata);
+    let max = e.values.iter().cloned().fold(f64::MIN, f64::max).max(0.0);
+    let min = e.values.iter().cloned().fold(f64::MAX, f64::min).max(0.0);
+    (max / min).sqrt()
+}
+
+/// Diagonal-over-off-diagonal ratio τ = Σ|H_ii| / Σ|H_ij| (paper Eq. 2):
+/// 1 for diagonal matrices, → 0 as mass moves off the diagonal.
+pub fn diag_ratio(h: &Mat) -> f64 {
+    let mut diag = 0.0;
+    let mut all = 0.0;
+    for i in 0..h.rows {
+        for j in 0..h.cols {
+            let v = h.get(i, j).abs();
+            all += v;
+            if i == j {
+                diag += v;
+            }
+        }
+    }
+    diag / all
+}
+
+/// Fraction of |H| "energy" (squared Frobenius mass) inside the given
+/// diagonal blocks — the block-diagonal-structure metric for Fig 3/7.
+/// `blocks` are (start, len) row/col ranges covering [0, n).
+pub fn block_energy_ratio(h: &Mat, blocks: &[(usize, usize)]) -> f64 {
+    let mut inside = 0.0;
+    let mut total = 0.0;
+    for i in 0..h.rows {
+        for j in 0..h.cols {
+            let v = h.get(i, j);
+            let e = v * v;
+            total += e;
+            if blocks
+                .iter()
+                .any(|&(s, l)| i >= s && i < s + l && j >= s && j < s + l)
+            {
+                inside += e;
+            }
+        }
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        inside / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cond_of_diagonal() {
+        let mut h = Mat::zeros(3, 3);
+        h.set(0, 0, 1.0);
+        h.set(1, 1, 4.0);
+        h.set(2, 2, 2.0);
+        assert!((cond_sym(&h) - 4.0).abs() < 1e-9);
+        assert!((cond_general(&h) - 4.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn diag_ratio_extremes() {
+        let h = Mat::identity(4);
+        assert!((diag_ratio(&h) - 1.0).abs() < 1e-12);
+        let mut dense = Mat::from_fn(4, 4, |_, _| 1.0);
+        assert!((diag_ratio(&dense) - 0.25).abs() < 1e-12);
+        dense.set(0, 0, 0.0);
+        assert!(diag_ratio(&dense) < 0.25);
+    }
+
+    #[test]
+    fn block_energy_of_block_diag() {
+        let a = Mat::from_fn(2, 2, |_, _| 1.0);
+        let h = block_diag(&[a.clone(), a]);
+        let r = block_energy_ratio(&h, &[(0, 2), (2, 2)]);
+        assert!((r - 1.0).abs() < 1e-12);
+        let r_half = block_energy_ratio(&h, &[(0, 2)]);
+        assert!((r_half - 0.5).abs() < 1e-12);
+    }
+}

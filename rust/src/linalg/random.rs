@@ -1,0 +1,128 @@
+//! Random matrix generators used by the paper's §2 case studies.
+//!
+//! `rotation_matrix` reimplements the paper's Appendix F.2 generator for
+//! Fig 5 exactly: Q is a product of d(d−1)/2 Givens rotations with
+//! angles θ_ij; H_b = Q Λ Qᵀ with Λ = diag(κ, 1, …, 1). Scaling the θ
+//! sample by R ∈ [0, 1] sweeps the diagonal-ratio τ without changing
+//! the spectrum.
+
+use super::mat::Mat;
+use crate::util::prng::Rng;
+
+/// Orthogonal matrix from a full set of Givens rotations; `angles[k]`
+/// indexes the (i, j) pairs in row-major upper-triangular order.
+pub fn rotation_matrix(n: usize, angles: &[f64]) -> Mat {
+    assert_eq!(angles.len(), n * (n - 1) / 2, "need d(d-1)/2 angles");
+    let mut q = Mat::identity(n);
+    let mut k = 0;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let (c, s) = (angles[k].cos(), angles[k].sin());
+            k += 1;
+            // q <- P · q, where P rotates rows i and j.
+            for col in 0..n {
+                let qi = q.get(i, col);
+                let qj = q.get(j, col);
+                q.set(i, col, c * qi + s * qj);
+                q.set(j, col, -s * qi + c * qj);
+            }
+        }
+    }
+    q
+}
+
+/// Sample d(d−1)/2 angles uniform in [−π/2, π/2] (paper Appendix F.2).
+pub fn sample_angles(n: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n * (n - 1) / 2)
+        .map(|_| rng.range(-std::f64::consts::FRAC_PI_2,
+                           std::f64::consts::FRAC_PI_2))
+        .collect()
+}
+
+/// H = Q diag(eigs) Qᵀ with Q from the given rotation angles.
+pub fn pd_from_rotations(eigs: &[f64], angles: &[f64]) -> Mat {
+    let q = rotation_matrix(eigs.len(), angles);
+    q.matmul(&Mat::diag(eigs)).matmul(&q.transpose())
+}
+
+/// Random PD matrix with the given eigenvalues and a random rotation.
+pub fn random_pd_from_eigs(eigs: &[f64], rng: &mut Rng) -> Mat {
+    let angles = sample_angles(eigs.len(), rng);
+    pd_from_rotations(eigs, &angles)
+}
+
+/// Block-diagonal composition (paper Fig 4's three-block Hessian).
+pub fn block_diag(blocks: &[Mat]) -> Mat {
+    let n: usize = blocks.iter().map(|b| b.rows).sum();
+    let mut out = Mat::zeros(n, n);
+    let mut off = 0;
+    for b in blocks {
+        assert_eq!(b.rows, b.cols);
+        for i in 0..b.rows {
+            for j in 0..b.cols {
+                out.set(off + i, off + j, b.get(i, j));
+            }
+        }
+        off += b.rows;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{cond_sym, eigh};
+    use crate::util::prop::{check, prop_close};
+
+    #[test]
+    fn rotation_is_orthogonal() {
+        check(16, |rng| {
+            let n = 2 + rng.below(6);
+            let q = rotation_matrix(n, &sample_angles(n, rng));
+            let qtq = q.transpose().matmul(&q);
+            let eye = Mat::identity(n);
+            let mut err: f64 = 0.0;
+            for (a, b) in qtq.data.iter().zip(&eye.data) {
+                err = err.max((a - b).abs());
+            }
+            prop_close(err, 0.0, 1e-10, 0.0, "QᵀQ − I")
+        });
+    }
+
+    #[test]
+    fn pd_preserves_spectrum() {
+        check(12, |rng| {
+            let n = 2 + rng.below(5);
+            let eigs: Vec<f64> =
+                (0..n).map(|i| 1.0 + i as f64 + rng.f64()).collect();
+            let h = random_pd_from_eigs(&eigs, rng);
+            let mut got = eigh(&h).values;
+            got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut want = eigs.clone();
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for (g, w) in got.iter().zip(&want) {
+                prop_close(*g, *w, 1e-7, 1e-9, "eigenvalue")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_angles_give_diagonal() {
+        let eigs = [5.0, 1.0, 1.0];
+        let h = pd_from_rotations(&eigs, &vec![0.0; 3]);
+        assert_eq!(h, Mat::diag(&eigs));
+        assert!((cond_sym(&h) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn block_diag_layout() {
+        let a = Mat::from_fn(2, 2, |_, _| 1.0);
+        let b = Mat::from_fn(1, 1, |_, _| 9.0);
+        let h = block_diag(&[a, b]);
+        assert_eq!(h.rows, 3);
+        assert_eq!(h.get(2, 2), 9.0);
+        assert_eq!(h.get(0, 2), 0.0);
+        assert_eq!(h.get(2, 0), 0.0);
+    }
+}

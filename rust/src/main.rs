@@ -1,0 +1,173 @@
+//! `repro` — the leader CLI of the Adam-mini reproduction framework.
+//!
+//! Subcommands:
+//!   train [--config FILE] [key=value ...]   run one training job
+//!   exp <name|all> [--quick]                regenerate a paper artifact
+//!   list                                    models + experiments
+//!   report                                  memory/throughput summary
+//!   selfcheck                               load+run every artifact once
+//!
+//! (Argument parsing is hand-rolled: clap is not in the vendored crate
+//! set — see DESIGN.md.)
+
+use anyhow::{bail, Result};
+
+use adam_mini::config::TrainConfig;
+use adam_mini::coordinator::Trainer;
+use adam_mini::experiments;
+use adam_mini::runtime::{manifest, Engine};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  repro train [--config FILE] [key=value ...]\n  \
+         repro exp <name|all> [--quick]\n  repro list\n  repro report\n  \
+         repro selfcheck\n\nartifacts dir: $ADAM_MINI_ARTIFACTS \
+         (default ./artifacts)"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("exp") => cmd_exp(&args[1..]),
+        Some("list") => cmd_list(),
+        Some("report") => {
+            experiments::throughput::table1()?;
+            experiments::throughput::table2()
+        }
+        Some("selfcheck") => cmd_selfcheck(),
+        _ => usage(),
+    }
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let mut cfg = TrainConfig::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                i += 1;
+                let path = args.get(i).unwrap_or_else(|| usage());
+                cfg = TrainConfig::from_file(path)?;
+            }
+            kv if kv.contains('=') => cfg.apply_override(kv)?,
+            _ => usage(),
+        }
+        i += 1;
+    }
+    println!("config: {}", cfg.to_json());
+    let engine = Engine::new(manifest::default_dir())?;
+    let mut trainer = Trainer::from_config(&engine, &cfg)?;
+    let hist = trainer.train(false)?;
+    let path = hist.write_csv("results/train")?;
+    println!(
+        "done: {} steps in {:.1}s ({:.0} tok/s), final loss {:.4}, \
+         val {:.4}, optimizer state {:.1} KB\ncurve: {}",
+        cfg.steps, hist.wall_secs, hist.tokens_per_sec,
+        hist.final_train_loss(), hist.final_val_loss(),
+        hist.opt_state_bytes as f64 / 1e3, path.display()
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &[String]) -> Result<()> {
+    let Some(name) = args.first() else { usage() };
+    let quick = args.iter().any(|a| a == "--quick");
+    // Engine is lazy: only experiments that need artifacts get one.
+    let needs_engine = |n: &str| {
+        experiments::EXPERIMENTS
+            .iter()
+            .find(|(en, _, _)| *en == n)
+            .map(|(_, _, ne)| *ne)
+            .unwrap_or(true)
+    };
+    let run_names: Vec<&str> = if name == "all" {
+        experiments::EXPERIMENTS.iter().map(|(n, _, _)| *n).collect()
+    } else {
+        vec![name.as_str()]
+    };
+    let engine = if run_names.iter().any(|n| needs_engine(n)) {
+        Some(Engine::new(manifest::default_dir())?)
+    } else {
+        None
+    };
+    for n in run_names {
+        println!("\n=== experiment {n} ===");
+        let t = std::time::Instant::now();
+        experiments::run(n, engine.as_ref(), quick)?;
+        println!("=== {n} done in {:.1}s ===", t.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("experiments (repro exp <name> [--quick]):");
+    for (name, what, needs) in experiments::EXPERIMENTS {
+        println!("  {name:<12} {what}{}",
+                 if *needs { "" } else { "  [no artifacts needed]" });
+    }
+    match Engine::new(manifest::default_dir()) {
+        Ok(engine) => {
+            println!("\nmodels (artifacts loaded):");
+            for (name, mm) in &engine.manifest.models {
+                println!(
+                    "  {name:<8} {:>9} params  {} L{} d{} h{} \
+                     seq{} bs{}  v-cut {:.2}%  artifacts: {}",
+                    mm.n_params, mm.family, mm.n_layers, mm.d_model,
+                    mm.n_heads, mm.seq_len, mm.batch_size,
+                    mm.v_reduction * 100.0, mm.artifacts.len());
+            }
+        }
+        Err(e) => println!("\n(no artifacts: {e})"),
+    }
+    Ok(())
+}
+
+fn cmd_selfcheck() -> Result<()> {
+    use adam_mini::data::{Batcher, Corpus, SyntheticSpec};
+    let engine = Engine::new(manifest::default_dir())?;
+    let names: Vec<String> =
+        engine.manifest.models.keys().cloned().collect();
+    let mut failures = 0;
+    for name in &names {
+        let rt = adam_mini::runtime::ModelRuntime::new(&engine, name)?;
+        let params = rt.init_params(0);
+        let corpus = Corpus::synthetic(&SyntheticSpec {
+            vocab: rt.mm.vocab,
+            n_tokens: 8 * rt.mm.batch_size * rt.mm.seq_len + 64,
+            ..Default::default()
+        });
+        let mut b = Batcher::new(corpus, rt.mm.batch_size, rt.mm.seq_len,
+                                 0);
+        let batch = b.next_batch();
+        match rt.grad(&params, &batch) {
+            Ok((loss, grads)) => {
+                let expect = (rt.mm.vocab as f32).ln();
+                let gn: f64 =
+                    grads.iter().map(|g| g.sq_norm()).sum::<f64>().sqrt();
+                let ok = loss.is_finite()
+                    && (loss - expect).abs() < 0.5 * expect
+                    && gn.is_finite()
+                    && gn > 0.0;
+                println!(
+                    "  {name:<8} loss {loss:.4} (ln V = {expect:.3}) \
+                     |grad| {gn:.3e}  {}",
+                    if ok { "OK" } else { "SUSPECT" });
+                if !ok {
+                    failures += 1;
+                }
+            }
+            Err(e) => {
+                println!("  {name:<8} FAILED: {e}");
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} model(s) failed selfcheck");
+    }
+    println!("selfcheck OK ({} models)", names.len());
+    Ok(())
+}

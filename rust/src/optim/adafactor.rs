@@ -1,0 +1,226 @@
+//! Adafactor (Shazeer & Stern 2018) — the paper's main memory-efficient
+//! baseline — in two variants:
+//!
+//! - `Original`: factored second moment with the β̂2(t) = 1 − t^(−0.8)
+//!   schedule and update clipping (d = 1.0); momentum β1 = 0.9 added as
+//!   in the paper's §3 setup ("we incorporate momentum to ensure a fair
+//!   comparison").
+//! - `Zhai`: the Zhai et al. (2022) modification — fixed β2, same
+//!   clipping, explicit learning rate (paper §3.4 / Appendix D.7).
+//!
+//! Matrices factor v into row statistics R and column statistics C
+//! (O(r + c) memory); vectors fall back to full AdaGrad-style v.
+
+use super::{Hyper, Optimizer};
+use crate::tensor::Tensor;
+
+const EPS1: f32 = 1e-30;
+const CLIP_D: f32 = 1.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdafactorVariant {
+    Original,
+    Zhai,
+}
+
+enum Factored {
+    /// Matrix tensors: row and column second-moment EMAs.
+    Mat { r: Vec<f32>, c: Vec<f32>, rows: usize, cols: usize },
+    /// Vector tensors: full second moment.
+    Vec { v: Vec<f32> },
+}
+
+pub struct Adafactor {
+    hp: Hyper,
+    variant: AdafactorVariant,
+    m: Vec<Tensor>,
+    state: Vec<Factored>,
+    t: u64,
+}
+
+/// Flatten an nd shape to (rows, cols) with cols = last dim.
+fn mat_dims(shape: &[usize]) -> Option<(usize, usize)> {
+    if shape.len() < 2 {
+        return None;
+    }
+    let cols = *shape.last().unwrap();
+    let rows: usize = shape[..shape.len() - 1].iter().product();
+    Some((rows, cols))
+}
+
+impl Adafactor {
+    pub fn new(hp: Hyper, params: &[Tensor], variant: AdafactorVariant)
+        -> Adafactor {
+        let state = params
+            .iter()
+            .map(|p| match mat_dims(&p.shape) {
+                Some((rows, cols)) => Factored::Mat {
+                    r: vec![0.0; rows],
+                    c: vec![0.0; cols],
+                    rows,
+                    cols,
+                },
+                None => Factored::Vec { v: vec![0.0; p.numel()] },
+            })
+            .collect();
+        Adafactor {
+            hp,
+            variant,
+            m: params
+                .iter()
+                .map(|p| Tensor::zeros(&*p.name, &p.shape))
+                .collect(),
+            state,
+            t: 0,
+        }
+    }
+
+    fn beta2_t(&self) -> f32 {
+        match self.variant {
+            // Shazeer & Stern eq. (Alg 4): β̂2(t) = 1 − t^(−0.8).
+            AdafactorVariant::Original => {
+                1.0 - (self.t as f32).powf(-0.8)
+            }
+            AdafactorVariant::Zhai => self.hp.beta2,
+        }
+    }
+}
+
+impl Optimizer for Adafactor {
+    fn name(&self) -> String {
+        match self.variant {
+            AdafactorVariant::Original => "adafactor".into(),
+            AdafactorVariant::Zhai => "adafactor_zhai".into(),
+        }
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        self.t += 1;
+        let b2 = self.beta2_t();
+        let b1 = self.hp.beta1;
+        let wd = 1.0 - lr * self.hp.weight_decay;
+
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let n = p.numel();
+            // u = g / sqrt(v̂), with v̂ from factored or full state.
+            let mut u = vec![0.0f32; n];
+            match &mut self.state[i] {
+                Factored::Mat { r, c, rows, cols } => {
+                    let (rows, cols) = (*rows, *cols);
+                    // Row/col means of g² + ε1.
+                    for ri in 0..rows {
+                        let mut acc = 0.0;
+                        for ci in 0..cols {
+                            let gv = g.data[ri * cols + ci];
+                            acc += gv * gv + EPS1;
+                        }
+                        r[ri] = b2 * r[ri] + (1.0 - b2) * (acc / cols as f32);
+                    }
+                    for ci in 0..cols {
+                        let mut acc = 0.0;
+                        for ri in 0..rows {
+                            let gv = g.data[ri * cols + ci];
+                            acc += gv * gv + EPS1;
+                        }
+                        c[ci] = b2 * c[ci] + (1.0 - b2) * (acc / rows as f32);
+                    }
+                    let r_mean: f32 =
+                        r.iter().sum::<f32>() / rows as f32 + EPS1;
+                    for ri in 0..rows {
+                        for ci in 0..cols {
+                            let vhat = r[ri] * c[ci] / r_mean;
+                            u[ri * cols + ci] = g.data[ri * cols + ci]
+                                / (vhat.sqrt() + EPS1);
+                        }
+                    }
+                }
+                Factored::Vec { v } => {
+                    for j in 0..n {
+                        let gv = g.data[j];
+                        v[j] = b2 * v[j] + (1.0 - b2) * (gv * gv + EPS1);
+                        u[j] = gv / (v[j].sqrt() + EPS1);
+                    }
+                }
+            }
+            // Update clipping: u /= max(1, RMS(u)/d).
+            let rms =
+                (u.iter().map(|x| x * x).sum::<f32>() / n as f32).sqrt();
+            let scale = 1.0 / (rms / CLIP_D).max(1.0);
+            // Momentum on the clipped update, then apply.
+            let m = &mut self.m[i];
+            for j in 0..n {
+                let mj = b1 * m.data[j] + (1.0 - b1) * u[j] * scale;
+                m.data[j] = mj;
+                p.data[j] = p.data[j] * wd - lr * mj;
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let factored: usize = self
+            .state
+            .iter()
+            .map(|s| match s {
+                Factored::Mat { r, c, .. } => r.len() + c.len(),
+                Factored::Vec { v } => v.len(),
+            })
+            .sum();
+        (factored + self.m.iter().map(Tensor::numel).sum::<usize>()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn factored_state_is_sublinear_for_matrices() {
+        let mut rng = Rng::new(0);
+        let params = vec![Tensor::randn("w", &[64, 64], 0.02, &mut rng)];
+        let opt = Adafactor::new(Hyper::default(), &params,
+                                 AdafactorVariant::Original);
+        // m is full (momentum), but v is 64 + 64 instead of 4096.
+        assert_eq!(opt.state_bytes(), (64 * 64 + 128) * 4);
+    }
+
+    #[test]
+    fn descends_on_quadratic_both_variants() {
+        for variant in [AdafactorVariant::Original, AdafactorVariant::Zhai] {
+            let mut rng = Rng::new(7);
+            let hp = Hyper { weight_decay: 0.0, ..Hyper::default() };
+            let mut params =
+                vec![Tensor::randn("w", &[8, 8], 1.0, &mut rng)];
+            let mut opt = Adafactor::new(hp, &params, variant);
+            let start = params[0].sq_norm();
+            for _ in 0..300 {
+                let g = Tensor::new("w", &[8, 8], params[0].data.clone());
+                opt.step(&mut params, &[g], 1e-2);
+            }
+            let end = params[0].sq_norm();
+            assert!(end < 0.2 * start, "{variant:?}: {start} -> {end}");
+        }
+    }
+
+    #[test]
+    fn clipping_bounds_update_rms() {
+        // A huge first-step gradient must not produce an update with
+        // RMS(u) > 1 (the d=1.0 clip).
+        let hp = Hyper { beta1: 0.0, weight_decay: 0.0, ..Hyper::default() };
+        let mut params = vec![Tensor::zeros("w", &[4, 4])];
+        let g = Tensor::new("w", &[4, 4], vec![1e6; 16]);
+        let mut opt =
+            Adafactor::new(hp, &params, AdafactorVariant::Zhai);
+        opt.step(&mut params, &[g], 1.0);
+        let rms = (params[0].sq_norm() / 16.0).sqrt();
+        assert!(rms <= CLIP_D as f64 + 1e-5, "rms {rms}");
+    }
+
+    #[test]
+    fn vector_params_use_full_v() {
+        let params = vec![Tensor::zeros("b", &[32])];
+        let opt = Adafactor::new(Hyper::default(), &params,
+                                 AdafactorVariant::Original);
+        assert_eq!(opt.state_bytes(), (32 + 32) * 4);
+    }
+}

@@ -1,0 +1,238 @@
+//! Adam-mini (paper Algorithms 1–3): one second-moment scalar per dense
+//! Hessian block instead of one per parameter.
+//!
+//! The partition comes from [`crate::partition`] (Algorithm 3). The
+//! blockwise reduce defaults to `mean(g⊙g)` — the paper's choice — with
+//! the Appendix D.2 ablation alternatives (max/min/ℓ1/ℓ2) selectable
+//! for the Fig 15 experiment.
+
+use super::{Hyper, Optimizer};
+use crate::partition::BlockView;
+use crate::tensor::Tensor;
+
+/// Blockwise statistic borrowed from Adam's v (paper Appendix D.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Mean,
+    Max,
+    Min,
+    L1Norm,
+    L2Norm,
+}
+
+impl ReduceOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceOp::Mean => "mean",
+            ReduceOp::Max => "max",
+            ReduceOp::Min => "min",
+            ReduceOp::L1Norm => "l1norm",
+            ReduceOp::L2Norm => "l2norm",
+        }
+    }
+
+    fn apply(&self, gsq: impl Iterator<Item = f32>, n: usize) -> f32 {
+        match self {
+            ReduceOp::Mean => gsq.sum::<f32>() / n as f32,
+            ReduceOp::Max => gsq.fold(0.0, f32::max),
+            ReduceOp::Min => gsq.fold(f32::MAX, f32::min),
+            // Norms of the g⊙g vector, as in the Fig 15 ablation.
+            ReduceOp::L1Norm => gsq.sum::<f32>(),
+            ReduceOp::L2Norm => gsq.map(|x| x * x).sum::<f32>().sqrt(),
+        }
+    }
+}
+
+/// The Adam-mini optimizer. State: full-size m + one f32 per block.
+pub struct AdamMini {
+    hp: Hyper,
+    spec: Vec<BlockView>,
+    reduce: ReduceOp,
+    m: Vec<Tensor>,
+    /// vb[i][b] = second-moment scalar for block b of tensor i.
+    vb: Vec<Vec<f32>>,
+    t: u64,
+}
+
+impl AdamMini {
+    pub fn new(hp: Hyper, spec: Vec<BlockView>, reduce: ReduceOp)
+        -> AdamMini {
+        let m = spec
+            .iter()
+            .map(|b| Tensor::zeros(&*b.name, &b.shape))
+            .collect();
+        let vb = spec.iter().map(|b| vec![0.0; b.num_blocks]).collect();
+        AdamMini { hp, spec, reduce, m, vb, t: 0 }
+    }
+
+    /// The per-block second moments (inspection / checkpointing).
+    pub fn vb(&self) -> &[Vec<f32>] {
+        &self.vb
+    }
+
+    /// Number of learning-rate scalars this instance maintains.
+    pub fn total_blocks(&self) -> usize {
+        self.vb.iter().map(Vec::len).sum()
+    }
+}
+
+impl Optimizer for AdamMini {
+    fn name(&self) -> String {
+        format!("adam_mini[{}]", self.reduce.name())
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), self.spec.len());
+        self.t += 1;
+        let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
+        let bc1 = 1.0 / (1.0 - beta1.powi(self.t as i32));
+        let bc2 = 1.0 / (1.0 - beta2.powi(self.t as i32));
+        let wd = 1.0 - lr * weight_decay;
+
+        for (i, bv) in self.spec.iter().enumerate() {
+            let p = &mut params[i];
+            let g = &grads[i];
+            let m = &mut self.m[i];
+            debug_assert_eq!(p.numel(), bv.num_blocks * bv.block_size,
+                             "{}: partition mismatch", bv.name);
+            let bs = bv.block_size;
+            for b in 0..bv.num_blocks {
+                let lo = b * bs;
+                let hi = lo + bs;
+                let gb = &g.data[lo..hi];
+                // Blockwise second moment: ONE scalar per Hessian block.
+                let stat = self
+                    .reduce
+                    .apply(gb.iter().map(|x| x * x), bs);
+                let vb = beta2 * self.vb[i][b] + (1.0 - beta2) * stat;
+                self.vb[i][b] = vb;
+                let denom = (vb * bc2).sqrt() + eps;
+                for j in lo..hi {
+                    let mj = beta1 * m.data[j] + (1.0 - beta1) * g.data[j];
+                    m.data[j] = mj;
+                    p.data[j] = p.data[j] * wd - lr * (mj * bc1) / denom;
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.m.iter().map(Tensor::numel).sum::<usize>()
+            + self.total_blocks())
+            * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::adam::AdamW;
+    use crate::partition::{block_view, Strategy};
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, prop_close};
+
+    fn spec_one(name: &str, shape: &[usize], blocks: usize) -> BlockView {
+        let n: usize = shape.iter().product();
+        BlockView {
+            name: name.into(),
+            shape: shape.to_vec(),
+            num_blocks: blocks,
+            block_size: n / blocks,
+            category: crate::partition::Category::Whole,
+        }
+    }
+
+    #[test]
+    fn equals_adam_when_blocks_have_size_one() {
+        // With block_size == 1, mean(g²) == g² → Adam-mini ≡ AdamW.
+        check(16, |rng: &mut Rng| {
+            let n = 1 + rng.below(12);
+            let hp = Hyper::default();
+            let p0 = Tensor::randn("w", &[n], 1.0, rng);
+            let g1 = Tensor::randn("w", &[n], 1.0, rng);
+            let g2 = Tensor::randn("w", &[n], 1.0, rng);
+
+            let mut pa = vec![p0.clone()];
+            let mut adam = AdamW::new(hp, &pa);
+            let mut pb = vec![p0.clone()];
+            let mut mini = AdamMini::new(
+                hp, vec![spec_one("w", &[n], n)], ReduceOp::Mean);
+
+            for g in [&g1, &g2] {
+                adam.step(&mut pa, std::slice::from_ref(g), 1e-2);
+                mini.step(&mut pb, std::slice::from_ref(g), 1e-2);
+            }
+            for i in 0..n {
+                prop_close(pa[0].data[i] as f64, pb[0].data[i] as f64,
+                           1e-7, 1e-6, "mini == adam at block size 1")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_block_uses_global_mean() {
+        let hp = Hyper { beta1: 0.0, beta2: 0.0, eps: 0.0,
+                         weight_decay: 0.0 };
+        let mut params = vec![Tensor::new("w", &[2], vec![0.0, 0.0])];
+        let grads = vec![Tensor::new("w", &[2], vec![3.0, 4.0])];
+        let mut opt = AdamMini::new(
+            hp, vec![spec_one("w", &[2], 1)], ReduceOp::Mean);
+        opt.step(&mut params, &grads, 1.0);
+        // v = mean(9,16) = 12.5 → denom = sqrt(12.5); update = g/denom.
+        let denom = 12.5f32.sqrt();
+        assert!((params[0].data[0] + 3.0 / denom).abs() < 1e-6);
+        assert!((params[0].data[1] + 4.0 / denom).abs() < 1e-6);
+    }
+
+    #[test]
+    fn state_is_tiny_versus_adamw() {
+        let mut rng = Rng::new(0);
+        let params = vec![Tensor::randn("wv", &[4, 64, 64], 0.02, &mut rng)];
+        let spec = vec![block_view("wv", &[4, 64, 64], 4, true,
+                                   Strategy::Hessian).unwrap()];
+        let mini = AdamMini::new(Hyper::default(), spec, ReduceOp::Mean);
+        let adam = AdamW::new(Hyper::default(), &params);
+        // AdamW: 2N floats. Adam-mini: N + #blocks floats.
+        assert_eq!(adam.state_bytes(), 2 * 4 * 16384);
+        assert_eq!(mini.state_bytes(), 4 * (16384 + 256));
+    }
+
+    #[test]
+    fn reduce_ops_all_finite_and_descend() {
+        for op in [ReduceOp::Mean, ReduceOp::Max, ReduceOp::Min,
+                   ReduceOp::L1Norm, ReduceOp::L2Norm] {
+            let mut rng = Rng::new(1);
+            let hp = Hyper { weight_decay: 0.0, ..Hyper::default() };
+            let mut params =
+                vec![Tensor::randn("w", &[8, 8], 1.0, &mut rng)];
+            let mut opt = AdamMini::new(
+                hp, vec![spec_one("w", &[8, 8], 8)], op);
+            let start = params[0].sq_norm();
+            for _ in 0..100 {
+                let g = Tensor::new("w", &[8, 8], params[0].data.clone());
+                opt.step(&mut params, &[g], 1e-2);
+            }
+            let end = params[0].sq_norm();
+            assert!(end.is_finite() && end < start,
+                    "{:?}: {start} -> {end}", op);
+        }
+    }
+
+    #[test]
+    fn blockwise_lr_differs_across_blocks() {
+        // Two blocks with very different gradient scales must receive
+        // different effective learning rates.
+        let hp = Hyper { beta1: 0.0, beta2: 0.0, eps: 0.0,
+                         weight_decay: 0.0 };
+        let mut params = vec![Tensor::zeros("w", &[4])];
+        let grads = vec![Tensor::new("w", &[4],
+                                     vec![100.0, 100.0, 0.01, 0.01])];
+        let mut opt = AdamMini::new(
+            hp, vec![spec_one("w", &[4], 2)], ReduceOp::Mean);
+        opt.step(&mut params, &grads, 1.0);
+        // Each block normalizes by its own RMS → both updates ≈ ±1.
+        assert!((params[0].data[0] + 1.0).abs() < 1e-5);
+        assert!((params[0].data[2] + 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,228 @@
+//! CAME (Luo et al. 2023): confidence-guided Adafactor variant — the
+//! second memory-efficient baseline in the paper's Fig 8/10 comparison.
+//!
+//! On top of the Adafactor factored second moment it keeps a *second*
+//! factored EMA of the instability (û − m)², whose inverse square root
+//! scales the momentum update (high residual → low confidence → small
+//! step).
+
+use super::{Hyper, Optimizer};
+use crate::tensor::Tensor;
+
+const EPS1: f32 = 1e-30;
+const EPS2: f32 = 1e-16;
+const CLIP_D: f32 = 1.0;
+/// β3 of the confidence EMA (CAME paper default).
+const BETA3: f32 = 0.9999;
+
+struct FactoredPair {
+    r: Vec<f32>,
+    c: Vec<f32>,
+}
+
+enum State {
+    Mat {
+        v: FactoredPair,
+        /// Confidence (instability) factored EMA.
+        u: FactoredPair,
+        rows: usize,
+        cols: usize,
+    },
+    Vec {
+        v: Vec<f32>,
+        u: Vec<f32>,
+    },
+}
+
+pub struct Came {
+    hp: Hyper,
+    m: Vec<Tensor>,
+    state: Vec<State>,
+    t: u64,
+}
+
+impl Came {
+    pub fn new(hp: Hyper, params: &[Tensor]) -> Came {
+        let state = params
+            .iter()
+            .map(|p| {
+                if p.shape.len() >= 2 {
+                    let cols = *p.shape.last().unwrap();
+                    let rows = p.numel() / cols;
+                    State::Mat {
+                        v: FactoredPair { r: vec![0.0; rows],
+                                          c: vec![0.0; cols] },
+                        u: FactoredPair { r: vec![0.0; rows],
+                                          c: vec![0.0; cols] },
+                        rows,
+                        cols,
+                    }
+                } else {
+                    State::Vec { v: vec![0.0; p.numel()],
+                                 u: vec![0.0; p.numel()] }
+                }
+            })
+            .collect();
+        Came {
+            hp,
+            m: params
+                .iter()
+                .map(|p| Tensor::zeros(&*p.name, &p.shape))
+                .collect(),
+            state,
+            t: 0,
+        }
+    }
+}
+
+fn factored_update(f: &mut FactoredPair, sq: &[f32], rows: usize,
+                   cols: usize, beta: f32) {
+    for ri in 0..rows {
+        let mut acc = 0.0;
+        for ci in 0..cols {
+            acc += sq[ri * cols + ci];
+        }
+        f.r[ri] = beta * f.r[ri] + (1.0 - beta) * (acc / cols as f32);
+    }
+    for ci in 0..cols {
+        let mut acc = 0.0;
+        for ri in 0..rows {
+            acc += sq[ri * cols + ci];
+        }
+        f.c[ci] = beta * f.c[ci] + (1.0 - beta) * (acc / rows as f32);
+    }
+}
+
+fn r_mean(f: &FactoredPair, rows: usize) -> f32 {
+    f.r.iter().sum::<f32>() / rows as f32 + EPS1
+}
+
+#[inline]
+fn factored_get_pre(f: &FactoredPair, ri: usize, ci: usize,
+                    r_mean: f32) -> f32 {
+    f.r[ri] * f.c[ci] / r_mean
+}
+
+impl Optimizer for Came {
+    fn name(&self) -> String {
+        "came".into()
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        self.t += 1;
+        let b1 = self.hp.beta1;
+        let b2 = self.hp.beta2;
+        let wd = 1.0 - lr * self.hp.weight_decay;
+
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let n = p.numel();
+            let mut uhat = vec![0.0f32; n];
+            match &mut self.state[i] {
+                State::Mat { v, rows, cols, .. } => {
+                    let (rows, cols) = (*rows, *cols);
+                    let sq: Vec<f32> =
+                        g.data.iter().map(|x| x * x + EPS1).collect();
+                    factored_update(v, &sq, rows, cols, b2);
+                    let rm = r_mean(v, rows);
+                    for ri in 0..rows {
+                        for ci in 0..cols {
+                            let vh = factored_get_pre(v, ri, ci, rm);
+                            uhat[ri * cols + ci] = g.data[ri * cols + ci]
+                                / (vh.sqrt() + EPS1);
+                        }
+                    }
+                }
+                State::Vec { v, .. } => {
+                    for j in 0..n {
+                        let gv = g.data[j];
+                        v[j] = b2 * v[j] + (1.0 - b2) * (gv * gv + EPS1);
+                        uhat[j] = gv / (v[j].sqrt() + EPS1);
+                    }
+                }
+            }
+            // Clip like Adafactor.
+            let rms =
+                (uhat.iter().map(|x| x * x).sum::<f32>() / n as f32).sqrt();
+            let scale = 1.0 / (rms / CLIP_D).max(1.0);
+            for x in uhat.iter_mut() {
+                *x *= scale;
+            }
+            // Momentum.
+            let m = &mut self.m[i];
+            for j in 0..n {
+                m.data[j] = b1 * m.data[j] + (1.0 - b1) * uhat[j];
+            }
+            // Instability residual (û − m)², factored EMA → confidence.
+            let res: Vec<f32> = (0..n)
+                .map(|j| {
+                    let d = uhat[j] - m.data[j];
+                    d * d + EPS2
+                })
+                .collect();
+            match &mut self.state[i] {
+                State::Mat { u, rows, cols, .. } => {
+                    let (rows, cols) = (*rows, *cols);
+                    factored_update(u, &res, rows, cols, BETA3);
+                    let rm = r_mean(u, rows);
+                    for ri in 0..rows {
+                        for ci in 0..cols {
+                            let s = factored_get_pre(u, ri, ci, rm);
+                            let j = ri * cols + ci;
+                            p.data[j] = p.data[j] * wd
+                                - lr * m.data[j] / (s.sqrt() + EPS1);
+                        }
+                    }
+                }
+                State::Vec { u, .. } => {
+                    for j in 0..n {
+                        u[j] = BETA3 * u[j] + (1.0 - BETA3) * res[j];
+                        p.data[j] = p.data[j] * wd
+                            - lr * m.data[j] / (u[j].sqrt() + EPS1);
+                    }
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let s: usize = self
+            .state
+            .iter()
+            .map(|s| match s {
+                State::Mat { v, u, .. } => {
+                    v.r.len() + v.c.len() + u.r.len() + u.c.len()
+                }
+                State::Vec { v, u } => v.len() + u.len(),
+            })
+            .sum();
+        (s + self.m.iter().map(Tensor::numel).sum::<usize>()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn descends_on_quadratic() {
+        let mut rng = Rng::new(3);
+        let hp = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let mut params = vec![Tensor::randn("w", &[8, 8], 1.0, &mut rng)];
+        let mut opt = Came::new(hp, &params);
+        let start = params[0].sq_norm();
+        for _ in 0..300 {
+            let g = Tensor::new("w", &[8, 8], params[0].data.clone());
+            opt.step(&mut params, &[g], 1e-2);
+        }
+        assert!(params[0].sq_norm() < 0.2 * start);
+    }
+
+    #[test]
+    fn state_is_factored_for_matrices() {
+        let params = vec![Tensor::zeros("w", &[64, 64])];
+        let opt = Came::new(Hyper::default(), &params);
+        // m full + two factored pairs (v and confidence).
+        assert_eq!(opt.state_bytes(), (64 * 64 + 4 * 64) * 4);
+    }
+}

@@ -1,0 +1,228 @@
+//! Related-work optimizers the paper discusses in Appendix A: AdaGrad
+//! (Duchi et al. 2011 — the ancestor SM3 compresses), NovoGrad
+//! (Ginsburg et al. 2019 — layer-wise second moments with the
+//! normalized-gradient momentum the paper contrasts with Adam-mini),
+//! and Adan (Xie et al. 2022 — Nesterov-momentum Adam, listed as a
+//! combinable diagonal method).
+
+use super::{Hyper, Optimizer};
+use crate::tensor::Tensor;
+
+/// AdaGrad with optional momentum.
+pub struct AdaGrad {
+    eps: f32,
+    momentum: f32,
+    acc: Vec<Tensor>,
+    buf: Vec<Tensor>,
+}
+
+impl AdaGrad {
+    pub fn new(params: &[Tensor], momentum: f32, eps: f32) -> AdaGrad {
+        AdaGrad {
+            eps,
+            momentum,
+            acc: params.iter().map(|p| Tensor::zeros(&*p.name, &p.shape))
+                .collect(),
+            buf: params.iter().map(|p| Tensor::zeros(&*p.name, &p.shape))
+                .collect(),
+        }
+    }
+}
+
+impl Optimizer for AdaGrad {
+    fn name(&self) -> String {
+        "adagrad".into()
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        for ((p, g), (a, b)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.acc.iter_mut().zip(self.buf.iter_mut()))
+        {
+            for i in 0..p.data.len() {
+                let gi = g.data[i];
+                a.data[i] += gi * gi;
+                let u = gi / (a.data[i].sqrt() + self.eps);
+                b.data[i] = self.momentum * b.data[i] + u;
+                p.data[i] -= lr * b.data[i];
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.acc.iter().map(Tensor::numel).sum::<usize>() * 4 * 2
+    }
+}
+
+/// NovoGrad: ONE second-moment scalar per layer (PyTorch-default
+/// partition granularity), and momentum over *normalized* gradients —
+/// m = β1·m + (g/√v_layer + λ·p). The paper (App. A) predicts the
+/// layer-wise granularity inherits the default-partition instability;
+/// `repro exp fig21` can be extended with it to check.
+pub struct NovoGrad {
+    hp: Hyper,
+    m: Vec<Tensor>,
+    /// One v per tensor (layer).
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl NovoGrad {
+    pub fn new(hp: Hyper, params: &[Tensor]) -> NovoGrad {
+        NovoGrad {
+            hp,
+            m: params.iter().map(|p| Tensor::zeros(&*p.name, &p.shape))
+                .collect(),
+            v: vec![0.0; params.len()],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for NovoGrad {
+    fn name(&self) -> String {
+        "novograd".into()
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        self.t += 1;
+        let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let gsq: f32 =
+                g.data.iter().map(|x| (x * x)).sum::<f32>();
+            self.v[i] = if self.t == 1 {
+                gsq
+            } else {
+                beta2 * self.v[i] + (1.0 - beta2) * gsq
+            };
+            let denom = self.v[i].sqrt() + eps;
+            let m = &mut self.m[i];
+            for j in 0..p.data.len() {
+                let u = g.data[j] / denom + weight_decay * p.data[j];
+                m.data[j] = beta1 * m.data[j] + u;
+                p.data[j] -= lr * m.data[j];
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.m.iter().map(Tensor::numel).sum::<usize>() + self.v.len())
+            * 4
+    }
+}
+
+/// Adan: Nesterov-style Adam with gradient-difference momentum.
+pub struct Adan {
+    hp: Hyper,
+    /// β3 for the gradient-difference EMA.
+    beta3: f32,
+    m: Vec<Tensor>,
+    d: Vec<Tensor>,
+    v: Vec<Tensor>,
+    prev_g: Vec<Tensor>,
+    t: u64,
+}
+
+impl Adan {
+    pub fn new(hp: Hyper, params: &[Tensor]) -> Adan {
+        let z = |_: &Tensor| ();
+        let mk = || {
+            params
+                .iter()
+                .map(|p| Tensor::zeros(&*p.name, &p.shape))
+                .collect::<Vec<_>>()
+        };
+        let _ = z;
+        Adan { hp, beta3: 0.99, m: mk(), d: mk(), v: mk(), prev_g: mk(),
+               t: 0 }
+    }
+}
+
+impl Optimizer for Adan {
+    fn name(&self) -> String {
+        "adan".into()
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        self.t += 1;
+        let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
+        let b3 = self.beta3;
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let (m, d, v, pg) = (&mut self.m[i], &mut self.d[i],
+                                 &mut self.v[i], &mut self.prev_g[i]);
+            for j in 0..p.data.len() {
+                let gj = g.data[j];
+                let diff = if self.t == 1 { 0.0 } else { gj - pg.data[j] };
+                m.data[j] = beta1 * m.data[j] + (1.0 - beta1) * gj;
+                d.data[j] = b3 * d.data[j] + (1.0 - b3) * diff;
+                let nest = gj + b3 * diff;
+                v.data[j] =
+                    beta2 * v.data[j] + (1.0 - beta2) * nest * nest;
+                let denom = v.data[j].sqrt() + eps;
+                let upd = (m.data[j] + b3 * d.data[j]) / denom;
+                p.data[j] = (p.data[j] - lr * upd)
+                    / (1.0 + lr * weight_decay);
+                pg.data[j] = gj;
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        4 * self.m.iter().map(Tensor::numel).sum::<usize>() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn descends(opt: &mut dyn Optimizer, lr: f32) -> (f64, f64) {
+        let mut rng = Rng::new(21);
+        let mut params = vec![Tensor::randn("w", &[10, 10], 1.0,
+                                            &mut rng)];
+        let start = params[0].sq_norm();
+        for _ in 0..300 {
+            let g = Tensor::new("w", &[10, 10], params[0].data.clone());
+            opt.step(&mut params, &[g], lr);
+        }
+        (start, params[0].sq_norm())
+    }
+
+    #[test]
+    fn all_extras_descend_on_quadratic() {
+        let mut rng = Rng::new(21);
+        let proto = vec![Tensor::randn("w", &[10, 10], 1.0, &mut rng)];
+        let hp = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let mut opts: Vec<Box<dyn Optimizer>> = vec![
+            Box::new(AdaGrad::new(&proto, 0.9, 1e-8)),
+            Box::new(NovoGrad::new(hp, &proto)),
+            Box::new(Adan::new(hp, &proto)),
+        ];
+        for opt in opts.iter_mut() {
+            let (s, e) = descends(opt.as_mut(), 1e-2);
+            assert!(e < 0.5 * s, "{}: {s} -> {e}", opt.name());
+        }
+    }
+
+    #[test]
+    fn novograd_state_is_one_scalar_per_tensor_plus_m() {
+        let params = vec![Tensor::zeros("a", &[50, 50]),
+                          Tensor::zeros("b", &[10])];
+        let opt = NovoGrad::new(Hyper::default(), &params);
+        assert_eq!(opt.state_bytes(), (2500 + 10 + 2) * 4);
+    }
+
+    #[test]
+    fn adagrad_monotone_accumulator() {
+        let mut opt = AdaGrad::new(&[Tensor::zeros("w", &[3])], 0.0, 0.0);
+        let mut params = vec![Tensor::zeros("w", &[3])];
+        let g = Tensor::new("w", &[3], vec![1.0, 2.0, 0.0]);
+        opt.step(&mut params, std::slice::from_ref(&g), 0.1);
+        opt.step(&mut params, std::slice::from_ref(&g), 0.1);
+        assert!((opt.acc[0].data[0] - 2.0).abs() < 1e-6);
+        assert!((opt.acc[0].data[1] - 8.0).abs() < 1e-6);
+        assert_eq!(opt.acc[0].data[2], 0.0);
+    }
+}

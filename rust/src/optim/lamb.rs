@@ -1,0 +1,126 @@
+//! LAMB (You et al. 2019, paper Algorithm 7): Adam with a layer-wise
+//! trust ratio. Included because the paper explicitly contrasts it with
+//! Adam-mini (Appendix A): LAMB keeps the full coordinate-wise 1/√v AND
+//! adds layer-wise rescaling — it saves no memory.
+
+use super::{Hyper, Optimizer};
+use crate::tensor::Tensor;
+
+pub struct Lamb {
+    hp: Hyper,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    t: u64,
+}
+
+impl Lamb {
+    pub fn new(hp: Hyper, params: &[Tensor]) -> Lamb {
+        Lamb {
+            hp,
+            m: params.iter().map(|p| Tensor::zeros(&*p.name, &p.shape))
+                .collect(),
+            v: params.iter().map(|p| Tensor::zeros(&*p.name, &p.shape))
+                .collect(),
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Lamb {
+    fn name(&self) -> String {
+        "lamb".into()
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        self.t += 1;
+        let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
+        let bc1 = 1.0 / (1.0 - beta1.powi(self.t as i32));
+        let bc2 = 1.0 / (1.0 - beta2.powi(self.t as i32));
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            let n = p.data.len();
+            // r = m̂ / (√v̂ + ε), then add decoupled decay into the
+            // trust-ratio direction (Algorithm 7 line 10).
+            let mut dir = vec![0.0f32; n];
+            for i in 0..n {
+                let gi = g.data[i];
+                let mi = beta1 * m.data[i] + (1.0 - beta1) * gi;
+                let vi = beta2 * v.data[i] + (1.0 - beta2) * gi * gi;
+                m.data[i] = mi;
+                v.data[i] = vi;
+                dir[i] = (mi * bc1) / ((vi * bc2).sqrt() + eps)
+                    + weight_decay * p.data[i];
+            }
+            let p_norm = p.norm() as f32;
+            let d_norm =
+                (dir.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>())
+                    .sqrt() as f32;
+            // φ(‖p‖)/‖r + λp‖ with φ = identity; 1.0 fallback at zero.
+            let trust = if p_norm > 0.0 && d_norm > 0.0 {
+                p_norm / d_norm
+            } else {
+                1.0
+            };
+            for i in 0..n {
+                p.data[i] -= lr * trust * dir[i];
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.m.iter().map(Tensor::numel).sum::<usize>()
+            + self.v.iter().map(Tensor::numel).sum::<usize>())
+            * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn no_memory_saving_vs_adamw() {
+        let params = vec![Tensor::zeros("w", &[10, 10])];
+        let opt = Lamb::new(Hyper::default(), &params);
+        assert_eq!(opt.state_bytes(), 2 * 100 * 4);
+    }
+
+    #[test]
+    fn trust_ratio_scales_update_by_param_norm() {
+        // Same gradient, parameters 10× larger → update ~10× larger.
+        let hp = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let g = Tensor::new("w", &[2], vec![1.0, 1.0]);
+
+        let mut small = vec![Tensor::new("w", &[2], vec![0.1, 0.1])];
+        let mut o1 = Lamb::new(hp, &small);
+        let before_s = small[0].data.clone();
+        o1.step(&mut small, std::slice::from_ref(&g), 1e-2);
+        let ds = (small[0].data[0] - before_s[0]).abs();
+
+        let mut big = vec![Tensor::new("w", &[2], vec![1.0, 1.0])];
+        let mut o2 = Lamb::new(hp, &big);
+        let before_b = big[0].data.clone();
+        o2.step(&mut big, std::slice::from_ref(&g), 1e-2);
+        let db = (big[0].data[0] - before_b[0]).abs();
+
+        assert!((db / ds - 10.0).abs() < 0.5, "ratio {}", db / ds);
+    }
+
+    #[test]
+    fn descends_on_quadratic() {
+        let mut rng = Rng::new(9);
+        let hp = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let mut params = vec![Tensor::randn("w", &[8, 8], 1.0, &mut rng)];
+        let mut opt = Lamb::new(hp, &params);
+        let start = params[0].sq_norm();
+        for _ in 0..200 {
+            let g = Tensor::new("w", &[8, 8], params[0].data.clone());
+            opt.step(&mut params, &[g], 1e-2);
+        }
+        assert!(params[0].sq_norm() < 0.5 * start);
+    }
+}

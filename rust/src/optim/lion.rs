@@ -1,0 +1,69 @@
+//! Lion (Chen et al. 2024) — sign-momentum optimizer, compared against
+//! Adam-mini in the paper's Appendix D.8 (with the "lr 10× smaller than
+//! AdamW" tuning rule).
+
+use super::{Hyper, Optimizer};
+use crate::tensor::Tensor;
+
+pub struct Lion {
+    hp: Hyper,
+    m: Vec<Tensor>,
+}
+
+impl Lion {
+    pub fn new(hp: Hyper, params: &[Tensor]) -> Lion {
+        Lion {
+            hp,
+            m: params
+                .iter()
+                .map(|p| Tensor::zeros(&*p.name, &p.shape))
+                .collect(),
+        }
+    }
+}
+
+impl Optimizer for Lion {
+    fn name(&self) -> String {
+        "lion".into()
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        let Hyper { beta1, beta2, weight_decay, .. } = self.hp;
+        let wd = 1.0 - lr * weight_decay;
+        for ((p, g), m) in params.iter_mut().zip(grads).zip(&mut self.m) {
+            for i in 0..p.data.len() {
+                // Update direction: sign of the interpolated momentum.
+                let c = beta1 * m.data[i] + (1.0 - beta1) * g.data[i];
+                p.data[i] = p.data[i] * wd - lr * c.signum();
+                // Momentum EMA uses β2 (Lion's defining asymmetry).
+                m.data[i] = beta2 * m.data[i] + (1.0 - beta2) * g.data[i];
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.iter().map(Tensor::numel).sum::<usize>() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn updates_are_sign_sized() {
+        let hp = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let mut params = vec![Tensor::zeros("w", &[3])];
+        let grads = vec![Tensor::new("w", &[3], vec![5.0, -0.01, 2.0])];
+        let mut opt = Lion::new(hp, &params);
+        opt.step(&mut params, &grads, 0.1);
+        assert_eq!(params[0].data, vec![-0.1, 0.1, -0.1]);
+    }
+
+    #[test]
+    fn half_memory_of_adamw() {
+        let params = vec![Tensor::zeros("w", &[10, 10])];
+        let opt = Lion::new(Hyper::default(), &params);
+        assert_eq!(opt.state_bytes(), 100 * 4);
+    }
+}

@@ -1,0 +1,146 @@
+//! Learning-rate schedules. The schedule lives in the Rust coordinator
+//! (L3); AOT train-step artifacts take the current scalar lr as input.
+//!
+//! Paper setups: GPT-2 runs use warmup+cosine (2000-step warmup,
+//! min_lr = peak/20 or /10); Llama/Torchtitan runs use 1%-warmup +
+//! linear decay (Appendix F.1).
+
+/// A learning-rate schedule over `total_steps`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant { lr: f32 },
+    /// Linear warmup to `peak`, cosine decay to `min_lr`.
+    WarmupCosine { peak: f32, min_lr: f32, warmup: usize,
+                   total: usize },
+    /// Linear warmup to `peak`, linear decay to `min_lr` (Torchtitan).
+    WarmupLinear { peak: f32, min_lr: f32, warmup: usize,
+                   total: usize },
+}
+
+impl Schedule {
+    /// Paper GPT-2 protocol: cosine with explicit warmup steps.
+    pub fn gpt2(peak: f32, total: usize) -> Schedule {
+        Schedule::WarmupCosine {
+            peak,
+            min_lr: peak / 20.0,
+            warmup: (total / 20).max(1),
+            total,
+        }
+    }
+
+    /// Paper Llama/Torchtitan protocol: 1 % warmup + linear decay.
+    pub fn llama(peak: f32, total: usize) -> Schedule {
+        Schedule::WarmupLinear {
+            peak,
+            min_lr: 0.0,
+            warmup: (total / 100).max(1),
+            total,
+        }
+    }
+
+    /// lr at 1-based step `t`.
+    pub fn lr(&self, t: usize) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::WarmupCosine { peak, min_lr, warmup, total } => {
+                if t <= warmup {
+                    peak * t as f32 / warmup as f32
+                } else {
+                    let frac = (t - warmup) as f32
+                        / (total.saturating_sub(warmup)).max(1) as f32;
+                    let frac = frac.min(1.0);
+                    min_lr
+                        + 0.5 * (peak - min_lr)
+                            * (1.0 + (std::f32::consts::PI * frac).cos())
+                }
+            }
+            Schedule::WarmupLinear { peak, min_lr, warmup, total } => {
+                if t <= warmup {
+                    peak * t as f32 / warmup as f32
+                } else {
+                    let frac = (t - warmup) as f32
+                        / (total.saturating_sub(warmup)).max(1) as f32;
+                    let frac = frac.min(1.0);
+                    peak + (min_lr - peak) * frac
+                }
+            }
+        }
+    }
+
+    pub fn peak(&self) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::WarmupCosine { peak, .. } => peak,
+            Schedule::WarmupLinear { peak, .. } => peak,
+        }
+    }
+
+    /// Same shape with a different peak (and proportional min_lr) — for
+    /// lr grid sweeps.
+    pub fn with_peak(&self, new_peak: f32) -> Schedule {
+        match *self {
+            Schedule::Constant { .. } => Schedule::Constant { lr: new_peak },
+            Schedule::WarmupCosine { peak, min_lr, warmup, total } => {
+                Schedule::WarmupCosine {
+                    peak: new_peak,
+                    min_lr: min_lr / peak * new_peak,
+                    warmup,
+                    total,
+                }
+            }
+            Schedule::WarmupLinear { peak, min_lr, warmup, total } => {
+                Schedule::WarmupLinear {
+                    peak: new_peak,
+                    min_lr: min_lr / peak * new_peak,
+                    warmup,
+                    total,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_reaches_peak_then_decays() {
+        let s = Schedule::WarmupCosine {
+            peak: 1.0, min_lr: 0.1, warmup: 10, total: 110,
+        };
+        assert!((s.lr(1) - 0.1).abs() < 1e-6);
+        assert!((s.lr(10) - 1.0).abs() < 1e-6);
+        assert!(s.lr(60) < 1.0 && s.lr(60) > 0.1);
+        assert!((s.lr(110) - 0.1).abs() < 1e-5);
+        // Never exceeds total.
+        assert!((s.lr(200) - 0.1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn linear_decay_hits_min() {
+        let s = Schedule::WarmupLinear {
+            peak: 2.0, min_lr: 0.0, warmup: 5, total: 105,
+        };
+        assert!((s.lr(5) - 2.0).abs() < 1e-6);
+        assert!((s.lr(55) - 1.0).abs() < 1e-6);
+        assert!(s.lr(105) < 1e-6);
+    }
+
+    #[test]
+    fn schedule_monotone_after_warmup() {
+        let s = Schedule::gpt2(6e-4, 1000);
+        let mut prev = f32::MAX;
+        for t in 51..=1000 {
+            let lr = s.lr(t);
+            assert!(lr <= prev + 1e-9, "not monotone at {t}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn with_peak_rescales() {
+        let s = Schedule::gpt2(6e-4, 100).with_peak(3e-4);
+        assert!((s.peak() - 3e-4).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,146 @@
+//! SGD with momentum, and the "blockwise GD" method of the paper's
+//! case studies (Fig 4 green line, Fig 14 / Appendix D.1 Exp 2): plain
+//! gradient descent where each Hessian block gets its own fixed
+//! learning-rate multiplier.
+
+use super::Optimizer;
+use crate::partition::BlockView;
+use crate::tensor::Tensor;
+
+/// Heavy-ball SGD.
+pub struct Sgd {
+    momentum: f32,
+    buf: Vec<Tensor>,
+    initialized: bool,
+}
+
+impl Sgd {
+    pub fn new(momentum: f32, params: &[Tensor]) -> Sgd {
+        Sgd {
+            momentum,
+            buf: params
+                .iter()
+                .map(|p| Tensor::zeros(&*p.name, &p.shape))
+                .collect(),
+            initialized: false,
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> String {
+        "sgd".into()
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        for ((p, g), b) in params.iter_mut().zip(grads).zip(&mut self.buf) {
+            for i in 0..p.data.len() {
+                let v = if self.initialized {
+                    self.momentum * b.data[i] + g.data[i]
+                } else {
+                    g.data[i]
+                };
+                b.data[i] = v;
+                p.data[i] -= lr * v;
+            }
+        }
+        self.initialized = true;
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.buf.iter().map(Tensor::numel).sum::<usize>() * 4
+    }
+}
+
+/// Blockwise GD: update for block b is `lr * block_lr[b] * g` — the
+/// "collect the optimal per-block learning rates" method the paper uses
+/// to show a single good lr per dense Hessian block beats Adam.
+pub struct BlockwiseGd {
+    spec: Vec<BlockView>,
+    /// Per-tensor, per-block lr multipliers (grid-searched by callers).
+    pub block_lrs: Vec<Vec<f32>>,
+}
+
+impl BlockwiseGd {
+    pub fn new(spec: Vec<BlockView>) -> BlockwiseGd {
+        let block_lrs = spec.iter().map(|b| vec![1.0; b.num_blocks])
+            .collect();
+        BlockwiseGd { spec, block_lrs }
+    }
+
+    pub fn with_lrs(spec: Vec<BlockView>, block_lrs: Vec<Vec<f32>>)
+        -> BlockwiseGd {
+        assert_eq!(spec.len(), block_lrs.len());
+        for (s, l) in spec.iter().zip(&block_lrs) {
+            assert_eq!(s.num_blocks, l.len());
+        }
+        BlockwiseGd { spec, block_lrs }
+    }
+}
+
+impl Optimizer for BlockwiseGd {
+    fn name(&self) -> String {
+        "blockwise_gd".into()
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        for (i, bv) in self.spec.iter().enumerate() {
+            let p = &mut params[i];
+            let g = &grads[i];
+            let bs = bv.block_size;
+            for b in 0..bv.num_blocks {
+                let s = lr * self.block_lrs[i][b];
+                for j in b * bs..(b + 1) * bs {
+                    p.data[j] -= s * g.data[j];
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.block_lrs.iter().map(Vec::len).sum::<usize>() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Category;
+
+    #[test]
+    fn sgd_plain_step() {
+        let mut params = vec![Tensor::new("w", &[2], vec![1.0, 1.0])];
+        let grads = vec![Tensor::new("w", &[2], vec![0.5, -0.5])];
+        let mut opt = Sgd::new(0.0, &params);
+        opt.step(&mut params, &grads, 0.1);
+        assert!((params[0].data[0] - 0.95).abs() < 1e-7);
+        assert!((params[0].data[1] - 1.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates() {
+        let mut params = vec![Tensor::new("w", &[1], vec![0.0])];
+        let g = vec![Tensor::new("w", &[1], vec![1.0])];
+        let mut opt = Sgd::new(0.5, &params);
+        opt.step(&mut params, &g, 1.0); // v=1, w=-1
+        opt.step(&mut params, &g, 1.0); // v=1.5, w=-2.5
+        assert!((params[0].data[0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn blockwise_gd_uses_per_block_lr() {
+        let spec = vec![BlockView {
+            name: "w".into(),
+            shape: vec![4],
+            num_blocks: 2,
+            block_size: 2,
+            category: Category::Whole,
+        }];
+        let mut opt =
+            BlockwiseGd::with_lrs(spec, vec![vec![1.0, 10.0]]);
+        let mut params = vec![Tensor::zeros("w", &[4])];
+        let grads = vec![Tensor::ones("w", &[4])];
+        opt.step(&mut params, &grads, 0.1);
+        assert_eq!(params[0].data, vec![-0.1, -0.1, -1.0, -1.0]);
+    }
+}

@@ -1,0 +1,162 @@
+//! SM3 (Anil et al. 2019) — memory-efficient AdaGrad, the third
+//! lightweight baseline in the paper's comparison (SM3-II update rule),
+//! with β1 = 0.9 momentum added as in the paper's setup.
+//!
+//! For a matrix (r × c) it keeps one accumulator per row and one per
+//! column; the per-coordinate second-moment estimate is
+//! `min(row_acc[i], col_acc[j])`, monotonically grown by `g²`.
+
+use super::{Hyper, Optimizer};
+use crate::tensor::Tensor;
+
+enum Cover {
+    Mat { row: Vec<f32>, col: Vec<f32>, rows: usize, cols: usize },
+    Vec { acc: Vec<f32> },
+}
+
+pub struct Sm3 {
+    hp: Hyper,
+    m: Vec<Tensor>,
+    cover: Vec<Cover>,
+}
+
+impl Sm3 {
+    pub fn new(hp: Hyper, params: &[Tensor]) -> Sm3 {
+        let cover = params
+            .iter()
+            .map(|p| {
+                if p.shape.len() >= 2 {
+                    let cols = *p.shape.last().unwrap();
+                    let rows = p.numel() / cols;
+                    Cover::Mat {
+                        row: vec![0.0; rows],
+                        col: vec![0.0; cols],
+                        rows,
+                        cols,
+                    }
+                } else {
+                    Cover::Vec { acc: vec![0.0; p.numel()] }
+                }
+            })
+            .collect();
+        Sm3 {
+            hp,
+            m: params
+                .iter()
+                .map(|p| Tensor::zeros(&*p.name, &p.shape))
+                .collect(),
+            cover,
+        }
+    }
+}
+
+impl Optimizer for Sm3 {
+    fn name(&self) -> String {
+        "sm3".into()
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        let b1 = self.hp.beta1;
+        let eps = self.hp.eps;
+        let wd = 1.0 - lr * self.hp.weight_decay;
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let m = &mut self.m[i];
+            match &mut self.cover[i] {
+                Cover::Mat { row, col, rows, cols } => {
+                    let (rows, cols) = (*rows, *cols);
+                    // New row/col accumulators are maxes of ν over the
+                    // slice (SM3-II), computed from the previous cover.
+                    let mut new_row = vec![0.0f32; rows];
+                    let mut new_col = vec![0.0f32; cols];
+                    for ri in 0..rows {
+                        for ci in 0..cols {
+                            let j = ri * cols + ci;
+                            let gv = g.data[j];
+                            let nu = row[ri].min(col[ci]) + gv * gv;
+                            new_row[ri] = new_row[ri].max(nu);
+                            new_col[ci] = new_col[ci].max(nu);
+                            let u = gv / (nu.sqrt() + eps);
+                            let mj = b1 * m.data[j] + (1.0 - b1) * u;
+                            m.data[j] = mj;
+                            p.data[j] = p.data[j] * wd - lr * mj;
+                        }
+                    }
+                    *row = new_row;
+                    *col = new_col;
+                }
+                Cover::Vec { acc } => {
+                    for j in 0..p.data.len() {
+                        let gv = g.data[j];
+                        acc[j] += gv * gv;
+                        let u = gv / (acc[j].sqrt() + eps);
+                        let mj = b1 * m.data[j] + (1.0 - b1) * u;
+                        m.data[j] = mj;
+                        p.data[j] = p.data[j] * wd - lr * mj;
+                    }
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let c: usize = self
+            .cover
+            .iter()
+            .map(|c| match c {
+                Cover::Mat { row, col, .. } => row.len() + col.len(),
+                Cover::Vec { acc } => acc.len(),
+            })
+            .sum();
+        (c + self.m.iter().map(Tensor::numel).sum::<usize>()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn cover_dominates_gradient_squares() {
+        // SM3 invariant: row_acc[i] >= Σ_t g²_{t,ij} slicewise-max — in
+        // particular after one step, min(row, col) >= g² of each entry.
+        let hp = Hyper { beta1: 0.0, weight_decay: 0.0, ..Hyper::default() };
+        let mut params = vec![Tensor::zeros("w", &[3, 3])];
+        let g = Tensor::new("w", &[3, 3],
+                            vec![1.0, 2.0, 3.0, 0.5, 0.1, 4.0,
+                                 2.0, 2.0, 0.3]);
+        let mut opt = Sm3::new(hp, &params);
+        opt.step(&mut params, &[g.clone()], 0.1);
+        if let Cover::Mat { row, col, .. } = &opt.cover[0] {
+            for ri in 0..3 {
+                for ci in 0..3 {
+                    let gsq = g.data[ri * 3 + ci].powi(2);
+                    assert!(row[ri].min(col[ci]) >= gsq - 1e-6);
+                }
+            }
+        } else {
+            panic!("expected matrix cover");
+        }
+    }
+
+    #[test]
+    fn descends_on_quadratic() {
+        let mut rng = Rng::new(5);
+        let hp = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let mut params = vec![Tensor::randn("w", &[8, 8], 1.0, &mut rng)];
+        let mut opt = Sm3::new(hp, &params);
+        let start = params[0].sq_norm();
+        for _ in 0..300 {
+            let g = Tensor::new("w", &[8, 8], params[0].data.clone());
+            opt.step(&mut params, &[g], 5e-2);
+        }
+        assert!(params[0].sq_norm() < 0.2 * start);
+    }
+
+    #[test]
+    fn memory_is_sublinear() {
+        let params = vec![Tensor::zeros("w", &[100, 100])];
+        let opt = Sm3::new(Hyper::default(), &params);
+        assert_eq!(opt.state_bytes(), (100 * 100 + 200) * 4);
+    }
+}

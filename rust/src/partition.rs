@@ -1,0 +1,278 @@
+//! Parameter partitioning — the Rust mirror of `compile/partition.py`
+//! (paper Algorithm 3 + Principle 1).
+//!
+//! Every parameter tensor maps to a 2-D block view
+//! `(num_blocks, block_size)` whose rows are the smallest dense Hessian
+//! sub-blocks:
+//!
+//! - `embed` / `output` / `pos_emb` → one block per token row;
+//! - `wq` / `wk`                    → one block per head (per layer);
+//! - `wv` / `wo` / MLP matrices     → one block per output neuron;
+//! - norms / everything else       → one block per tensor (per layer).
+//!
+//! The Python exporter writes the same spec into `manifest.json`; an
+//! integration test golden-checks both sides agree for every model.
+
+use anyhow::{bail, Result};
+
+/// Partition strategies from the paper's experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Algorithm 3 (the Adam-mini default).
+    Hessian,
+    /// PyTorch-default: one block per parameter tensor (per layer).
+    /// Destabilizes ≥1B-scale training (paper Fig 7i / Fig 8a).
+    Default,
+    /// Algorithm 3 with `value` treated as a whole per layer
+    /// (Appendix D.6 strategy II — `optimizer.wv_names = {}`).
+    ValueWhole,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Hessian => "hessian",
+            Strategy::Default => "default",
+            Strategy::ValueWhole => "value_whole",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Strategy> {
+        Ok(match s {
+            "hessian" => Strategy::Hessian,
+            "default" => Strategy::Default,
+            "value_whole" => Strategy::ValueWhole,
+            other => bail!("unknown partition strategy {other:?}"),
+        })
+    }
+}
+
+/// Hessian-block category of a tensor (which Algorithm-3 branch fired).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Category {
+    TokenRow,
+    Head,
+    OutNeuron,
+    Whole,
+}
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::TokenRow => "token_row",
+            Category::Head => "head",
+            Category::OutNeuron => "out_neuron",
+            Category::Whole => "whole",
+        }
+    }
+}
+
+/// 2-D block view of one tensor: `view = tensor.reshape(num_blocks,
+/// block_size)`, row i = Hessian block i.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockView {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub num_blocks: usize,
+    pub block_size: usize,
+    pub category: Category,
+}
+
+const TOKEN_ROW: &[&str] = &["embed", "output", "pos_emb"];
+const HEAD: &[&str] = &["wq", "wk"];
+const OUT_NEURON: &[&str] = &["wv", "wo", "w1", "w2", "w3", "w_in", "w_out"];
+
+fn category(name: &str) -> Category {
+    let base = name.rsplit('.').next().unwrap_or(name);
+    if TOKEN_ROW.iter().any(|k| base.contains(k)) {
+        Category::TokenRow
+    } else if HEAD.contains(&base) {
+        Category::Head
+    } else if OUT_NEURON.contains(&base) {
+        Category::OutNeuron
+    } else {
+        Category::Whole
+    }
+}
+
+/// Compute the block view for one tensor. `stacked` marks layer-stacked
+/// tensors whose axis 0 is `n_layers` (the scan-model layout).
+pub fn block_view(name: &str, shape: &[usize], n_heads: usize,
+                  stacked: bool, strategy: Strategy) -> Result<BlockView> {
+    let n: usize = shape.iter().product();
+    if n == 0 {
+        bail!("{name}: empty tensor");
+    }
+    let layers = if stacked { shape[0] } else { 1 };
+    let mut cat = category(name);
+    let base = name.rsplit('.').next().unwrap_or(name);
+
+    let blocks = match strategy {
+        Strategy::Default => layers,
+        Strategy::ValueWhole if base == "wv" => {
+            cat = Category::Whole;
+            layers
+        }
+        _ => match cat {
+            Category::TokenRow => shape[0],
+            Category::Head => layers * n_heads,
+            Category::OutNeuron => {
+                let out_dim = if stacked { shape[1] } else { shape[0] };
+                layers * out_dim
+            }
+            Category::Whole => layers,
+        },
+    };
+
+    if n % blocks != 0 {
+        bail!("{name}: {n} elements not divisible into {blocks} blocks");
+    }
+    Ok(BlockView {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        num_blocks: blocks,
+        block_size: n / blocks,
+        category: cat,
+    })
+}
+
+/// Partition a whole parameter inventory, preserving order.
+pub fn partition_spec(shapes: &[(String, Vec<usize>)], n_heads: usize,
+                      stacked: &[String], strategy: Strategy)
+                      -> Result<Vec<BlockView>> {
+    shapes
+        .iter()
+        .map(|(name, shape)| {
+            block_view(name, shape, n_heads,
+                       stacked.iter().any(|s| s == name), strategy)
+        })
+        .collect()
+}
+
+/// Total learning-rate count (#blocks) for a spec.
+pub fn total_blocks(spec: &[BlockView]) -> usize {
+    spec.iter().map(|b| b.num_blocks).sum()
+}
+
+/// Total parameter count for a spec.
+pub fn total_params(spec: &[BlockView]) -> usize {
+    spec.iter().map(|b| b.num_blocks * b.block_size).sum()
+}
+
+/// Fraction of Adam's v removed (paper: ≥ 99.9 % for mainstream LLMs).
+pub fn v_reduction_ratio(spec: &[BlockView]) -> f64 {
+    1.0 - total_blocks(spec) as f64 / total_params(spec) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bv(name: &str, shape: &[usize], heads: usize, stacked: bool,
+          s: Strategy) -> BlockView {
+        block_view(name, shape, heads, stacked, s).unwrap()
+    }
+
+    #[test]
+    fn embed_partitions_by_token() {
+        let b = bv("embed", &[256, 64], 4, false, Strategy::Hessian);
+        assert_eq!((b.num_blocks, b.block_size), (256, 64));
+        assert_eq!(b.category, Category::TokenRow);
+    }
+
+    #[test]
+    fn qk_partition_by_head_per_layer() {
+        let b = bv("wq", &[4, 64, 64], 4, true, Strategy::Hessian);
+        assert_eq!((b.num_blocks, b.block_size), (16, 1024));
+        assert_eq!(b.category, Category::Head);
+    }
+
+    #[test]
+    fn value_and_mlp_by_output_neuron() {
+        let b = bv("wv", &[4, 64, 64], 4, true, Strategy::Hessian);
+        assert_eq!((b.num_blocks, b.block_size), (256, 64));
+        let b = bv("w1", &[4, 256, 64], 4, true, Strategy::Hessian);
+        assert_eq!((b.num_blocks, b.block_size), (1024, 64));
+    }
+
+    #[test]
+    fn norms_are_whole_per_layer() {
+        let b = bv("attn_norm", &[4, 64], 4, true, Strategy::Hessian);
+        assert_eq!((b.num_blocks, b.block_size), (4, 64));
+        assert_eq!(b.category, Category::Whole);
+        let b = bv("final_norm", &[64], 4, false, Strategy::Hessian);
+        assert_eq!((b.num_blocks, b.block_size), (1, 64));
+    }
+
+    #[test]
+    fn default_strategy_is_per_tensor_per_layer() {
+        let b = bv("wq", &[4, 64, 64], 4, true, Strategy::Default);
+        assert_eq!((b.num_blocks, b.block_size), (4, 4096));
+        let b = bv("embed", &[256, 64], 4, false, Strategy::Default);
+        assert_eq!((b.num_blocks, b.block_size), (1, 256 * 64));
+    }
+
+    #[test]
+    fn value_whole_only_changes_wv() {
+        let b = bv("wv", &[4, 64, 64], 4, true, Strategy::ValueWhole);
+        assert_eq!((b.num_blocks, b.block_size), (4, 4096));
+        assert_eq!(b.category, Category::Whole);
+        let b = bv("wk", &[4, 64, 64], 4, true, Strategy::ValueWhole);
+        assert_eq!(b.num_blocks, 16);
+    }
+
+    #[test]
+    fn reduction_ratio_is_high_for_llm_shapes() {
+        // Llama-7B-like inventory.
+        let shapes: Vec<(String, Vec<usize>)> = vec![
+            ("embed".into(), vec![32000, 4096]),
+            ("wq".into(), vec![32, 4096, 4096]),
+            ("wk".into(), vec![32, 4096, 4096]),
+            ("wv".into(), vec![32, 4096, 4096]),
+            ("wo".into(), vec![32, 4096, 4096]),
+            ("w1".into(), vec![32, 11008, 4096]),
+            ("w3".into(), vec![32, 11008, 4096]),
+            ("w2".into(), vec![32, 4096, 11008]),
+            ("attn_norm".into(), vec![32, 4096]),
+            ("mlp_norm".into(), vec![32, 4096]),
+            ("final_norm".into(), vec![4096]),
+            ("output".into(), vec![32000, 4096]),
+        ];
+        let stacked: Vec<String> =
+            ["wq", "wk", "wv", "wo", "w1", "w3", "w2", "attn_norm",
+             "mlp_norm"].iter().map(|s| s.to_string()).collect();
+        let spec = partition_spec(&shapes, 32, &stacked,
+                                  Strategy::Hessian).unwrap();
+        let r = v_reduction_ratio(&spec);
+        assert!(r > 0.999, "v reduction {r}");
+    }
+
+    #[test]
+    fn partition_covers_all_params_property() {
+        use crate::util::prop::{check, prop_assert};
+        check(64, |rng| {
+            let heads = 1 + rng.below(8);
+            let layers = 1 + rng.below(6);
+            let d = heads * (1 + rng.below(16));
+            let name = *rng.choose(&["wq", "wk", "wv", "wo", "w1",
+                                     "attn_norm", "embed"]);
+            let shape: Vec<usize> = match name {
+                "embed" => vec![2 + rng.below(500), d],
+                "attn_norm" => vec![layers, d],
+                "w1" => vec![layers, 4 * d, d],
+                _ => vec![layers, d, d],
+            };
+            let stacked = name != "embed";
+            for s in [Strategy::Hessian, Strategy::Default,
+                      Strategy::ValueWhole] {
+                let b = block_view(name, &shape, heads, stacked, s)
+                    .map_err(|e| e.to_string())?;
+                let n: usize = shape.iter().product();
+                prop_assert(b.num_blocks * b.block_size == n,
+                            "blocks × size == numel")?;
+                prop_assert(b.num_blocks >= 1, "at least one block")?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,12 @@
+//! Random-quadratic case studies (paper §2.1, Fig 4 and Fig 5).
+//!
+//! These are the experiments that motivate Adam-mini: on a
+//! block-diagonal quadratic, Adam's coordinate-wise learning rates lose
+//! to a single well-chosen rate *per dense block*.
+
+pub mod fig4;
+pub mod precond;
+
+pub use fig4::{adam_quadratic, blockwise_gd_quadratic, gd_quadratic,
+               make_fig4_hessian, QuadCurves};
+pub use precond::{adam_precond_ratio, precond_sweep, PrecondPoint};

@@ -1,0 +1,76 @@
+//! LoRA fine-tuning substrate (paper Fig 22 / Table 5 "SFT (LoRA)"):
+//! low-rank adapters on the attention matrices, gradients through the
+//! `grad_lora` artifact, optimizer steps on the adapters only.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::engine::{lit_i32, lit_to_scalar, lit_to_tensor,
+                             tensor_to_lit, Executable};
+use crate::runtime::{Engine, ModelRuntime};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+pub struct LoraGrad {
+    exe: Rc<Executable>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    n_base: usize,
+    n_adapters: usize,
+}
+
+impl LoraGrad {
+    pub fn new(engine: &Engine, rt: &ModelRuntime) -> Result<LoraGrad> {
+        let exe = engine.load(&rt.mm.name, "grad_lora")?;
+        let n_base = rt.mm.params.len();
+        let n_adapters = exe.inputs.len() - 2 - n_base;
+        Ok(LoraGrad {
+            exe,
+            batch_size: rt.mm.batch_size,
+            seq_len: rt.mm.seq_len,
+            n_base,
+            n_adapters,
+        })
+    }
+
+    /// Fresh adapters: A ~ N(0, 0.02), B = 0 (the standard LoRA init —
+    /// the adapted model starts exactly at the base model).
+    pub fn init_adapters(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed ^ 0x10A);
+        self.exe.inputs[2 + self.n_base..]
+            .iter()
+            .map(|s| {
+                if s.name.starts_with("lora_a") {
+                    Tensor::randn(&*s.name, &s.shape, 0.02, &mut rng)
+                } else {
+                    Tensor::zeros(&*s.name, &s.shape)
+                }
+            })
+            .collect()
+    }
+
+    /// loss + adapter gradients (base params frozen).
+    pub fn grad(&self, base: &[Tensor], adapters: &[Tensor],
+                tokens: &[i32], targets: &[i32])
+        -> Result<(f32, Vec<Tensor>)> {
+        if adapters.len() != self.n_adapters {
+            return Err(anyhow!("expected {} adapters, got {}",
+                               self.n_adapters, adapters.len()));
+        }
+        let shape = [self.batch_size, self.seq_len];
+        let mut args = vec![lit_i32(&shape, tokens)?,
+                            lit_i32(&shape, targets)?];
+        for p in base.iter().chain(adapters) {
+            args.push(tensor_to_lit(p)?);
+        }
+        let outs = self.exe.run(&args)?;
+        let loss = lit_to_scalar(&outs[0])?;
+        let grads = outs[1..]
+            .iter()
+            .zip(&self.exe.outputs[1..])
+            .map(|(l, s)| lit_to_tensor(l, s))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+}

@@ -1,0 +1,21 @@
+//! Alignment pipeline (paper §3.3 / Fig 12): SFT with prompt masking,
+//! a programmatic preference reward, and ReMax (Li et al. 2023) —
+//! REINFORCE with a greedy-rollout baseline — all driven through the
+//! AOT `logits` and `grad_weighted` artifacts.
+//!
+//! DESIGN.md §4: the pretrained-7B + ultrafeedback stack is substituted
+//! by a tiny in-repo pretrained LM + a deterministic preference reward;
+//! the optimizer code paths (masked-SFT gradients, reward ascent,
+//! per-sequence advantages) are the real thing.
+
+pub mod lora;
+pub mod remax;
+pub mod reward;
+pub mod sampler;
+pub mod sft;
+
+pub use lora::LoraGrad;
+pub use remax::{remax_train, RemaxConfig};
+pub use reward::{preference_reward, RewardSpec};
+pub use sampler::Sampler;
+pub use sft::{sft_train, SftConfig};

@@ -1,0 +1,142 @@
+//! ReMax (Li et al. 2023): REINFORCE with a greedy-rollout baseline —
+//! the paper's RLHF algorithm (§3.3, memory-efficient PPO alternative).
+//!
+//! For each prompt x: sample y ~ π_θ (temperature 1), greedy ȳ = argmax
+//! rollout as the variance-reducing baseline; advantage A = r(y) − r(ȳ);
+//! gradient = A · ∇(−log π_θ(y)) — realized through the
+//! `grad_weighted` artifact with per-token weights A·mask(response).
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Corpus, SyntheticSpec};
+use crate::optim::Optimizer;
+use crate::rlhf::reward::{preference_reward, RewardSpec};
+use crate::rlhf::sampler::Sampler;
+use crate::rlhf::sft::WeightedGrad;
+use crate::runtime::{Engine, ModelRuntime};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct RemaxConfig {
+    pub steps: usize,
+    pub prompt_len: usize,
+    pub lr: f32,
+    pub temperature: f32,
+    pub seed: u64,
+    pub reward: RewardSpec,
+}
+
+impl Default for RemaxConfig {
+    fn default() -> Self {
+        RemaxConfig {
+            steps: 60,
+            prompt_len: 24,
+            lr: 5e-5,
+            temperature: 1.0,
+            seed: 0,
+            reward: RewardSpec::default(),
+        }
+    }
+}
+
+/// Per-step record: mean sampled reward and mean baseline reward.
+#[derive(Debug, Clone)]
+pub struct RemaxLog {
+    pub step: usize,
+    pub mean_reward: f64,
+    pub baseline_reward: f64,
+}
+
+/// Run ReMax; returns the reward curve.
+pub fn remax_train(engine: &Engine, rt: &ModelRuntime,
+                   params: &mut Vec<Tensor>, opt: &mut dyn Optimizer,
+                   cfg: &RemaxConfig) -> Result<Vec<RemaxLog>> {
+    let sampler = Sampler::new(engine, rt)?;
+    let wg = WeightedGrad::new(engine, rt)?;
+    let (b, s) = (rt.mm.batch_size, rt.mm.seq_len);
+    let mut rng = Rng::new(cfg.seed ^ 0x4E4AC);
+
+    // Prompt source: the pre-training distribution.
+    let corpus = Corpus::synthetic(&SyntheticSpec {
+        vocab: rt.mm.vocab,
+        n_tokens: (cfg.steps + 8) * b * s + 4096,
+        seed: cfg.seed ^ 0xF00D,
+        ..Default::default()
+    });
+    let mut prompts = Batcher::new(corpus, b, s, cfg.seed);
+    let mut logs = Vec::with_capacity(cfg.steps);
+
+    for step in 1..=cfg.steps {
+        let batch = prompts.next_batch();
+        // Stochastic rollout + greedy baseline from the same prompts.
+        let sampled = sampler.complete(params, &batch.tokens,
+                                       cfg.prompt_len, cfg.temperature,
+                                       &mut rng)?;
+        let greedy = sampler.complete(params, &batch.tokens,
+                                      cfg.prompt_len, 0.0, &mut rng)?;
+        // Per-sequence advantages.
+        let mut advantages = Vec::with_capacity(b);
+        let mut r_sum = 0.0;
+        let mut base_sum = 0.0;
+        for row in 0..b {
+            let prompt = &sampled[row * s..row * s + cfg.prompt_len];
+            let resp = &sampled[row * s + cfg.prompt_len..(row + 1) * s];
+            let resp_g = &greedy[row * s + cfg.prompt_len..(row + 1) * s];
+            let r = preference_reward(&cfg.reward, prompt, resp);
+            let rb = preference_reward(&cfg.reward, prompt, resp_g);
+            r_sum += r;
+            base_sum += rb;
+            advantages.push((r - rb) as f32);
+        }
+        // REINFORCE weights: advantage on response positions. The CE
+        // loss is −log π(target | ctx); ascending reward means
+        // *descending* A·(−log π), so weights carry +A.
+        let resp_frac = (s - cfg.prompt_len) as f32 / s as f32;
+        let mut weights = vec![0.0f32; b * s];
+        // targets[pos] predicts token at pos+1 → response tokens are
+        // predicted at positions prompt_len-1 .. s-1.
+        for row in 0..b {
+            for pos in cfg.prompt_len - 1..s - 1 {
+                weights[row * s + pos] = advantages[row] / resp_frac;
+            }
+        }
+        // Targets: the sampled sequence shifted by one.
+        let mut targets = vec![0i32; b * s];
+        for row in 0..b {
+            for pos in 0..s - 1 {
+                targets[row * s + pos] = sampled[row * s + pos + 1];
+            }
+        }
+        let (_, grads) = wg.grad(params, &sampled, &targets, &weights)?;
+        opt.step(params, &grads, cfg.lr);
+        logs.push(RemaxLog {
+            step,
+            mean_reward: r_sum / b as f64,
+            baseline_reward: base_sum / b as f64,
+        });
+    }
+    Ok(logs)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn advantage_weights_are_zero_on_prompt() {
+        // Structural check of the weight layout logic.
+        let (b, s, prompt) = (2usize, 8usize, 3usize);
+        let advantages = [0.5f32, -1.0];
+        let resp_frac = (s - prompt) as f32 / s as f32;
+        let mut weights = vec![0.0f32; b * s];
+        for row in 0..b {
+            for pos in prompt - 1..s - 1 {
+                weights[row * s + pos] = advantages[row] / resp_frac;
+            }
+        }
+        assert_eq!(weights[0], 0.0);
+        assert_eq!(weights[1], 0.0);
+        assert!(weights[2] > 0.0);
+        assert_eq!(weights[7], 0.0); // last position predicts nothing
+        assert!(weights[8 + 2] < 0.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! PJRT engine: HLO-text loading, executable caching, literal bridging.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{IoSpec, Manifest};
+use crate::tensor::Tensor;
+
+/// A compiled executable + its I/O contract.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host literals (owned or borrowed); returns
+    /// decomposed output literals (the module root is a tuple —
+    /// `return_tuple=True` at lowering).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self, args: &[L]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.inputs.len() {
+            bail!("{}: got {} args, artifact wants {}", self.name,
+                  args.len(), self.inputs.len());
+        }
+        let result = self
+            .exe
+            .execute::<L>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} outputs", self.name))?;
+        let outs = lit.decompose_tuple()?;
+        if outs.len() != self.outputs.len() {
+            bail!("{}: got {} outputs, manifest says {}", self.name,
+                  outs.len(), self.outputs.len());
+        }
+        Ok(outs)
+    }
+
+    /// Execute taking device buffers (kept for state that stays on
+    /// device between steps) — outputs still come back as literals.
+    pub fn run_b(&self, args: &[xla::PjRtBuffer])
+        -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut lit = result[0][0].to_literal_sync()?;
+        Ok(lit.decompose_tuple()?)
+    }
+}
+
+/// PJRT CPU client + executable cache keyed by artifact file name.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Engine> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Engine { client, manifest, dir, cache: RefCell::new(
+            HashMap::new()) })
+    }
+
+    /// Engine over the default artifacts dir ($ADAM_MINI_ARTIFACTS).
+    pub fn default_engine() -> Result<Engine> {
+        Engine::new(super::manifest::default_dir())
+    }
+
+    /// Load (or fetch cached) an artifact of `model` by key
+    /// (`grad`, `eval`, `train_adamw`, `train_adam_mini`, ...).
+    pub fn load(&self, model: &str, key: &str) -> Result<Rc<Executable>> {
+        let mm = self.manifest.model(model)?;
+        let info = mm
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!(
+                "model {model} has no artifact {key:?} (have {:?})",
+                mm.artifacts.keys().collect::<Vec<_>>()))?;
+        if let Some(exe) = self.cache.borrow().get(&info.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().unwrap())
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", info.file))?;
+        let exe = Rc::new(Executable {
+            exe,
+            inputs: info.inputs.clone(),
+            outputs: info.outputs.clone(),
+            name: format!("{model}/{key}"),
+        });
+        self.cache
+            .borrow_mut()
+            .insert(info.file.clone(), exe.clone());
+        Ok(exe)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal bridging
+// ---------------------------------------------------------------------------
+
+/// f32 literal with shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// i32 literal with shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Tensor -> literal.
+pub fn tensor_to_lit(t: &Tensor) -> Result<xla::Literal> {
+    lit_f32(&t.shape, &t.data)
+}
+
+/// literal -> Tensor (shape from the manifest spec).
+pub fn lit_to_tensor(l: &xla::Literal, spec: &IoSpec) -> Result<Tensor> {
+    let data = l
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal {} to_vec: {e:?}", spec.name))?;
+    if data.len() != spec.numel() {
+        bail!("{}: literal has {} elements, expected {}", spec.name,
+              data.len(), spec.numel());
+    }
+    Ok(Tensor::new(&*spec.name, &spec.shape, data))
+}
+
+/// Scalar f32 from a rank-0 literal.
+pub fn lit_to_scalar(l: &xla::Literal) -> Result<f32> {
+    l.to_vec::<f32>()
+        .map_err(|e| anyhow!("scalar literal: {e:?}"))
+        .map(|v| v[0])
+}

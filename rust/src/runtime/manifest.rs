@@ -1,0 +1,306 @@
+//! `artifacts/manifest.json` schema — the L2→L3 ABI.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::partition::{BlockView, Category, Strategy};
+use crate::util::json::Json;
+
+/// One tensor in an artifact's positional input/output list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+    pub role: String,  // "batch" | "scalar" | "param" | "m" | "v" | ...
+}
+
+impl IoSpec {
+    fn parse(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+            role: j.get("role")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported HLO graph.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub optimizer: Option<String>,
+    pub strategy: Option<String>,
+    pub kernels: Option<String>,
+}
+
+impl ArtifactInfo {
+    fn parse(j: &Json) -> Result<ArtifactInfo> {
+        let io = |key: &str| -> Result<Vec<IoSpec>> {
+            j.get(key)?.as_arr()?.iter().map(IoSpec::parse).collect()
+        };
+        let opt_str = |key: &str| {
+            j.opt(key).and_then(|v| v.as_str().ok()).map(str::to_string)
+        };
+        Ok(ArtifactInfo {
+            file: j.get("file")?.as_str()?.to_string(),
+            inputs: io("inputs")?,
+            outputs: io("outputs")?,
+            optimizer: opt_str("optimizer"),
+            strategy: opt_str("strategy"),
+            kernels: opt_str("kernels"),
+        })
+    }
+}
+
+/// One parameter tensor + its partition under each strategy.
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub category: String,
+    /// strategy name -> (num_blocks, block_size)
+    pub blocks: BTreeMap<String, (usize, usize)>,
+}
+
+impl ParamInfo {
+    fn parse(j: &Json) -> Result<ParamInfo> {
+        let mut blocks = BTreeMap::new();
+        for strat in ["hessian", "default", "value_whole"] {
+            let arr = j.get(strat)?.as_arr()?;
+            blocks.insert(strat.to_string(),
+                          (arr[0].as_usize()?, arr[1].as_usize()?));
+        }
+        Ok(ParamInfo {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            category: j.get("category")?.as_str()?.to_string(),
+            blocks,
+        })
+    }
+
+    /// As a [`BlockView`] for the given strategy.
+    pub fn block_view(&self, strategy: Strategy) -> Result<BlockView> {
+        let (nb, bs) = *self
+            .blocks
+            .get(strategy.name())
+            .ok_or_else(|| anyhow!("no partition for {}", strategy.name()))?;
+        let cat = match self.category.as_str() {
+            "token_row" => Category::TokenRow,
+            "head" => Category::Head,
+            "out_neuron" => Category::OutNeuron,
+            _ => Category::Whole,
+        };
+        Ok(BlockView {
+            name: self.name.clone(),
+            shape: self.shape.clone(),
+            num_blocks: nb,
+            block_size: bs,
+            category: cat,
+        })
+    }
+}
+
+/// One model's exported configuration + artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub family: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub n_params: usize,
+    pub v_reduction: f64,
+    pub params: Vec<ParamInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl ModelManifest {
+    fn parse(name: &str, j: &Json) -> Result<ModelManifest> {
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(ParamInfo::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(k.clone(), ArtifactInfo::parse(v)
+                .with_context(|| format!("artifact {k}"))?);
+        }
+        Ok(ModelManifest {
+            name: name.to_string(),
+            family: j.get("family")?.as_str()?.to_string(),
+            vocab: j.get("vocab")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            batch_size: j.get("batch_size")?.as_usize()?,
+            n_params: j.get("n_params")?.as_usize()?,
+            v_reduction: j.get("v_reduction")?.as_f64()?,
+            params,
+            artifacts,
+        })
+    }
+
+    /// Names of layer-stacked tensors (axis 0 == n_layers).
+    pub fn stacked_names(&self) -> Vec<String> {
+        self.params
+            .iter()
+            .filter(|p| {
+                p.shape.first() == Some(&self.n_layers)
+                    && !matches!(p.name.as_str(),
+                                 "embed" | "output" | "pos_emb")
+            })
+            .map(|p| p.name.clone())
+            .collect()
+    }
+
+    pub fn meta(&self) -> crate::optim::ModelMeta {
+        crate::optim::ModelMeta {
+            n_heads: self.n_heads,
+            stacked: self.stacked_names(),
+        }
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run \
+                                      `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let hyper = j.get("hyper")?;
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models")?.as_obj()? {
+            models.insert(name.clone(), ModelManifest::parse(name, mj)
+                .with_context(|| format!("model {name}"))?);
+        }
+        Ok(Manifest {
+            dir,
+            beta1: hyper.get("beta1")?.as_f64()?,
+            beta2: hyper.get("beta2")?.as_f64()?,
+            eps: hyper.get("eps")?.as_f64()?,
+            weight_decay: hyper.get("weight_decay")?.as_f64()?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest \
+                                    (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn hyper(&self) -> crate::optim::Hyper {
+        crate::optim::Hyper {
+            beta1: self.beta1 as f32,
+            beta2: self.beta2 as f32,
+            eps: self.eps as f32,
+            weight_decay: self.weight_decay as f32,
+        }
+    }
+}
+
+/// Default artifacts directory: $ADAM_MINI_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var("ADAM_MINI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::load(default_dir()).ok()
+    }
+
+    #[test]
+    fn loads_and_has_models() {
+        let Some(m) = manifest() else { return };
+        assert!(m.models.contains_key("t295k"));
+        assert!((m.beta2 - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_agrees_with_rust_partitioner() {
+        // GOLDEN: the Python exporter's partition must equal ours for
+        // every tensor of every model under every strategy.
+        let Some(m) = manifest() else { return };
+        for (_, mm) in &m.models {
+            let stacked = mm.stacked_names();
+            for p in &mm.params {
+                for strat in [Strategy::Hessian, Strategy::Default,
+                              Strategy::ValueWhole] {
+                    let ours = crate::partition::block_view(
+                        &p.name, &p.shape, mm.n_heads,
+                        stacked.iter().any(|s| s == &p.name), strat)
+                        .unwrap();
+                    let theirs = p.blocks[strat.name()];
+                    assert_eq!(
+                        (ours.num_blocks, ours.block_size), theirs,
+                        "{}/{} under {}", mm.name, p.name, strat.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grad_io_is_consistent() {
+        let Some(m) = manifest() else { return };
+        let mm = m.model("t295k").unwrap();
+        let grad = &mm.artifacts["grad"];
+        // inputs: tokens, targets, then params in order.
+        assert_eq!(grad.inputs[0].name, "tokens");
+        assert_eq!(grad.inputs[1].role, "batch");
+        assert_eq!(grad.inputs.len(), 2 + mm.params.len());
+        assert_eq!(grad.outputs.len(), 1 + mm.params.len());
+        assert_eq!(grad.outputs[0].role, "loss");
+        for (io, p) in grad.inputs[2..].iter().zip(&mm.params) {
+            assert_eq!(io.name, p.name);
+            assert_eq!(io.shape, p.shape);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 ⇄ L2 runtime: loads the AOT HLO-text artifacts through the `xla`
+//! crate's PJRT CPU client and exposes typed step functions.
+//!
+//! Interchange contract (see `python/compile/aot.py` and DESIGN.md §6):
+//! HLO *text* + `manifest.json` describing positional I/O. The Rust
+//! binary is self-contained once `make artifacts` has run — Python is
+//! never on the step path.
+
+pub mod engine;
+pub mod manifest;
+pub mod model;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactInfo, IoSpec, Manifest, ModelManifest,
+                   ParamInfo};
+pub use model::ModelRuntime;

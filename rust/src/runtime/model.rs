@@ -1,0 +1,254 @@
+//! Typed model-level runtime: parameter init + grad/eval/fused-train
+//! step functions over one model's artifacts.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::engine::{lit_i32, lit_scalar, lit_to_scalar, lit_to_tensor,
+                    tensor_to_lit, Engine, Executable};
+use super::manifest::ModelManifest;
+use crate::data::Batch;
+use crate::partition::Strategy;
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// One model's runtime surface.
+pub struct ModelRuntime<'e> {
+    pub engine: &'e Engine,
+    pub mm: ModelManifest,
+    grad_exe: Rc<Executable>,
+    eval_exe: Rc<Executable>,
+}
+
+impl<'e> ModelRuntime<'e> {
+    pub fn new(engine: &'e Engine, model: &str) -> Result<ModelRuntime<'e>> {
+        let mm = engine.manifest.model(model)?.clone();
+        Ok(ModelRuntime {
+            grad_exe: engine.load(model, "grad")?,
+            eval_exe: engine.load(model, "eval")?,
+            engine,
+            mm,
+        })
+    }
+
+    /// GPT-2-style init matching `compile/model.py`: N(0, 0.02) with
+    /// residual-output matrices scaled by 1/sqrt(2L); norms at 1.
+    /// (Distribution-level match; streams differ from jax PRNG, which is
+    /// fine — all optimizer comparisons share this init.)
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed ^ 0x1217);
+        let resid = ["wo", "w2", "w_out"];
+        self.mm
+            .params
+            .iter()
+            .map(|p| {
+                if p.name.contains("norm") {
+                    Tensor::ones(&*p.name, &p.shape)
+                } else {
+                    let mut std = 0.02f32;
+                    if resid.contains(&p.name.as_str()) {
+                        std /= (2.0 * self.mm.n_layers as f32).sqrt();
+                    }
+                    Tensor::randn(&*p.name, &p.shape, std, &mut rng)
+                }
+            })
+            .collect()
+    }
+
+    fn batch_lits(&self, batch: &Batch) -> Result<[xla::Literal; 2]> {
+        if batch.batch_size != self.mm.batch_size
+            || batch.seq_len != self.mm.seq_len
+        {
+            bail!("batch ({}, {}) does not match model ({}, {})",
+                  batch.batch_size, batch.seq_len, self.mm.batch_size,
+                  self.mm.seq_len);
+        }
+        let shape = [self.mm.batch_size, self.mm.seq_len];
+        Ok([lit_i32(&shape, &batch.tokens)?,
+            lit_i32(&shape, &batch.targets)?])
+    }
+
+    /// loss + gradients (the universal substrate for host optimizers).
+    pub fn grad(&self, params: &[Tensor], batch: &Batch)
+        -> Result<(f32, Vec<Tensor>)> {
+        let [tok, tgt] = self.batch_lits(batch)?;
+        let mut args = vec![tok, tgt];
+        for p in params {
+            args.push(tensor_to_lit(p)?);
+        }
+        let outs = self.grad_exe.run(&args)?;
+        let loss = lit_to_scalar(&outs[0])?;
+        let grads = outs[1..]
+            .iter()
+            .zip(&self.grad_exe.outputs[1..])
+            .map(|(l, s)| lit_to_tensor(l, s))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+
+    /// Evaluation loss on one batch.
+    pub fn eval_loss(&self, params: &[Tensor], batch: &Batch)
+        -> Result<f32> {
+        let [tok, tgt] = self.batch_lits(batch)?;
+        let mut args = vec![tok, tgt];
+        for p in params {
+            args.push(tensor_to_lit(p)?);
+        }
+        let outs = self.eval_exe.run(&args)?;
+        lit_to_scalar(&outs[0])
+    }
+
+    /// A fused train-step handle (`train_adamw`, `train_adam_mini`,
+    /// `train_adam_mini_default`, `*_ref`, ...).
+    pub fn fused(&self, key: &str) -> Result<FusedTrainer> {
+        let exe = self.engine.load(&self.mm.name, key)?;
+        let info = &self.mm.artifacts[key];
+        let optimizer = info
+            .optimizer
+            .clone()
+            .ok_or_else(|| anyhow!("{key} is not a train artifact"))?;
+        let strategy = Strategy::from_name(
+            info.strategy.as_deref().unwrap_or("hessian"))?;
+
+        // v-state shapes follow the ABI: full mirrors for adamw, one
+        // (num_blocks,) vector per tensor for adam-mini.
+        let v_shapes: Vec<Vec<usize>> = if optimizer == "adamw" {
+            self.mm.params.iter().map(|p| p.shape.clone()).collect()
+        } else {
+            self.mm
+                .params
+                .iter()
+                .map(|p| {
+                    let bv = p.block_view(strategy)?;
+                    Ok(vec![bv.num_blocks])
+                })
+                .collect::<Result<_>>()?
+        };
+        let init_m: Vec<Tensor> = self
+            .mm
+            .params
+            .iter()
+            .map(|p| Tensor::zeros(&*p.name, &p.shape))
+            .collect();
+        let init_v: Vec<Tensor> = v_shapes
+            .iter()
+            .zip(&self.mm.params)
+            .map(|(s, p)| Tensor::zeros(&*p.name, s))
+            .collect();
+        let state_elems = init_m.iter().map(Tensor::numel).sum::<usize>()
+            + init_v.iter().map(Tensor::numel).sum::<usize>();
+        Ok(FusedTrainer {
+            exe,
+            n_tensors: self.mm.params.len(),
+            state: None,
+            init_m,
+            init_v,
+            state_elems,
+            t: 0,
+        })
+    }
+}
+
+/// Fused AOT train step: owns the optimizer state, steps params in place.
+/// The whole update — grad + Pallas optimizer kernel — is one XLA
+/// executable.
+///
+/// Perf note (EXPERIMENTS.md §Perf): after the first step, the
+/// (params, m, v) state lives as **XLA literals** — the executable's
+/// own outputs are fed straight back as the next step's inputs, so the
+/// hot loop performs no host `Vec<f32>` ⇄ literal conversions.
+/// [`FusedTrainer::step_device`] is that fast path; [`FusedTrainer::step`]
+/// additionally refreshes the caller's host tensors every step (the
+/// equivalence-testing path).
+pub struct FusedTrainer {
+    exe: Rc<Executable>,
+    n_tensors: usize,
+    /// Literal-resident state: params ++ m ++ v (None until first step).
+    state: Option<Vec<xla::Literal>>,
+    /// Host m/v used only to seed the first step (zeros).
+    init_m: Vec<Tensor>,
+    init_v: Vec<Tensor>,
+    state_elems: usize,
+    pub t: u64,
+}
+
+impl FusedTrainer {
+    /// Fast path: state stays as literals; `params` is NOT updated
+    /// (call [`Self::sync_params`] before reading it).
+    pub fn step_device(&mut self, params: &[Tensor], batch: &Batch,
+                       lr: f32) -> Result<f32> {
+        self.t += 1;
+        let n = self.n_tensors;
+        assert_eq!(params.len(), n);
+        let spec0 = &self.exe.inputs[0];
+        // Per-step inputs (batch + scalars) are tiny.
+        let head = [
+            lit_i32(&spec0.shape, &batch.tokens)?,
+            lit_i32(&spec0.shape, &batch.targets)?,
+            lit_scalar(lr),
+            lit_scalar(self.t as f32),
+        ];
+        if self.state.is_none() {
+            // First step: upload host params + zero state once.
+            let mut st = Vec::with_capacity(3 * n);
+            for p in params.iter().chain(&self.init_m).chain(&self.init_v)
+            {
+                st.push(tensor_to_lit(p)?);
+            }
+            self.state = Some(st);
+        }
+        let state = self.state.as_ref().unwrap();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(4 + 3 * n);
+        args.extend(head.iter());
+        args.extend(state.iter());
+        let mut outs = self.exe.run(&args)?;
+        let loss = lit_to_scalar(&outs[0])?;
+        // Outputs: loss, params, m, v — feed straight back next step.
+        self.state = Some(outs.split_off(1));
+        Ok(loss)
+    }
+
+    /// Compatible path: fast step + host-tensor refresh.
+    pub fn step(&mut self, params: &mut [Tensor], batch: &Batch, lr: f32)
+        -> Result<f32> {
+        let loss = self.step_device(params, batch, lr)?;
+        self.sync_params(params)?;
+        Ok(loss)
+    }
+
+    /// Copy the literal-resident parameters back into host tensors.
+    pub fn sync_params(&self, params: &mut [Tensor]) -> Result<()> {
+        if let Some(state) = &self.state {
+            for (i, p) in params.iter_mut().enumerate() {
+                *p = lit_to_tensor(&state[i], &self.exe.outputs[1 + i])?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Current optimizer state (m, v) as host tensors.
+    pub fn state_tensors(&self) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+        let n = self.n_tensors;
+        match &self.state {
+            None => Ok((self.init_m.clone(), self.init_v.clone())),
+            Some(state) => {
+                let m = (0..n)
+                    .map(|i| lit_to_tensor(&state[n + i],
+                                           &self.exe.outputs[1 + n + i]))
+                    .collect::<Result<_>>()?;
+                let v = (0..n)
+                    .map(|i| lit_to_tensor(&state[2 * n + i],
+                                           &self.exe.outputs[1 + 2 * n
+                                                             + i]))
+                    .collect::<Result<_>>()?;
+                Ok((m, v))
+            }
+        }
+    }
+
+    /// Optimizer-state bytes held by this fused trainer.
+    pub fn state_bytes(&self) -> usize {
+        self.state_elems * 4
+    }
+}

@@ -1,0 +1,163 @@
+//! Host tensor type shared by the optimizer roster, the runtime literal
+//! bridge, and checkpointing. Row-major `f32` storage, shape-checked
+//! helpers — deliberately minimal (the heavy math runs inside the AOT
+//! XLA executables; host tensors exist for optimizer state and analysis).
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::util::prng::Rng;
+
+/// A named, row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor({} {:?}, {} elems)", self.name, self.shape,
+               self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(name: impl Into<String>, shape: &[usize], data: Vec<f32>)
+        -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape/data mismatch");
+        Tensor { name: name.into(), shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(name: impl Into<String>, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { name: name.into(), shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(name: impl Into<String>, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { name: name.into(), shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    /// N(0, std) initialized tensor.
+    pub fn randn(name: impl Into<String>, shape: &[usize], std: f32,
+                 rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            name: name.into(),
+            shape: shape.to_vec(),
+            data: rng.normal_vec(n, std),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Squared L2 norm.
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.sq_norm().sqrt()
+    }
+
+    /// Elementwise a += s * b.
+    pub fn axpy(&mut self, s: f32, b: &Tensor) {
+        assert_eq!(self.shape, b.shape);
+        for (x, y) in self.data.iter_mut().zip(&b.data) {
+            *x += s * y;
+        }
+    }
+
+    /// Mean-squared distance to another tensor (trajectory comparison).
+    pub fn sq_dist(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    pub fn assert_shape(&self, shape: &[usize]) -> Result<()> {
+        if self.shape != shape {
+            bail!("{}: shape {:?} != expected {:?}", self.name, self.shape,
+                  shape);
+        }
+        Ok(())
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// ℓ2 distance between two parameter lists (paper Fig 9b trajectory
+/// comparison).
+pub fn params_l2_dist(a: &[Tensor], b: &[Tensor]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| x.sq_dist(y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Total element count of a parameter list.
+pub fn params_numel(ts: &[Tensor]) -> usize {
+    ts.iter().map(Tensor::numel).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_numel() {
+        let t = Tensor::zeros("a", &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.shape, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn new_checks_shape() {
+        Tensor::new("a", &[2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn axpy_and_dist() {
+        let mut a = Tensor::ones("a", &[4]);
+        let b = Tensor::ones("b", &[4]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![3.0; 4]);
+        assert!((a.sq_dist(&b) - 16.0).abs() < 1e-9);
+        assert!((params_l2_dist(&[a.clone()], &[b.clone()]) - 4.0).abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn("w", &[100, 100], 0.02, &mut rng);
+        let mean: f64 =
+            t.data.iter().map(|&x| x as f64).sum::<f64>() / 1e4;
+        assert!(mean.abs() < 1e-3);
+        let rms = (t.sq_norm() / 1e4).sqrt();
+        assert!((rms - 0.02).abs() < 1e-3, "rms {rms}");
+    }
+}

@@ -1,0 +1,115 @@
+//! CSV writer + run-metrics logger. Every experiment writes its raw
+//! series under `results/` so figures/tables are regenerable and
+//! diffable (EXPERIMENTS.md references these files).
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+/// Buffered CSV file writer.
+pub struct Csv {
+    w: BufWriter<File>,
+    cols: usize,
+    pub path: PathBuf,
+}
+
+impl Csv {
+    /// Create (truncating) a CSV with a header row; parent dirs created.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Csv> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(&path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Csv { w, cols: header.len(), path })
+    }
+
+    /// Write one row of f64 cells.
+    pub fn row(&mut self, cells: &[f64]) -> Result<()> {
+        assert_eq!(cells.len(), self.cols, "column count mismatch");
+        let line: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        writeln!(self.w, "{}", line.join(","))?;
+        Ok(())
+    }
+
+    /// Write one row of pre-formatted string cells.
+    pub fn row_str(&mut self, cells: &[String]) -> Result<()> {
+        assert_eq!(cells.len(), self.cols, "column count mismatch");
+        writeln!(self.w, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Render an aligned ASCII table (for terminal reports that mirror the
+/// paper's tables).
+pub fn ascii_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let hdr: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_csv() {
+        let dir = std::env::temp_dir().join("adam_mini_csv_test");
+        let path = dir.join("x.csv");
+        let mut c = Csv::create(&path, &["a", "b"]).unwrap();
+        c.row(&[1.0, 2.5]).unwrap();
+        c.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn row_width_checked() {
+        let dir = std::env::temp_dir().join("adam_mini_csv_test2");
+        let mut c = Csv::create(dir.join("y.csv"), &["a", "b"]).unwrap();
+        c.row(&[1.0]).unwrap();
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = ascii_table(&["name", "v"],
+                            &[vec!["adamw".into(), "1".into()],
+                              vec!["adam-mini".into(), "22".into()]]);
+        assert!(t.contains("adam-mini"));
+        assert!(t.lines().count() == 4);
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared utilities: JSON, PRNG, stats, CSV logging, a mini
+//! property-testing harness, and wall-clock timers.
+//!
+//! These exist because the offline build environment vendors only the
+//! `xla` crate's dependency set — no serde / rand / proptest / criterion —
+//! so the framework carries its own minimal, well-tested implementations
+//! (documented as a substitution in DESIGN.md).
+
+pub mod csv;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,103 @@
+//! Mini property-testing harness (proptest is not in the vendored crate
+//! set; DESIGN.md records the substitution).
+//!
+//! Usage:
+//! ```ignore
+//! check(256, |rng| {
+//!     let n = 1 + rng.below(64);
+//!     let v = rng.normal_vec(n, 1.0);
+//!     prop_assert(v.len() == n, "length preserved")
+//! });
+//! ```
+//!
+//! Each case gets an independent seeded [`Rng`]; on failure the harness
+//! reports the failing seed so the case is replayable with
+//! [`check_seed`]. No shrinking — failing inputs are regenerated from
+//! the seed instead.
+
+use super::prng::Rng;
+
+/// A property over one randomized case. Return `Err(msg)` to fail.
+pub type Property = fn(&mut Rng) -> Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop_assert(cond: bool, msg: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert |a-b| <= atol + rtol*|b| for property bodies.
+pub fn prop_close(a: f64, b: f64, atol: f64, rtol: f64, what: &str)
+    -> Result<(), String> {
+    if (a - b).abs() <= atol + rtol * b.abs() {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (atol={atol}, rtol={rtol})"))
+    }
+}
+
+/// Run `cases` randomized cases of a property; panics with the failing
+/// seed + message on the first failure.
+pub fn check<F>(cases: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    check_base_seed(0xADA0_0001, cases, f)
+}
+
+/// Like [`check`] but with an explicit base seed (keeps independent
+/// properties on independent streams).
+pub fn check_base_seed<F>(base: u64, cases: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_seed<F>(seed: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(64, |rng| {
+            let x = rng.f64();
+            prop_assert((0.0..1.0).contains(&x), "uniform in [0,1)")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(64, |rng| {
+            prop_assert(rng.f64() < 0.5, "always below half (false)")
+        });
+    }
+
+    #[test]
+    fn prop_close_tolerances() {
+        assert!(prop_close(1.0, 1.0 + 1e-9, 1e-8, 0.0, "x").is_ok());
+        assert!(prop_close(1.0, 2.0, 1e-8, 0.0, "x").is_err());
+        assert!(prop_close(100.0, 101.0, 0.0, 0.02, "x").is_ok());
+    }
+}

@@ -1,0 +1,142 @@
+//! Wall-clock timing + the bench harness used by `cargo bench`.
+//!
+//! Criterion is not in the vendored crate set, so every `[[bench]]`
+//! target is `harness = false` and uses [`Bench`] here: warmup, then
+//! timed iterations with mean/std/percentiles, printed in a stable
+//! machine-grepable format (`BENCH <name> mean_ns=... p50_ns=...`).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Simple scope timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Minimal criterion replacement.
+pub struct Bench {
+    /// Target measurement wall-time per benchmark.
+    pub measure_time: Duration,
+    /// Warmup wall-time before measuring.
+    pub warmup_time: Duration,
+    /// Cap on measured iterations (useful for slow end-to-end steps).
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            measure_time: Duration::from_secs(2),
+            warmup_time: Duration::from_millis(300),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench {
+            measure_time: Duration::from_millis(500),
+            warmup_time: Duration::from_millis(100),
+            max_iters: 1_000,
+        }
+    }
+
+    /// Run `f` repeatedly, report stats. `f` should include no setup.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w = Instant::now();
+        let mut warm_iters = 0usize;
+        while w.elapsed() < self.warmup_time && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let m = Instant::now();
+        while m.elapsed() < self.measure_time && samples.len() < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        if samples.is_empty() {
+            // f() slower than measure_time: take one mandatory sample.
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_ns: stats::mean(&samples),
+            std_ns: stats::std(&samples),
+            p50_ns: stats::percentile(&samples, 50.0),
+            p95_ns: stats::percentile(&samples, 95.0),
+        };
+        println!(
+            "BENCH {} iters={} mean_ns={:.0} std_ns={:.0} p50_ns={:.0} \
+             p95_ns={:.0} ({:.3} ms/iter)",
+            r.name, r.iters, r.mean_ns, r.std_ns, r.p50_ns, r.p95_ns,
+            r.mean_ms()
+        );
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench {
+            measure_time: Duration::from_millis(30),
+            warmup_time: Duration::from_millis(5),
+            max_iters: 100_000,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.millis() >= 1.0);
+    }
+}
