@@ -1,0 +1,68 @@
+//! Bench: bucketed ring all-reduce latency vs bucket size on the probe
+//! inventory (~1.6M f32), 4 in-process workers.
+//!
+//! Small buckets bound staging memory but pay per-message latency and
+//! thread-wakeup overhead; large buckets amortize it. Cluster-total
+//! bytes are bucket-invariant (2·(N−1)·payload), so this sweep isolates
+//! the latency term. Emits `results/BENCH_dist.json` so the perf
+//! trajectory of the dist engine is recorded across PRs.
+
+use adam_mini::dist::allreduce::ring_all_reduce;
+use adam_mini::dist::comm::{ring_world, LinkModel, TrafficClass};
+use adam_mini::dist::probe_params;
+use adam_mini::tensor::Tensor;
+use adam_mini::util::json::Json;
+use adam_mini::util::timer::Bench;
+
+fn main() {
+    let workers = 4usize;
+    let (params, n) = probe_params(0xBE7C);
+    let flat: Vec<f32> = params
+        .iter()
+        .flat_map(|t: &Tensor| t.data.iter().copied())
+        .collect();
+    println!("all-reduce payload: {n} f32 ({:.1} MB), {workers} workers\n",
+             n as f64 * 4.0 / 1e6);
+
+    let bench = Bench::quick();
+    let mut records = Vec::new();
+    for bucket_kb in [4usize, 16, 64, 256, 1024, 8192] {
+        let bucket_elems = bucket_kb * 1024 / 4;
+        let name = format!("allreduce/w{workers}/bucket{bucket_kb}kb");
+        let r = bench.run(&name, || {
+            let (nodes, _) = ring_world(workers, LinkModel::default());
+            std::thread::scope(|s| {
+                for node in nodes {
+                    let mut data = flat.clone();
+                    s.spawn(move || {
+                        ring_all_reduce(&node, &mut data, bucket_elems,
+                                        TrafficClass::GradReduce);
+                    });
+                }
+            });
+        });
+        // Effective per-worker reduction throughput.
+        let gb_s = n as f64 * 4.0 / (r.mean_ns / 1e9) / 1e9;
+        println!("  -> bucket {bucket_kb} KB: {:.2} ms/all-reduce, \
+                  {gb_s:.2} GB/s\n", r.mean_ms());
+        records.push(Json::obj(vec![
+            ("name", Json::str(&r.name)),
+            ("workers", Json::num(workers as f64)),
+            ("bucket_kb", Json::num(bucket_kb as f64)),
+            ("payload_elems", Json::num(n as f64)),
+            ("iters", Json::num(r.iters as f64)),
+            ("mean_ns", Json::num(r.mean_ns)),
+            ("p50_ns", Json::num(r.p50_ns)),
+            ("p95_ns", Json::num(r.p95_ns)),
+            ("gb_per_s", Json::num(gb_s)),
+        ]));
+    }
+    std::fs::create_dir_all("results").expect("mkdir results");
+    let out = Json::obj(vec![
+        ("bench", Json::str("dist_allreduce")),
+        ("records", Json::Arr(records)),
+    ]);
+    std::fs::write("results/BENCH_dist.json", out.to_string())
+        .expect("write BENCH_dist.json");
+    println!("wrote results/BENCH_dist.json");
+}

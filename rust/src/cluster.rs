@@ -83,6 +83,42 @@ pub const ADAFACTOR_PROFILE: OptProfile = OptProfile {
     update_ops_per_param: 4.0,
 };
 
+// ---------------------------------------------------------------------------
+// Collective-traffic closed forms (cross-checked against the measured
+// byte counters of the executable `dist` engine — see `repro report`).
+// ---------------------------------------------------------------------------
+
+/// Cluster-total bytes a ring all-reduce moves for a `payload_bytes`
+/// tensor over `workers` ranks: reduce-scatter + all-gather each move
+/// every element `workers − 1` hops, independent of bucket size.
+pub fn ring_allreduce_bytes(payload_bytes: f64, workers: usize) -> f64 {
+    if workers <= 1 {
+        0.0
+    } else {
+        2.0 * (workers - 1) as f64 * payload_bytes
+    }
+}
+
+/// Cluster-total bytes a ring all-gather moves: each rank's shard
+/// travels `workers − 1` hops, so the full payload moves once per hop.
+pub fn ring_allgather_bytes(payload_bytes: f64, workers: usize) -> f64 {
+    if workers <= 1 {
+        0.0
+    } else {
+        (workers - 1) as f64 * payload_bytes
+    }
+}
+
+impl OptProfile {
+    /// Bytes of optimizer state a full state synchronization must move
+    /// (the ZeRO-1 checkpoint-gather payload). Adam-mini's is half of
+    /// AdamW's — the executable form of the paper's state-sharding
+    /// communication saving.
+    pub fn state_sync_payload(&self, n_params: f64) -> f64 {
+        self.state_bytes_per_param * n_params
+    }
+}
+
 /// A training job on the simulated cluster.
 #[derive(Debug, Clone)]
 pub struct Job {
@@ -262,6 +298,20 @@ mod tests {
             prop_assert(big.unwrap_or(0) >= small.unwrap_or(0),
                         "monotone in memory")
         });
+    }
+
+    #[test]
+    fn collective_closed_forms() {
+        // Single worker moves nothing.
+        assert_eq!(ring_allreduce_bytes(1e6, 1), 0.0);
+        assert_eq!(ring_allgather_bytes(1e6, 1), 0.0);
+        // 4 workers: all-reduce 2·3·P, all-gather 3·P.
+        assert_eq!(ring_allreduce_bytes(1e6, 4), 6e6);
+        assert_eq!(ring_allgather_bytes(1e6, 4), 3e6);
+        // Adam-mini's state-sync payload is half of AdamW's.
+        let n = 1e9;
+        assert_eq!(ADAM_MINI_PROFILE.state_sync_payload(n),
+                   0.5 * ADAMW_PROFILE.state_sync_payload(n));
     }
 
     #[test]

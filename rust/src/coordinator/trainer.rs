@@ -8,11 +8,15 @@
 //!   the backward pass and the L1 Pallas optimizer kernel — the
 //!   production hot path.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::config::TrainConfig;
 use crate::data::{Batch, Batcher, Corpus, SyntheticSpec};
-use crate::optim::{self, Optimizer, Schedule};
+use crate::dist::{self, CommStats, DistOptions, DistTrainer};
+use crate::optim::{self, AdamMini, Optimizer, ReduceOp, Schedule};
+use crate::partition::Strategy;
 use crate::runtime::{Engine, ModelRuntime};
 use crate::runtime::model::FusedTrainer;
 use crate::tensor::Tensor;
@@ -93,6 +97,53 @@ impl RunHistory {
 pub enum TrainerMode {
     Host(Box<dyn Optimizer>),
     Fused(FusedTrainer),
+    /// Data-parallel over in-process workers (`workers > 1`).
+    /// `replicated` is `Some` when the optimizer is not ZeRO-1
+    /// shardable: gradients still all-reduce across workers, and the
+    /// per-replica update (identical on every worker) executes once.
+    Dist {
+        dist: DistTrainer,
+        replicated: Option<Box<dyn Optimizer>>,
+    },
+}
+
+/// The Fig 15 reduce-op names → [`ReduceOp`].
+fn parse_reduce(name: &str) -> Result<ReduceOp> {
+    Ok(match name {
+        "mean" => ReduceOp::Mean,
+        "max" => ReduceOp::Max,
+        "min" => ReduceOp::Min,
+        "l1norm" => ReduceOp::L1Norm,
+        "l2norm" => ReduceOp::L2Norm,
+        other => bail!("unknown reduce op {other:?}"),
+    })
+}
+
+/// Partition strategy implied by an `adam_mini*` roster name.
+fn mini_strategy(optimizer: &str) -> Strategy {
+    match optimizer {
+        "adam_mini_default" => Strategy::Default,
+        "adam_mini_value_whole" => Strategy::ValueWhole,
+        _ => Strategy::Hessian,
+    }
+}
+
+/// The single-replica host optimizer for a config (the pre-dist logic,
+/// shared by the host path and the dist replicated fallback).
+fn build_host_optimizer(cfg: &TrainConfig, hp: optim::Hyper,
+                        params: &[Tensor], rt: &ModelRuntime)
+    -> Result<Box<dyn Optimizer>> {
+    if cfg.optimizer.starts_with("adam_mini") && cfg.reduce_op != "mean" {
+        // Fig 15 ablation path.
+        let op = parse_reduce(&cfg.reduce_op)?;
+        let spec = rt
+            .mm
+            .meta()
+            .spec_for(params, mini_strategy(&cfg.optimizer))?;
+        Ok(Box::new(AdamMini::new(hp, spec, op)))
+    } else {
+        optim::by_name(&cfg.optimizer, hp, params, &rt.mm.meta())
+    }
 }
 
 /// A configured training run.
@@ -125,6 +176,10 @@ impl<'e> Trainer<'e> {
         };
 
         let mode = if cfg.fused {
+            if cfg.workers > 1 {
+                bail!("the fused artifact path is single-worker; drop \
+                       fused=true or workers={}", cfg.workers);
+            }
             let key = match cfg.optimizer.as_str() {
                 "adamw" => "train_adamw",
                 "adam_mini" => "train_adam_mini",
@@ -132,24 +187,33 @@ impl<'e> Trainer<'e> {
                 other => bail!("no fused artifact for optimizer {other:?}"),
             };
             TrainerMode::Fused(rt.fused(key)?)
-        } else if cfg.optimizer.starts_with("adam_mini")
-            && cfg.reduce_op != "mean"
-        {
-            // Fig 15 ablation path.
-            use crate::optim::{AdamMini, ReduceOp};
-            use crate::partition::Strategy;
-            let op = match cfg.reduce_op.as_str() {
-                "max" => ReduceOp::Max,
-                "min" => ReduceOp::Min,
-                "l1norm" => ReduceOp::L1Norm,
-                "l2norm" => ReduceOp::L2Norm,
-                other => bail!("unknown reduce op {other:?}"),
+        } else if cfg.workers > 1 {
+            let sharded = cfg.zero1 && dist::shardable(&cfg.optimizer);
+            let spec = if cfg.optimizer.starts_with("adam_mini") {
+                Some(rt.mm.meta().spec_for(
+                    &params, mini_strategy(&cfg.optimizer))?)
+            } else {
+                None
             };
-            let spec = rt.mm.meta().spec_for(&params, Strategy::Hessian)?;
-            TrainerMode::Host(Box::new(AdamMini::new(hp, spec, op)))
+            let dist = DistTrainer::new(&params, DistOptions {
+                workers: cfg.workers,
+                bucket_kb: cfg.bucket_kb,
+                zero1: sharded,
+                optimizer: cfg.optimizer.clone(),
+                reduce: parse_reduce(&cfg.reduce_op)?,
+                hp,
+                spec,
+                ..Default::default()
+            })?;
+            let replicated = if sharded {
+                None
+            } else {
+                Some(build_host_optimizer(cfg, hp, &params, &rt)?)
+            };
+            TrainerMode::Dist { dist, replicated }
         } else {
-            TrainerMode::Host(optim::by_name(
-                &cfg.optimizer, hp, &params, &rt.mm.meta())?)
+            TrainerMode::Host(build_host_optimizer(cfg, hp, &params,
+                                                   &rt)?)
         };
 
         Ok(Trainer {
@@ -231,6 +295,29 @@ impl<'e> Trainer<'e> {
                 opt.step(&mut self.params, &grads, lr);
                 total_loss / accum as f32
             }
+            TrainerMode::Dist { dist, replicated } => {
+                // The GLOBAL batch is `grad_accum` micro-batches drawn
+                // from the same stream in the same order for every
+                // world size; micro-batch i goes to worker i % N. That
+                // makes the N-worker run consume exactly the data the
+                // 1-worker run does — the loss-equivalence invariant.
+                let accum = self.cfg.grad_accum.max(1);
+                let n = dist.workers();
+                let mut local = dist.grad_buffers();
+                let mut total_loss = 0.0;
+                for i in 0..accum {
+                    let batch = self.batcher.next_batch();
+                    let (loss, g) = self.rt.grad(&self.params, &batch)?;
+                    total_loss += loss;
+                    dist.layout().accumulate(&mut local[i % n], &g);
+                }
+                let reduced =
+                    dist.step(&mut self.params, local, accum, lr)?;
+                if let (Some(opt), Some(grads)) = (replicated, reduced) {
+                    opt.step(&mut self.params, &grads, lr);
+                }
+                total_loss / accum as f32
+            }
         };
         if self.snapshots.as_ref().is_some_and(
             |(every, _)| self.step % every == 0)
@@ -297,12 +384,72 @@ impl<'e> Trainer<'e> {
         hist.opt_state_bytes = match &self.mode {
             TrainerMode::Host(o) => o.state_bytes(),
             TrainerMode::Fused(f) => f.state_bytes(),
+            TrainerMode::Dist { dist, replicated } => replicated
+                .as_ref()
+                .map(|o| o.state_bytes())
+                .unwrap_or_else(|| dist.state_bytes()),
         };
         Ok(hist)
     }
 
     pub fn current_step(&self) -> usize {
         self.step
+    }
+
+    /// The dist engine's traffic ledger (None for single-worker runs).
+    pub fn comm_stats(&self) -> Option<Arc<CommStats>> {
+        match &self.mode {
+            TrainerMode::Dist { dist, .. } => Some(dist.stats().clone()),
+            _ => None,
+        }
+    }
+
+    /// Save parameters AND optimizer state (a resumable checkpoint).
+    /// Sharded state is collected through the transport (accounted as
+    /// `state_sync` traffic). The fused path saves parameters only —
+    /// its state is device-resident with no import ABI.
+    pub fn save_run_checkpoint(&mut self, path: impl AsRef<std::path::Path>)
+        -> Result<()> {
+        self.sync_params()?;
+        let state = match &mut self.mode {
+            TrainerMode::Host(o) => o.state_export(),
+            TrainerMode::Fused(_) => Vec::new(),
+            TrainerMode::Dist { dist, replicated } => match replicated {
+                Some(o) => o.state_export(),
+                None => dist.sync_state()?,
+            },
+        };
+        super::checkpoint::save_run(path, &self.params, &state)
+    }
+
+    /// Restore a [`Trainer::save_run_checkpoint`] file into this
+    /// trainer (same model/optimizer/worker configuration).
+    pub fn load_run_checkpoint(&mut self,
+                               path: impl AsRef<std::path::Path>)
+        -> Result<()> {
+        let (params, state) = super::checkpoint::load_run(path)?;
+        if params.len() != self.params.len() {
+            bail!("checkpoint has {} params, model has {}", params.len(),
+                  self.params.len());
+        }
+        for (cur, new) in self.params.iter().zip(&params) {
+            new.assert_shape(&cur.shape)?;
+        }
+        self.params = params;
+        match &mut self.mode {
+            TrainerMode::Host(o) => o.state_import(&state)?,
+            TrainerMode::Fused(_) => {
+                if !state.is_empty() {
+                    bail!("fused trainer cannot import host optimizer \
+                           state");
+                }
+            }
+            TrainerMode::Dist { dist, replicated } => match replicated {
+                Some(o) => o.state_import(&state)?,
+                None => dist.import_state(&state)?,
+            },
+        }
+        Ok(())
     }
 }
 

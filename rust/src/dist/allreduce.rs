@@ -1,0 +1,226 @@
+//! Ring collectives over flat `f32` segments.
+//!
+//! The all-reduce is the classic two-phase ring (reduce-scatter then
+//! all-gather), processed in fixed-size buckets so peak message size —
+//! and therefore per-worker staging memory — is bounded by `bucket_kb`
+//! regardless of model size. Cluster-total traffic is exactly
+//! `2·(N−1)·payload` bytes for all-reduce and `(N−1)·payload` for
+//! all-gather, independent of bucket size — the closed forms mirrored
+//! by `cluster.rs` and cross-checked in the traffic report.
+//!
+//! Determinism: each chunk is accumulated in a fixed ring order, so a
+//! run is bit-reproducible for a given world size. The order differs
+//! from a naive left-to-right sum, which is why cross-world-size
+//! comparisons are to float tolerance, not bit-exact.
+
+use super::comm::{RingNode, TrafficClass};
+
+/// Balanced split of `len` elements into `n` chunks: chunk `c` is
+/// `[c*len/n, (c+1)*len/n)` (sizes differ by at most one).
+pub fn chunk_range(len: usize, n: usize, c: usize) -> (usize, usize) {
+    (c * len / n, (c + 1) * len / n)
+}
+
+/// In-place ring all-reduce (sum) of `data` across the world, processed
+/// in buckets of at most `bucket_elems` elements. Every rank ends with
+/// the identical (bitwise) elementwise sum.
+pub fn ring_all_reduce(node: &RingNode, data: &mut [f32],
+                       bucket_elems: usize, class: TrafficClass) {
+    if node.world <= 1 || data.is_empty() {
+        return;
+    }
+    let bucket = bucket_elems.max(1);
+    let mut off = 0;
+    while off < data.len() {
+        let hi = (off + bucket).min(data.len());
+        bucket_all_reduce(node, &mut data[off..hi], class);
+        off = hi;
+    }
+}
+
+/// One bucket: reduce-scatter (N−1 steps) + all-gather (N−1 steps).
+fn bucket_all_reduce(node: &RingNode, buf: &mut [f32],
+                     class: TrafficClass) {
+    let (n, r) = (node.world, node.rank);
+    // Reduce-scatter: after step s, the partial for chunk (r−s−1) has
+    // accumulated s+2 ranks' contributions at rank r. After N−1 steps
+    // rank r holds the complete sum for chunk (r+1) mod n.
+    for s in 0..n - 1 {
+        let send_c = (r + n - s) % n;
+        let (lo, hi) = chunk_range(buf.len(), n, send_c);
+        node.send_right(class, buf[lo..hi].to_vec());
+        let recv_c = (r + n - s - 1) % n;
+        let (lo, hi) = chunk_range(buf.len(), n, recv_c);
+        let incoming = node.recv_left();
+        debug_assert_eq!(incoming.len(), hi - lo);
+        for (x, y) in buf[lo..hi].iter_mut().zip(&incoming) {
+            *x += y;
+        }
+    }
+    // All-gather: circulate completed chunks.
+    for s in 0..n - 1 {
+        let send_c = (r + 1 + n - s) % n;
+        let (lo, hi) = chunk_range(buf.len(), n, send_c);
+        node.send_right(class, buf[lo..hi].to_vec());
+        let recv_c = (r + n - s) % n;
+        let (lo, hi) = chunk_range(buf.len(), n, recv_c);
+        let incoming = node.recv_left();
+        debug_assert_eq!(incoming.len(), hi - lo);
+        buf[lo..hi].copy_from_slice(&incoming);
+    }
+}
+
+/// Ring all-gather over a shared flat buffer partitioned into per-rank
+/// ranges (`ranges[w]` = the slice rank `w` is authoritative for; the
+/// ZeRO-1 shard map). On return every rank's `buf` holds every range's
+/// up-to-date contents. Ranges may be empty.
+pub fn ring_all_gather(node: &RingNode, ranges: &[(usize, usize)],
+                       buf: &mut [f32], class: TrafficClass) {
+    let (n, r) = (node.world, node.rank);
+    assert_eq!(ranges.len(), n, "one range per rank");
+    if n <= 1 {
+        return;
+    }
+    let mut send_c = r;
+    for s in 0..n - 1 {
+        let (lo, hi) = ranges[send_c];
+        node.send_right(class, buf[lo..hi].to_vec());
+        let recv_c = (r + n - 1 - s) % n;
+        let (lo, hi) = ranges[recv_c];
+        let incoming = node.recv_left();
+        debug_assert_eq!(incoming.len(), hi - lo);
+        buf[lo..hi].copy_from_slice(&incoming);
+        send_c = recv_c;
+    }
+}
+
+/// Reference sum for tests: elementwise sum of every rank's vector.
+#[cfg(test)]
+pub fn naive_sum(inputs: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = vec![0.0f32; inputs[0].len()];
+    for v in inputs {
+        for (o, x) in out.iter_mut().zip(v) {
+            *o += x;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::comm::{ring_world, LinkModel};
+    use crate::util::prng::Rng;
+
+    fn run_all_reduce(inputs: Vec<Vec<f32>>, bucket: usize)
+        -> (Vec<Vec<f32>>, u64) {
+        let n = inputs.len();
+        let (nodes, stats) = ring_world(n, LinkModel::default());
+        let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            // Threads own their node: &RingNode is !Send.
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .zip(inputs)
+                .map(|(node, mut data)| {
+                    s.spawn(move || {
+                        ring_all_reduce(&node, &mut data, bucket,
+                                        TrafficClass::GradReduce);
+                        data
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        (outs, stats.bytes(TrafficClass::GradReduce))
+    }
+
+    #[test]
+    fn matches_naive_sum_for_odd_sizes_and_world_sizes() {
+        let mut rng = Rng::new(7);
+        for &world in &[1usize, 2, 3, 5] {
+            for &len in &[1usize, 7, 33, 257, 1025] {
+                for &bucket in &[3usize, 64, 100_000] {
+                    let inputs: Vec<Vec<f32>> = (0..world)
+                        .map(|_| rng.normal_vec(len, 1.0))
+                        .collect();
+                    let expect = naive_sum(&inputs);
+                    let (outs, _) = run_all_reduce(inputs, bucket);
+                    for (r, out) in outs.iter().enumerate() {
+                        assert_eq!(out.len(), len);
+                        for (i, (a, b)) in
+                            out.iter().zip(&expect).enumerate()
+                        {
+                            assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                                    "world {world} len {len} bucket \
+                                     {bucket} rank {r} elem {i}: {a} vs {b}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_ranks_agree_bitwise() {
+        let mut rng = Rng::new(11);
+        let inputs: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.normal_vec(101, 1.0)).collect();
+        let (outs, _) = run_all_reduce(inputs, 17);
+        for out in &outs[1..] {
+            assert_eq!(out, &outs[0]);
+        }
+    }
+
+    #[test]
+    fn traffic_matches_closed_form_regardless_of_bucket() {
+        // Cluster total = 2·(N−1)·payload bytes, any bucket size.
+        for &world in &[2usize, 3, 5] {
+            for &bucket in &[5usize, 128, 1 << 20] {
+                let len = 999;
+                let inputs =
+                    vec![vec![1.0f32; len]; world];
+                let (_, bytes) = run_all_reduce(inputs, bucket);
+                assert_eq!(bytes,
+                           (2 * (world - 1) * len * 4) as u64,
+                           "world {world} bucket {bucket}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_fills_every_range_including_empty() {
+        let total = 23;
+        // Uneven ranges, one empty: [0,9) [9,9) [9,16) [16,23).
+        let ranges = vec![(0, 9), (9, 9), (9, 16), (16, 23)];
+        let (nodes, stats) = ring_world(4, LinkModel::default());
+        let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .enumerate()
+                .map(|(w, node)| {
+                    let ranges = &ranges;
+                    s.spawn(move || {
+                        // Rank knows only its own range's true values.
+                        let (lo, hi) = ranges[w];
+                        let mut buf = vec![f32::NAN; total];
+                        for i in lo..hi {
+                            buf[i] = i as f32;
+                        }
+                        ring_all_gather(&node, ranges, &mut buf,
+                                        TrafficClass::ParamGather);
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for out in &outs {
+            for (i, &x) in out.iter().enumerate() {
+                assert_eq!(x, i as f32);
+            }
+        }
+        // (N−1)·payload bytes cluster-total.
+        assert_eq!(stats.bytes(TrafficClass::ParamGather),
+                   (3 * total * 4) as u64);
+    }
+}

@@ -1,0 +1,443 @@
+//! ZeRO-1 sharding: the flattened parameter space, its contiguous
+//! per-worker partition, and construction of per-shard optimizers.
+//!
+//! Each worker owns one contiguous range of the flat space, holds
+//! optimizer state ONLY for that range, steps only its range, and
+//! all-gathers updated parameters afterwards. Correctness requires the
+//! sharded update to equal the replicated one, which holds when
+//!
+//! - the update is elementwise (AdamW, SGD, Lion, AdaGrad), with any
+//!   shard boundary, or
+//! - the update is blockwise on gradients every worker already has
+//!   post-all-reduce (Adam-mini), with shard boundaries aligned to
+//!   Hessian-block boundaries — [`block_cuts`] + [`Partition::aligned`].
+//!
+//! Optimizers whose update couples a whole tensor (LAMB's trust ratio,
+//! Adafactor's row/column factors) are not shardable this way; the
+//! engine falls back to replicated mode for them (see `worker.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::optim::{AdamMini, AdamW, Hyper, Lion, Optimizer, ReduceOp,
+                   Sgd};
+use crate::optim::extra::AdaGrad;
+use crate::partition::BlockView;
+use crate::tensor::Tensor;
+
+/// A `Send` host optimizer (worker threads own their shard optimizer).
+pub type SendOptimizer = Box<dyn Optimizer + Send>;
+
+/// One tensor's placement in the flattened parameter space.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// The flattened parameter space: tensor order is parameter order.
+#[derive(Debug, Clone)]
+pub struct FlatLayout {
+    pub spans: Vec<Span>,
+    pub total: usize,
+}
+
+impl FlatLayout {
+    pub fn of(params: &[Tensor]) -> FlatLayout {
+        let mut spans = Vec::with_capacity(params.len());
+        let mut offset = 0;
+        for p in params {
+            let len = p.numel();
+            spans.push(Span {
+                name: p.name.clone(),
+                shape: p.shape.clone(),
+                offset,
+                len,
+            });
+            offset += len;
+        }
+        FlatLayout { spans, total: offset }
+    }
+
+    pub fn flatten(&self, params: &[Tensor]) -> Vec<f32> {
+        assert_eq!(params.len(), self.spans.len());
+        let mut flat = Vec::with_capacity(self.total);
+        for (p, s) in params.iter().zip(&self.spans) {
+            debug_assert_eq!(p.numel(), s.len, "{}: layout drift", s.name);
+            flat.extend_from_slice(&p.data);
+        }
+        flat
+    }
+
+    /// Copy a flat vector back into the tensor list.
+    pub fn unflatten(&self, flat: &[f32], params: &mut [Tensor]) {
+        assert_eq!(flat.len(), self.total);
+        assert_eq!(params.len(), self.spans.len());
+        for (p, s) in params.iter_mut().zip(&self.spans) {
+            p.data.copy_from_slice(&flat[s.offset..s.offset + s.len]);
+        }
+    }
+
+    /// flat += tensors (gradient accumulation into a worker's buffer).
+    pub fn accumulate(&self, flat: &mut [f32], grads: &[Tensor]) {
+        assert_eq!(flat.len(), self.total);
+        assert_eq!(grads.len(), self.spans.len());
+        for (g, s) in grads.iter().zip(&self.spans) {
+            for (x, y) in
+                flat[s.offset..s.offset + s.len].iter_mut().zip(&g.data)
+            {
+                *x += y;
+            }
+        }
+    }
+}
+
+/// Contiguous per-worker ranges covering `[0, total)`.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl Partition {
+    /// Exact even split (elementwise-safe optimizers).
+    pub fn even(total: usize, workers: usize) -> Partition {
+        assert!(workers >= 1);
+        let ranges = (0..workers)
+            .map(|w| (w * total / workers, (w + 1) * total / workers))
+            .collect();
+        Partition { ranges }
+    }
+
+    /// Balanced split whose boundaries are drawn from `cuts` (sorted,
+    /// starting at 0 and ending at `total`). Workers may get an empty
+    /// range when there are fewer atoms than workers.
+    pub fn aligned(cuts: &[usize], workers: usize) -> Partition {
+        assert!(workers >= 1);
+        assert!(!cuts.is_empty() && cuts[0] == 0);
+        let total = *cuts.last().unwrap();
+        let mut bounds = Vec::with_capacity(workers + 1);
+        bounds.push(0);
+        for w in 1..workers {
+            let target = w * total / workers;
+            // Nearest cut to the ideal boundary, kept monotone.
+            let idx = cuts.partition_point(|&c| c < target);
+            let cand_hi = cuts.get(idx).copied().unwrap_or(total);
+            let cand_lo = if idx > 0 { cuts[idx - 1] } else { 0 };
+            let pick = if target - cand_lo <= cand_hi - target {
+                cand_lo
+            } else {
+                cand_hi
+            };
+            bounds.push(pick.max(*bounds.last().unwrap()));
+        }
+        bounds.push(total);
+        let ranges =
+            bounds.windows(2).map(|w| (w[0], w[1])).collect();
+        Partition { ranges }
+    }
+
+    pub fn total(&self) -> usize {
+        self.ranges.last().map(|r| r.1).unwrap_or(0)
+    }
+}
+
+/// Flat-space cut points at every Hessian-block boundary of a spec
+/// (includes 0 and total — the valid ZeRO-1 boundaries for Adam-mini).
+pub fn block_cuts(spec: &[BlockView]) -> Vec<usize> {
+    let mut cuts = vec![0];
+    let mut offset = 0;
+    for bv in spec {
+        for b in 1..=bv.num_blocks {
+            cuts.push(offset + b * bv.block_size);
+        }
+        offset += bv.num_blocks * bv.block_size;
+    }
+    cuts
+}
+
+/// One contiguous piece of a worker's shard, within a single tensor.
+#[derive(Debug, Clone)]
+pub struct ShardPiece {
+    /// Index into `FlatLayout::spans`.
+    pub span: usize,
+    /// Element range within that tensor.
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl ShardPiece {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
+/// Intersect a worker's flat range with the tensor spans.
+pub fn pieces_for(layout: &FlatLayout, range: (usize, usize))
+    -> Vec<ShardPiece> {
+    let (a, b) = range;
+    let mut pieces = Vec::new();
+    for (i, s) in layout.spans.iter().enumerate() {
+        let lo = a.max(s.offset);
+        let hi = b.min(s.offset + s.len);
+        if lo < hi {
+            pieces.push(ShardPiece {
+                span: i,
+                lo: lo - s.offset,
+                hi: hi - s.offset,
+            });
+        }
+    }
+    pieces
+}
+
+/// Materialize a worker's shard of `flat` as 1-D named tensors.
+pub fn slice_shard(layout: &FlatLayout, pieces: &[ShardPiece],
+                   flat: &[f32]) -> Vec<Tensor> {
+    pieces
+        .iter()
+        .map(|p| {
+            let s = &layout.spans[p.span];
+            Tensor::new(
+                format!("{}[{}..{}]", s.name, p.lo, p.hi),
+                &[p.len()],
+                flat[s.offset + p.lo..s.offset + p.hi].to_vec(),
+            )
+        })
+        .collect()
+}
+
+/// Write updated shard tensors back into the worker's flat replica.
+pub fn write_shard(layout: &FlatLayout, pieces: &[ShardPiece],
+                   shard: &[Tensor], flat: &mut [f32]) {
+    assert_eq!(pieces.len(), shard.len());
+    for (p, t) in pieces.iter().zip(shard) {
+        let s = &layout.spans[p.span];
+        flat[s.offset + p.lo..s.offset + p.hi]
+            .copy_from_slice(&t.data);
+    }
+}
+
+/// Per-piece Adam-mini block views. Piece boundaries must be aligned to
+/// the parent tensor's block grid (guaranteed by [`Partition::aligned`]
+/// over [`block_cuts`]).
+pub fn shard_spec(layout: &FlatLayout, pieces: &[ShardPiece],
+                  full_spec: &[BlockView]) -> Result<Vec<BlockView>> {
+    assert_eq!(layout.spans.len(), full_spec.len());
+    pieces
+        .iter()
+        .map(|p| {
+            let bv = &full_spec[p.span];
+            let bs = bv.block_size;
+            if p.lo % bs != 0 || p.hi % bs != 0 {
+                bail!("{}: shard [{}, {}) not aligned to block size {bs}",
+                      bv.name, p.lo, p.hi);
+            }
+            Ok(BlockView {
+                name: format!("{}[{}..{}]", bv.name, p.lo, p.hi),
+                shape: vec![p.len()],
+                num_blocks: p.len() / bs,
+                block_size: bs,
+                category: bv.category,
+            })
+        })
+        .collect()
+}
+
+/// True if `optimizer` admits an exact ZeRO-1 sharded update.
+pub fn shardable(optimizer: &str) -> bool {
+    optimizer.starts_with("adam_mini")
+        || matches!(optimizer, "adamw" | "sgd" | "lion" | "adagrad")
+}
+
+/// Build the optimizer instance for one worker's shard.
+///
+/// `spec` is required for (and only for) `adam_mini*` — the per-piece
+/// block views from [`shard_spec`].
+pub fn build_shard_optimizer(optimizer: &str, hp: Hyper,
+                             shard_params: &[Tensor],
+                             spec: Option<Vec<BlockView>>,
+                             reduce: ReduceOp) -> Result<SendOptimizer> {
+    Ok(if optimizer.starts_with("adam_mini") {
+        let spec = spec.ok_or_else(|| {
+            anyhow::anyhow!("adam_mini shard needs a block spec")
+        })?;
+        Box::new(AdamMini::new(hp, spec, reduce))
+    } else {
+        match optimizer {
+            "adamw" => Box::new(AdamW::new(hp, shard_params)),
+            "sgd" => Box::new(Sgd::new(0.9, shard_params)),
+            "lion" => Box::new(Lion::new(hp, shard_params)),
+            "adagrad" => {
+                Box::new(AdaGrad::new(shard_params, 0.9, hp.eps))
+            }
+            other => bail!(
+                "{other:?} is not ZeRO-1 shardable (non-elementwise \
+                 update); run with zero1=false"),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn toy_params(rng: &mut Rng) -> Vec<Tensor> {
+        vec![
+            Tensor::randn("embed", &[8, 4], 0.5, rng),
+            Tensor::randn("wq", &[2, 4, 4], 0.5, rng),
+            Tensor::randn("final_norm", &[4], 0.5, rng),
+        ]
+    }
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        let mut rng = Rng::new(0);
+        let params = toy_params(&mut rng);
+        let layout = FlatLayout::of(&params);
+        assert_eq!(layout.total, 32 + 32 + 4);
+        let flat = layout.flatten(&params);
+        let mut back = params
+            .iter()
+            .map(|p| Tensor::zeros(&*p.name, &p.shape))
+            .collect::<Vec<_>>();
+        layout.unflatten(&flat, &mut back);
+        assert_eq!(back, params);
+    }
+
+    #[test]
+    fn accumulate_adds_in_place() {
+        let mut rng = Rng::new(1);
+        let params = toy_params(&mut rng);
+        let layout = FlatLayout::of(&params);
+        let mut flat = vec![0.0; layout.total];
+        layout.accumulate(&mut flat, &params);
+        layout.accumulate(&mut flat, &params);
+        let twice = layout.flatten(&params)
+            .iter().map(|x| 2.0 * x).collect::<Vec<_>>();
+        assert_eq!(flat, twice);
+    }
+
+    #[test]
+    fn even_partition_covers_and_balances() {
+        for workers in 1..6 {
+            let p = Partition::even(103, workers);
+            assert_eq!(p.ranges.len(), workers);
+            assert_eq!(p.ranges[0].0, 0);
+            assert_eq!(p.total(), 103);
+            for w in p.ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            for &(a, b) in &p.ranges {
+                let len = b - a;
+                assert!(len >= 103 / workers && len <= 103 / workers + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_partition_only_cuts_at_atoms() {
+        let cuts = vec![0, 10, 20, 30, 64, 100];
+        for workers in 1..8 {
+            let p = Partition::aligned(&cuts, workers);
+            assert_eq!(p.ranges.len(), workers);
+            assert_eq!(p.ranges[0].0, 0);
+            assert_eq!(p.total(), 100);
+            for w in p.ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            for &(a, b) in &p.ranges {
+                assert!(cuts.contains(&a) && cuts.contains(&b),
+                        "workers {workers}: boundary ({a}, {b})");
+            }
+        }
+    }
+
+    #[test]
+    fn more_workers_than_atoms_yields_empty_shards() {
+        let p = Partition::aligned(&[0, 50, 100], 5);
+        assert_eq!(p.ranges.len(), 5);
+        assert_eq!(p.total(), 100);
+        let nonempty =
+            p.ranges.iter().filter(|(a, b)| b > a).count();
+        assert!(nonempty <= 2);
+    }
+
+    #[test]
+    fn block_cuts_enumerate_every_block_boundary() {
+        let spec = vec![
+            BlockView { name: "a".into(), shape: vec![4, 3],
+                        num_blocks: 4, block_size: 3,
+                        category: crate::partition::Category::TokenRow },
+            BlockView { name: "b".into(), shape: vec![6],
+                        num_blocks: 1, block_size: 6,
+                        category: crate::partition::Category::Whole },
+        ];
+        assert_eq!(block_cuts(&spec), vec![0, 3, 6, 9, 12, 18]);
+    }
+
+    #[test]
+    fn pieces_slice_and_write_back() {
+        let mut rng = Rng::new(2);
+        let params = toy_params(&mut rng);
+        let layout = FlatLayout::of(&params);
+        let mut flat = layout.flatten(&params);
+        // A range straddling embed's tail and wq's head.
+        let pieces = pieces_for(&layout, (24, 40));
+        assert_eq!(pieces.len(), 2);
+        assert_eq!((pieces[0].lo, pieces[0].hi), (24, 32));
+        assert_eq!((pieces[1].lo, pieces[1].hi), (0, 8));
+        let mut shard = slice_shard(&layout, &pieces, &flat);
+        assert_eq!(shard[0].data, flat[24..32].to_vec());
+        for t in shard.iter_mut() {
+            for x in t.data.iter_mut() {
+                *x += 1.0;
+            }
+        }
+        let orig = flat.clone();
+        write_shard(&layout, &pieces, &shard, &mut flat);
+        for i in 0..layout.total {
+            let expect =
+                if (24..40).contains(&i) { orig[i] + 1.0 } else { orig[i] };
+            assert_eq!(flat[i], expect);
+        }
+    }
+
+    #[test]
+    fn shard_spec_requires_block_alignment() {
+        let mut rng = Rng::new(3);
+        let params = toy_params(&mut rng);
+        let layout = FlatLayout::of(&params);
+        let full_spec: Vec<BlockView> = params
+            .iter()
+            .map(|p| {
+                let n = p.numel();
+                BlockView { name: p.name.clone(), shape: p.shape.clone(),
+                            num_blocks: n / 4, block_size: 4,
+                            category: crate::partition::Category::Whole }
+            })
+            .collect();
+        let ok = pieces_for(&layout, (8, 32));
+        let spec = shard_spec(&layout, &ok, &full_spec).unwrap();
+        assert_eq!(spec.len(), 1);
+        assert_eq!(spec[0].num_blocks, 6);
+        let bad = pieces_for(&layout, (6, 32));
+        assert!(shard_spec(&layout, &bad, &full_spec).is_err());
+    }
+
+    #[test]
+    fn shardable_whitelist() {
+        for name in ["adamw", "adam_mini", "adam_mini_default", "sgd",
+                     "lion", "adagrad"] {
+            assert!(shardable(name), "{name}");
+        }
+        for name in ["lamb", "adafactor", "came", "galore"] {
+            assert!(!shardable(name), "{name}");
+        }
+    }
+}

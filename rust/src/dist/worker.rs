@@ -1,0 +1,572 @@
+//! The data-parallel engine: N in-process workers (threads) that
+//! all-reduce gradients and step the optimizer in ZeRO-1 sharded or
+//! replicated mode.
+//!
+//! Step contract (driver side):
+//!
+//! 1. The driver assigns each global micro-batch `i` of a step to
+//!    worker `i % N` and accumulates per-worker UNNORMALIZED gradient
+//!    sums into flat buffers (the batch stream is identical for every
+//!    world size — the core N-vs-1 equivalence invariant).
+//! 2. [`DistTrainer::step`] spawns one thread per worker: bucketed ring
+//!    all-reduce of the gradient, scale by `1/n_micro`, then
+//!    - **ZeRO-1**: step this worker's shard optimizer over its
+//!      contiguous shard only, and ring-all-gather the updated
+//!      parameters (every worker ends with the full updated replica);
+//!    - **replicated**: return the reduced gradient — the identical
+//!      per-replica update is executed once by the caller.
+//!
+//! With `n_micro <= 1` micro-batch the N-worker run is bit-identical
+//! to the single-worker run (idle workers contribute exact zeros); with
+//! several micro-batches it matches to float tolerance (ring summation
+//! order differs from sequential accumulation).
+
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+use super::allreduce::{ring_all_gather, ring_all_reduce};
+use super::comm::{ring_world, CommStats, LinkModel, RingNode,
+                  TrafficClass};
+use super::shard::{block_cuts, build_shard_optimizer, pieces_for,
+                   shard_spec, shardable, slice_shard, write_shard,
+                   FlatLayout, Partition, SendOptimizer, ShardPiece};
+use crate::optim::{Hyper, Optimizer, ReduceOp};
+use crate::partition::BlockView;
+use crate::tensor::Tensor;
+
+/// Engine configuration (mirrors the `workers`/`bucket_kb`/`zero1`
+/// config keys plus what optimizer construction needs).
+pub struct DistOptions {
+    pub workers: usize,
+    pub bucket_kb: usize,
+    /// Shard optimizer state (ZeRO-1). Requires a shardable optimizer;
+    /// callers should fall back to replicated mode otherwise.
+    pub zero1: bool,
+    pub optimizer: String,
+    pub reduce: ReduceOp,
+    pub hp: Hyper,
+    /// Full-space Adam-mini block views (required for `adam_mini*`).
+    pub spec: Option<Vec<BlockView>>,
+    pub link: LinkModel,
+}
+
+impl Default for DistOptions {
+    fn default() -> Self {
+        DistOptions {
+            workers: 1,
+            bucket_kb: 64,
+            zero1: true,
+            optimizer: "adamw".into(),
+            reduce: ReduceOp::Mean,
+            hp: Hyper::default(),
+            spec: None,
+            link: LinkModel::default(),
+        }
+    }
+}
+
+struct WorkerSlot {
+    node: RingNode,
+    /// ZeRO-1 only: this worker's shard optimizer.
+    opt: Option<SendOptimizer>,
+    pieces: Vec<ShardPiece>,
+    /// Full parameter replica (ZeRO-1 only; kept in flat form).
+    flat_params: Vec<f32>,
+}
+
+/// The multi-worker data-parallel trainer.
+pub struct DistTrainer {
+    layout: FlatLayout,
+    partition: Partition,
+    slots: Vec<WorkerSlot>,
+    stats: Arc<CommStats>,
+    bucket_elems: usize,
+    zero1: bool,
+    steps: u64,
+}
+
+impl DistTrainer {
+    pub fn new(params: &[Tensor], opts: DistOptions)
+        -> Result<DistTrainer> {
+        let n = opts.workers;
+        if n == 0 {
+            bail!("workers must be >= 1");
+        }
+        if opts.zero1 && !shardable(&opts.optimizer) {
+            bail!("{}: not ZeRO-1 shardable; use replicated mode",
+                  opts.optimizer);
+        }
+        let layout = FlatLayout::of(params);
+        let is_mini = opts.optimizer.starts_with("adam_mini");
+        let partition = if !opts.zero1 {
+            // Replicated mode still defines ranges (unused for comm).
+            Partition::even(layout.total, n)
+        } else if is_mini {
+            let spec = opts.spec.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("adam_mini dist run needs a block spec")
+            })?;
+            Partition::aligned(&block_cuts(spec), n)
+        } else {
+            Partition::even(layout.total, n)
+        };
+        let (nodes, stats) = ring_world(n, opts.link);
+        let flat = layout.flatten(params);
+        let mut slots = Vec::with_capacity(n);
+        for (w, node) in nodes.into_iter().enumerate() {
+            let pieces = pieces_for(&layout, partition.ranges[w]);
+            let opt = if opts.zero1 {
+                let shard = slice_shard(&layout, &pieces, &flat);
+                let spec = if is_mini {
+                    Some(shard_spec(&layout, &pieces,
+                                    opts.spec.as_ref().unwrap())?)
+                } else {
+                    None
+                };
+                Some(build_shard_optimizer(&opts.optimizer, opts.hp,
+                                           &shard, spec, opts.reduce)?)
+            } else {
+                None
+            };
+            slots.push(WorkerSlot {
+                node,
+                opt,
+                pieces,
+                flat_params: if opts.zero1 { flat.clone() }
+                             else { Vec::new() },
+            });
+        }
+        Ok(DistTrainer {
+            layout,
+            partition,
+            slots,
+            stats,
+            bucket_elems: (opts.bucket_kb.max(1) * 1024) / 4,
+            zero1: opts.zero1,
+            steps: 0,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn layout(&self) -> &FlatLayout {
+        &self.layout
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    pub fn is_zero1(&self) -> bool {
+        self.zero1
+    }
+
+    pub fn stats(&self) -> &Arc<CommStats> {
+        &self.stats
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Fresh per-worker gradient buffers for one step.
+    pub fn grad_buffers(&self) -> Vec<Vec<f32>> {
+        vec![vec![0.0f32; self.layout.total]; self.slots.len()]
+    }
+
+    /// Optimizer-state bytes held across all shards (ZeRO-1) — the
+    /// cluster total, i.e. comparable to a replicated optimizer's
+    /// `state_bytes`.
+    pub fn state_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .filter_map(|s| s.opt.as_ref().map(|o| o.state_bytes()))
+            .sum()
+    }
+
+    /// One data-parallel step. `local_grads[w]` is worker `w`'s
+    /// unnormalized gradient sum over its assigned micro-batches (zeros
+    /// if it got none); `n_micro` is the GLOBAL micro-batch count the
+    /// average divides by.
+    ///
+    /// ZeRO-1: `params` is updated in place and `None` is returned.
+    /// Replicated: `params` is untouched and the reduced (averaged)
+    /// gradient is returned for the caller's replicated update.
+    pub fn step(&mut self, params: &mut [Tensor],
+                mut local_grads: Vec<Vec<f32>>, n_micro: usize, lr: f32)
+        -> Result<Option<Vec<Tensor>>> {
+        let n = self.slots.len();
+        if local_grads.len() != n {
+            bail!("got {} grad buffers for {} workers",
+                  local_grads.len(), n);
+        }
+        for (w, g) in local_grads.iter().enumerate() {
+            if g.len() != self.layout.total {
+                bail!("worker {w}: grad buffer {} != flat size {}",
+                      g.len(), self.layout.total);
+            }
+        }
+        self.steps += 1;
+        let inv = 1.0 / n_micro.max(1) as f32;
+        let bucket = self.bucket_elems;
+        let zero1 = self.zero1;
+        let layout = &self.layout;
+        let ranges = &self.partition.ranges;
+        let slots = &mut self.slots;
+        std::thread::scope(|s| -> Result<()> {
+            let handles: Vec<_> = slots
+                .iter_mut()
+                .zip(local_grads.iter_mut())
+                .map(|(slot, grad)| {
+                    s.spawn(move || {
+                        ring_all_reduce(&slot.node, grad, bucket,
+                                        TrafficClass::GradReduce);
+                        for x in grad.iter_mut() {
+                            *x *= inv;
+                        }
+                        if !zero1 {
+                            return;
+                        }
+                        if let Some(opt) = &mut slot.opt {
+                            let mut sp = slice_shard(
+                                layout, &slot.pieces, &slot.flat_params);
+                            let sg = slice_shard(
+                                layout, &slot.pieces, grad);
+                            opt.step(&mut sp, &sg, lr);
+                            write_shard(layout, &slot.pieces, &sp,
+                                        &mut slot.flat_params);
+                        }
+                        ring_all_gather(&slot.node, ranges,
+                                        &mut slot.flat_params,
+                                        TrafficClass::ParamGather);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().map_err(|_| {
+                    anyhow::anyhow!("dist worker thread panicked")
+                })?;
+            }
+            Ok(())
+        })?;
+        if self.zero1 {
+            self.layout.unflatten(&self.slots[0].flat_params, params);
+            Ok(None)
+        } else {
+            // All ranks hold the identical reduced gradient; return
+            // rank 0's as tensors for the replicated update.
+            let mut grads: Vec<Tensor> = self
+                .layout
+                .spans
+                .iter()
+                .map(|sp| Tensor::zeros(&*sp.name, &sp.shape))
+                .collect();
+            self.layout.unflatten(&local_grads[0], &mut grads);
+            Ok(Some(grads))
+        }
+    }
+
+    /// Collect the full (sharded) optimizer state at rank 0 through the
+    /// transport — the checkpoint path, accounted as `StateSync`
+    /// traffic. Returns the assembled state tensor list (rank-major).
+    /// Replicated mode moves no bytes and returns an empty list (the
+    /// caller owns the replicated optimizer and exports it directly).
+    pub fn sync_state(&mut self) -> Result<Vec<Tensor>> {
+        if !self.zero1 {
+            return Ok(Vec::new());
+        }
+        // Per-rank export metadata (names/shapes) — driver side; the
+        // data itself travels through the gather link below.
+        let metas: Vec<Vec<Tensor>> = self
+            .slots
+            .iter()
+            .map(|s| {
+                s.opt.as_ref().map(|o| o.state_export())
+                    .unwrap_or_default()
+            })
+            .collect();
+        let slots = &mut self.slots;
+        let payloads: Vec<Option<Vec<Vec<f32>>>> =
+            std::thread::scope(|s| {
+                // iter_mut: a shared &WorkerSlot is !Send (the node
+                // holds an mpsc Receiver); an exclusive borrow is Send.
+                let handles: Vec<_> = slots
+                    .iter_mut()
+                    .zip(&metas)
+                    .map(|(slot, meta)| {
+                        s.spawn(move || {
+                            let mut flat = Vec::new();
+                            for t in meta {
+                                flat.extend_from_slice(&t.data);
+                            }
+                            slot.node.gather_to_root(
+                                TrafficClass::StateSync, flat)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("state-sync thread"))
+                    .collect()
+            });
+        let gathered = payloads
+            .into_iter()
+            .flatten()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("rank 0 gathered nothing"))?;
+        let mut out = Vec::new();
+        for (meta, payload) in metas.iter().zip(gathered) {
+            let mut off = 0;
+            for t in meta {
+                let n = t.numel();
+                out.push(Tensor::new(&*t.name, &t.shape,
+                                     payload[off..off + n].to_vec()));
+                off += n;
+            }
+            debug_assert_eq!(off, payload.len());
+        }
+        Ok(out)
+    }
+
+    /// Inverse of [`DistTrainer::sync_state`]: route a gathered state
+    /// list back into the shard optimizers (same world size and
+    /// partition as the exporting run).
+    pub fn import_state(&mut self, state: &[Tensor]) -> Result<()> {
+        if !self.zero1 {
+            if state.is_empty() {
+                return Ok(());
+            }
+            bail!("replicated mode holds no sharded state to import");
+        }
+        let mut cursor = 0;
+        for slot in self.slots.iter_mut() {
+            let Some(opt) = &mut slot.opt else { continue };
+            let count = opt.state_len();
+            if cursor + count > state.len() {
+                bail!("state list too short: need {} more tensors",
+                      cursor + count - state.len());
+            }
+            opt.state_import(&state[cursor..cursor + count])?;
+            cursor += count;
+        }
+        if cursor != state.len() {
+            bail!("state list has {} extra tensors", state.len() - cursor);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{by_name, ModelMeta, Optimizer};
+    use crate::partition::Strategy;
+    use crate::util::prng::Rng;
+
+    fn toy() -> (Vec<Tensor>, ModelMeta) {
+        let mut rng = Rng::new(20);
+        let params = vec![
+            Tensor::randn("embed", &[16, 8], 0.5, &mut rng),
+            Tensor::randn("wq", &[2, 8, 8], 0.5, &mut rng),
+            Tensor::randn("attn_norm", &[2, 8], 0.5, &mut rng),
+        ];
+        let meta = ModelMeta {
+            n_heads: 2,
+            stacked: vec!["wq".into(), "attn_norm".into()],
+        };
+        (params, meta)
+    }
+
+    fn rand_grads(params: &[Tensor], rng: &mut Rng) -> Vec<Tensor> {
+        params
+            .iter()
+            .map(|p| Tensor::randn(&*p.name, &p.shape, 0.3, rng))
+            .collect()
+    }
+
+    fn mini_spec(params: &[Tensor], meta: &ModelMeta)
+        -> Vec<BlockView> {
+        meta.spec_for(params, Strategy::Hessian).unwrap()
+    }
+
+    /// Drive `steps` dist steps with `micro` micro-grads per step,
+    /// mirroring the coordinator's i % N assignment; return params.
+    fn run_dist(optimizer: &str, workers: usize, zero1: bool,
+                steps: usize, micro: usize) -> Vec<Tensor> {
+        let (mut params, meta) = toy();
+        let spec = if optimizer.starts_with("adam_mini") {
+            Some(mini_spec(&params, &meta))
+        } else {
+            None
+        };
+        let mut dist = DistTrainer::new(&params, DistOptions {
+            workers,
+            bucket_kb: 1,
+            zero1,
+            optimizer: optimizer.into(),
+            spec,
+            ..Default::default()
+        }).unwrap();
+        let mut replicated = if zero1 {
+            None
+        } else {
+            Some(by_name(optimizer, Hyper::default(), &params, &meta)
+                .unwrap())
+        };
+        let mut grng = Rng::new(77);
+        for _ in 0..steps {
+            let mut local = dist.grad_buffers();
+            for i in 0..micro {
+                let g = rand_grads(&params, &mut grng);
+                dist.layout().accumulate(&mut local[i % workers], &g);
+            }
+            let out =
+                dist.step(&mut params, local, micro, 1e-2).unwrap();
+            if let (Some(opt), Some(g)) = (&mut replicated, out) {
+                opt.step(&mut params, &g, 1e-2);
+            }
+        }
+        params
+    }
+
+    /// Reference: single-replica host optimizer over the same
+    /// micro-gradient stream (sum then average, coordinator-style).
+    fn run_host(optimizer: &str, steps: usize, micro: usize)
+        -> Vec<Tensor> {
+        let (mut params, meta) = toy();
+        let mut opt =
+            by_name(optimizer, Hyper::default(), &params, &meta)
+                .unwrap();
+        let mut grng = Rng::new(77);
+        for _ in 0..steps {
+            let mut acc: Option<Vec<Tensor>> = None;
+            for _ in 0..micro {
+                let g = rand_grads(&params, &mut grng);
+                acc = Some(match acc {
+                    None => g,
+                    Some(mut a) => {
+                        for (x, y) in a.iter_mut().zip(&g) {
+                            x.axpy(1.0, y);
+                        }
+                        a
+                    }
+                });
+            }
+            let mut g = acc.unwrap();
+            let inv = 1.0 / micro as f32;
+            for t in g.iter_mut() {
+                for x in t.data.iter_mut() {
+                    *x *= inv;
+                }
+            }
+            opt.step(&mut params, &g, 1e-2);
+        }
+        params
+    }
+
+    #[test]
+    fn zero1_matches_host_for_adamw_and_adam_mini() {
+        for optimizer in ["adamw", "adam_mini"] {
+            let reference = run_host(optimizer, 8, 6);
+            for workers in [1usize, 2, 3, 5] {
+                let got = run_dist(optimizer, workers, true, 8, 6);
+                for (a, b) in reference.iter().zip(&got) {
+                    let d = a.max_abs_diff(b);
+                    assert!(d < 1e-4,
+                            "{optimizer} x{workers} {}: drift {d}",
+                            a.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_micro_batch_is_bit_exact_across_world_sizes() {
+        // With one micro-batch, idle workers contribute exact zeros:
+        // the N-worker ZeRO-1 run equals the host run bitwise.
+        for optimizer in ["adamw", "adam_mini"] {
+            let reference = run_host(optimizer, 6, 1);
+            let got = run_dist(optimizer, 4, true, 6, 1);
+            assert_eq!(reference, got, "{optimizer}");
+        }
+    }
+
+    #[test]
+    fn replicated_mode_matches_host_for_non_shardable() {
+        // LAMB is not elementwise → replicated fallback path.
+        let reference = run_host("lamb", 6, 4);
+        let got = run_dist("lamb", 3, false, 6, 4);
+        for (a, b) in reference.iter().zip(&got) {
+            let d = a.max_abs_diff(b);
+            assert!(d < 1e-4, "lamb {}: drift {d}", a.name);
+        }
+    }
+
+    #[test]
+    fn zero1_rejects_non_shardable_optimizers() {
+        let (params, _) = toy();
+        let err = DistTrainer::new(&params, DistOptions {
+            workers: 2,
+            optimizer: "adafactor".into(),
+            zero1: true,
+            ..Default::default()
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn sharded_state_roundtrips_through_transport() {
+        let (mut params, meta) = toy();
+        let spec = Some(mini_spec(&params, &meta));
+        let make = |params: &[Tensor]| {
+            DistTrainer::new(params, DistOptions {
+                workers: 3,
+                optimizer: "adam_mini".into(),
+                spec: spec.clone(),
+                ..Default::default()
+            }).unwrap()
+        };
+        let mut a = make(&params);
+        let mut grng = Rng::new(3);
+        let mut step =
+            |d: &mut DistTrainer, p: &mut Vec<Tensor>, r: &mut Rng| {
+                let mut local = d.grad_buffers();
+                let g = rand_grads(p, r);
+                d.layout().accumulate(&mut local[0], &g);
+                d.step(p, local, 1, 1e-2).unwrap();
+            };
+        for _ in 0..3 {
+            step(&mut a, &mut params, &mut grng);
+        }
+        let state = a.sync_state().unwrap();
+        assert!(!state.is_empty());
+        assert!(a.stats().bytes(TrafficClass::StateSync) > 0);
+        // Import into a fresh engine; both continue identically.
+        let mut params_b = params.clone();
+        let mut b = make(&params_b);
+        b.import_state(&state).unwrap();
+        let mut grng_b = grng.clone();
+        step(&mut a, &mut params, &mut grng);
+        step(&mut b, &mut params_b, &mut grng_b);
+        assert_eq!(params, params_b);
+    }
+
+    #[test]
+    fn state_bytes_sum_to_the_replicated_total() {
+        let (params, meta) = toy();
+        let n: usize = params.iter().map(Tensor::numel).sum();
+        let spec = mini_spec(&params, &meta);
+        let blocks: usize =
+            spec.iter().map(|b| b.num_blocks).sum();
+        let dist = DistTrainer::new(&params, DistOptions {
+            workers: 3,
+            optimizer: "adam_mini".into(),
+            spec: Some(spec),
+            ..Default::default()
+        }).unwrap();
+        // m (n floats) + one v_b per block, regardless of sharding.
+        assert_eq!(dist.state_bytes(), 4 * (n + blocks));
+    }
+}
+

@@ -14,11 +14,19 @@
 //! artifact ([`runtime`]), build a dataset ([`data`]), pick an optimizer
 //! ([`optim`] + [`partition`]), and train ([`coordinator`]) — or
 //! regenerate any paper table/figure ([`experiments`]).
+//!
+//! Scaling layer: [`dist`] is an executable data-parallel engine —
+//! in-process worker threads, bucketed ring all-reduce, ZeRO-1 sharded
+//! optimizer state — driven by the coordinator when a run sets
+//! `workers > 1`. Its byte-accounted transport makes the paper's
+//! communication claims measurable; `repro report` cross-checks the
+//! measured traffic against the analytical [`cluster`] model.
 
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod eval;
 pub mod experiments;
 pub mod hessian;

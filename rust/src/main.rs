@@ -21,7 +21,9 @@ fn usage() -> ! {
     eprintln!(
         "usage:\n  repro train [--config FILE] [key=value ...]\n  \
          repro exp <name|all> [--quick]\n  repro list\n  repro report\n  \
-         repro selfcheck\n\nartifacts dir: $ADAM_MINI_ARTIFACTS \
+         repro selfcheck\n\ntrain keys include workers=N (data-parallel \
+         engine), bucket_kb=K,\nzero1=BOOL (ZeRO-1 optimizer-state \
+         sharding)\n\nartifacts dir: $ADAM_MINI_ARTIFACTS \
          (default ./artifacts)"
     );
     std::process::exit(2);
@@ -35,7 +37,8 @@ fn main() -> Result<()> {
         Some("list") => cmd_list(),
         Some("report") => {
             experiments::throughput::table1()?;
-            experiments::throughput::table2()
+            experiments::throughput::table2()?;
+            adam_mini::dist::traffic_report()
         }
         Some("selfcheck") => cmd_selfcheck(),
         _ => usage(),
@@ -69,6 +72,22 @@ fn cmd_train(args: &[String]) -> Result<()> {
         hist.final_train_loss(), hist.final_val_loss(),
         hist.opt_state_bytes as f64 / 1e3, path.display()
     );
+    if let Some(stats) = trainer.comm_stats() {
+        use adam_mini::dist::TrafficClass;
+        let per_step = |c: TrafficClass| {
+            stats.bytes(c) as f64 / cfg.steps.max(1) as f64 / 1e3
+        };
+        println!(
+            "dist comm ({} workers): grad_reduce {:.1} KB/step, \
+             param_gather {:.1} KB/step, state_sync {:.1} KB total, \
+             modeled link time {:.1} ms",
+            cfg.workers,
+            per_step(TrafficClass::GradReduce),
+            per_step(TrafficClass::ParamGather),
+            stats.bytes(TrafficClass::StateSync) as f64 / 1e3,
+            stats.sim_link_secs() * 1e3
+        );
+    }
     Ok(())
 }
 

@@ -6,7 +6,9 @@
 //! the Appendix D.2 ablation alternatives (max/min/ℓ1/ℓ2) selectable
 //! for the Fig 15 experiment.
 
-use super::{Hyper, Optimizer};
+use anyhow::{bail, Result};
+
+use super::{decode_step, step_tensor, Hyper, Optimizer};
 use crate::partition::BlockView;
 use crate::tensor::Tensor;
 
@@ -32,6 +34,13 @@ impl ReduceOp {
     }
 
     fn apply(&self, gsq: impl Iterator<Item = f32>, n: usize) -> f32 {
+        // A zero-element block has no statistic; folding Min from
+        // f32::MAX (or Max from an arbitrary floor) would fabricate a
+        // bogus v_b. Define the degenerate reduce as 0 — the same
+        // "fresh state" value an untouched block carries.
+        if n == 0 {
+            return 0.0;
+        }
         match self {
             ReduceOp::Mean => gsq.sum::<f32>() / n as f32,
             ReduceOp::Max => gsq.fold(0.0, f32::max),
@@ -120,6 +129,42 @@ impl Optimizer for AdamMini {
         (self.m.iter().map(Tensor::numel).sum::<usize>()
             + self.total_blocks())
             * 4
+    }
+
+    /// State layout: m tensors, then one `<name>__vb` vector per
+    /// tensor (the per-block second moments), then `__step`. The v_b
+    /// vectors are what makes Adam-mini's sharded state sync cheap:
+    /// one scalar per Hessian block instead of one per parameter.
+    fn state_export(&self) -> Vec<Tensor> {
+        let mut out = self.m.clone();
+        for (bv, vb) in self.spec.iter().zip(&self.vb) {
+            out.push(Tensor::new(format!("{}__vb", bv.name),
+                                 &[vb.len()], vb.clone()));
+        }
+        out.push(step_tensor(self.t));
+        out
+    }
+
+    fn state_len(&self) -> usize {
+        2 * self.m.len() + 1
+    }
+
+    fn state_import(&mut self, state: &[Tensor]) -> Result<()> {
+        let n = self.m.len();
+        if state.len() != 2 * n + 1 {
+            bail!("adam_mini: expected {} state tensors, got {}",
+                  2 * n + 1, state.len());
+        }
+        self.t = decode_step(state)?;
+        for (dst, src) in self.m.iter_mut().zip(&state[..n]) {
+            src.assert_shape(&dst.shape)?;
+            dst.data.copy_from_slice(&src.data);
+        }
+        for (dst, src) in self.vb.iter_mut().zip(&state[n..2 * n]) {
+            src.assert_shape(&[dst.len()])?;
+            dst.copy_from_slice(&src.data);
+        }
+        Ok(())
     }
 }
 
@@ -217,6 +262,59 @@ mod tests {
             assert!(end.is_finite() && end < start,
                     "{:?}: {start} -> {end}", op);
         }
+    }
+
+    #[test]
+    fn reduce_ops_safe_on_empty_and_degenerate_blocks() {
+        // A zero-element block must yield v_b = 0, not f32::MAX (Min)
+        // or another fabricated value.
+        for op in [ReduceOp::Mean, ReduceOp::Max, ReduceOp::Min,
+                   ReduceOp::L1Norm, ReduceOp::L2Norm] {
+            let stat = op.apply(std::iter::empty(), 0);
+            assert_eq!(stat, 0.0, "{op:?} on empty block");
+        }
+        // A single-element block is its own mean/max/min/l1.
+        for op in [ReduceOp::Mean, ReduceOp::Max, ReduceOp::Min,
+                   ReduceOp::L1Norm, ReduceOp::L2Norm] {
+            let stat = op.apply([4.0f32].iter().copied(), 1);
+            assert_eq!(stat, 4.0, "{op:?} on singleton block");
+        }
+        // An all-zero gradient block stays finite and non-negative.
+        for op in [ReduceOp::Mean, ReduceOp::Max, ReduceOp::Min,
+                   ReduceOp::L1Norm, ReduceOp::L2Norm] {
+            let stat = op.apply([0.0f32; 3].iter().copied(), 3);
+            assert_eq!(stat, 0.0, "{op:?} on zero block");
+        }
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_identically() {
+        let mut rng = Rng::new(5);
+        let p0 = vec![Tensor::randn("w", &[4, 4], 1.0, &mut rng)];
+        let gs: Vec<Tensor> =
+            (0..6).map(|_| Tensor::randn("w", &[4, 4], 1.0, &mut rng))
+                  .collect();
+        let spec = || vec![spec_one("w", &[4, 4], 4)];
+        let mut pa = p0.clone();
+        let mut a = AdamMini::new(Hyper::default(), spec(),
+                                  ReduceOp::Mean);
+        for g in &gs[..3] {
+            a.step(&mut pa, std::slice::from_ref(g), 1e-2);
+        }
+        let state = a.state_export();
+        // m + vb + __step.
+        assert_eq!(state.len(), 3);
+        assert_eq!(state[1].shape, vec![4]);
+        let mut pb = pa.clone();
+        let mut b = AdamMini::new(Hyper::default(), spec(),
+                                  ReduceOp::Mean);
+        b.state_import(&state).unwrap();
+        for g in &gs[3..] {
+            a.step(&mut pa, std::slice::from_ref(g), 1e-2);
+            b.step(&mut pb, std::slice::from_ref(g), 1e-2);
+        }
+        assert_eq!(pa, pb);
+        assert!(b.state_import(&state[..2]).is_err());
     }
 
     #[test]

@@ -64,6 +64,55 @@ pub trait Optimizer {
 
     /// Bytes of optimizer state currently held (memory accounting).
     fn state_bytes(&self) -> usize;
+
+    /// Export optimizer state as named tensors (checkpointing and
+    /// ZeRO-1 state-sync). The step counter travels as a `__step`
+    /// scalar tensor. Default: empty — optimizers without an
+    /// implementation checkpoint as "fresh state" (the pre-existing
+    /// behavior, now explicit).
+    fn state_export(&self) -> Vec<Tensor> {
+        Vec::new()
+    }
+
+    /// Restore state produced by [`Optimizer::state_export`] on an
+    /// identically-constructed instance. Importing a non-empty list
+    /// into an optimizer without an implementation is an error (never
+    /// a silent drop).
+    fn state_import(&mut self, state: &[Tensor]) -> Result<()> {
+        if state.is_empty() {
+            return Ok(());
+        }
+        bail!("{}: optimizer state import not supported", self.name())
+    }
+
+    /// Number of tensors [`Optimizer::state_export`] returns, without
+    /// materializing them (ZeRO-1 state routing). Implementations with
+    /// a real export should override this to avoid the clone.
+    fn state_len(&self) -> usize {
+        self.state_export().len()
+    }
+}
+
+/// Name used by the `__step` counter tensor in exported state.
+pub const STEP_TENSOR: &str = "__step";
+
+/// Helper: encode a step counter as a 2-element state tensor. Split
+/// into 24-bit halves so each is exactly representable in f32 (a
+/// single f32 would silently round counters past 2^24).
+pub fn step_tensor(t: u64) -> Tensor {
+    let lo = (t & 0xFF_FFFF) as f32;
+    let hi = (t >> 24) as f32;
+    Tensor::new(STEP_TENSOR, &[2], vec![lo, hi])
+}
+
+/// Helper: decode the `__step` tensor (must be the last list entry).
+pub fn decode_step(state: &[Tensor]) -> Result<u64> {
+    match state.last() {
+        Some(t) if t.name == STEP_TENSOR && t.numel() == 2 => {
+            Ok(t.data[0] as u64 | ((t.data[1] as u64) << 24))
+        }
+        _ => bail!("exported state must end with a {STEP_TENSOR} tensor"),
+    }
 }
 
 /// Model metadata the partition-aware optimizers need.
@@ -148,6 +197,17 @@ mod tests {
             stacked: vec!["wq".into(), "attn_norm".into()],
         };
         (params, meta)
+    }
+
+    #[test]
+    fn step_tensor_roundtrips_beyond_f32_integer_range() {
+        for t in [0u64, 1, 1 << 20, (1 << 24) + 1, (1 << 30) + 12345,
+                  (1 << 40) + 7] {
+            let enc = step_tensor(t);
+            assert_eq!(decode_step(&[enc]).unwrap(), t, "t = {t}");
+        }
+        assert!(decode_step(&[Tensor::zeros("w", &[2])]).is_err());
+        assert!(decode_step(&[]).is_err());
     }
 
     #[test]
