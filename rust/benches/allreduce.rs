@@ -1,30 +1,28 @@
-//! Bench: bucketed ring all-reduce latency vs bucket size on the probe
-//! inventory (~1.6M f32), 4 in-process workers.
+//! Bench: the dist engine's collectives and step schedules on the
+//! probe inventory (~1.6M f32), 4 in-process workers.
 //!
-//! Small buckets bound staging memory but pay per-message latency and
+//! Part 1 — bucketed ring all-reduce latency vs bucket size. Small
+//! buckets bound staging memory but pay per-message latency and
 //! thread-wakeup overhead; large buckets amortize it. Cluster-total
-//! bytes are bucket-invariant (2·(N−1)·payload), so this sweep isolates
-//! the latency term. Emits `results/BENCH_dist.json` so the perf
-//! trajectory of the dist engine is recorded across PRs.
+//! bytes are bucket-invariant (2·(N−1)·payload), so this sweep
+//! isolates the latency term. Emits `results/BENCH_dist.json`.
+//!
+//! Part 2 — step-schedule sweep: overlap on/off × ZeRO-1/ZeRO-2.
+//! Each cell drives a full DistTrainer step (grad reduce + shard step
+//! + param all-gather) and records the real wall clock next to the
+//! simulated-link-model timeline (overlapped vs sequential) so the
+//! perf trajectory of the streaming pipeline is tracked across PRs.
+//! Emits `results/BENCH_overlap.json`.
 
 use adam_mini::dist::allreduce::ring_all_reduce;
 use adam_mini::dist::comm::{ring_world, LinkModel, TrafficClass};
-use adam_mini::dist::probe_params;
+use adam_mini::dist::{probe_params, DistOptions, DistTrainer};
 use adam_mini::tensor::Tensor;
 use adam_mini::util::json::Json;
 use adam_mini::util::timer::Bench;
 
-fn main() {
-    let workers = 4usize;
-    let (params, n) = probe_params(0xBE7C);
-    let flat: Vec<f32> = params
-        .iter()
-        .flat_map(|t: &Tensor| t.data.iter().copied())
-        .collect();
-    println!("all-reduce payload: {n} f32 ({:.1} MB), {workers} workers\n",
-             n as f64 * 4.0 / 1e6);
-
-    let bench = Bench::quick();
+fn bench_bucket_sweep(bench: &Bench, workers: usize, flat: &[f32],
+                      n: usize) -> Vec<Json> {
     let mut records = Vec::new();
     for bucket_kb in [4usize, 16, 64, 256, 1024, 8192] {
         let bucket_elems = bucket_kb * 1024 / 4;
@@ -33,7 +31,7 @@ fn main() {
             let (nodes, _) = ring_world(workers, LinkModel::default());
             std::thread::scope(|s| {
                 for node in nodes {
-                    let mut data = flat.clone();
+                    let mut data = flat.to_vec();
                     s.spawn(move || {
                         ring_all_reduce(&node, &mut data, bucket_elems,
                                         TrafficClass::GradReduce);
@@ -57,12 +55,109 @@ fn main() {
             ("gb_per_s", Json::num(gb_s)),
         ]));
     }
+    records
+}
+
+fn bench_step_schedules(bench: &Bench, workers: usize,
+                        params: &[Tensor]) -> Vec<Json> {
+    let mut records = Vec::new();
+    let grads: Vec<Tensor> = params
+        .iter()
+        .map(|p| {
+            Tensor::new(&*p.name, &p.shape, vec![1e-3; p.numel()])
+        })
+        .collect();
+    for zero2 in [false, true] {
+        for overlap in [false, true] {
+            let schedule = if zero2 { "zero2" } else { "zero1" };
+            let pipeline = if overlap { "overlap" } else { "sync" };
+            let name =
+                format!("step/w{workers}/{schedule}/{pipeline}");
+            let mut run_params = params.to_vec();
+            let mut dist = DistTrainer::new(&run_params, DistOptions {
+                workers,
+                bucket_kb: 64,
+                zero1: true,
+                zero2,
+                optimizer: "adamw".into(),
+                ..Default::default()
+            })
+            .expect("probe DistTrainer");
+            let r = bench.run(&name, || {
+                if overlap {
+                    let mut stream = dist.begin_step(1, 1e-4);
+                    for j in (0..grads.len()).rev() {
+                        stream.push_grad(0, j, &grads[j]).unwrap();
+                    }
+                    stream.finish(&mut run_params).unwrap();
+                } else {
+                    let mut local = dist.grad_buffers();
+                    dist.layout().accumulate(&mut local[0], &grads);
+                    dist.step(&mut run_params, local, 1, 1e-4)
+                        .unwrap();
+                }
+            });
+            let timing = dist.last_step_timing();
+            let (model_ov, model_seq) = timing
+                .map(|t| (t.overlapped_ns, t.sequential_ns))
+                .unwrap_or((0.0, 0.0));
+            println!(
+                "  -> {schedule}/{pipeline}: {:.2} ms/step real{}",
+                r.mean_ms(),
+                if overlap {
+                    format!(", modeled {:.2} ms overlapped vs {:.2} \
+                             ms sequential ({:.2}x)",
+                            model_ov / 1e6, model_seq / 1e6,
+                            model_seq / model_ov.max(1.0))
+                } else {
+                    String::new()
+                }
+            );
+            records.push(Json::obj(vec![
+                ("name", Json::str(&r.name)),
+                ("workers", Json::num(workers as f64)),
+                ("schedule", Json::str(schedule)),
+                ("pipeline", Json::str(pipeline)),
+                ("iters", Json::num(r.iters as f64)),
+                ("mean_ns", Json::num(r.mean_ns)),
+                ("p50_ns", Json::num(r.p50_ns)),
+                ("p95_ns", Json::num(r.p95_ns)),
+                ("modeled_overlapped_ns", Json::num(model_ov)),
+                ("modeled_sequential_ns", Json::num(model_seq)),
+            ]));
+        }
+    }
+    records
+}
+
+fn main() {
+    let workers = 4usize;
+    let (params, n) = probe_params(0xBE7C);
+    let flat: Vec<f32> = params
+        .iter()
+        .flat_map(|t: &Tensor| t.data.iter().copied())
+        .collect();
+    println!("all-reduce payload: {n} f32 ({:.1} MB), {workers} workers\n",
+             n as f64 * 4.0 / 1e6);
+
+    let bench = Bench::quick();
+    let bucket_records = bench_bucket_sweep(&bench, workers, &flat, n);
+    println!("step schedules (overlap x zero2):");
+    let step_records = bench_step_schedules(&bench, workers, &params);
+
     std::fs::create_dir_all("results").expect("mkdir results");
     let out = Json::obj(vec![
         ("bench", Json::str("dist_allreduce")),
-        ("records", Json::Arr(records)),
+        ("records", Json::Arr(bucket_records)),
     ]);
     std::fs::write("results/BENCH_dist.json", out.to_string())
         .expect("write BENCH_dist.json");
     println!("wrote results/BENCH_dist.json");
+    let out = Json::obj(vec![
+        ("bench", Json::str("dist_overlap")),
+        ("records", Json::Arr(step_records)),
+    ]);
+    std::fs::write("results/BENCH_overlap.json", out.to_string())
+        .expect("write BENCH_overlap.json");
+    println!("wrote results/BENCH_overlap.json");
 }

@@ -109,6 +109,21 @@ pub fn ring_allgather_bytes(payload_bytes: f64, workers: usize) -> f64 {
     }
 }
 
+/// Cluster-total bytes a ring reduce-scatter moves: each per-rank
+/// chunk travels `workers − 1` hops being accumulated — exactly half
+/// an all-reduce. The ZeRO-2 gradient schedule
+/// (reduce-scatter → shard step → param all-gather) therefore moves
+/// `2(N−1)·P` bytes per step against ZeRO-1's `3(N−1)·P`
+/// (all-reduce + param all-gather).
+pub fn ring_reducescatter_bytes(payload_bytes: f64, workers: usize)
+    -> f64 {
+    if workers <= 1 {
+        0.0
+    } else {
+        (workers - 1) as f64 * payload_bytes
+    }
+}
+
 impl OptProfile {
     /// Bytes of optimizer state a full state synchronization must move
     /// (the ZeRO-1 checkpoint-gather payload). Adam-mini's is half of
@@ -305,9 +320,17 @@ mod tests {
         // Single worker moves nothing.
         assert_eq!(ring_allreduce_bytes(1e6, 1), 0.0);
         assert_eq!(ring_allgather_bytes(1e6, 1), 0.0);
-        // 4 workers: all-reduce 2·3·P, all-gather 3·P.
+        assert_eq!(ring_reducescatter_bytes(1e6, 1), 0.0);
+        // 4 workers: all-reduce 2·3·P, all-gather/reduce-scatter 3·P.
         assert_eq!(ring_allreduce_bytes(1e6, 4), 6e6);
         assert_eq!(ring_allgather_bytes(1e6, 4), 3e6);
+        assert_eq!(ring_reducescatter_bytes(1e6, 4), 3e6);
+        // ZeRO-2's step total is 2/3 of ZeRO-1's.
+        let zero1 = ring_allreduce_bytes(1e6, 4)
+            + ring_allgather_bytes(1e6, 4);
+        let zero2 = ring_reducescatter_bytes(1e6, 4)
+            + ring_allgather_bytes(1e6, 4);
+        assert_eq!(zero2, zero1 * 2.0 / 3.0);
         // Adam-mini's state-sync payload is half of AdamW's.
         let n = 1e9;
         assert_eq!(ADAM_MINI_PROFILE.state_sync_payload(n),

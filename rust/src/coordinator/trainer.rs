@@ -188,7 +188,10 @@ impl<'e> Trainer<'e> {
             };
             TrainerMode::Fused(rt.fused(key)?)
         } else if cfg.workers > 1 {
-            let sharded = cfg.zero1 && dist::shardable(&cfg.optimizer);
+            // ZeRO-2 implies state sharding; both degrade to
+            // replicated mode for non-shardable optimizers.
+            let can_shard = dist::shardable(&cfg.optimizer);
+            let sharded = (cfg.zero1 || cfg.zero2) && can_shard;
             let spec = if cfg.optimizer.starts_with("adam_mini") {
                 Some(rt.mm.meta().spec_for(
                     &params, mini_strategy(&cfg.optimizer))?)
@@ -199,6 +202,7 @@ impl<'e> Trainer<'e> {
                 workers: cfg.workers,
                 bucket_kb: cfg.bucket_kb,
                 zero1: sharded,
+                zero2: cfg.zero2 && can_shard,
                 optimizer: cfg.optimizer.clone(),
                 reduce: parse_reduce(&cfg.reduce_op)?,
                 hp,
@@ -302,17 +306,31 @@ impl<'e> Trainer<'e> {
                 // makes the N-worker run consume exactly the data the
                 // 1-worker run does — the loss-equivalence invariant.
                 let accum = self.cfg.grad_accum.max(1);
-                let n = dist.workers();
-                let mut local = dist.grad_buffers();
                 let mut total_loss = 0.0;
-                for i in 0..accum {
-                    let batch = self.batcher.next_batch();
-                    let (loss, g) = self.rt.grad(&self.params, &batch)?;
-                    total_loss += loss;
-                    dist.layout().accumulate(&mut local[i % n], &g);
-                }
-                let reduced =
-                    dist.step(&mut self.params, local, accum, lr)?;
+                let reduced = if self.cfg.overlap {
+                    // Streaming pipeline: each readiness bucket's
+                    // collective launches while later gradients are
+                    // still being produced.
+                    let mut stream = dist.begin_step(accum, lr);
+                    for i in 0..accum {
+                        let batch = self.batcher.next_batch();
+                        total_loss += self.rt.grad_streamed(
+                            &self.params, &batch,
+                            |j, g| stream.push_grad(i, j, &g))?;
+                    }
+                    stream.finish(&mut self.params)?
+                } else {
+                    let n = dist.workers();
+                    let mut local = dist.grad_buffers();
+                    for i in 0..accum {
+                        let batch = self.batcher.next_batch();
+                        let (loss, g) =
+                            self.rt.grad(&self.params, &batch)?;
+                        total_loss += loss;
+                        dist.layout().accumulate(&mut local[i % n], &g);
+                    }
+                    dist.step(&mut self.params, local, accum, lr)?
+                };
                 if let (Some(opt), Some(grads)) = (replicated, reduced) {
                     opt.step(&mut self.params, &grads, lr);
                 }
@@ -400,6 +418,15 @@ impl<'e> Trainer<'e> {
     pub fn comm_stats(&self) -> Option<Arc<CommStats>> {
         match &self.mode {
             TrainerMode::Dist { dist, .. } => Some(dist.stats().clone()),
+            _ => None,
+        }
+    }
+
+    /// Modeled timeline of the last streamed step (None unless the
+    /// run is dist with `overlap=true` and has stepped).
+    pub fn step_timing(&self) -> Option<dist::StepTiming> {
+        match &self.mode {
+            TrainerMode::Dist { dist, .. } => dist.last_step_timing(),
             _ => None,
         }
     }

@@ -15,6 +15,7 @@ pub struct Batch {
 }
 
 /// Deterministic epoch-shuffled batcher over non-overlapping windows.
+#[derive(Debug, Clone)]
 pub struct Batcher {
     corpus: Corpus,
     batch_size: usize,

@@ -70,6 +70,80 @@ fn bucket_all_reduce(node: &RingNode, buf: &mut [f32],
     }
 }
 
+/// Ring reduce-scatter over a flat buffer partitioned into per-rank
+/// chunks: `chunks[w]` is the contiguous range rank `w` ends up owning
+/// the complete elementwise sum of. Chunks must be sorted, contiguous
+/// and cover the buffer; they may be ragged or empty (the ZeRO-2 shard
+/// map clipped to a bucket). Regions outside rank r's own chunk hold
+/// partial sums on return — garbage to the caller.
+///
+/// Cluster-total traffic: `(N−1)·payload` bytes — half an all-reduce,
+/// the byte saving the ZeRO-2 schedule banks every step.
+pub fn ring_reduce_scatter(node: &RingNode, chunks: &[(usize, usize)],
+                           buf: &mut [f32], class: TrafficClass) {
+    let (n, r) = (node.world, node.rank);
+    assert_eq!(chunks.len(), n, "one chunk per rank");
+    if n <= 1 {
+        return;
+    }
+    debug_assert_eq!(chunks[0].0, 0, "chunks must start at 0");
+    debug_assert_eq!(chunks[n - 1].1, buf.len(),
+                     "chunks must cover the buffer");
+    // Step s: send chunk (r+n−1−s), receive + accumulate chunk
+    // (r+n−2−s). After N−1 steps rank r holds the complete sum of
+    // chunk r, accumulated in ring order v(r+1), v(r+2), …, v(r) —
+    // fixed by ring position, so runs are bit-reproducible for a
+    // given world size.
+    for s in 0..n - 1 {
+        let send_c = (r + n - 1 - s) % n;
+        let (lo, hi) = chunks[send_c];
+        node.send_right(class, buf[lo..hi].to_vec());
+        let recv_c = (r + n - 2 - s) % n;
+        let (lo, hi) = chunks[recv_c];
+        let incoming = node.recv_left();
+        debug_assert_eq!(incoming.len(), hi - lo);
+        for (x, y) in buf[lo..hi].iter_mut().zip(&incoming) {
+            *x += y;
+        }
+    }
+}
+
+/// Clip sorted contiguous per-rank `ranges` to the window `[lo, hi)`,
+/// re-based to window-relative offsets. Ranges outside the window
+/// degenerate to empty chunks at the window edge, so the result still
+/// covers the window contiguously — the chunk map a windowed
+/// reduce-scatter needs.
+pub fn clip_ranges(ranges: &[(usize, usize)], lo: usize, hi: usize)
+    -> Vec<(usize, usize)> {
+    ranges
+        .iter()
+        .map(|&(a, b)| (a.clamp(lo, hi) - lo, b.clamp(lo, hi) - lo))
+        .collect()
+}
+
+/// Bucketed whole-buffer reduce-scatter: the flat space is processed
+/// in windows of at most `bucket_elems` elements; inside each window
+/// the chunk boundaries are the global per-rank `ranges` clipped to
+/// the window. Peak message size is bounded like the bucketed
+/// all-reduce; cluster-total traffic stays `(N−1)·payload` regardless
+/// of bucket size.
+pub fn ring_reduce_scatter_bucketed(node: &RingNode,
+                                    ranges: &[(usize, usize)],
+                                    buf: &mut [f32], bucket_elems: usize,
+                                    class: TrafficClass) {
+    if node.world <= 1 || buf.is_empty() {
+        return;
+    }
+    let bucket = bucket_elems.max(1);
+    let mut off = 0;
+    while off < buf.len() {
+        let hi = (off + bucket).min(buf.len());
+        let clipped = clip_ranges(ranges, off, hi);
+        ring_reduce_scatter(node, &clipped, &mut buf[off..hi], class);
+        off = hi;
+    }
+}
+
 /// Ring all-gather over a shared flat buffer partitioned into per-rank
 /// ranges (`ranges[w]` = the slice rank `w` is authoritative for; the
 /// ZeRO-1 shard map). On return every rank's `buf` holds every range's
@@ -185,6 +259,121 @@ mod tests {
                            "world {world} bucket {bucket}");
             }
         }
+    }
+
+    /// Drive a bucketed reduce-scatter on every rank; return each
+    /// rank's buffer plus the grad_scatter byte counter.
+    fn run_reduce_scatter(inputs: Vec<Vec<f32>>,
+                          ranges: Vec<(usize, usize)>, bucket: usize)
+        -> (Vec<Vec<f32>>, u64) {
+        let n = inputs.len();
+        let (nodes, stats) = ring_world(n, LinkModel::default());
+        let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .zip(inputs)
+                .map(|(node, mut data)| {
+                    let ranges = &ranges;
+                    s.spawn(move || {
+                        ring_reduce_scatter_bucketed(
+                            &node, ranges, &mut data, bucket,
+                            TrafficClass::GradScatter);
+                        data
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        (outs, stats.bytes(TrafficClass::GradScatter))
+    }
+
+    #[test]
+    fn reduce_scatter_matches_all_reduce_then_slice() {
+        // Each rank's own range must hold exactly what an all-reduce
+        // would put there — including ragged buckets and ragged ranges.
+        let mut rng = Rng::new(23);
+        for &world in &[2usize, 3, 5] {
+            for &len in &[7usize, 33, 257] {
+                for &bucket in &[5usize, 64, 100_000] {
+                    let inputs: Vec<Vec<f32>> = (0..world)
+                        .map(|_| rng.normal_vec(len, 1.0))
+                        .collect();
+                    let expect = naive_sum(&inputs);
+                    let ranges: Vec<(usize, usize)> = (0..world)
+                        .map(|w| chunk_range(len, world, w))
+                        .collect();
+                    let (outs, _) = run_reduce_scatter(
+                        inputs, ranges.clone(), bucket);
+                    for (w, out) in outs.iter().enumerate() {
+                        let (lo, hi) = ranges[w];
+                        for i in lo..hi {
+                            let (a, b) = (out[i], expect[i]);
+                            assert!((a - b).abs()
+                                        <= 1e-4 * b.abs().max(1.0),
+                                    "world {world} len {len} bucket \
+                                     {bucket} rank {w} elem {i}: \
+                                     {a} vs {b}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_traffic_is_half_an_all_reduce() {
+        // (N−1)·payload bytes cluster-total, any bucket size.
+        for &world in &[2usize, 4] {
+            for &bucket in &[3usize, 1 << 20] {
+                let len = 333;
+                let inputs = vec![vec![1.0f32; len]; world];
+                let ranges: Vec<(usize, usize)> = (0..world)
+                    .map(|w| chunk_range(len, world, w))
+                    .collect();
+                let (outs, bytes) =
+                    run_reduce_scatter(inputs, ranges.clone(), bucket);
+                assert_eq!(bytes, ((world - 1) * len * 4) as u64,
+                           "world {world} bucket {bucket}");
+                for (w, out) in outs.iter().enumerate() {
+                    let (lo, hi) = ranges[w];
+                    for i in lo..hi {
+                        assert_eq!(out[i], world as f32);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_handles_empty_and_ragged_ranges() {
+        // Uneven shard map with one empty range (more workers than
+        // atoms) — every nonempty owner still gets the exact sum.
+        let len = 23;
+        let ranges = vec![(0, 9), (9, 9), (9, 16), (16, 23)];
+        let mut rng = Rng::new(31);
+        let inputs: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.normal_vec(len, 1.0)).collect();
+        let expect = naive_sum(&inputs);
+        // Bucket of 10 splits range (9,16) across two windows.
+        let (outs, bytes) =
+            run_reduce_scatter(inputs, ranges.clone(), 10);
+        for (w, out) in outs.iter().enumerate() {
+            let (lo, hi) = ranges[w];
+            for i in lo..hi {
+                assert!((out[i] - expect[i]).abs() <= 1e-4,
+                        "rank {w} elem {i}");
+            }
+        }
+        assert_eq!(bytes, (3 * len * 4) as u64);
+    }
+
+    #[test]
+    fn reduce_scatter_single_worker_is_a_no_op() {
+        let inputs = vec![vec![2.0f32; 5]];
+        let (outs, bytes) =
+            run_reduce_scatter(inputs, vec![(0, 5)], 2);
+        assert_eq!(outs[0], vec![2.0f32; 5]);
+        assert_eq!(bytes, 0);
     }
 
     #[test]

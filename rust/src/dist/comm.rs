@@ -12,19 +12,27 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
 /// What a message carries — the ledger the traffic report groups by.
+///
+/// The gradient phases are attributed separately on purpose: a ZeRO-2
+/// step's reduce-scatter must never be lumped under the all-reduce
+/// class, or the measured-vs-modeled cross-check would double-count
+/// one schedule's bytes against the other's closed form.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TrafficClass {
-    /// Gradient ring all-reduce (every step, every mode).
+    /// Gradient ring all-reduce (ZeRO-1 / replicated schedules).
     GradReduce,
-    /// ZeRO-1 parameter all-gather after the sharded update.
+    /// Gradient ring reduce-scatter (the ZeRO-2 schedule).
+    GradScatter,
+    /// Parameter all-gather after the sharded update (ZeRO-1/2).
     ParamGather,
     /// Optimizer-state collection (checkpoint / state round-trip).
     StateSync,
 }
 
 impl TrafficClass {
-    pub const ALL: [TrafficClass; 3] = [
+    pub const ALL: [TrafficClass; 4] = [
         TrafficClass::GradReduce,
+        TrafficClass::GradScatter,
         TrafficClass::ParamGather,
         TrafficClass::StateSync,
     ];
@@ -32,6 +40,7 @@ impl TrafficClass {
     pub fn name(&self) -> &'static str {
         match self {
             TrafficClass::GradReduce => "grad_reduce",
+            TrafficClass::GradScatter => "grad_scatter",
             TrafficClass::ParamGather => "param_gather",
             TrafficClass::StateSync => "state_sync",
         }
@@ -40,8 +49,9 @@ impl TrafficClass {
     fn idx(&self) -> usize {
         match self {
             TrafficClass::GradReduce => 0,
-            TrafficClass::ParamGather => 1,
-            TrafficClass::StateSync => 2,
+            TrafficClass::GradScatter => 1,
+            TrafficClass::ParamGather => 2,
+            TrafficClass::StateSync => 3,
         }
     }
 }
@@ -62,6 +72,21 @@ impl Default for LinkModel {
     }
 }
 
+impl LinkModel {
+    /// Modeled time (ns) for one `bytes`-sized message on this link.
+    pub fn msg_ns(&self, bytes: f64) -> f64 {
+        self.latency_ns + bytes / self.bytes_per_sec * 1e9
+    }
+
+    /// Modeled wall time (ns) of `rounds` lockstep ring rounds, each
+    /// moving `bytes_per_round` per rank. Ranks transmit in parallel,
+    /// rounds serialize — the alpha–beta wall clock of a ring
+    /// collective, as opposed to the cluster-total byte integral.
+    pub fn ring_ns(&self, rounds: usize, bytes_per_round: f64) -> f64 {
+        rounds as f64 * self.msg_ns(bytes_per_round)
+    }
+}
+
 #[derive(Default)]
 struct ClassCounters {
     bytes: AtomicU64,
@@ -70,7 +95,7 @@ struct ClassCounters {
 
 /// Cluster-wide traffic ledger, shared by every endpoint.
 pub struct CommStats {
-    classes: [ClassCounters; 3],
+    classes: [ClassCounters; 4],
     /// Sum of per-message modeled times (ns). An aggregate link-time
     /// integral, NOT wall-clock: messages on different links overlap.
     sim_link_ns: AtomicU64,
@@ -118,6 +143,7 @@ impl CommStats {
         CommSnapshot {
             bytes: [
                 self.bytes(TrafficClass::GradReduce),
+                self.bytes(TrafficClass::GradScatter),
                 self.bytes(TrafficClass::ParamGather),
                 self.bytes(TrafficClass::StateSync),
             ],
@@ -128,7 +154,7 @@ impl CommStats {
 /// Byte counters frozen at one instant.
 #[derive(Debug, Clone, Copy)]
 pub struct CommSnapshot {
-    bytes: [u64; 3],
+    bytes: [u64; 4],
 }
 
 impl CommSnapshot {
@@ -136,6 +162,43 @@ impl CommSnapshot {
     pub fn delta(&self, later: &CommSnapshot, class: TrafficClass) -> u64 {
         later.bytes[class.idx()] - self.bytes[class.idx()]
     }
+}
+
+/// Completion side of a nonblocking collective — held by the comm
+/// thread executing it; [`CollectiveDone::complete`] resolves the
+/// paired [`CollectiveHandle`].
+pub struct CollectiveDone<T> {
+    tx: Sender<T>,
+}
+
+impl<T> CollectiveDone<T> {
+    pub fn complete(self, value: T) {
+        // A dropped handle just means nobody is waiting.
+        let _ = self.tx.send(value);
+    }
+}
+
+/// Caller side of a nonblocking collective: launched work continues on
+/// the comm thread; the handle resolves when it completes. `wait`
+/// blocks, `try_ready` polls.
+pub struct CollectiveHandle<T> {
+    rx: Receiver<T>,
+}
+
+impl<T> CollectiveHandle<T> {
+    pub fn wait(self) -> T {
+        self.rx.recv().expect("collective dropped before completing")
+    }
+
+    pub fn try_ready(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// A fresh (completion, handle) pair for one in-flight collective.
+pub fn collective_handle<T>() -> (CollectiveDone<T>, CollectiveHandle<T>) {
+    let (tx, rx) = channel();
+    (CollectiveDone { tx }, CollectiveHandle { rx })
 }
 
 /// One worker's endpoints: ring neighbours + the rank-0 gather link.
@@ -275,6 +338,41 @@ mod tests {
         // 3 non-root ranks × 1 f32 each.
         let after = stats.snapshot();
         assert_eq!(before.delta(&after, TrafficClass::StateSync), 12);
+    }
+
+    #[test]
+    fn collective_handle_resolves_on_complete() {
+        let (done, handle) = collective_handle::<u32>();
+        assert!(handle.try_ready().is_none());
+        done.complete(7);
+        assert_eq!(handle.wait(), 7);
+    }
+
+    #[test]
+    fn link_model_times_are_additive() {
+        let link = LinkModel { latency_ns: 100.0, bytes_per_sec: 1e9 };
+        // 1000 B at 1 GB/s = 1000 ns + 100 ns latency.
+        assert!((link.msg_ns(1000.0) - 1100.0).abs() < 1e-9);
+        assert!((link.ring_ns(3, 1000.0) - 3300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grad_phases_are_separate_classes() {
+        // The ZeRO-2 fix: reduce-scatter bytes must never land in the
+        // all-reduce ledger.
+        let (nodes, stats) = ring_world(2, LinkModel::default());
+        std::thread::scope(|s| {
+            for node in nodes {
+                s.spawn(move || {
+                    node.send_right(TrafficClass::GradScatter,
+                                    vec![0.0; 8]);
+                    node.recv_left();
+                });
+            }
+        });
+        assert_eq!(stats.bytes(TrafficClass::GradScatter), 2 * 32);
+        assert_eq!(stats.bytes(TrafficClass::GradReduce), 0);
+        assert_eq!(stats.total_bytes(), 2 * 32);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Data-parallel training engine (multi-threaded, in-process workers)
-//! with ZeRO-1 sharded optimizer state and bucketed ring all-reduce.
+//! with ZeRO-1/2 sharding, bucketed ring collectives, and a streaming
+//! overlap pipeline.
 //!
 //! The paper's headline systems claim (§3.4, Fig 1a, Table 2) is that
 //! halving optimizer state admits larger per-GPU batches and cuts the
@@ -12,38 +13,55 @@
 //! Layers:
 //!
 //! - [`comm`] — channel transport: ring + gather links, per-class
-//!   byte/message/latency accounting ([`comm::CommStats`]).
-//! - [`allreduce`] — bucketed ring all-reduce and all-gather over flat
-//!   `f32` segments (cluster traffic: `2(N−1)·P` and `(N−1)·P` bytes).
-//! - [`shard`] — ZeRO-1 partitioner: contiguous shards of the
-//!   flattened parameter space, aligned to Hessian-block boundaries
-//!   for Adam-mini, plus per-shard optimizer construction.
+//!   byte/message/latency accounting ([`comm::CommStats`]), and
+//!   nonblocking collective handles ([`comm::CollectiveHandle`]).
+//! - [`allreduce`] — bucketed ring all-reduce, reduce-scatter and
+//!   all-gather over flat `f32` segments (cluster traffic:
+//!   `2(N−1)·P`, `(N−1)·P` and `(N−1)·P` bytes).
+//! - [`bucket`] — the readiness-bucket scheduler: carves the flat
+//!   gradient into per-tensor buckets (reverse parameter order — the
+//!   backward pass's production order) and models the overlapped vs
+//!   sequential step timelines.
+//! - [`shard`] — ZeRO partitioner: contiguous shards of the flattened
+//!   parameter space, aligned to Hessian-block boundaries for
+//!   Adam-mini, plus per-shard optimizer construction.
 //! - [`worker`] — [`DistTrainer`]: splits the global batch across
-//!   workers, reduces gradients, steps shard optimizers, all-gathers
-//!   parameters, and collects sharded state for checkpoints.
+//!   workers and executes one of three schedules (replicated
+//!   all-reduce; ZeRO-1 all-reduce + shard step + all-gather; ZeRO-2
+//!   reduce-scatter + shard step + all-gather), either
+//!   batch-synchronously ([`DistTrainer::step`]) or as a streaming
+//!   bucket pipeline ([`DistTrainer::begin_step`]) that launches each
+//!   bucket's collective the moment its last gradient lands.
 //!
 //! Adam-mini's sharding-aware fast path falls out of the state layout:
 //! its shard state is `m` plus ONE `v_b` scalar per Hessian block, so
 //! state-sync traffic is ~half of AdamW's `m`+`v` — the measurable
-//! form of the paper's communication-reduction argument.
+//! form of the paper's communication-reduction argument. ZeRO-2 adds
+//! the gradient-side saving: `2(N−1)·P` step bytes vs ZeRO-1's
+//! `3(N−1)·P`.
 //!
 //! Core invariant (tested in `tests/dist.rs`): an N-worker run with
 //! the same global batch and seed matches the 1-worker run's loss
-//! curve to float tolerance.
+//! curve to float tolerance — in every (schedule × pipeline)
+//! combination, bit-exactly for single-micro-batch steps.
 
 pub mod allreduce;
+pub mod bucket;
 pub mod comm;
 pub mod shard;
 pub mod worker;
 
-pub use comm::{CommStats, LinkModel, TrafficClass};
+pub use bucket::{BucketPlan, ComputeModel, OverlapTimeline, StepTiming};
+pub use comm::{CollectiveDone, CollectiveHandle, CommStats, LinkModel,
+               TrafficClass};
 pub use shard::{shardable, FlatLayout, Partition};
-pub use worker::{DistOptions, DistTrainer};
+pub use worker::{DistOptions, DistTrainer, StepMode, StepStream};
 
 use anyhow::Result;
 
 use crate::cluster::{ring_allgather_bytes, ring_allreduce_bytes,
-                     ADAMW_PROFILE, ADAM_MINI_PROFILE};
+                     ring_reducescatter_bytes, ADAMW_PROFILE,
+                     ADAM_MINI_PROFILE};
 use crate::optim::{Hyper, ReduceOp};
 use crate::partition::{partition_spec, Strategy};
 use crate::tensor::Tensor;
@@ -104,11 +122,16 @@ impl TrafficRow {
     }
 }
 
-/// Run a few ZeRO-1 steps of the probe model through the real engine
+/// Run a few sharded steps of the probe model through the real engine
 /// and report measured bytes/step per traffic class next to the
-/// closed-form `cluster.rs` prediction. Needs no artifacts.
+/// closed-form `cluster.rs` prediction. `zero2` picks the gradient
+/// schedule: reduce-scatter (ZeRO-2) or all-reduce (ZeRO-1). Needs no
+/// artifacts. Each phase is attributed to its own class — the
+/// measured grad_reduce and grad_scatter columns are mutually
+/// exclusive by construction, never double-counted.
 pub fn measure_traffic(optimizer: &str, workers: usize, bucket_kb: usize,
-                       steps: usize) -> Result<Vec<TrafficRow>> {
+                       steps: usize, zero2: bool)
+    -> Result<Vec<TrafficRow>> {
     let (mut params, n_params) = probe_params(0xD157);
     let is_mini = optimizer.starts_with("adam_mini");
     let spec = if is_mini { Some(probe_spec(&params)?) } else { None };
@@ -116,6 +139,7 @@ pub fn measure_traffic(optimizer: &str, workers: usize, bucket_kb: usize,
         workers,
         bucket_kb,
         zero1: true,
+        zero2,
         optimizer: optimizer.into(),
         reduce: ReduceOp::Mean,
         hp: Hyper::default(),
@@ -142,21 +166,34 @@ pub fn measure_traffic(optimizer: &str, workers: usize, bucket_kb: usize,
     let profile = if is_mini { ADAM_MINI_PROFILE } else { ADAMW_PROFILE };
     // State-sync gathers every non-root shard: (N−1)/N of the state.
     let sync_frac = (workers - 1) as f64 / workers as f64;
+    let per_step = |class: TrafficClass| {
+        before.delta(&after_steps, class) as f64 / steps as f64
+    };
     let rows = vec![
         TrafficRow {
             optimizer: optimizer.into(),
             class: TrafficClass::GradReduce.name(),
-            measured_bytes: before.delta(
-                &after_steps, TrafficClass::GradReduce) as f64
-                / steps as f64,
-            modeled_bytes: ring_allreduce_bytes(payload, workers),
+            measured_bytes: per_step(TrafficClass::GradReduce),
+            modeled_bytes: if zero2 {
+                0.0
+            } else {
+                ring_allreduce_bytes(payload, workers)
+            },
+        },
+        TrafficRow {
+            optimizer: optimizer.into(),
+            class: TrafficClass::GradScatter.name(),
+            measured_bytes: per_step(TrafficClass::GradScatter),
+            modeled_bytes: if zero2 {
+                ring_reducescatter_bytes(payload, workers)
+            } else {
+                0.0
+            },
         },
         TrafficRow {
             optimizer: optimizer.into(),
             class: TrafficClass::ParamGather.name(),
-            measured_bytes: before.delta(
-                &after_steps, TrafficClass::ParamGather) as f64
-                / steps as f64,
+            measured_bytes: per_step(TrafficClass::ParamGather),
             modeled_bytes: ring_allgather_bytes(payload, workers),
         },
         TrafficRow {
@@ -172,32 +209,54 @@ pub fn measure_traffic(optimizer: &str, workers: usize, bucket_kb: usize,
 }
 
 /// The `repro report` section: measured vs modeled bytes for AdamW and
-/// Adam-mini on the probe inventory, 4 ZeRO-1 workers.
+/// Adam-mini on the probe inventory, 4 sharded workers, both gradient
+/// schedules (ZeRO-1 all-reduce vs ZeRO-2 reduce-scatter).
 pub fn traffic_report() -> Result<()> {
     let (workers, bucket_kb, steps) = (4, 64, 3);
     let (_, n_params) = probe_params(0xD157);
     println!("\nDist traffic: measured (in-process engine, {workers} \
-              ZeRO-1 workers, {n_params} params) vs cluster.rs model");
+              sharded workers, {n_params} params) vs cluster.rs model");
     let mut table = Vec::new();
     let mut state_sync = Vec::new();
-    for optimizer in ["adamw", "adam_mini"] {
-        for row in measure_traffic(optimizer, workers, bucket_kb, steps)? {
-            if row.class == TrafficClass::StateSync.name() {
-                state_sync.push(row.measured_bytes);
+    // AdamW step bytes per schedule [zero1, zero2] — the headline
+    // reduce-scatter saving printed under the table.
+    let mut step_bytes = [0.0f64; 2];
+    for (si, zero2) in [(0usize, false), (1usize, true)] {
+        for optimizer in ["adamw", "adam_mini"] {
+            let schedule = if zero2 { "zero2" } else { "zero1" };
+            for row in measure_traffic(optimizer, workers, bucket_kb,
+                                       steps, zero2)? {
+                // Skip the structurally-zero grad phase of the other
+                // schedule to keep the table readable.
+                let zero_phase = (zero2
+                    && row.class == TrafficClass::GradReduce.name())
+                    || (!zero2
+                        && row.class == TrafficClass::GradScatter.name());
+                if zero_phase && row.measured_bytes == 0.0 {
+                    continue;
+                }
+                if row.class == TrafficClass::StateSync.name() {
+                    if !zero2 {
+                        state_sync.push(row.measured_bytes);
+                    }
+                } else if optimizer == "adamw" {
+                    step_bytes[si] += row.measured_bytes;
+                }
+                table.push(vec![
+                    row.optimizer.clone(),
+                    schedule.to_string(),
+                    row.class.to_string(),
+                    format!("{:.0}", row.measured_bytes),
+                    format!("{:.0}", row.modeled_bytes),
+                    format!("{:+.2}%", row.delta_pct()),
+                ]);
             }
-            table.push(vec![
-                row.optimizer.clone(),
-                row.class.to_string(),
-                format!("{:.0}", row.measured_bytes),
-                format!("{:.0}", row.modeled_bytes),
-                format!("{:+.2}%", row.delta_pct()),
-            ]);
         }
     }
     println!("{}", ascii_table(
-        &["Optimizer", "Traffic class", "Measured B/step",
+        &["Optimizer", "Schedule", "Traffic class", "Measured B/step",
           "Modeled B/step", "Delta"], &table));
-    println!("(state_sync rows are bytes per sync event — the ZeRO-1 \
+    println!("(state_sync rows are bytes per sync event — the sharded \
               checkpoint gather; others are per training step)");
     let (aw, am) = (state_sync[0], state_sync[1]);
     println!("state-sync bytes: adam_mini {am:.0} vs adamw {aw:.0} \
@@ -205,6 +264,13 @@ pub fn traffic_report() -> Result<()> {
              100.0 * (1.0 - am / aw),
              if am < aw { "[OK: Adam-mini moves strictly fewer \
                            state-sync bytes]" }
+             else { "[FAIL]" });
+    let (z1, z2) = (step_bytes[0], step_bytes[1]);
+    println!("step bytes (adamw): zero2 {z2:.0} vs zero1 {z1:.0} \
+              ({:.1}% less)  {}",
+             100.0 * (1.0 - z2 / z1),
+             if z2 < z1 { "[OK: reduce-scatter schedule moves \
+                           strictly fewer bytes]" }
              else { "[FAIL]" });
     Ok(())
 }
@@ -215,23 +281,49 @@ mod tests {
 
     #[test]
     fn measured_traffic_matches_closed_forms() {
-        let rows = measure_traffic("adamw", 3, 16, 2).unwrap();
-        for row in &rows {
-            if row.class == "state_sync" {
-                // Model omits the per-shard step counters; allow slack.
-                assert!(row.delta_pct().abs() < 1.0,
-                        "{}: {row:?}", row.class);
-            } else {
-                assert_eq!(row.measured_bytes, row.modeled_bytes,
-                           "{}: {row:?}", row.class);
+        for zero2 in [false, true] {
+            let rows =
+                measure_traffic("adamw", 3, 16, 2, zero2).unwrap();
+            for row in &rows {
+                if row.class == "state_sync" {
+                    // Model omits the per-shard step counters; allow
+                    // slack.
+                    assert!(row.delta_pct().abs() < 1.0,
+                            "{}: {row:?}", row.class);
+                } else {
+                    assert_eq!(row.measured_bytes, row.modeled_bytes,
+                               "zero2={zero2} {}: {row:?}", row.class);
+                }
             }
         }
     }
 
     #[test]
+    fn zero2_grad_traffic_is_attributed_not_lumped() {
+        let pick = |rows: &[TrafficRow], class: &str| {
+            rows.iter()
+                .find(|r| r.class == class)
+                .unwrap()
+                .measured_bytes
+        };
+        let z1 = measure_traffic("adamw", 4, 64, 1, false).unwrap();
+        let z2 = measure_traffic("adamw", 4, 64, 1, true).unwrap();
+        // ZeRO-1 uses only the all-reduce class, ZeRO-2 only the
+        // reduce-scatter class — and the latter moves half the bytes.
+        assert!(pick(&z1, "grad_reduce") > 0.0);
+        assert_eq!(pick(&z1, "grad_scatter"), 0.0);
+        assert_eq!(pick(&z2, "grad_reduce"), 0.0);
+        assert!(pick(&z2, "grad_scatter") > 0.0);
+        assert_eq!(pick(&z2, "grad_scatter"),
+                   0.5 * pick(&z1, "grad_reduce"));
+        // Param-gather traffic is identical across schedules.
+        assert_eq!(pick(&z1, "param_gather"), pick(&z2, "param_gather"));
+    }
+
+    #[test]
     fn adam_mini_state_sync_strictly_smaller() {
-        let aw = measure_traffic("adamw", 2, 64, 1).unwrap();
-        let am = measure_traffic("adam_mini", 2, 64, 1).unwrap();
+        let aw = measure_traffic("adamw", 2, 64, 1, false).unwrap();
+        let am = measure_traffic("adam_mini", 2, 64, 1, false).unwrap();
         let pick = |rows: &[TrafficRow]| {
             rows.iter()
                 .find(|r| r.class == "state_sync")

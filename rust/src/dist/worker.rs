@@ -1,6 +1,7 @@
 //! The data-parallel engine: N in-process workers (threads) that
-//! all-reduce gradients and step the optimizer in ZeRO-1 sharded or
-//! replicated mode.
+//! reduce gradients and step the optimizer in sharded (ZeRO-1/2) or
+//! replicated mode, batch-synchronously or as a streaming bucket
+//! pipeline.
 //!
 //! Step contract (driver side):
 //!
@@ -8,24 +9,39 @@
 //!    worker `i % N` and accumulates per-worker UNNORMALIZED gradient
 //!    sums into flat buffers (the batch stream is identical for every
 //!    world size — the core N-vs-1 equivalence invariant).
-//! 2. [`DistTrainer::step`] spawns one thread per worker: bucketed ring
-//!    all-reduce of the gradient, scale by `1/n_micro`, then
-//!    - **ZeRO-1**: step this worker's shard optimizer over its
-//!      contiguous shard only, and ring-all-gather the updated
-//!      parameters (every worker ends with the full updated replica);
-//!    - **replicated**: return the reduced gradient — the identical
-//!      per-replica update is executed once by the caller.
+//! 2. Either [`DistTrainer::step`] (batch-synchronous: all gradients
+//!    land, then the collectives run) or [`DistTrainer::begin_step`]
+//!    (streaming: gradients land tensor by tensor and each readiness
+//!    bucket's collective launches the moment its last tensor arrives)
+//!    executes one of three schedules:
+//!    - **ZeRO-1**: bucketed ring all-reduce, step this worker's shard
+//!      optimizer over its contiguous shard, ring-all-gather the
+//!      updated parameters;
+//!    - **ZeRO-2**: bucketed ring **reduce-scatter** (each worker only
+//!      ever holds its gradient shard reduced — `(N−1)·P` bytes
+//!      instead of the all-reduce's `2(N−1)·P`), step the shard
+//!      optimizer, ring-all-gather the updated parameters;
+//!    - **replicated**: all-reduce and return the reduced gradient —
+//!      the identical per-replica update is executed once by the
+//!      caller (non-shardable optimizers).
 //!
-//! With `n_micro <= 1` micro-batch the N-worker run is bit-identical
-//! to the single-worker run (idle workers contribute exact zeros); with
-//! several micro-batches it matches to float tolerance (ring summation
-//! order differs from sequential accumulation).
+//! With `n_micro <= 1` micro-batch every schedule is bit-identical to
+//! the single-worker run (idle workers contribute exact zeros, and
+//! x + 0 is exact in any summation order); with several micro-batches
+//! they match to float tolerance (ring summation order differs from
+//! sequential accumulation).
 
 use anyhow::{bail, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 
-use super::allreduce::{ring_all_gather, ring_all_reduce};
-use super::comm::{ring_world, CommStats, LinkModel, RingNode,
+use super::allreduce::{clip_ranges, ring_all_gather, ring_all_reduce,
+                       ring_reduce_scatter, ring_reduce_scatter_bucketed};
+use super::bucket::{gather_comm_ns, grad_comm_ns, BucketPlan,
+                    ComputeModel, OverlapTimeline, StepTiming};
+use super::comm::{collective_handle, ring_world, CollectiveDone,
+                  CollectiveHandle, CommStats, LinkModel, RingNode,
                   TrafficClass};
 use super::shard::{block_cuts, build_shard_optimizer, pieces_for,
                    shard_spec, shardable, slice_shard, write_shard,
@@ -34,20 +50,52 @@ use crate::optim::{Hyper, Optimizer, ReduceOp};
 use crate::partition::BlockView;
 use crate::tensor::Tensor;
 
-/// Engine configuration (mirrors the `workers`/`bucket_kb`/`zero1`
-/// config keys plus what optimizer construction needs).
+/// Which step schedule the engine runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepMode {
+    /// All-reduce; the caller executes the (identical) update once.
+    Replicated,
+    /// All-reduce + sharded optimizer state + param all-gather.
+    Zero1,
+    /// Reduce-scatter + sharded state AND gradients + param all-gather.
+    Zero2,
+}
+
+impl StepMode {
+    /// True when optimizer state (and for ZeRO-2, gradients) shard.
+    pub fn sharded(&self) -> bool {
+        !matches!(self, StepMode::Replicated)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepMode::Replicated => "replicated",
+            StepMode::Zero1 => "zero1",
+            StepMode::Zero2 => "zero2",
+        }
+    }
+}
+
+/// Engine configuration (mirrors the `workers`/`bucket_kb`/`zero1`/
+/// `zero2` config keys plus what optimizer construction needs).
 pub struct DistOptions {
     pub workers: usize,
     pub bucket_kb: usize,
     /// Shard optimizer state (ZeRO-1). Requires a shardable optimizer;
     /// callers should fall back to replicated mode otherwise.
     pub zero1: bool,
+    /// Also shard gradients (ZeRO-2): reduce-scatter → step →
+    /// all-gather. Implies (and requires) a shardable optimizer;
+    /// takes precedence over `zero1`.
+    pub zero2: bool,
     pub optimizer: String,
     pub reduce: ReduceOp,
     pub hp: Hyper,
     /// Full-space Adam-mini block views (required for `adam_mini*`).
     pub spec: Option<Vec<BlockView>>,
     pub link: LinkModel,
+    /// Simulated backward-compute cost for the overlap timeline.
+    pub compute: ComputeModel,
 }
 
 impl Default for DistOptions {
@@ -56,32 +104,38 @@ impl Default for DistOptions {
             workers: 1,
             bucket_kb: 64,
             zero1: true,
+            zero2: false,
             optimizer: "adamw".into(),
             reduce: ReduceOp::Mean,
             hp: Hyper::default(),
             spec: None,
             link: LinkModel::default(),
+            compute: ComputeModel::default(),
         }
     }
 }
 
 struct WorkerSlot {
     node: RingNode,
-    /// ZeRO-1 only: this worker's shard optimizer.
+    /// Sharded modes only: this worker's shard optimizer.
     opt: Option<SendOptimizer>,
     pieces: Vec<ShardPiece>,
-    /// Full parameter replica (ZeRO-1 only; kept in flat form).
+    /// Full parameter replica (sharded modes only; kept in flat form).
     flat_params: Vec<f32>,
 }
 
 /// The multi-worker data-parallel trainer.
 pub struct DistTrainer {
-    layout: FlatLayout,
+    layout: Arc<FlatLayout>,
     partition: Partition,
+    plan: BucketPlan,
     slots: Vec<WorkerSlot>,
     stats: Arc<CommStats>,
     bucket_elems: usize,
-    zero1: bool,
+    mode: StepMode,
+    link: LinkModel,
+    compute: ComputeModel,
+    last_timing: Option<StepTiming>,
     steps: u64,
 }
 
@@ -92,29 +146,44 @@ impl DistTrainer {
         if n == 0 {
             bail!("workers must be >= 1");
         }
-        if opts.zero1 && !shardable(&opts.optimizer) {
-            bail!("{}: not ZeRO-1 shardable; use replicated mode",
-                  opts.optimizer);
+        let mode = if opts.zero2 {
+            StepMode::Zero2
+        } else if opts.zero1 {
+            StepMode::Zero1
+        } else {
+            StepMode::Replicated
+        };
+        if mode.sharded() && !shardable(&opts.optimizer) {
+            bail!("{}: not {} shardable; use replicated mode",
+                  opts.optimizer, mode.name());
         }
-        let layout = FlatLayout::of(params);
+        let layout = Arc::new(FlatLayout::of(params));
         let is_mini = opts.optimizer.starts_with("adam_mini");
-        let partition = if !opts.zero1 {
-            // Replicated mode still defines ranges (unused for comm).
-            Partition::even(layout.total, n)
-        } else if is_mini {
+        let cuts = if is_mini {
             let spec = opts.spec.as_ref().ok_or_else(|| {
                 anyhow::anyhow!("adam_mini dist run needs a block spec")
             })?;
-            Partition::aligned(&block_cuts(spec), n)
+            Some(block_cuts(spec))
+        } else {
+            None
+        };
+        let partition = if !mode.sharded() {
+            // Replicated mode still defines ranges (unused for comm).
+            Partition::even(layout.total, n)
+        } else if let Some(cuts) = &cuts {
+            Partition::aligned(cuts, n)
         } else {
             Partition::even(layout.total, n)
         };
+        let bucket_elems = (opts.bucket_kb.max(1) * 1024) / 4;
+        let plan =
+            BucketPlan::carve(&layout, cuts.as_deref(), bucket_elems);
         let (nodes, stats) = ring_world(n, opts.link);
         let flat = layout.flatten(params);
         let mut slots = Vec::with_capacity(n);
         for (w, node) in nodes.into_iter().enumerate() {
             let pieces = pieces_for(&layout, partition.ranges[w]);
-            let opt = if opts.zero1 {
+            let opt = if mode.sharded() {
                 let shard = slice_shard(&layout, &pieces, &flat);
                 let spec = if is_mini {
                     Some(shard_spec(&layout, &pieces,
@@ -131,17 +200,21 @@ impl DistTrainer {
                 node,
                 opt,
                 pieces,
-                flat_params: if opts.zero1 { flat.clone() }
+                flat_params: if mode.sharded() { flat.clone() }
                              else { Vec::new() },
             });
         }
         Ok(DistTrainer {
             layout,
             partition,
+            plan,
             slots,
             stats,
-            bucket_elems: (opts.bucket_kb.max(1) * 1024) / 4,
-            zero1: opts.zero1,
+            bucket_elems,
+            mode,
+            link: opts.link,
+            compute: opts.compute,
+            last_timing: None,
             steps: 0,
         })
     }
@@ -158,8 +231,17 @@ impl DistTrainer {
         &self.partition
     }
 
-    pub fn is_zero1(&self) -> bool {
-        self.zero1
+    /// The readiness-bucket plan the streaming pipeline launches by.
+    pub fn plan(&self) -> &BucketPlan {
+        &self.plan
+    }
+
+    pub fn mode(&self) -> StepMode {
+        self.mode
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        self.mode.sharded()
     }
 
     pub fn stats(&self) -> &Arc<CommStats> {
@@ -170,13 +252,19 @@ impl DistTrainer {
         self.steps
     }
 
+    /// Timeline of the most recent streamed step (None until
+    /// [`DistTrainer::begin_step`] has completed once).
+    pub fn last_step_timing(&self) -> Option<StepTiming> {
+        self.last_timing
+    }
+
     /// Fresh per-worker gradient buffers for one step.
     pub fn grad_buffers(&self) -> Vec<Vec<f32>> {
         vec![vec![0.0f32; self.layout.total]; self.slots.len()]
     }
 
-    /// Optimizer-state bytes held across all shards (ZeRO-1) — the
-    /// cluster total, i.e. comparable to a replicated optimizer's
+    /// Optimizer-state bytes held across all shards (sharded modes) —
+    /// the cluster total, i.e. comparable to a replicated optimizer's
     /// `state_bytes`.
     pub fn state_bytes(&self) -> usize {
         self.slots
@@ -185,14 +273,15 @@ impl DistTrainer {
             .sum()
     }
 
-    /// One data-parallel step. `local_grads[w]` is worker `w`'s
-    /// unnormalized gradient sum over its assigned micro-batches (zeros
-    /// if it got none); `n_micro` is the GLOBAL micro-batch count the
-    /// average divides by.
+    /// One batch-synchronous data-parallel step. `local_grads[w]` is
+    /// worker `w`'s unnormalized gradient sum over its assigned
+    /// micro-batches (zeros if it got none); `n_micro` is the GLOBAL
+    /// micro-batch count the average divides by.
     ///
-    /// ZeRO-1: `params` is updated in place and `None` is returned.
-    /// Replicated: `params` is untouched and the reduced (averaged)
-    /// gradient is returned for the caller's replicated update.
+    /// Sharded modes: `params` is updated in place and `None` is
+    /// returned. Replicated: `params` is untouched and the reduced
+    /// (averaged) gradient is returned for the caller's replicated
+    /// update.
     pub fn step(&mut self, params: &mut [Tensor],
                 mut local_grads: Vec<Vec<f32>>, n_micro: usize, lr: f32)
         -> Result<Option<Vec<Tensor>>> {
@@ -210,8 +299,8 @@ impl DistTrainer {
         self.steps += 1;
         let inv = 1.0 / n_micro.max(1) as f32;
         let bucket = self.bucket_elems;
-        let zero1 = self.zero1;
-        let layout = &self.layout;
+        let mode = self.mode;
+        let layout: &FlatLayout = &self.layout;
         let ranges = &self.partition.ranges;
         let slots = &mut self.slots;
         std::thread::scope(|s| -> Result<()> {
@@ -220,26 +309,40 @@ impl DistTrainer {
                 .zip(local_grads.iter_mut())
                 .map(|(slot, grad)| {
                     s.spawn(move || {
-                        ring_all_reduce(&slot.node, grad, bucket,
-                                        TrafficClass::GradReduce);
-                        for x in grad.iter_mut() {
-                            *x *= inv;
+                        match mode {
+                            StepMode::Replicated => {
+                                ring_all_reduce(
+                                    &slot.node, grad, bucket,
+                                    TrafficClass::GradReduce);
+                                for x in grad.iter_mut() {
+                                    *x *= inv;
+                                }
+                            }
+                            StepMode::Zero1 => {
+                                ring_all_reduce(
+                                    &slot.node, grad, bucket,
+                                    TrafficClass::GradReduce);
+                                for x in grad.iter_mut() {
+                                    *x *= inv;
+                                }
+                                step_shard_and_gather(
+                                    slot, layout, ranges, grad, lr);
+                            }
+                            StepMode::Zero2 => {
+                                ring_reduce_scatter_bucketed(
+                                    &slot.node, ranges, grad, bucket,
+                                    TrafficClass::GradScatter);
+                                // Only this worker's shard of the
+                                // gradient is complete — scale and
+                                // step just that.
+                                let (a, b) = ranges[slot.node.rank];
+                                for x in grad[a..b].iter_mut() {
+                                    *x *= inv;
+                                }
+                                step_shard_and_gather(
+                                    slot, layout, ranges, grad, lr);
+                            }
                         }
-                        if !zero1 {
-                            return;
-                        }
-                        if let Some(opt) = &mut slot.opt {
-                            let mut sp = slice_shard(
-                                layout, &slot.pieces, &slot.flat_params);
-                            let sg = slice_shard(
-                                layout, &slot.pieces, grad);
-                            opt.step(&mut sp, &sg, lr);
-                            write_shard(layout, &slot.pieces, &sp,
-                                        &mut slot.flat_params);
-                        }
-                        ring_all_gather(&slot.node, ranges,
-                                        &mut slot.flat_params,
-                                        TrafficClass::ParamGather);
                     })
                 })
                 .collect();
@@ -250,7 +353,7 @@ impl DistTrainer {
             }
             Ok(())
         })?;
-        if self.zero1 {
+        if self.mode.sharded() {
             self.layout.unflatten(&self.slots[0].flat_params, params);
             Ok(None)
         } else {
@@ -267,13 +370,55 @@ impl DistTrainer {
         }
     }
 
+    /// Open a streaming step: per-worker comm threads spin up and the
+    /// driver feeds gradients tensor by tensor via
+    /// [`StepStream::push_grad`]; each readiness bucket's collective
+    /// launches the moment its last gradient lands. Close with
+    /// [`StepStream::finish`].
+    pub fn begin_step(&mut self, n_micro: usize, lr: f32)
+        -> StepStream<'_> {
+        let n = self.slots.len();
+        let total = self.layout.total;
+        let inv = 1.0 / n_micro.max(1) as f32;
+        let mode = self.mode;
+        let ranges = self.partition.ranges.clone();
+        let mut to_workers = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
+        for slot in self.slots.drain(..) {
+            let (tx, rx) = channel::<BucketJob>();
+            let layout = self.layout.clone();
+            let ranges = ranges.clone();
+            joins.push(std::thread::spawn(move || {
+                worker_stream_loop(slot, rx, layout, ranges, mode, inv,
+                                   lr)
+            }));
+            to_workers.push(tx);
+        }
+        let pending: Vec<usize> =
+            self.plan.buckets.iter().map(|b| b.n_spans()).collect();
+        let landed = vec![false; self.layout.spans.len()];
+        let timeline = OverlapTimeline::new(self.compute);
+        StepStream {
+            trainer: self,
+            to_workers,
+            joins,
+            handles: Vec::new(),
+            acc: vec![vec![0.0f32; total]; n],
+            pending,
+            landed,
+            launched: 0,
+            timeline,
+            n_micro: n_micro.max(1),
+        }
+    }
+
     /// Collect the full (sharded) optimizer state at rank 0 through the
     /// transport — the checkpoint path, accounted as `StateSync`
     /// traffic. Returns the assembled state tensor list (rank-major).
     /// Replicated mode moves no bytes and returns an empty list (the
     /// caller owns the replicated optimizer and exports it directly).
     pub fn sync_state(&mut self) -> Result<Vec<Tensor>> {
-        if !self.zero1 {
+        if !self.mode.sharded() {
             return Ok(Vec::new());
         }
         // Per-rank export metadata (names/shapes) — driver side; the
@@ -333,7 +478,7 @@ impl DistTrainer {
     /// list back into the shard optimizers (same world size and
     /// partition as the exporting run).
     pub fn import_state(&mut self, state: &[Tensor]) -> Result<()> {
-        if !self.zero1 {
+        if !self.mode.sharded() {
             if state.is_empty() {
                 return Ok(());
             }
@@ -354,6 +499,231 @@ impl DistTrainer {
             bail!("state list has {} extra tensors", state.len() - cursor);
         }
         Ok(())
+    }
+}
+
+/// Shared tail of the sharded schedules: step this worker's shard
+/// optimizer against the reduced gradient (only the worker's own range
+/// of `reduced` is read) and all-gather the updated parameters.
+fn step_shard_and_gather(slot: &mut WorkerSlot, layout: &FlatLayout,
+                         ranges: &[(usize, usize)], reduced: &[f32],
+                         lr: f32) {
+    if let Some(opt) = &mut slot.opt {
+        let mut sp = slice_shard(layout, &slot.pieces, &slot.flat_params);
+        let sg = slice_shard(layout, &slot.pieces, reduced);
+        opt.step(&mut sp, &sg, lr);
+        write_shard(layout, &slot.pieces, &sp, &mut slot.flat_params);
+    }
+    ring_all_gather(&slot.node, ranges, &mut slot.flat_params,
+                    TrafficClass::ParamGather);
+}
+
+/// One bucket's worth of a worker's gradient, in flight to its comm
+/// thread.
+struct BucketJob {
+    lo: usize,
+    hi: usize,
+    data: Vec<f32>,
+    done: CollectiveDone<usize>,
+    idx: usize,
+}
+
+/// A worker's streamed step: drain bucket collectives in launch order,
+/// then finalize (optimizer step + param all-gather, or hand the
+/// reduced gradient back for the replicated update).
+fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
+                      layout: Arc<FlatLayout>,
+                      ranges: Vec<(usize, usize)>, mode: StepMode,
+                      inv: f32, lr: f32)
+    -> (WorkerSlot, Option<Vec<f32>>) {
+    let rank = slot.node.rank;
+    let mut reduced = vec![0.0f32; layout.total];
+    while let Ok(mut job) = rx.recv() {
+        match mode {
+            StepMode::Replicated | StepMode::Zero1 => {
+                let len = job.data.len().max(1);
+                ring_all_reduce(&slot.node, &mut job.data, len,
+                                TrafficClass::GradReduce);
+                for x in job.data.iter_mut() {
+                    *x *= inv;
+                }
+                reduced[job.lo..job.hi].copy_from_slice(&job.data);
+            }
+            StepMode::Zero2 => {
+                let clipped = clip_ranges(&ranges, job.lo, job.hi);
+                ring_reduce_scatter(&slot.node, &clipped, &mut job.data,
+                                    TrafficClass::GradScatter);
+                let (a, b) = clipped[rank];
+                for x in job.data[a..b].iter_mut() {
+                    *x *= inv;
+                }
+                reduced[job.lo + a..job.lo + b]
+                    .copy_from_slice(&job.data[a..b]);
+            }
+        }
+        job.done.complete(job.idx);
+    }
+    match mode {
+        StepMode::Replicated => {
+            let out = if rank == 0 { Some(reduced) } else { None };
+            (slot, out)
+        }
+        StepMode::Zero1 | StepMode::Zero2 => {
+            step_shard_and_gather(&mut slot, &layout, &ranges, &reduced,
+                                  lr);
+            (slot, None)
+        }
+    }
+}
+
+/// A streaming step in flight (created by [`DistTrainer::begin_step`]).
+///
+/// Contract: push micro-batches in ascending order (`micro` `0..n`,
+/// worker assignment `micro % N` as in the batch-synchronous path);
+/// the FINAL micro-batch's landings trigger bucket launches. Every
+/// span must land for every micro-batch before [`StepStream::finish`].
+/// Dropping the stream without finishing shuts the comm threads down
+/// cleanly but loses the step (and the trainer's workers).
+pub struct StepStream<'a> {
+    trainer: &'a mut DistTrainer,
+    to_workers: Vec<Sender<BucketJob>>,
+    joins: Vec<JoinHandle<(WorkerSlot, Option<Vec<f32>>)>>,
+    /// One nonblocking handle per (bucket, worker) collective.
+    handles: Vec<CollectiveHandle<usize>>,
+    /// Per-worker unnormalized gradient accumulation buffers.
+    acc: Vec<Vec<f32>>,
+    /// Per-bucket count of spans still awaiting their final gradient.
+    pending: Vec<usize>,
+    /// Spans whose FINAL micro-batch gradient has landed (duplicate
+    /// guard — a repeat would underflow the pending counts).
+    landed: Vec<bool>,
+    launched: usize,
+    timeline: OverlapTimeline,
+    n_micro: usize,
+}
+
+impl StepStream<'_> {
+    /// Accumulate micro-batch `micro`'s gradient for tensor `span`.
+    /// On the final micro-batch this may launch one or more bucket
+    /// collectives (the moment a bucket's last gradient lands).
+    pub fn push_grad(&mut self, micro: usize, span: usize,
+                     grad: &Tensor) -> Result<()> {
+        if micro >= self.n_micro {
+            bail!("micro-batch {micro} out of range (n_micro {})",
+                  self.n_micro);
+        }
+        if span >= self.trainer.layout.spans.len() {
+            bail!("span {span} out of range ({} tensors)",
+                  self.trainer.layout.spans.len());
+        }
+        let sp = &self.trainer.layout.spans[span];
+        if grad.numel() != sp.len {
+            bail!("span {span} ({}): gradient has {} elems, expected {}",
+                  sp.name, grad.numel(), sp.len);
+        }
+        let w = micro % self.acc.len();
+        let dst = &mut self.acc[w][sp.offset..sp.offset + sp.len];
+        for (x, y) in dst.iter_mut().zip(&grad.data) {
+            *x += y;
+        }
+        self.timeline.record_compute(sp.len);
+        if micro + 1 == self.n_micro {
+            // Final micro-batch: this tensor's gradient is complete on
+            // every worker; launch any bucket it was the last gate of.
+            if self.landed[span] {
+                bail!("span {span} ({}): duplicate gradient for the \
+                       final micro-batch", sp.name);
+            }
+            self.landed[span] = true;
+            let gated = self.trainer.plan.span_buckets[span].clone();
+            for b in gated {
+                self.pending[b] -= 1;
+                if self.pending[b] == 0 {
+                    self.launch(b);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Launch bucket `b`'s collective on every worker's comm thread.
+    fn launch(&mut self, b: usize) {
+        let bk = self.trainer.plan.buckets[b];
+        for (w, tx) in self.to_workers.iter().enumerate() {
+            let (done, handle) = collective_handle();
+            let data = self.acc[w][bk.lo..bk.hi].to_vec();
+            tx.send(BucketJob { lo: bk.lo, hi: bk.hi, data, done,
+                                idx: b })
+                .expect("worker comm thread hung up");
+            self.handles.push(handle);
+        }
+        self.launched += 1;
+        let scatter_only = self.trainer.mode == StepMode::Zero2;
+        let comm_ns = grad_comm_ns(&self.trainer.link,
+                                   self.to_workers.len(), bk.elems(),
+                                   scatter_only);
+        self.timeline.launch(comm_ns);
+    }
+
+    /// Close the step: wait for every launched collective, run the
+    /// trailing phase (shard optimizer step + parameter all-gather, or
+    /// the replicated hand-back) and restore the trainer. Returns like
+    /// [`DistTrainer::step`]: `None` for sharded modes (params updated
+    /// in place), the reduced gradient for replicated mode.
+    pub fn finish(mut self, params: &mut [Tensor])
+        -> Result<Option<Vec<Tensor>>> {
+        let planned = self.trainer.plan.len();
+        if self.launched != planned {
+            bail!("streamed step incomplete: {}/{planned} buckets \
+                   launched (missing gradients?)", self.launched);
+        }
+        // Closing the queues tells the comm threads to finalize.
+        self.to_workers.clear();
+        let world = self.joins.len();
+        let mut replicated_out: Option<Vec<f32>> = None;
+        for j in self.joins.drain(..) {
+            let (slot, out) = j.join().map_err(|_| {
+                anyhow::anyhow!("dist comm thread panicked")
+            })?;
+            self.trainer.slots.push(slot);
+            if let Some(g) = out {
+                replicated_out = Some(g);
+            }
+        }
+        // Every launched collective's handle has resolved by now (the
+        // comm threads completed each bucket before exiting); drain
+        // them so an unserved bucket is a loud error, not a leak.
+        for h in self.handles.drain(..) {
+            h.wait();
+        }
+        let sharded = self.trainer.mode.sharded();
+        if sharded {
+            let tail = gather_comm_ns(&self.trainer.link, world,
+                                      self.trainer.layout.total);
+            self.timeline.set_tail(tail);
+        }
+        self.trainer.steps += 1;
+        self.trainer.last_timing = Some(self.timeline.timing());
+        if sharded {
+            let flat = std::mem::take(
+                &mut self.trainer.slots[0].flat_params);
+            self.trainer.layout.unflatten(&flat, params);
+            self.trainer.slots[0].flat_params = flat;
+            Ok(None)
+        } else {
+            let reduced = replicated_out.ok_or_else(|| {
+                anyhow::anyhow!("rank 0 returned no reduced gradient")
+            })?;
+            let mut grads: Vec<Tensor> = self
+                .trainer
+                .layout
+                .spans
+                .iter()
+                .map(|sp| Tensor::zeros(&*sp.name, &sp.shape))
+                .collect();
+            self.trainer.layout.unflatten(&reduced, &mut grads);
+            Ok(Some(grads))
+        }
     }
 }
 
@@ -390,25 +760,37 @@ mod tests {
         meta.spec_for(params, Strategy::Hessian).unwrap()
     }
 
+    fn toy_options(optimizer: &str, workers: usize, zero1: bool,
+                   zero2: bool, spec: Option<Vec<BlockView>>)
+        -> DistOptions {
+        DistOptions {
+            workers,
+            bucket_kb: 1,
+            zero1,
+            zero2,
+            optimizer: optimizer.into(),
+            spec,
+            ..Default::default()
+        }
+    }
+
     /// Drive `steps` dist steps with `micro` micro-grads per step,
     /// mirroring the coordinator's i % N assignment; return params.
+    /// `overlap` routes through the streaming pipeline instead of the
+    /// batch-synchronous `step`.
     fn run_dist(optimizer: &str, workers: usize, zero1: bool,
-                steps: usize, micro: usize) -> Vec<Tensor> {
+                zero2: bool, overlap: bool, steps: usize, micro: usize)
+        -> Vec<Tensor> {
         let (mut params, meta) = toy();
         let spec = if optimizer.starts_with("adam_mini") {
             Some(mini_spec(&params, &meta))
         } else {
             None
         };
-        let mut dist = DistTrainer::new(&params, DistOptions {
-            workers,
-            bucket_kb: 1,
-            zero1,
-            optimizer: optimizer.into(),
-            spec,
-            ..Default::default()
-        }).unwrap();
-        let mut replicated = if zero1 {
+        let mut dist = DistTrainer::new(
+            &params, toy_options(optimizer, workers, zero1, zero2,
+                                 spec)).unwrap();
+        let mut replicated = if zero1 || zero2 {
             None
         } else {
             Some(by_name(optimizer, Hyper::default(), &params, &meta)
@@ -416,13 +798,27 @@ mod tests {
         };
         let mut grng = Rng::new(77);
         for _ in 0..steps {
-            let mut local = dist.grad_buffers();
-            for i in 0..micro {
-                let g = rand_grads(&params, &mut grng);
-                dist.layout().accumulate(&mut local[i % workers], &g);
-            }
-            let out =
-                dist.step(&mut params, local, micro, 1e-2).unwrap();
+            let out = if overlap {
+                let grads: Vec<Vec<Tensor>> = (0..micro)
+                    .map(|_| rand_grads(&params, &mut grng))
+                    .collect();
+                let mut stream = dist.begin_step(micro, 1e-2);
+                for (i, g) in grads.iter().enumerate() {
+                    // Reverse span order — backward-pass readiness.
+                    for j in (0..g.len()).rev() {
+                        stream.push_grad(i, j, &g[j]).unwrap();
+                    }
+                }
+                stream.finish(&mut params).unwrap()
+            } else {
+                let mut local = dist.grad_buffers();
+                for i in 0..micro {
+                    let g = rand_grads(&params, &mut grng);
+                    dist.layout().accumulate(&mut local[i % workers],
+                                             &g);
+                }
+                dist.step(&mut params, local, micro, 1e-2).unwrap()
+            };
             if let (Some(opt), Some(g)) = (&mut replicated, out) {
                 opt.step(&mut params, &g, 1e-2);
             }
@@ -470,7 +866,8 @@ mod tests {
         for optimizer in ["adamw", "adam_mini"] {
             let reference = run_host(optimizer, 8, 6);
             for workers in [1usize, 2, 3, 5] {
-                let got = run_dist(optimizer, workers, true, 8, 6);
+                let got = run_dist(optimizer, workers, true, false,
+                                   false, 8, 6);
                 for (a, b) in reference.iter().zip(&got) {
                     let d = a.max_abs_diff(b);
                     assert!(d < 1e-4,
@@ -482,37 +879,161 @@ mod tests {
     }
 
     #[test]
-    fn single_micro_batch_is_bit_exact_across_world_sizes() {
+    fn zero2_matches_host_in_both_pipelines() {
+        for optimizer in ["adamw", "adam_mini"] {
+            let reference = run_host(optimizer, 8, 6);
+            for overlap in [false, true] {
+                for workers in [1usize, 2, 4] {
+                    let got = run_dist(optimizer, workers, true, true,
+                                       overlap, 8, 6);
+                    for (a, b) in reference.iter().zip(&got) {
+                        let d = a.max_abs_diff(b);
+                        assert!(d < 1e-4,
+                                "{optimizer} x{workers} overlap \
+                                 {overlap} {}: drift {d}", a.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_zero1_matches_host() {
+        for optimizer in ["adamw", "adam_mini"] {
+            let reference = run_host(optimizer, 8, 6);
+            for workers in [2usize, 3] {
+                let got = run_dist(optimizer, workers, true, false,
+                                   true, 8, 6);
+                for (a, b) in reference.iter().zip(&got) {
+                    let d = a.max_abs_diff(b);
+                    assert!(d < 1e-4,
+                            "{optimizer} x{workers} streamed {}: \
+                             drift {d}", a.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_micro_batch_is_bit_exact_in_all_modes() {
         // With one micro-batch, idle workers contribute exact zeros:
-        // the N-worker ZeRO-1 run equals the host run bitwise.
+        // every (pipeline × sharding) combination equals the host run
+        // bitwise.
         for optimizer in ["adamw", "adam_mini"] {
             let reference = run_host(optimizer, 6, 1);
-            let got = run_dist(optimizer, 4, true, 6, 1);
-            assert_eq!(reference, got, "{optimizer}");
+            for zero2 in [false, true] {
+                for overlap in [false, true] {
+                    let got = run_dist(optimizer, 4, true, zero2,
+                                       overlap, 6, 1);
+                    assert_eq!(reference, got,
+                               "{optimizer} zero2={zero2} \
+                                overlap={overlap}");
+                }
+            }
         }
     }
 
     #[test]
     fn replicated_mode_matches_host_for_non_shardable() {
-        // LAMB is not elementwise → replicated fallback path.
+        // LAMB is not elementwise → replicated fallback path, both
+        // pipelines.
         let reference = run_host("lamb", 6, 4);
-        let got = run_dist("lamb", 3, false, 6, 4);
-        for (a, b) in reference.iter().zip(&got) {
-            let d = a.max_abs_diff(b);
-            assert!(d < 1e-4, "lamb {}: drift {d}", a.name);
+        for overlap in [false, true] {
+            let got = run_dist("lamb", 3, false, false, overlap, 6, 4);
+            for (a, b) in reference.iter().zip(&got) {
+                let d = a.max_abs_diff(b);
+                assert!(d < 1e-4,
+                        "lamb overlap {overlap} {}: drift {d}", a.name);
+            }
         }
     }
 
     #[test]
-    fn zero1_rejects_non_shardable_optimizers() {
+    fn sharded_modes_reject_non_shardable_optimizers() {
         let (params, _) = toy();
-        let err = DistTrainer::new(&params, DistOptions {
-            workers: 2,
-            optimizer: "adafactor".into(),
-            zero1: true,
-            ..Default::default()
-        });
-        assert!(err.is_err());
+        for (zero1, zero2) in [(true, false), (false, true)] {
+            let err = DistTrainer::new(&params, DistOptions {
+                workers: 2,
+                optimizer: "adafactor".into(),
+                zero1,
+                zero2,
+                ..Default::default()
+            });
+            assert!(err.is_err(), "zero1={zero1} zero2={zero2}");
+        }
+    }
+
+    #[test]
+    fn zero2_moves_fewer_grad_bytes_than_zero1() {
+        let run = |zero2: bool| {
+            let (mut params, _) = toy();
+            let mut dist = DistTrainer::new(
+                &params,
+                toy_options("adamw", 4, true, zero2, None)).unwrap();
+            let mut local = dist.grad_buffers();
+            let mut rng = Rng::new(5);
+            let g = rand_grads(&params, &mut rng);
+            dist.layout().accumulate(&mut local[0], &g);
+            dist.step(&mut params, local, 1, 1e-2).unwrap();
+            let s = dist.stats();
+            (s.bytes(TrafficClass::GradReduce),
+             s.bytes(TrafficClass::GradScatter),
+             s.bytes(TrafficClass::ParamGather))
+        };
+        let total = 272 * 4; // toy flat bytes
+        let (ar1, rs1, ag1) = run(false);
+        assert_eq!(ar1, (2 * 3 * total) as u64);
+        assert_eq!(rs1, 0);
+        assert_eq!(ag1, (3 * total) as u64);
+        let (ar2, rs2, ag2) = run(true);
+        assert_eq!(ar2, 0, "ZeRO-2 must not log all-reduce bytes");
+        assert_eq!(rs2, (3 * total) as u64);
+        assert_eq!(ag2, (3 * total) as u64);
+        // The schedule's headline: 2(N−1)P vs 3(N−1)P per step.
+        assert!(rs2 + ag2 < ar1 + ag1);
+    }
+
+    #[test]
+    fn streamed_step_reports_overlap_win() {
+        let (mut params, _) = toy();
+        // bucket_kb=1 → two readiness buckets for the toy layout.
+        let mut dist = DistTrainer::new(
+            &params, toy_options("adamw", 4, true, false, None))
+            .unwrap();
+        assert!(dist.plan().len() >= 2, "toy plan should bucket");
+        assert!(dist.last_step_timing().is_none());
+        let mut rng = Rng::new(9);
+        let g = rand_grads(&params, &mut rng);
+        let mut stream = dist.begin_step(1, 1e-2);
+        for j in (0..g.len()).rev() {
+            stream.push_grad(0, j, &g[j]).unwrap();
+        }
+        stream.finish(&mut params).unwrap();
+        let t = dist.last_step_timing().unwrap();
+        assert!(t.overlapped_ns < t.sequential_ns,
+                "overlap {:.0} !< sequential {:.0}", t.overlapped_ns,
+                t.sequential_ns);
+        assert!(t.speedup() > 1.0);
+    }
+
+    #[test]
+    fn streamed_step_rejects_missing_and_duplicate_gradients() {
+        let (mut params, _) = toy();
+        let mut dist = DistTrainer::new(
+            &params, toy_options("adamw", 2, true, false, None))
+            .unwrap();
+        let mut rng = Rng::new(9);
+        let g = rand_grads(&params, &mut rng);
+        let mut stream = dist.begin_step(1, 1e-2);
+        stream.push_grad(0, 2, &g[2]).unwrap();
+        // A repeat of a final-micro gradient is an error, not a
+        // silent pending-count underflow.
+        assert!(stream.push_grad(0, 2, &g[2]).is_err());
+        // Out-of-range indices error rather than panic.
+        assert!(stream.push_grad(1, 0, &g[0]).is_err());
+        assert!(stream.push_grad(0, 9, &g[0]).is_err());
+        let err = stream.finish(&mut params);
+        assert!(err.is_err(), "finish must flag unlaunched buckets");
     }
 
     #[test]
@@ -569,4 +1090,3 @@ mod tests {
         assert_eq!(dist.state_bytes(), 4 * (n + blocks));
     }
 }
-

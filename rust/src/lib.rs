@@ -16,8 +16,10 @@
 //! regenerate any paper table/figure ([`experiments`]).
 //!
 //! Scaling layer: [`dist`] is an executable data-parallel engine —
-//! in-process worker threads, bucketed ring all-reduce, ZeRO-1 sharded
-//! optimizer state — driven by the coordinator when a run sets
+//! in-process worker threads, bucketed ring collectives (all-reduce,
+//! reduce-scatter, all-gather), ZeRO-1/2 sharding, and a streaming
+//! bucket pipeline that overlaps collectives with gradient production
+//! (`overlap=true`) — driven by the coordinator when a run sets
 //! `workers > 1`. Its byte-accounted transport makes the paper's
 //! communication claims measurable; `repro report` cross-checks the
 //! measured traffic against the analytical [`cluster`] model.

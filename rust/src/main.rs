@@ -23,8 +23,9 @@ fn usage() -> ! {
          repro exp <name|all> [--quick]\n  repro list\n  repro report\n  \
          repro selfcheck\n\ntrain keys include workers=N (data-parallel \
          engine), bucket_kb=K,\nzero1=BOOL (ZeRO-1 optimizer-state \
-         sharding)\n\nartifacts dir: $ADAM_MINI_ARTIFACTS \
-         (default ./artifacts)"
+         sharding), zero2=BOOL (also shard\ngradients: reduce-scatter \
+         schedule), overlap=BOOL (streaming bucket\npipeline)\n\n\
+         artifacts dir: $ADAM_MINI_ARTIFACTS (default ./artifacts)"
     );
     std::process::exit(2);
 }
@@ -79,13 +80,21 @@ fn cmd_train(args: &[String]) -> Result<()> {
         };
         println!(
             "dist comm ({} workers): grad_reduce {:.1} KB/step, \
-             param_gather {:.1} KB/step, state_sync {:.1} KB total, \
-             modeled link time {:.1} ms",
+             grad_scatter {:.1} KB/step, param_gather {:.1} KB/step, \
+             state_sync {:.1} KB total, modeled link time {:.1} ms",
             cfg.workers,
             per_step(TrafficClass::GradReduce),
+            per_step(TrafficClass::GradScatter),
             per_step(TrafficClass::ParamGather),
             stats.bytes(TrafficClass::StateSync) as f64 / 1e3,
             stats.sim_link_secs() * 1e3
+        );
+    }
+    if let Some(t) = trainer.step_timing() {
+        println!(
+            "overlap timeline (simulated link model): overlapped \
+             {:.2} ms/step vs sequential {:.2} ms/step ({:.2}x)",
+            t.overlapped_ns / 1e6, t.sequential_ns / 1e6, t.speedup()
         );
     }
     Ok(())

@@ -69,9 +69,19 @@ impl<'e> ModelRuntime<'e> {
             lit_i32(&shape, &batch.targets)?])
     }
 
-    /// loss + gradients (the universal substrate for host optimizers).
-    pub fn grad(&self, params: &[Tensor], batch: &Batch)
-        -> Result<(f32, Vec<Tensor>)> {
+    /// loss + per-parameter gradients, streamed: `sink(param_index,
+    /// gradient)` fires once per parameter in REVERSE parameter order
+    /// — the order a backward pass produces gradients (output layers
+    /// first), which is the readiness order overlapped communication
+    /// schedules key on. Each gradient is materialized from the
+    /// executable's output buffer only when its turn comes, so a
+    /// consumer can launch collectives on early gradients while later
+    /// ones are still being converted.
+    pub fn grad_streamed<F>(&self, params: &[Tensor], batch: &Batch,
+                            mut sink: F) -> Result<f32>
+    where
+        F: FnMut(usize, Tensor) -> Result<()>,
+    {
         let [tok, tgt] = self.batch_lits(batch)?;
         let mut args = vec![tok, tgt];
         for p in params {
@@ -79,10 +89,34 @@ impl<'e> ModelRuntime<'e> {
         }
         let outs = self.grad_exe.run(&args)?;
         let loss = lit_to_scalar(&outs[0])?;
-        let grads = outs[1..]
-            .iter()
-            .zip(&self.grad_exe.outputs[1..])
-            .map(|(l, s)| lit_to_tensor(l, s))
+        for j in (0..outs.len() - 1).rev() {
+            let g = lit_to_tensor(&outs[1 + j],
+                                  &self.grad_exe.outputs[1 + j])?;
+            sink(j, g)?;
+        }
+        Ok(loss)
+    }
+
+    /// loss + gradients (the universal substrate for host optimizers);
+    /// a collecting wrapper over [`ModelRuntime::grad_streamed`].
+    pub fn grad(&self, params: &[Tensor], batch: &Batch)
+        -> Result<(f32, Vec<Tensor>)> {
+        let n = self.mm.params.len();
+        let mut grads: Vec<Option<Tensor>> =
+            (0..n).map(|_| None).collect();
+        let loss = self.grad_streamed(params, batch, |j, g| {
+            grads[j] = Some(g);
+            Ok(())
+        })?;
+        let grads = grads
+            .into_iter()
+            .enumerate()
+            .map(|(j, g)| {
+                g.ok_or_else(|| {
+                    anyhow!("grad artifact produced no output for \
+                             parameter {j}")
+                })
+            })
             .collect::<Result<Vec<_>>>()?;
         Ok((loss, grads))
     }

@@ -1,16 +1,21 @@
 //! Integration tests for the `dist` data-parallel engine.
 //!
 //! The core invariant: an N-worker run with the same global batch and
-//! seed matches the 1-worker run's loss curve to float tolerance. The
-//! artifact-free tests drive a self-contained bigram language model
-//! over the synthetic corpus (analytic gradients, no XLA), so they run
-//! on a fresh checkout; the final test exercises the full coordinator
-//! wiring when AOT artifacts are present (skipped loudly otherwise).
+//! seed matches the 1-worker run's loss curve to float tolerance — in
+//! every (gradient schedule × pipeline) combination: ZeRO-1
+//! all-reduce vs ZeRO-2 reduce-scatter, batch-synchronous vs
+//! streaming overlap. The artifact-free tests drive a self-contained
+//! bigram language model over the synthetic corpus (analytic
+//! gradients, no XLA), so they run on a fresh checkout; the final
+//! tests exercise the full coordinator wiring when AOT artifacts are
+//! present (skipped loudly otherwise).
 
 use adam_mini::config::TrainConfig;
+use adam_mini::coordinator::checkpoint::{load_run, save_run};
 use adam_mini::coordinator::Trainer;
 use adam_mini::data::{Batch, Batcher, Corpus, SyntheticSpec};
-use adam_mini::dist::{DistOptions, DistTrainer, TrafficClass};
+use adam_mini::dist::{probe_params, DistOptions, DistTrainer,
+                      TrafficClass};
 use adam_mini::optim::{by_name, Hyper, ModelMeta, ReduceOp};
 use adam_mini::partition::Strategy;
 use adam_mini::runtime::{manifest, Engine};
@@ -102,37 +107,58 @@ fn run_host(optimizer: &str, steps: usize, micro: usize) -> Vec<f32> {
     losses
 }
 
-/// N-worker ZeRO-1 run over the SAME batch stream (micro-batch i of a
-/// step goes to worker i % N).
-fn run_dist(optimizer: &str, workers: usize, steps: usize, micro: usize)
-    -> Vec<f32> {
+fn bigram_options(optimizer: &str, workers: usize, zero2: bool,
+                  spec: Option<Vec<adam_mini::partition::BlockView>>)
+    -> DistOptions {
+    DistOptions {
+        workers,
+        bucket_kb: 1,
+        zero1: true,
+        zero2,
+        optimizer: optimizer.into(),
+        reduce: ReduceOp::Mean,
+        spec,
+        ..Default::default()
+    }
+}
+
+/// N-worker sharded run over the SAME batch stream (micro-batch i of
+/// a step goes to worker i % N). `zero2` picks the gradient schedule;
+/// `overlap` routes through the streaming bucket pipeline.
+fn run_dist(optimizer: &str, workers: usize, zero2: bool, overlap: bool,
+            steps: usize, micro: usize) -> Vec<f32> {
     let mut params = Bigram::init(1);
     let spec = if optimizer.starts_with("adam_mini") {
         Some(mini_spec(&params))
     } else {
         None
     };
-    let mut dist = DistTrainer::new(&params, DistOptions {
-        workers,
-        bucket_kb: 1,
-        zero1: true,
-        optimizer: optimizer.into(),
-        reduce: ReduceOp::Mean,
-        spec,
-        ..Default::default()
-    }).unwrap();
+    let mut dist = DistTrainer::new(
+        &params, bigram_options(optimizer, workers, zero2, spec))
+        .unwrap();
     let mut batcher = corpus_batcher(9);
     let mut losses = Vec::with_capacity(steps);
     for _ in 0..steps {
         let mut total = 0.0;
-        let mut local = dist.grad_buffers();
-        for i in 0..micro {
-            let batch = batcher.next_batch();
-            let (loss, g) = Bigram::loss_grad(&params, &batch);
-            total += loss;
-            dist.layout().accumulate(&mut local[i % workers], &g);
+        if overlap {
+            let mut stream = dist.begin_step(micro, 2e-2);
+            for i in 0..micro {
+                let batch = batcher.next_batch();
+                let (loss, g) = Bigram::loss_grad(&params, &batch);
+                total += loss;
+                stream.push_grad(i, 0, &g[0]).unwrap();
+            }
+            stream.finish(&mut params).unwrap();
+        } else {
+            let mut local = dist.grad_buffers();
+            for i in 0..micro {
+                let batch = batcher.next_batch();
+                let (loss, g) = Bigram::loss_grad(&params, &batch);
+                total += loss;
+                dist.layout().accumulate(&mut local[i % workers], &g);
+            }
+            dist.step(&mut params, local, micro, 2e-2).unwrap();
         }
-        dist.step(&mut params, local, micro, 2e-2).unwrap();
         losses.push(total / micro as f32);
     }
     losses
@@ -147,19 +173,26 @@ fn bigram_model_learns() {
 
 #[test]
 fn n_worker_loss_curve_matches_single_worker() {
+    // Every (schedule × pipeline) combination must track the host
+    // run's loss curve: overlap and gradient sharding change the
+    // communication schedule, never the math.
     for optimizer in ["adamw", "adam_mini"] {
         let reference = run_host(optimizer, 40, 6);
         for workers in [2usize, 3] {
-            let got = run_dist(optimizer, workers, 40, 6);
-            for (step, (a, b)) in
-                reference.iter().zip(&got).enumerate()
-            {
-                assert!((a - b).abs() < 1e-4,
-                        "{optimizer} x{workers} step {step}: {a} vs {b}");
+            for zero2 in [false, true] {
+                for overlap in [false, true] {
+                    let got = run_dist(optimizer, workers, zero2,
+                                       overlap, 40, 6);
+                    for (step, (a, b)) in
+                        reference.iter().zip(&got).enumerate()
+                    {
+                        assert!((a - b).abs() < 1e-4,
+                                "{optimizer} x{workers} zero2={zero2} \
+                                 overlap={overlap} step {step}: \
+                                 {a} vs {b}");
+                    }
+                }
             }
-            let (la, lb) = (reference[39], got[39]);
-            assert!((la - lb).abs() < 1e-4,
-                    "{optimizer} x{workers}: final {la} vs {lb}");
         }
     }
 }
@@ -167,11 +200,19 @@ fn n_worker_loss_curve_matches_single_worker() {
 #[test]
 fn idle_workers_change_nothing_bitwise() {
     // One global micro-batch, four workers: three workers idle; the
-    // run must be bit-identical to the single-worker run.
+    // run must be bit-identical to the single-worker run in all four
+    // (overlap × zero2) mode combinations — idle ranks contribute
+    // exact zeros through reduce-scatter just as through all-reduce.
     for optimizer in ["adamw", "adam_mini"] {
         let reference = run_host(optimizer, 25, 1);
-        let got = run_dist(optimizer, 4, 25, 1);
-        assert_eq!(reference, got, "{optimizer}");
+        for zero2 in [false, true] {
+            for overlap in [false, true] {
+                let got = run_dist(optimizer, 4, zero2, overlap, 25, 1);
+                assert_eq!(reference, got,
+                           "{optimizer} zero2={zero2} \
+                            overlap={overlap}");
+            }
+        }
     }
 }
 
@@ -212,6 +253,105 @@ fn adam_mini_moves_fewer_state_sync_bytes_than_adamw() {
     assert!(ratio < 0.6, "state-sync ratio {ratio}");
 }
 
+#[test]
+fn overlapped_pipeline_is_faster_on_the_simulated_link() {
+    // The tentpole claim, measured: at workers >= 4 the streamed
+    // bucket pipeline's modeled wall clock is strictly below the
+    // batch-synchronous schedule derived from the SAME step's events —
+    // for both gradient schedules.
+    let (params, _) = probe_params(0xBEEF);
+    for zero2 in [false, true] {
+        let mut params = params.clone();
+        let mut dist = DistTrainer::new(&params, DistOptions {
+            workers: 4,
+            bucket_kb: 64,
+            zero1: true,
+            zero2,
+            optimizer: "adamw".into(),
+            ..Default::default()
+        }).unwrap();
+        assert!(dist.plan().len() > 4,
+                "probe inventory should carve many buckets");
+        let mut rng = Rng::new(41);
+        let grads: Vec<Tensor> = params
+            .iter()
+            .map(|p| Tensor::randn(&*p.name, &p.shape, 0.01, &mut rng))
+            .collect();
+        let mut stream = dist.begin_step(1, 1e-4);
+        for j in (0..grads.len()).rev() {
+            stream.push_grad(0, j, &grads[j]).unwrap();
+        }
+        stream.finish(&mut params).unwrap();
+        let t = dist.last_step_timing().unwrap();
+        assert!(t.overlapped_ns < t.sequential_ns,
+                "zero2={zero2}: overlapped {:.0} !< sequential {:.0}",
+                t.overlapped_ns, t.sequential_ns);
+        assert!(t.speedup() > 1.0, "zero2={zero2}");
+    }
+}
+
+#[test]
+fn streamed_zero2_traffic_matches_closed_forms() {
+    // One streamed ZeRO-2 step: reduce-scatter moves (N−1)·P bytes in
+    // its own class, the param all-gather (N−1)·P in its class, and
+    // the all-reduce class stays at exactly zero (the double-count
+    // guard).
+    let mut params = Bigram::init(7);
+    let flat_bytes = (VOCAB * VOCAB * 4) as u64;
+    let mut dist = DistTrainer::new(
+        &params, bigram_options("adamw", 4, true, None)).unwrap();
+    let mut batcher = corpus_batcher(5);
+    let batch = batcher.next_batch();
+    let (_, g) = Bigram::loss_grad(&params, &batch);
+    let mut stream = dist.begin_step(1, 1e-2);
+    stream.push_grad(0, 0, &g[0]).unwrap();
+    stream.finish(&mut params).unwrap();
+    let stats = dist.stats();
+    assert_eq!(stats.bytes(TrafficClass::GradReduce), 0);
+    assert_eq!(stats.bytes(TrafficClass::GradScatter), 3 * flat_bytes);
+    assert_eq!(stats.bytes(TrafficClass::ParamGather), 3 * flat_bytes);
+}
+
+#[test]
+fn zero2_sharded_state_resumes_through_run_checkpoint() {
+    // save_run/load_run round-trips the per-worker shard optimizer
+    // state of a ZeRO-2 run: a fresh engine restored from the file
+    // continues bit-identically to the original.
+    let spec = mini_spec(&Bigram::init(1));
+    let make = |params: &[Tensor]| {
+        DistTrainer::new(params, bigram_options(
+            "adam_mini", 3, true, Some(spec.clone()))).unwrap()
+    };
+    let mut params = Bigram::init(1);
+    let mut a = make(&params);
+    let mut batcher = corpus_batcher(11);
+    let mut step = |d: &mut DistTrainer, p: &mut Vec<Tensor>,
+                    b: &mut Batcher| {
+        let batch = b.next_batch();
+        let (_, g) = Bigram::loss_grad(p, &batch);
+        let mut stream = d.begin_step(1, 2e-2);
+        stream.push_grad(0, 0, &g[0]).unwrap();
+        stream.finish(p).unwrap();
+    };
+    for _ in 0..3 {
+        step(&mut a, &mut params, &mut batcher);
+    }
+    let state = a.sync_state().unwrap();
+    let path = std::env::temp_dir().join("amck_zero2/run.bin");
+    save_run(&path, &params, &state).unwrap();
+    let (params_b, state_b) = load_run(&path).unwrap();
+    let mut params_b = params_b;
+    assert_eq!(params_b, params);
+    let mut b = make(&params_b);
+    b.import_state(&state_b).unwrap();
+    // Both engines consume the same continuation stream.
+    let mut batcher_b = batcher.clone();
+    step(&mut a, &mut params, &mut batcher);
+    step(&mut b, &mut params_b, &mut batcher_b);
+    assert_eq!(params, params_b);
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
 /// Full coordinator wiring over real AOT artifacts (skipped without
 /// them, same convention as tests/integration.rs).
 #[test]
@@ -233,17 +373,24 @@ fn coordinator_dist_run_matches_host_run() {
         log_every: 10,
         ..Default::default()
     };
-    let run = |workers: usize| {
+    let run = |workers: usize, zero2: bool, overlap: bool| {
         let mut cfg = base.clone();
         cfg.workers = workers;
+        cfg.zero2 = zero2;
+        cfg.overlap = overlap;
         let mut t = Trainer::from_config(&engine, &cfg).unwrap();
         let h = t.train(true).unwrap();
         h.final_train_loss()
     };
-    let solo = run(1);
-    let quad = run(4);
-    assert!((solo - quad).abs() < 1e-4,
-            "workers=1 {solo} vs workers=4 {quad}");
+    let solo = run(1, false, false);
+    for (zero2, overlap) in
+        [(false, false), (true, false), (false, true), (true, true)]
+    {
+        let quad = run(4, zero2, overlap);
+        assert!((solo - quad).abs() < 1e-4,
+                "workers=1 {solo} vs workers=4 {quad} \
+                 (zero2={zero2} overlap={overlap})");
+    }
 }
 
 /// Trainer-level checkpoint round-trip across the Host and Dist
@@ -258,7 +405,7 @@ fn trainer_run_checkpoint_roundtrips_host_and_dist() {
             return;
         }
     };
-    for workers in [1usize, 3] {
+    for (workers, zero2) in [(1usize, false), (3, false), (3, true)] {
         let cfg = TrainConfig {
             model: "t48k".into(),
             optimizer: "adam_mini".into(),
@@ -266,10 +413,11 @@ fn trainer_run_checkpoint_roundtrips_host_and_dist() {
             eval_every: 0,
             log_every: 4,
             workers,
+            zero2,
             ..Default::default()
         };
         let path = std::env::temp_dir()
-            .join(format!("amck_dist/run_w{workers}.bin"));
+            .join(format!("amck_dist/run_w{workers}_z{zero2}.bin"));
         let mut a = Trainer::from_config(&engine, &cfg).unwrap();
         a.train(true).unwrap();
         a.save_run_checkpoint(&path).unwrap();
