@@ -1,0 +1,121 @@
+//! Bench: step throughput of the block-granular optimizer API —
+//! roster × (whole-model `step` vs partitioned `step_segment`) on the
+//! ~1.6M-param probe inventory.
+//!
+//! The whole/segment delta isolates the cost of segment dispatch
+//! (binary searches, span lookups, per-segment loop setup) that the
+//! ZeRO-2 bucket-granular pipeline pays per bucket — it should stay in
+//! the noise next to the update arithmetic. Emits
+//! `results/BENCH_optim.json` to seed the optimizer-step perf
+//! trajectory across PRs.
+
+use std::sync::Arc;
+
+use adam_mini::dist::{probe_meta, probe_params};
+use adam_mini::optim::{self, GradView, Hyper, Optimizer, ParamView};
+use adam_mini::tensor::Tensor;
+use adam_mini::util::json::Json;
+use adam_mini::util::prng::Rng;
+use adam_mini::util::timer::Bench;
+
+/// Split `[0, total)` into ~`want` pieces honoring the cut grid
+/// (`None` = any boundary), mimicking a bucket plan.
+fn segments(cuts: Option<Vec<usize>>, total: usize, want: usize)
+    -> Vec<(usize, usize)> {
+    let mut bounds = vec![0usize];
+    match cuts {
+        None => {
+            for k in 1..want {
+                bounds.push(k * total / want);
+            }
+        }
+        Some(cs) => {
+            for k in 1..want {
+                let target = k * total / want;
+                let idx = cs.partition_point(|&c| c < target);
+                let pick = cs.get(idx).copied().unwrap_or(total);
+                if pick > *bounds.last().unwrap() && pick < total {
+                    bounds.push(pick);
+                }
+            }
+        }
+    }
+    bounds.push(total);
+    bounds.dedup();
+    bounds.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+fn main() {
+    let (params, n) = probe_params(0xB0B);
+    let meta = probe_meta();
+    let mut rng = Rng::new(1);
+    let grads: Vec<Tensor> = params
+        .iter()
+        .map(|p| Tensor::randn(&*p.name, &p.shape, 0.01, &mut rng))
+        .collect();
+    println!("optimizer step bench: {n} params, whole vs segmented\n");
+
+    let bench = Bench::quick();
+    let mut records = Vec::new();
+    for name in optim::ROSTER {
+        // Whole-model tensor-list step (the classic path).
+        let mut p_whole = params.clone();
+        let mut opt =
+            optim::by_name(name, Hyper::default(), &p_whole, &meta)
+                .unwrap();
+        let r_whole = bench.run(&format!("optstep/{name}/whole"), || {
+            opt.step(&mut p_whole, &grads, 1e-4);
+        });
+
+        // Segment-partitioned step over flat views (the dist path).
+        let mut opt_seg =
+            optim::by_name(name, Hyper::default(), &params, &meta)
+                .unwrap();
+        let arena = Arc::clone(opt_seg.arena());
+        let mut flat = arena.flatten(&params);
+        let gflat = arena.flatten(&grads);
+        let segs = segments(opt_seg.segment_cuts(), arena.total, 16);
+        let n_segs = segs.len();
+        let r_seg = bench.run(&format!("optstep/{name}/segmented"),
+                              || {
+            opt_seg.begin_step();
+            for &(lo, hi) in &segs {
+                opt_seg.step_segment(
+                    ParamView::new(lo, &mut flat[lo..hi]),
+                    GradView::new(lo, &gflat[lo..hi]), 1e-4);
+            }
+        });
+
+        let overhead =
+            (r_seg.mean_ns - r_whole.mean_ns) / r_whole.mean_ns;
+        println!(
+            "  -> {name}: whole {:.2} ns/param, segmented ({n_segs} \
+             segs) {:.2} ns/param ({:+.1}% vs whole), state {:.1} KB\n",
+            r_whole.mean_ns / n as f64, r_seg.mean_ns / n as f64,
+            overhead * 100.0, opt.state_bytes() as f64 / 1e3);
+        for (mode, r) in [("whole", &r_whole), ("segmented", &r_seg)] {
+            records.push(Json::obj(vec![
+                ("name", Json::str(&r.name)),
+                ("optimizer", Json::str(*name)),
+                ("mode", Json::str(mode)),
+                ("segments", Json::num(if mode == "whole" { 1.0 }
+                                       else { n_segs as f64 })),
+                ("payload_elems", Json::num(n as f64)),
+                ("iters", Json::num(r.iters as f64)),
+                ("mean_ns", Json::num(r.mean_ns)),
+                ("p50_ns", Json::num(r.p50_ns)),
+                ("p95_ns", Json::num(r.p95_ns)),
+                ("ns_per_param", Json::num(r.mean_ns / n as f64)),
+            ]));
+        }
+    }
+
+    std::fs::create_dir_all("results").expect("mkdir results");
+    let out = Json::obj(vec![
+        ("bench", Json::str("optim_step")),
+        ("records", Json::Arr(records)),
+    ]);
+    std::fs::write("results/BENCH_optim.json", out.to_string())
+        .expect("write BENCH_optim.json");
+    println!("wrote results/BENCH_optim.json");
+}

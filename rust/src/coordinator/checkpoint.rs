@@ -10,6 +10,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::optim::StateDict;
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 4] = b"AMCK";
@@ -89,13 +90,15 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
 /// checkpoint (parameters keep their bare names).
 const OPT_PREFIX: &str = "opt::";
 
-/// Save a resumable run checkpoint: parameters plus the optimizer
-/// state exported by [`crate::optim::Optimizer::state_export`] (state
-/// tensor names get an `opt::` prefix inside the container).
+/// Save a resumable run checkpoint: parameters plus the named
+/// optimizer state exported by
+/// [`crate::optim::Optimizer::state_dict`] (state keys get an `opt::`
+/// prefix inside the container; ZeRO-gathered dicts additionally carry
+/// their `rank<r>/` routing prefixes in the key).
 pub fn save_run(path: impl AsRef<Path>, params: &[Tensor],
-                opt_state: &[Tensor]) -> Result<()> {
+                opt_state: &StateDict) -> Result<()> {
     let mut all: Vec<Tensor> = params.to_vec();
-    for t in opt_state {
+    for t in opt_state.entries() {
         let mut t = t.clone();
         t.name = format!("{OPT_PREFIX}{}", t.name);
         all.push(t);
@@ -105,7 +108,7 @@ pub fn save_run(path: impl AsRef<Path>, params: &[Tensor],
 
 /// Load a [`save_run`] checkpoint back into (params, optimizer state).
 pub fn load_run(path: impl AsRef<Path>)
-    -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+    -> Result<(Vec<Tensor>, StateDict)> {
     let all = load_checkpoint(path)?;
     let mut params = Vec::new();
     let mut state = Vec::new();
@@ -121,7 +124,7 @@ pub fn load_run(path: impl AsRef<Path>)
             params.push(t);
         }
     }
-    Ok((params, state))
+    Ok((params, StateDict::from_tensors(state)?))
 }
 
 #[cfg(test)]
@@ -167,12 +170,13 @@ mod tests {
         let mut opt = AdamW::new(Hyper::default(), &params);
         opt.step(&mut params, &grads, 1e-2);
         let path = std::env::temp_dir().join("amck_run/ckpt.bin");
-        save_run(&path, &params, &opt.state_export()).unwrap();
+        save_run(&path, &params, &opt.state_dict()).unwrap();
         let (p2, s2) = load_run(&path).unwrap();
         assert_eq!(p2, params);
         assert_eq!(s2.len(), 3); // m, v, __step — no silent drop.
+        assert!(s2.get("m").is_some() && s2.get("v").is_some());
         let mut opt2 = AdamW::new(Hyper::default(), &p2);
-        opt2.state_import(&s2).unwrap();
+        opt2.load_state_dict(&s2).unwrap();
         // Both instances continue identically.
         let mut pa = params.clone();
         let mut pb = p2;

@@ -203,6 +203,7 @@ impl<'e> Trainer<'e> {
                 bucket_kb: cfg.bucket_kb,
                 zero1: sharded,
                 zero2: cfg.zero2 && can_shard,
+                bucket_step: cfg.bucket_step,
                 optimizer: cfg.optimizer.clone(),
                 reduce: parse_reduce(&cfg.reduce_op)?,
                 hp,
@@ -431,18 +432,20 @@ impl<'e> Trainer<'e> {
         }
     }
 
-    /// Save parameters AND optimizer state (a resumable checkpoint).
-    /// Sharded state is collected through the transport (accounted as
-    /// `state_sync` traffic). The fused path saves parameters only —
-    /// its state is device-resident with no import ABI.
+    /// Save parameters AND optimizer state (a resumable checkpoint,
+    /// written as a named [`crate::optim::StateDict`]). Sharded state
+    /// is collected through the transport (accounted as `state_sync`
+    /// traffic). The fused path saves parameters only — its state is
+    /// device-resident with no import ABI (inspect it with
+    /// [`crate::runtime::model::FusedTrainer::state_dict`]).
     pub fn save_run_checkpoint(&mut self, path: impl AsRef<std::path::Path>)
         -> Result<()> {
         self.sync_params()?;
         let state = match &mut self.mode {
-            TrainerMode::Host(o) => o.state_export(),
-            TrainerMode::Fused(_) => Vec::new(),
+            TrainerMode::Host(o) => o.state_dict(),
+            TrainerMode::Fused(_) => crate::optim::StateDict::new(),
             TrainerMode::Dist { dist, replicated } => match replicated {
-                Some(o) => o.state_export(),
+                Some(o) => o.state_dict(),
                 None => dist.sync_state()?,
             },
         };
@@ -464,7 +467,7 @@ impl<'e> Trainer<'e> {
         }
         self.params = params;
         match &mut self.mode {
-            TrainerMode::Host(o) => o.state_import(&state)?,
+            TrainerMode::Host(o) => o.load_state_dict(&state)?,
             TrainerMode::Fused(_) => {
                 if !state.is_empty() {
                     bail!("fused trainer cannot import host optimizer \
@@ -472,7 +475,7 @@ impl<'e> Trainer<'e> {
                 }
             }
             TrainerMode::Dist { dist, replicated } => match replicated {
-                Some(o) => o.state_import(&state)?,
+                Some(o) => o.load_state_dict(&state)?,
                 None => dist.import_state(&state)?,
             },
         }

@@ -10,22 +10,34 @@
 //!
 //! Buckets are carved in REVERSE parameter order because that is the
 //! order a backward pass emits gradients: the output layers' grads are
-//! ready first, so the tail of the flat space fills first. Oversized
-//! tensors split at Adam-mini Hessian-block cuts when a spec is
-//! present, keeping message boundaries aligned with the shard grid.
+//! ready first, so the tail of the flat space fills first. When a cut
+//! grid is present (the Adam-mini Hessian-block grid), EVERY bucket
+//! boundary is drawn from it — a window with no interior cut extends
+//! to the next cut rather than splitting a block — so bucket-granular
+//! segment stepping (`Optimizer::step_segment`) never splits a block.
 //!
-//! [`OverlapTimeline`] records the two clocks of a streamed step —
-//! the simulated compute clock (gradient production) and the modeled
+//! [`OverlapTimeline`] records the clocks of a streamed step — the
+//! simulated backward-compute clock (gradient production), the modeled
 //! link clock (per-bucket collective durations under the alpha–beta
-//! [`LinkModel`]) — and derives both schedules from one run:
+//! [`LinkModel`]), and the modeled optimizer-step clock
+//! ([`ComputeModel::step_ns_per_elem`], its own resource: shard
+//! stepping runs on the worker while the link moves the next bucket) —
+//! and derives three schedules from one run:
 //!
-//! - **sequential**: all compute, then every collective back-to-back
+//! - **sequential**: all compute, then every gradient collective
+//!   back-to-back, then the trailing step + whole-parameter gather
 //!   (the PR-1 batch-synchronous pipeline);
-//! - **overlapped**: each bucket's collective starts at
-//!   `max(grads ready, link free)` — the streaming pipeline.
+//! - **deferred**: gradient collectives stream per bucket, but the
+//!   optimizer steps once after the LAST one lands, followed by one
+//!   whole-parameter all-gather (the PR-2 pipeline);
+//! - **overlapped**: the live schedule. With bucket-granular stepping
+//!   (ZeRO-2), each bucket chains reduce-scatter → shard-segment step
+//!   → bucket all-gather, so optimizer compute and the trailing
+//!   gather hide behind in-flight collectives instead of serializing
+//!   after the last reduce-scatter.
 //!
-//! Their difference is exactly the comm time hidden behind compute,
-//! which `repro train overlap=true` and `benches/allreduce.rs` report.
+//! `overlapped < deferred < sequential` is the tentpole win,
+//! asserted at `workers = 4` in `tests/dist.rs`.
 
 use super::comm::LinkModel;
 use super::shard::FlatLayout;
@@ -65,9 +77,9 @@ pub struct BucketPlan {
 impl BucketPlan {
     /// Carve `layout` into buckets of at most `bucket_elems` elements.
     /// Whole tensors are grouped greedily from the tail; a tensor
-    /// larger than the budget gets its own buckets, split at the
-    /// nearest `cuts` boundary (the Adam-mini block grid) when one is
-    /// available inside the window.
+    /// larger than the budget gets its own buckets, split ONLY at
+    /// `cuts` boundaries when a grid is present (growing past the
+    /// budget rather than splitting a block).
     pub fn carve(layout: &FlatLayout, cuts: Option<&[usize]>,
                  bucket_elems: usize) -> BucketPlan {
         let bucket_elems = bucket_elems.max(1);
@@ -126,10 +138,22 @@ impl BucketPlan {
     pub fn is_empty(&self) -> bool {
         self.buckets.is_empty()
     }
+
+    /// True when every bucket boundary is drawn from `cuts` — the
+    /// precondition for stepping shard∩bucket segments of a blockwise
+    /// optimizer without splitting a block.
+    pub fn aligned_to(&self, cuts: &[usize]) -> bool {
+        self.buckets.iter().all(|b| {
+            cuts.binary_search(&b.lo).is_ok()
+                && cuts.binary_search(&b.hi).is_ok()
+        })
+    }
 }
 
-/// Split `[lo, hi)` into windows of at most `bucket` elements,
-/// preferring the largest cut in `(a, a+bucket]` as each boundary.
+/// Split `[lo, hi)` into windows of at most `bucket` elements. With a
+/// cut grid, every boundary is drawn from it: prefer the largest cut
+/// in `(a, a+bucket]`; if a window holds no interior cut, extend to
+/// the NEXT cut (oversize beats splitting a block).
 fn split_ranges(lo: usize, hi: usize, bucket: usize,
                 cuts: Option<&[usize]>) -> Vec<(usize, usize)> {
     let mut out = Vec::new();
@@ -140,7 +164,11 @@ fn split_ranges(lo: usize, hi: usize, bucket: usize,
             if let Some(cs) = cuts {
                 let idx = cs.partition_point(|&c| c <= b);
                 if idx > 0 && cs[idx - 1] > a {
+                    // Largest cut inside the window.
                     b = cs[idx - 1];
+                } else {
+                    // No interior cut: grow to the next one (or hi).
+                    b = cs.get(idx).copied().unwrap_or(hi).min(hi);
                 }
             }
         }
@@ -150,20 +178,23 @@ fn split_ranges(lo: usize, hi: usize, bucket: usize,
     out
 }
 
-/// Simulated compute cost of producing gradients, the clock the
-/// overlap timeline runs readiness on. Only the ratio to the
-/// [`LinkModel`] matters; the default puts a ~1.6M-param probe step's
-/// compute within a small factor of its communication so both
-/// schedules are exercised.
+/// Simulated compute costs the overlap timeline runs on. Only ratios
+/// to the [`LinkModel`] matter; the defaults put a ~1.6M-param probe
+/// step's backward compute within a small factor of its communication
+/// so all three schedules are exercised.
 #[derive(Debug, Clone, Copy)]
 pub struct ComputeModel {
     /// Nanoseconds of backward compute per gradient element produced.
     pub ns_per_elem: f64,
+    /// Nanoseconds of optimizer compute per parameter element stepped
+    /// (the shard step runs on the worker — modeled as its own
+    /// resource that overlaps the link).
+    pub step_ns_per_elem: f64,
 }
 
 impl Default for ComputeModel {
     fn default() -> Self {
-        ComputeModel { ns_per_elem: 2.0 }
+        ComputeModel { ns_per_elem: 2.0, step_ns_per_elem: 1.0 }
     }
 }
 
@@ -179,7 +210,7 @@ pub fn grad_comm_ns(link: &LinkModel, world: usize, elems: usize,
     link.ring_ns(rounds, elems as f64 * 4.0 / world as f64)
 }
 
-/// Modeled wall time of the trailing parameter all-gather:
+/// Modeled wall time of a parameter all-gather over `elems`:
 /// `(N−1)` rounds of `elems/N` f32s per rank.
 pub fn gather_comm_ns(link: &LinkModel, world: usize, elems: usize)
     -> f64 {
@@ -189,17 +220,35 @@ pub fn gather_comm_ns(link: &LinkModel, world: usize, elems: usize)
     link.ring_ns(world - 1, elems as f64 * 4.0 / world as f64)
 }
 
+/// One launched bucket's modeled costs.
+#[derive(Debug, Clone, Copy)]
+struct BucketEvent {
+    /// Compute clock when the bucket's last gradient landed.
+    ready: f64,
+    /// Gradient collective (all-reduce or reduce-scatter).
+    scatter_ns: f64,
+    /// Shard-segment optimizer step (bucket-granular mode only).
+    step_ns: f64,
+    /// Bucket parameter all-gather (bucket-granular mode only).
+    gather_ns: f64,
+}
+
 /// Event recorder for one streamed step: compute advances as gradients
-/// land, bucket launches pin (ready time, modeled comm duration), and
-/// the trailing all-gather is appended once. [`OverlapTimeline::timing`]
-/// folds the events into both schedules' wall clocks.
+/// land, bucket launches pin their modeled costs, and the trailing
+/// phase (if any) is appended once. [`OverlapTimeline::timing`] folds
+/// the events into all three schedules' wall clocks.
 #[derive(Debug, Clone)]
 pub struct OverlapTimeline {
     compute: ComputeModel,
     compute_ns: f64,
-    /// Per launched bucket: (grads-ready time, modeled comm ns).
-    launches: Vec<(f64, f64)>,
-    tail_ns: f64,
+    events: Vec<BucketEvent>,
+    /// Trailing phase actually run by this schedule (deferred modes):
+    /// (optimizer step ns, whole-gather comm ns).
+    tail_step_ns: f64,
+    tail_comm_ns: f64,
+    /// Trailing phase the DEFERRED comparator would run (set when the
+    /// live schedule is bucket-granular and has no trailing phase).
+    deferred_tail: Option<(f64, f64)>,
 }
 
 impl OverlapTimeline {
@@ -207,9 +256,17 @@ impl OverlapTimeline {
         OverlapTimeline {
             compute,
             compute_ns: 0.0,
-            launches: Vec::new(),
-            tail_ns: 0.0,
+            events: Vec::new(),
+            tail_step_ns: 0.0,
+            tail_comm_ns: 0.0,
+            deferred_tail: None,
         }
+    }
+
+    /// The configured cost model (drivers size per-bucket step costs
+    /// with `step_ns_per_elem`).
+    pub fn compute_model(&self) -> ComputeModel {
+        self.compute
     }
 
     /// Advance the compute clock by one produced gradient tensor.
@@ -217,53 +274,121 @@ impl OverlapTimeline {
         self.compute_ns += elems as f64 * self.compute.ns_per_elem;
     }
 
-    /// A bucket launched now (grads ready at the current compute
-    /// clock) with the given modeled collective duration.
+    /// A bucket's gradient collective launched now (grads ready at the
+    /// current compute clock); the optimizer steps later, in a
+    /// trailing phase.
     pub fn launch(&mut self, comm_ns: f64) {
-        self.launches.push((self.compute_ns, comm_ns));
+        self.events.push(BucketEvent {
+            ready: self.compute_ns,
+            scatter_ns: comm_ns,
+            step_ns: 0.0,
+            gather_ns: 0.0,
+        });
     }
 
-    /// Trailing serialized phase (optimizer step + param all-gather).
-    pub fn set_tail(&mut self, ns: f64) {
-        self.tail_ns = ns;
+    /// A bucket-granular launch (ZeRO-2 streaming): reduce-scatter,
+    /// then the shard∩bucket segment step, then the bucket
+    /// all-gather, all chained per bucket.
+    pub fn launch_granular(&mut self, scatter_ns: f64, step_ns: f64,
+                           gather_ns: f64) {
+        self.events.push(BucketEvent {
+            ready: self.compute_ns,
+            scatter_ns,
+            step_ns,
+            gather_ns,
+        });
+    }
+
+    /// Trailing serialized phase this schedule actually runs
+    /// (whole-shard optimizer step + whole-parameter all-gather).
+    pub fn set_tail(&mut self, step_ns: f64, comm_ns: f64) {
+        self.tail_step_ns = step_ns;
+        self.tail_comm_ns = comm_ns;
+    }
+
+    /// Trailing phase of the deferred-step comparator, for runs whose
+    /// live schedule is bucket-granular (their own tail is empty).
+    pub fn set_deferred_tail(&mut self, step_ns: f64, comm_ns: f64) {
+        self.deferred_tail = Some((step_ns, comm_ns));
     }
 
     pub fn timing(&self) -> StepTiming {
-        let bucket_comm: f64 =
-            self.launches.iter().map(|&(_, c)| c).sum();
-        // Overlapped: the link serializes buckets; each starts at
-        // max(ready, link free). The step ends when both clocks have
-        // drained, plus the trailing phase.
-        let mut link_free = 0.0f64;
-        for &(ready, comm) in &self.launches {
-            link_free = link_free.max(ready) + comm;
+        let (def_step, def_comm) = self
+            .deferred_tail
+            .unwrap_or((self.tail_step_ns, self.tail_comm_ns));
+        // Live schedule: the link serializes collectives; the
+        // optimizer stream serializes segment steps; a bucket's step
+        // starts when its scatter lands, its gather when its step and
+        // the link are both free.
+        let mut link = 0.0f64;
+        let mut opt_stream = 0.0f64;
+        let mut scatter_total = 0.0;
+        let mut gather_total = 0.0;
+        let mut step_total = 0.0;
+        // Deferred comparator: same per-bucket gradient collectives,
+        // no interleaved steps/gathers.
+        let mut link_deferred = 0.0f64;
+        for ev in &self.events {
+            let s_end = link.max(ev.ready) + ev.scatter_ns;
+            link = s_end;
+            if ev.step_ns > 0.0 || ev.gather_ns > 0.0 {
+                let st_end = opt_stream.max(s_end) + ev.step_ns;
+                opt_stream = st_end;
+                link = link.max(st_end) + ev.gather_ns;
+            }
+            link_deferred = link_deferred.max(ev.ready) + ev.scatter_ns;
+            scatter_total += ev.scatter_ns;
+            gather_total += ev.gather_ns;
+            step_total += ev.step_ns;
         }
-        let overlapped_ns = link_free.max(self.compute_ns) + self.tail_ns;
+        let overlapped_ns = link.max(opt_stream).max(self.compute_ns)
+            + self.tail_step_ns
+            + self.tail_comm_ns;
+        let deferred_ns = link_deferred.max(self.compute_ns) + def_step
+            + def_comm;
+        let sequential_ns =
+            self.compute_ns + scatter_total + def_step + def_comm;
         StepTiming {
             overlapped_ns,
-            sequential_ns: self.compute_ns + bucket_comm + self.tail_ns,
+            deferred_ns,
+            sequential_ns,
             compute_ns: self.compute_ns,
-            comm_ns: bucket_comm + self.tail_ns,
+            comm_ns: scatter_total + gather_total + self.tail_comm_ns,
+            step_ns: step_total + self.tail_step_ns,
         }
     }
 }
 
-/// Both schedules' modeled wall clocks for one step, derived from the
-/// same recorded events — the apples-to-apples overlap comparison.
+/// The three schedules' modeled wall clocks for one step, derived from
+/// the same recorded events — the apples-to-apples overlap comparison.
 #[derive(Debug, Clone, Copy)]
 pub struct StepTiming {
-    /// Streaming pipeline: collectives hide behind compute.
+    /// The live streaming pipeline (bucket-granular stepping when
+    /// active): collectives AND optimizer compute hide behind compute.
     pub overlapped_ns: f64,
-    /// PR-1 batch-synchronous pipeline: compute, then all comm.
+    /// Streamed collectives but the optimizer steps after the LAST
+    /// gradient collective, then one whole all-gather (PR-2 pipeline).
+    pub deferred_ns: f64,
+    /// PR-1 batch-synchronous pipeline: compute, then all comm, then
+    /// step + gather.
     pub sequential_ns: f64,
     pub compute_ns: f64,
     pub comm_ns: f64,
+    /// Modeled optimizer compute in this step.
+    pub step_ns: f64,
 }
 
 impl StepTiming {
     /// Sequential / overlapped — > 1 whenever overlap hides anything.
     pub fn speedup(&self) -> f64 {
         self.sequential_ns / self.overlapped_ns.max(1e-9)
+    }
+
+    /// Deferred / overlapped — > 1 when bucket-granular stepping
+    /// shortens the critical path vs stepping after the last
+    /// reduce-scatter.
+    pub fn granular_gain(&self) -> f64 {
+        self.deferred_ns / self.overlapped_ns.max(1e-9)
     }
 }
 
@@ -341,6 +466,25 @@ mod tests {
             .map(|b| (b.lo, b.hi))
             .collect();
         assert_eq!(got, vec![(72, 100), (48, 72), (24, 48), (0, 24)]);
+        assert!(plan.aligned_to(&cuts));
+    }
+
+    #[test]
+    fn carve_never_splits_a_block_even_when_oversized() {
+        // Blocks of 40 > budget 16: every boundary still lands on the
+        // grid — a window without an interior cut extends to the next
+        // one instead of splitting a block.
+        let l = layout(&[120]);
+        let cuts = vec![0, 40, 80, 120];
+        let plan = BucketPlan::carve(&l, Some(&cuts), 16);
+        covers_exactly(&plan, 120);
+        assert!(plan.aligned_to(&cuts));
+        let got: Vec<(usize, usize)> = plan
+            .buckets
+            .iter()
+            .map(|b| (b.lo, b.hi))
+            .collect();
+        assert_eq!(got, vec![(80, 120), (40, 80), (0, 40)]);
     }
 
     #[test]
@@ -354,14 +498,14 @@ mod tests {
 
     #[test]
     fn timeline_overlap_is_bounded_by_both_clocks() {
-        let cm = ComputeModel { ns_per_elem: 1.0 };
+        let cm = ComputeModel { ns_per_elem: 1.0, step_ns_per_elem: 0.0 };
         let mut tl = OverlapTimeline::new(cm);
         // Three tensors of 100 elems; a bucket launches after each.
         for _ in 0..3 {
             tl.record_compute(100);
             tl.launch(50.0);
         }
-        tl.set_tail(25.0);
+        tl.set_tail(0.0, 25.0);
         let t = tl.timing();
         assert!((t.compute_ns - 300.0).abs() < 1e-9);
         assert!((t.comm_ns - 175.0).abs() < 1e-9);
@@ -369,13 +513,16 @@ mod tests {
         // Overlapped: bucket 1 at 100→150, bucket 2 at max(200,150)=200
         // →250, bucket 3 at max(300,250)=300→350, +tail = 375.
         assert!((t.overlapped_ns - 375.0).abs() < 1e-9);
+        // No bucket-granular events → deferred is the live schedule.
+        assert!((t.deferred_ns - t.overlapped_ns).abs() < 1e-9);
         assert!(t.overlapped_ns < t.sequential_ns);
         assert!(t.speedup() > 1.0);
     }
 
     #[test]
     fn timeline_comm_bound_step_still_overlaps_early_buckets() {
-        let cm = ComputeModel { ns_per_elem: 0.01 };
+        let cm = ComputeModel { ns_per_elem: 0.01,
+                                step_ns_per_elem: 0.0 };
         let mut tl = OverlapTimeline::new(cm);
         tl.record_compute(100);
         tl.launch(1000.0);
@@ -385,6 +532,31 @@ mod tests {
         // Link is the bottleneck, but the first bucket started at 1.0
         // instead of 2.0 — still strictly better than sequential.
         assert!(t.overlapped_ns < t.sequential_ns);
+    }
+
+    #[test]
+    fn granular_stepping_beats_deferred_when_compute_bound() {
+        // Compute-bound step: gradients land slowly, so per-bucket
+        // step+gather hides entirely behind gradient production, while
+        // the deferred schedule serializes the whole step + whole
+        // gather after the last scatter.
+        let cm = ComputeModel { ns_per_elem: 10.0, step_ns_per_elem: 1.0 };
+        let mut tl = OverlapTimeline::new(cm);
+        for _ in 0..10 {
+            tl.record_compute(100);
+            // scatter 80, step 25, gather 80 per bucket.
+            tl.launch_granular(80.0, 25.0, 80.0);
+        }
+        // Deferred comparator: one 250 step + one 700 whole-gather.
+        tl.set_deferred_tail(250.0, 700.0);
+        let t = tl.timing();
+        // compute = 10_000; live: last bucket chain ends ~10_185;
+        // deferred: 10_000 + 950.
+        assert!(t.overlapped_ns < t.deferred_ns,
+                "overlapped {:.0} !< deferred {:.0}", t.overlapped_ns,
+                t.deferred_ns);
+        assert!(t.deferred_ns < t.sequential_ns);
+        assert!(t.granular_gain() > 1.0);
     }
 
     #[test]

@@ -62,7 +62,7 @@ use anyhow::Result;
 use crate::cluster::{ring_allgather_bytes, ring_allreduce_bytes,
                      ring_reducescatter_bytes, ADAMW_PROFILE,
                      ADAM_MINI_PROFILE};
-use crate::optim::{Hyper, ReduceOp};
+use crate::optim::{self, Hyper, ModelMeta, ReduceOp};
 use crate::partition::{partition_spec, Strategy};
 use crate::tensor::Tensor;
 use crate::util::csv::ascii_table;
@@ -91,15 +91,23 @@ pub fn probe_params(seed: u64) -> (Vec<Tensor>, usize) {
     (params, n)
 }
 
+/// Model metadata matching [`probe_params`].
+pub fn probe_meta() -> ModelMeta {
+    ModelMeta {
+        n_heads: 8,
+        stacked: ["wq", "wk", "wv", "wo", "w1", "w3", "w2", "attn_norm",
+                  "mlp_norm"].iter().map(|s| s.to_string()).collect(),
+    }
+}
+
 fn probe_spec(params: &[Tensor]) -> Result<Vec<crate::partition::BlockView>> {
     let shapes: Vec<(String, Vec<usize>)> = params
         .iter()
         .map(|p| (p.name.clone(), p.shape.clone()))
         .collect();
-    let stacked: Vec<String> =
-        ["wq", "wk", "wv", "wo", "w1", "w3", "w2", "attn_norm",
-         "mlp_norm"].iter().map(|s| s.to_string()).collect();
-    partition_spec(&shapes, 8, &stacked, Strategy::Hessian)
+    let meta = probe_meta();
+    partition_spec(&shapes, meta.n_heads, &meta.stacked,
+                   Strategy::Hessian)
 }
 
 /// Measured vs `cluster.rs`-modeled traffic for one optimizer on the
@@ -272,6 +280,35 @@ pub fn traffic_report() -> Result<()> {
              if z2 < z1 { "[OK: reduce-scatter schedule moves \
                            strictly fewer bytes]" }
              else { "[FAIL]" });
+    state_dict_schema_report()?;
+    Ok(())
+}
+
+/// Print each probe optimizer's named state-dict schema — the wire
+/// format checkpointing and the ZeRO state router move (replaces the
+/// old fragile positional `m…, vb…, __step` convention).
+fn state_dict_schema_report() -> Result<()> {
+    let (params, _) = probe_params(0xD157);
+    let meta = probe_meta();
+    println!("\nstate-dict schema (host optimizers, probe inventory):");
+    let mut rows = Vec::new();
+    for name in ["adamw", "adam_mini", "sgd", "lion"] {
+        let opt = optim::by_name(name, Hyper::default(), &params,
+                                 &meta)?;
+        let sd = opt.state_dict();
+        let mut keys: Vec<&str> = sd.keys().take(4).collect();
+        if sd.len() > 4 {
+            keys.push("...");
+        }
+        rows.push(vec![
+            name.to_string(),
+            sd.len().to_string(),
+            format!("{:.1} KB", sd.total_elems() as f64 * 4.0 / 1e3),
+            keys.join(", "),
+        ]);
+    }
+    println!("{}", ascii_table(
+        &["Optimizer", "Entries", "State bytes", "Keys"], &rows));
     Ok(())
 }
 

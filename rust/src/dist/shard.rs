@@ -1,15 +1,20 @@
-//! ZeRO-1 sharding: the flattened parameter space, its contiguous
+//! ZeRO sharding: the flattened parameter space, its contiguous
 //! per-worker partition, and construction of per-shard optimizers.
 //!
-//! Each worker owns one contiguous range of the flat space, holds
-//! optimizer state ONLY for that range, steps only its range, and
-//! all-gathers updated parameters afterwards. Correctness requires the
-//! sharded update to equal the replicated one, which holds when
+//! The flat space itself IS the optimizer layer's [`Arena`]
+//! (`optim::core`) — re-exported here as [`FlatLayout`] — so shard
+//! optimizers step their ranges directly through
+//! `Optimizer::step_segment` views with no tensor-list clone
+//! round-trips. Each worker owns one contiguous range of the flat
+//! space, holds optimizer state ONLY for that range, steps only its
+//! range, and all-gathers updated parameters afterwards. Correctness
+//! requires the sharded update to equal the replicated one, which
+//! holds when
 //!
 //! - the update is elementwise (AdamW, SGD, Lion, AdaGrad), with any
 //!   shard boundary, or
 //! - the update is blockwise on gradients every worker already has
-//!   post-all-reduce (Adam-mini), with shard boundaries aligned to
+//!   post-reduction (Adam-mini), with shard boundaries aligned to
 //!   Hessian-block boundaries — [`block_cuts`] + [`Partition::aligned`].
 //!
 //! Optimizers whose update couples a whole tensor (LAMB's trust ratio,
@@ -18,80 +23,16 @@
 
 use anyhow::{bail, Result};
 
+use crate::optim::extra::AdaGrad;
 use crate::optim::{AdamMini, AdamW, Hyper, Lion, Optimizer, ReduceOp,
                    Sgd};
-use crate::optim::extra::AdaGrad;
 use crate::partition::BlockView;
 use crate::tensor::Tensor;
 
+pub use crate::optim::core::{Arena as FlatLayout, Span};
+
 /// A `Send` host optimizer (worker threads own their shard optimizer).
 pub type SendOptimizer = Box<dyn Optimizer + Send>;
-
-/// One tensor's placement in the flattened parameter space.
-#[derive(Debug, Clone)]
-pub struct Span {
-    pub name: String,
-    pub shape: Vec<usize>,
-    pub offset: usize,
-    pub len: usize,
-}
-
-/// The flattened parameter space: tensor order is parameter order.
-#[derive(Debug, Clone)]
-pub struct FlatLayout {
-    pub spans: Vec<Span>,
-    pub total: usize,
-}
-
-impl FlatLayout {
-    pub fn of(params: &[Tensor]) -> FlatLayout {
-        let mut spans = Vec::with_capacity(params.len());
-        let mut offset = 0;
-        for p in params {
-            let len = p.numel();
-            spans.push(Span {
-                name: p.name.clone(),
-                shape: p.shape.clone(),
-                offset,
-                len,
-            });
-            offset += len;
-        }
-        FlatLayout { spans, total: offset }
-    }
-
-    pub fn flatten(&self, params: &[Tensor]) -> Vec<f32> {
-        assert_eq!(params.len(), self.spans.len());
-        let mut flat = Vec::with_capacity(self.total);
-        for (p, s) in params.iter().zip(&self.spans) {
-            debug_assert_eq!(p.numel(), s.len, "{}: layout drift", s.name);
-            flat.extend_from_slice(&p.data);
-        }
-        flat
-    }
-
-    /// Copy a flat vector back into the tensor list.
-    pub fn unflatten(&self, flat: &[f32], params: &mut [Tensor]) {
-        assert_eq!(flat.len(), self.total);
-        assert_eq!(params.len(), self.spans.len());
-        for (p, s) in params.iter_mut().zip(&self.spans) {
-            p.data.copy_from_slice(&flat[s.offset..s.offset + s.len]);
-        }
-    }
-
-    /// flat += tensors (gradient accumulation into a worker's buffer).
-    pub fn accumulate(&self, flat: &mut [f32], grads: &[Tensor]) {
-        assert_eq!(flat.len(), self.total);
-        assert_eq!(grads.len(), self.spans.len());
-        for (g, s) in grads.iter().zip(&self.spans) {
-            for (x, y) in
-                flat[s.offset..s.offset + s.len].iter_mut().zip(&g.data)
-            {
-                *x += y;
-            }
-        }
-    }
-}
 
 /// Contiguous per-worker ranges covering `[0, total)`.
 #[derive(Debug, Clone)]
@@ -143,7 +84,7 @@ impl Partition {
 }
 
 /// Flat-space cut points at every Hessian-block boundary of a spec
-/// (includes 0 and total — the valid ZeRO-1 boundaries for Adam-mini).
+/// (includes 0 and total — the valid ZeRO boundaries for Adam-mini).
 pub fn block_cuts(spec: &[BlockView]) -> Vec<usize> {
     let mut cuts = vec![0];
     let mut offset = 0;
@@ -195,7 +136,9 @@ pub fn pieces_for(layout: &FlatLayout, range: (usize, usize))
     pieces
 }
 
-/// Materialize a worker's shard of `flat` as 1-D named tensors.
+/// Materialize a worker's shard of `flat` as 1-D named tensors (the
+/// shard optimizer's constructor inventory — its sub-arena; the step
+/// path itself works on flat views, not on these).
 pub fn slice_shard(layout: &FlatLayout, pieces: &[ShardPiece],
                    flat: &[f32]) -> Vec<Tensor> {
     pieces
@@ -209,17 +152,6 @@ pub fn slice_shard(layout: &FlatLayout, pieces: &[ShardPiece],
             )
         })
         .collect()
-}
-
-/// Write updated shard tensors back into the worker's flat replica.
-pub fn write_shard(layout: &FlatLayout, pieces: &[ShardPiece],
-                   shard: &[Tensor], flat: &mut [f32]) {
-    assert_eq!(pieces.len(), shard.len());
-    for (p, t) in pieces.iter().zip(shard) {
-        let s = &layout.spans[p.span];
-        flat[s.offset + p.lo..s.offset + p.hi]
-            .copy_from_slice(&t.data);
-    }
 }
 
 /// Per-piece Adam-mini block views. Piece boundaries must be aligned to
@@ -248,13 +180,14 @@ pub fn shard_spec(layout: &FlatLayout, pieces: &[ShardPiece],
         .collect()
 }
 
-/// True if `optimizer` admits an exact ZeRO-1 sharded update.
+/// True if `optimizer` admits an exact ZeRO sharded update.
 pub fn shardable(optimizer: &str) -> bool {
     optimizer.starts_with("adam_mini")
         || matches!(optimizer, "adamw" | "sgd" | "lion" | "adagrad")
 }
 
-/// Build the optimizer instance for one worker's shard.
+/// Build the optimizer instance for one worker's shard. The shard
+/// tensors become the optimizer's (shard-local) arena.
 ///
 /// `spec` is required for (and only for) `adam_mini*` — the per-piece
 /// block views from [`shard_spec`].
@@ -276,7 +209,7 @@ pub fn build_shard_optimizer(optimizer: &str, hp: Hyper,
                 Box::new(AdaGrad::new(shard_params, 0.9, hp.eps))
             }
             other => bail!(
-                "{other:?} is not ZeRO-1 shardable (non-elementwise \
+                "{other:?} is not ZeRO shardable (non-elementwise \
                  update); run with zero1=false"),
         }
     })
@@ -382,30 +315,22 @@ mod tests {
     }
 
     #[test]
-    fn pieces_slice_and_write_back() {
+    fn pieces_slice_shard_views() {
         let mut rng = Rng::new(2);
         let params = toy_params(&mut rng);
         let layout = FlatLayout::of(&params);
-        let mut flat = layout.flatten(&params);
+        let flat = layout.flatten(&params);
         // A range straddling embed's tail and wq's head.
         let pieces = pieces_for(&layout, (24, 40));
         assert_eq!(pieces.len(), 2);
         assert_eq!((pieces[0].lo, pieces[0].hi), (24, 32));
         assert_eq!((pieces[1].lo, pieces[1].hi), (0, 8));
-        let mut shard = slice_shard(&layout, &pieces, &flat);
+        assert!(pieces.iter().all(|p| !p.is_empty()));
+        let shard = slice_shard(&layout, &pieces, &flat);
         assert_eq!(shard[0].data, flat[24..32].to_vec());
-        for t in shard.iter_mut() {
-            for x in t.data.iter_mut() {
-                *x += 1.0;
-            }
-        }
-        let orig = flat.clone();
-        write_shard(&layout, &pieces, &shard, &mut flat);
-        for i in 0..layout.total {
-            let expect =
-                if (24..40).contains(&i) { orig[i] + 1.0 } else { orig[i] };
-            assert_eq!(flat[i], expect);
-        }
+        assert_eq!(shard[1].data, flat[32..40].to_vec());
+        assert_eq!(shard[0].name, "embed[24..32]");
+        assert_eq!(shard[1].name, "wq[0..8]");
     }
 
     #[test]

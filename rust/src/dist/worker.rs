@@ -15,12 +15,20 @@
 //!    bucket's collective launches the moment its last tensor arrives)
 //!    executes one of three schedules:
 //!    - **ZeRO-1**: bucketed ring all-reduce, step this worker's shard
-//!      optimizer over its contiguous shard, ring-all-gather the
-//!      updated parameters;
+//!      over its contiguous range (`Optimizer::step_segment` on the
+//!      flat buffers — no tensor-list clone round-trips), ring
+//!      all-gather the updated parameters;
 //!    - **ZeRO-2**: bucketed ring **reduce-scatter** (each worker only
 //!      ever holds its gradient shard reduced — `(N−1)·P` bytes
-//!      instead of the all-reduce's `2(N−1)·P`), step the shard
-//!      optimizer, ring-all-gather the updated parameters;
+//!      instead of the all-reduce's `2(N−1)·P`), step the shard,
+//!      all-gather the updated parameters. In the streaming pipeline
+//!      this is **bucket-granular**: the moment a bucket's
+//!      reduce-scatter lands, the worker steps its shard∩bucket
+//!      segment and immediately launches that bucket's parameter
+//!      all-gather — optimizer compute and the gather overlap
+//!      in-flight collectives instead of serializing after the last
+//!      reduce-scatter ([`StepTiming::granular_gain`] measures the
+//!      modeled win; `bucket_step=false` restores the deferred tail);
 //!    - **replicated**: all-reduce and return the reduced gradient —
 //!      the identical per-replica update is executed once by the
 //!      caller (non-shardable optimizers).
@@ -29,7 +37,9 @@
 //! the single-worker run (idle workers contribute exact zeros, and
 //! x + 0 is exact in any summation order); with several micro-batches
 //! they match to float tolerance (ring summation order differs from
-//! sequential accumulation).
+//! sequential accumulation). Bucket-granular stepping preserves this:
+//! segment boundaries are drawn from the optimizer's cut grid, so the
+//! per-element / per-block update math is unchanged.
 
 use anyhow::{bail, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -44,9 +54,9 @@ use super::comm::{collective_handle, ring_world, CollectiveDone,
                   CollectiveHandle, CommStats, LinkModel, RingNode,
                   TrafficClass};
 use super::shard::{block_cuts, build_shard_optimizer, pieces_for,
-                   shard_spec, shardable, slice_shard, write_shard,
-                   FlatLayout, Partition, SendOptimizer, ShardPiece};
-use crate::optim::{Hyper, Optimizer, ReduceOp};
+                   shard_spec, shardable, slice_shard, FlatLayout,
+                   Partition, SendOptimizer};
+use crate::optim::{GradView, Hyper, ParamView, ReduceOp, StateDict};
 use crate::partition::BlockView;
 use crate::tensor::Tensor;
 
@@ -77,7 +87,8 @@ impl StepMode {
 }
 
 /// Engine configuration (mirrors the `workers`/`bucket_kb`/`zero1`/
-/// `zero2` config keys plus what optimizer construction needs).
+/// `zero2`/`bucket_step` config keys plus what optimizer construction
+/// needs).
 pub struct DistOptions {
     pub workers: usize,
     pub bucket_kb: usize,
@@ -88,13 +99,20 @@ pub struct DistOptions {
     /// all-gather. Implies (and requires) a shardable optimizer;
     /// takes precedence over `zero1`.
     pub zero2: bool,
+    /// ZeRO-2 streaming only: step each bucket's shard segment the
+    /// moment its reduce-scatter lands and launch that bucket's
+    /// all-gather immediately (on by default). `false` restores the
+    /// PR-2 deferred tail (step + whole gather after the last
+    /// reduce-scatter) — the A/B lever the bench sweeps.
+    pub bucket_step: bool,
     pub optimizer: String,
     pub reduce: ReduceOp,
     pub hp: Hyper,
     /// Full-space Adam-mini block views (required for `adam_mini*`).
     pub spec: Option<Vec<BlockView>>,
     pub link: LinkModel,
-    /// Simulated backward-compute cost for the overlap timeline.
+    /// Simulated backward- and optimizer-compute costs for the overlap
+    /// timeline.
     pub compute: ComputeModel,
 }
 
@@ -105,6 +123,7 @@ impl Default for DistOptions {
             bucket_kb: 64,
             zero1: true,
             zero2: false,
+            bucket_step: true,
             optimizer: "adamw".into(),
             reduce: ReduceOp::Mean,
             hp: Hyper::default(),
@@ -117,11 +136,32 @@ impl Default for DistOptions {
 
 struct WorkerSlot {
     node: RingNode,
-    /// Sharded modes only: this worker's shard optimizer.
+    /// Sharded modes only: this worker's shard optimizer, whose arena
+    /// is the shard itself (shard-local coordinates).
     opt: Option<SendOptimizer>,
-    pieces: Vec<ShardPiece>,
+    /// This worker's contiguous flat range (global coordinates).
+    shard_range: (usize, usize),
     /// Full parameter replica (sharded modes only; kept in flat form).
     flat_params: Vec<f32>,
+}
+
+/// Step this worker's whole shard against `reduced` (only the shard's
+/// own range is read) through the segment API — no shard-clone
+/// round-trip — then all-gather the updated parameters.
+fn step_shard_and_gather(slot: &mut WorkerSlot,
+                         ranges: &[(usize, usize)], reduced: &[f32],
+                         lr: f32) {
+    let (a, b) = slot.shard_range;
+    if let Some(opt) = &mut slot.opt {
+        opt.begin_step();
+        if b > a {
+            opt.step_segment(
+                ParamView::new(0, &mut slot.flat_params[a..b]),
+                GradView::new(0, &reduced[a..b]), lr);
+        }
+    }
+    ring_all_gather(&slot.node, ranges, &mut slot.flat_params,
+                    TrafficClass::ParamGather);
 }
 
 /// The multi-worker data-parallel trainer.
@@ -133,6 +173,8 @@ pub struct DistTrainer {
     stats: Arc<CommStats>,
     bucket_elems: usize,
     mode: StepMode,
+    /// Bucket-granular ZeRO-2 stepping is live for streamed steps.
+    granular: bool,
     link: LinkModel,
     compute: ComputeModel,
     last_timing: Option<StepTiming>,
@@ -178,11 +220,21 @@ impl DistTrainer {
         let bucket_elems = (opts.bucket_kb.max(1) * 1024) / 4;
         let plan =
             BucketPlan::carve(&layout, cuts.as_deref(), bucket_elems);
+        // Bucket-granular stepping needs every shard∩bucket boundary
+        // on the optimizer's cut grid. The carve guarantees it when a
+        // grid exists; elementwise optimizers align anywhere.
+        let granular = opts.bucket_step
+            && mode == StepMode::Zero2
+            && match &cuts {
+                None => true,
+                Some(c) => plan.aligned_to(c),
+            };
         let (nodes, stats) = ring_world(n, opts.link);
         let flat = layout.flatten(params);
         let mut slots = Vec::with_capacity(n);
         for (w, node) in nodes.into_iter().enumerate() {
-            let pieces = pieces_for(&layout, partition.ranges[w]);
+            let range = partition.ranges[w];
+            let pieces = pieces_for(&layout, range);
             let opt = if mode.sharded() {
                 let shard = slice_shard(&layout, &pieces, &flat);
                 let spec = if is_mini {
@@ -199,7 +251,7 @@ impl DistTrainer {
             slots.push(WorkerSlot {
                 node,
                 opt,
-                pieces,
+                shard_range: range,
                 flat_params: if mode.sharded() { flat.clone() }
                              else { Vec::new() },
             });
@@ -212,6 +264,7 @@ impl DistTrainer {
             stats,
             bucket_elems,
             mode,
+            granular,
             link: opts.link,
             compute: opts.compute,
             last_timing: None,
@@ -242,6 +295,12 @@ impl DistTrainer {
 
     pub fn is_sharded(&self) -> bool {
         self.mode.sharded()
+    }
+
+    /// True when streamed ZeRO-2 steps run bucket-granular (shard
+    /// segment stepped per landed bucket + per-bucket all-gather).
+    pub fn granular(&self) -> bool {
+        self.granular
     }
 
     pub fn stats(&self) -> &Arc<CommStats> {
@@ -300,7 +359,6 @@ impl DistTrainer {
         let inv = 1.0 / n_micro.max(1) as f32;
         let bucket = self.bucket_elems;
         let mode = self.mode;
-        let layout: &FlatLayout = &self.layout;
         let ranges = &self.partition.ranges;
         let slots = &mut self.slots;
         std::thread::scope(|s| -> Result<()> {
@@ -326,7 +384,7 @@ impl DistTrainer {
                                     *x *= inv;
                                 }
                                 step_shard_and_gather(
-                                    slot, layout, ranges, grad, lr);
+                                    slot, ranges, grad, lr);
                             }
                             StepMode::Zero2 => {
                                 ring_reduce_scatter_bucketed(
@@ -340,7 +398,7 @@ impl DistTrainer {
                                     *x *= inv;
                                 }
                                 step_shard_and_gather(
-                                    slot, layout, ranges, grad, lr);
+                                    slot, ranges, grad, lr);
                             }
                         }
                     })
@@ -381,6 +439,7 @@ impl DistTrainer {
         let total = self.layout.total;
         let inv = 1.0 / n_micro.max(1) as f32;
         let mode = self.mode;
+        let granular = self.granular;
         let ranges = self.partition.ranges.clone();
         let mut to_workers = Vec::with_capacity(n);
         let mut joins = Vec::with_capacity(n);
@@ -389,8 +448,8 @@ impl DistTrainer {
             let layout = self.layout.clone();
             let ranges = ranges.clone();
             joins.push(std::thread::spawn(move || {
-                worker_stream_loop(slot, rx, layout, ranges, mode, inv,
-                                   lr)
+                worker_stream_loop(slot, rx, layout, ranges, mode,
+                                   granular, inv, lr)
             }));
             to_workers.push(tx);
         }
@@ -414,20 +473,21 @@ impl DistTrainer {
 
     /// Collect the full (sharded) optimizer state at rank 0 through the
     /// transport — the checkpoint path, accounted as `StateSync`
-    /// traffic. Returns the assembled state tensor list (rank-major).
-    /// Replicated mode moves no bytes and returns an empty list (the
+    /// traffic. Returns one [`StateDict`] whose entries carry
+    /// `rank<r>/` key prefixes (the ZeRO state routing convention).
+    /// Replicated mode moves no bytes and returns an empty dict (the
     /// caller owns the replicated optimizer and exports it directly).
-    pub fn sync_state(&mut self) -> Result<Vec<Tensor>> {
+    pub fn sync_state(&mut self) -> Result<StateDict> {
         if !self.mode.sharded() {
-            return Ok(Vec::new());
+            return Ok(StateDict::new());
         }
-        // Per-rank export metadata (names/shapes) — driver side; the
-        // data itself travels through the gather link below.
-        let metas: Vec<Vec<Tensor>> = self
+        // Per-rank export (keys/shapes) — driver side; the data itself
+        // travels through the gather link below.
+        let dicts: Vec<StateDict> = self
             .slots
             .iter()
             .map(|s| {
-                s.opt.as_ref().map(|o| o.state_export())
+                s.opt.as_ref().map(|o| o.state_dict())
                     .unwrap_or_default()
             })
             .collect();
@@ -438,11 +498,11 @@ impl DistTrainer {
                 // holds an mpsc Receiver); an exclusive borrow is Send.
                 let handles: Vec<_> = slots
                     .iter_mut()
-                    .zip(&metas)
-                    .map(|(slot, meta)| {
+                    .zip(&dicts)
+                    .map(|(slot, dict)| {
                         s.spawn(move || {
                             let mut flat = Vec::new();
-                            for t in meta {
+                            for t in dict.entries() {
                                 flat.extend_from_slice(&t.data);
                             }
                             slot.node.gather_to_root(
@@ -460,13 +520,15 @@ impl DistTrainer {
             .flatten()
             .next()
             .ok_or_else(|| anyhow::anyhow!("rank 0 gathered nothing"))?;
-        let mut out = Vec::new();
-        for (meta, payload) in metas.iter().zip(gathered) {
+        let mut out = StateDict::new();
+        for (r, (dict, payload)) in
+            dicts.iter().zip(gathered).enumerate()
+        {
             let mut off = 0;
-            for t in meta {
+            for t in dict.entries() {
                 let n = t.numel();
-                out.push(Tensor::new(&*t.name, &t.shape,
-                                     payload[off..off + n].to_vec()));
+                out.insert(format!("rank{r}/{}", t.name), &t.shape,
+                           payload[off..off + n].to_vec());
                 off += n;
             }
             debug_assert_eq!(off, payload.len());
@@ -474,48 +536,30 @@ impl DistTrainer {
         Ok(out)
     }
 
-    /// Inverse of [`DistTrainer::sync_state`]: route a gathered state
-    /// list back into the shard optimizers (same world size and
-    /// partition as the exporting run).
-    pub fn import_state(&mut self, state: &[Tensor]) -> Result<()> {
+    /// Inverse of [`DistTrainer::sync_state`]: route a rank-prefixed
+    /// state dict back into the shard optimizers (same world size and
+    /// partition as the exporting run). Unroutable entries are an
+    /// error, never a silent drop.
+    pub fn import_state(&mut self, state: &StateDict) -> Result<()> {
         if !self.mode.sharded() {
             if state.is_empty() {
                 return Ok(());
             }
             bail!("replicated mode holds no sharded state to import");
         }
-        let mut cursor = 0;
-        for slot in self.slots.iter_mut() {
+        let mut routed = 0;
+        for (r, slot) in self.slots.iter_mut().enumerate() {
             let Some(opt) = &mut slot.opt else { continue };
-            let count = opt.state_len();
-            if cursor + count > state.len() {
-                bail!("state list too short: need {} more tensors",
-                      cursor + count - state.len());
-            }
-            opt.state_import(&state[cursor..cursor + count])?;
-            cursor += count;
+            let sub = state.sub_dict(&format!("rank{r}/"));
+            routed += sub.len();
+            opt.load_state_dict(&sub)?;
         }
-        if cursor != state.len() {
-            bail!("state list has {} extra tensors", state.len() - cursor);
+        if routed != state.len() {
+            bail!("state dict has {} entries outside any rank prefix",
+                  state.len() - routed);
         }
         Ok(())
     }
-}
-
-/// Shared tail of the sharded schedules: step this worker's shard
-/// optimizer against the reduced gradient (only the worker's own range
-/// of `reduced` is read) and all-gather the updated parameters.
-fn step_shard_and_gather(slot: &mut WorkerSlot, layout: &FlatLayout,
-                         ranges: &[(usize, usize)], reduced: &[f32],
-                         lr: f32) {
-    if let Some(opt) = &mut slot.opt {
-        let mut sp = slice_shard(layout, &slot.pieces, &slot.flat_params);
-        let sg = slice_shard(layout, &slot.pieces, reduced);
-        opt.step(&mut sp, &sg, lr);
-        write_shard(layout, &slot.pieces, &sp, &mut slot.flat_params);
-    }
-    ring_all_gather(&slot.node, ranges, &mut slot.flat_params,
-                    TrafficClass::ParamGather);
 }
 
 /// One bucket's worth of a worker's gradient, in flight to its comm
@@ -529,15 +573,31 @@ struct BucketJob {
 }
 
 /// A worker's streamed step: drain bucket collectives in launch order,
-/// then finalize (optimizer step + param all-gather, or hand the
-/// reduced gradient back for the replicated update).
+/// then finalize. ZeRO-2 bucket-granular mode steps the shard∩bucket
+/// segment and all-gathers the bucket's parameters inline, per job —
+/// the finalize phase has nothing left to do. Other sharded modes
+/// defer (optimizer step + whole param all-gather at the end);
+/// replicated hands the reduced gradient back.
 fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
                       layout: Arc<FlatLayout>,
                       ranges: Vec<(usize, usize)>, mode: StepMode,
-                      inv: f32, lr: f32)
+                      granular: bool, inv: f32, lr: f32)
     -> (WorkerSlot, Option<Vec<f32>>) {
     let rank = slot.node.rank;
-    let mut reduced = vec![0.0f32; layout.total];
+    let bucket_step = granular && mode == StepMode::Zero2;
+    if bucket_step {
+        // One model step: open it once; segments follow per bucket.
+        if let Some(opt) = &mut slot.opt {
+            opt.begin_step();
+        }
+    }
+    // Bucket-granular mode steps and gathers inline — it never
+    // touches the accumulation buffer, so don't pay its allocation.
+    let mut reduced = if bucket_step {
+        Vec::new()
+    } else {
+        vec![0.0f32; layout.total]
+    };
     while let Ok(mut job) = rx.recv() {
         match mode {
             StepMode::Replicated | StepMode::Zero1 => {
@@ -557,8 +617,30 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
                 for x in job.data[a..b].iter_mut() {
                     *x *= inv;
                 }
-                reduced[job.lo + a..job.lo + b]
-                    .copy_from_slice(&job.data[a..b]);
+                if bucket_step {
+                    // Step the shard∩bucket segment NOW (shard-local
+                    // coordinates), then gather this bucket's params.
+                    let shard_lo = slot.shard_range.0;
+                    if b > a {
+                        let (glo, ghi) = (job.lo + a, job.lo + b);
+                        if let Some(opt) = &mut slot.opt {
+                            opt.step_segment(
+                                ParamView::new(
+                                    glo - shard_lo,
+                                    &mut slot.flat_params[glo..ghi]),
+                                GradView::new(glo - shard_lo,
+                                              &job.data[a..b]),
+                                lr);
+                        }
+                    }
+                    ring_all_gather(
+                        &slot.node, &clipped,
+                        &mut slot.flat_params[job.lo..job.hi],
+                        TrafficClass::ParamGather);
+                } else {
+                    reduced[job.lo + a..job.lo + b]
+                        .copy_from_slice(&job.data[a..b]);
+                }
             }
         }
         job.done.complete(job.idx);
@@ -568,9 +650,12 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
             let out = if rank == 0 { Some(reduced) } else { None };
             (slot, out)
         }
+        StepMode::Zero2 if bucket_step => {
+            // Every bucket already stepped + gathered inline.
+            (slot, None)
+        }
         StepMode::Zero1 | StepMode::Zero2 => {
-            step_shard_and_gather(&mut slot, &layout, &ranges, &reduced,
-                                  lr);
+            step_shard_and_gather(&mut slot, &ranges, &reduced, lr);
             (slot, None)
         }
     }
@@ -658,18 +743,47 @@ impl StepStream<'_> {
             self.handles.push(handle);
         }
         self.launched += 1;
-        let scatter_only = self.trainer.mode == StepMode::Zero2;
-        let comm_ns = grad_comm_ns(&self.trainer.link,
-                                   self.to_workers.len(), bk.elems(),
-                                   scatter_only);
-        self.timeline.launch(comm_ns);
+        let world = self.to_workers.len();
+        if self.trainer.granular {
+            // Bucket-granular ZeRO-2: scatter, then the shard-segment
+            // step, then the bucket param all-gather — all modeled per
+            // bucket. Workers step their shard∩bucket in parallel and
+            // the gather waits for the slowest, so the chain is
+            // charged the LARGEST intersection — usually the whole
+            // bucket, since buckets are much smaller than shards and
+            // land inside one.
+            let scatter = grad_comm_ns(&self.trainer.link, world,
+                                       bk.elems(), true);
+            let max_chunk = self
+                .trainer
+                .partition
+                .ranges
+                .iter()
+                .map(|&(a, b)| {
+                    b.min(bk.hi).saturating_sub(a.max(bk.lo))
+                })
+                .max()
+                .unwrap_or(0);
+            let step = max_chunk as f64
+                * self.timeline.compute_model().step_ns_per_elem;
+            let gather =
+                gather_comm_ns(&self.trainer.link, world, bk.elems());
+            self.timeline.launch_granular(scatter, step, gather);
+        } else {
+            let scatter_only = self.trainer.mode == StepMode::Zero2;
+            let comm_ns = grad_comm_ns(&self.trainer.link, world,
+                                       bk.elems(), scatter_only);
+            self.timeline.launch(comm_ns);
+        }
     }
 
-    /// Close the step: wait for every launched collective, run the
-    /// trailing phase (shard optimizer step + parameter all-gather, or
-    /// the replicated hand-back) and restore the trainer. Returns like
-    /// [`DistTrainer::step`]: `None` for sharded modes (params updated
-    /// in place), the reduced gradient for replicated mode.
+    /// Close the step: wait for every launched collective, run any
+    /// trailing phase (deferred shard step + whole parameter
+    /// all-gather — a no-op in bucket-granular ZeRO-2, where every
+    /// bucket stepped and gathered inline) and restore the trainer.
+    /// Returns like [`DistTrainer::step`]: `None` for sharded modes
+    /// (params updated in place), the reduced gradient for replicated
+    /// mode.
     pub fn finish(mut self, params: &mut [Tensor])
         -> Result<Option<Vec<Tensor>>> {
         let planned = self.trainer.plan.len();
@@ -698,9 +812,29 @@ impl StepStream<'_> {
         }
         let sharded = self.trainer.mode.sharded();
         if sharded {
-            let tail = gather_comm_ns(&self.trainer.link, world,
-                                      self.trainer.layout.total);
-            self.timeline.set_tail(tail);
+            let total = self.trainer.layout.total;
+            // Workers step whole shards in parallel; the trailing
+            // gather waits for the largest one.
+            let max_shard = self
+                .trainer
+                .partition
+                .ranges
+                .iter()
+                .map(|&(a, b)| b - a)
+                .max()
+                .unwrap_or(0);
+            let step_total = max_shard as f64
+                * self.timeline.compute_model().step_ns_per_elem;
+            let gather_whole =
+                gather_comm_ns(&self.trainer.link, world, total);
+            if self.trainer.granular {
+                // Live schedule has no tail; record what the deferred
+                // comparator would pay.
+                self.timeline.set_deferred_tail(step_total,
+                                                gather_whole);
+            } else {
+                self.timeline.set_tail(step_total, gather_whole);
+            }
         }
         self.trainer.steps += 1;
         self.trainer.last_timing = Some(self.timeline.timing());
@@ -781,15 +915,23 @@ mod tests {
     fn run_dist(optimizer: &str, workers: usize, zero1: bool,
                 zero2: bool, overlap: bool, steps: usize, micro: usize)
         -> Vec<Tensor> {
+        run_dist_opt(optimizer, workers, zero1, zero2, true, overlap,
+                     steps, micro)
+    }
+
+    fn run_dist_opt(optimizer: &str, workers: usize, zero1: bool,
+                    zero2: bool, bucket_step: bool, overlap: bool,
+                    steps: usize, micro: usize) -> Vec<Tensor> {
         let (mut params, meta) = toy();
         let spec = if optimizer.starts_with("adam_mini") {
             Some(mini_spec(&params, &meta))
         } else {
             None
         };
-        let mut dist = DistTrainer::new(
-            &params, toy_options(optimizer, workers, zero1, zero2,
-                                 spec)).unwrap();
+        let mut opts = toy_options(optimizer, workers, zero1, zero2,
+                                   spec);
+        opts.bucket_step = bucket_step;
+        let mut dist = DistTrainer::new(&params, opts).unwrap();
         let mut replicated = if zero1 || zero2 {
             None
         } else {
@@ -898,6 +1040,22 @@ mod tests {
     }
 
     #[test]
+    fn granular_and_deferred_zero2_agree_bitwise() {
+        // Bucket-granular stepping changes WHEN segments step, never
+        // the math: the streamed ZeRO-2 run with bucket_step on equals
+        // the bucket_step=false run bit-for-bit.
+        for optimizer in ["adamw", "adam_mini"] {
+            for workers in [2usize, 4] {
+                let on = run_dist_opt(optimizer, workers, true, true,
+                                      true, true, 6, 4);
+                let off = run_dist_opt(optimizer, workers, true, true,
+                                       false, true, 6, 4);
+                assert_eq!(on, off, "{optimizer} x{workers}");
+            }
+        }
+    }
+
+    #[test]
     fn streamed_zero1_matches_host() {
         for optimizer in ["adamw", "adam_mini"] {
             let reference = run_host(optimizer, 8, 6);
@@ -994,6 +1152,34 @@ mod tests {
     }
 
     #[test]
+    fn granular_gather_bytes_match_deferred() {
+        // Per-bucket all-gathers must sum to exactly the whole-gather
+        // bytes: (N−1)·P either way.
+        let run = |bucket_step: bool| {
+            let (mut params, _) = toy();
+            let mut opts = toy_options("adamw", 4, true, true, None);
+            opts.bucket_step = bucket_step;
+            let mut dist = DistTrainer::new(&params, opts).unwrap();
+            assert_eq!(dist.granular(), bucket_step);
+            let mut rng = Rng::new(5);
+            let g = rand_grads(&params, &mut rng);
+            let mut stream = dist.begin_step(1, 1e-2);
+            for j in (0..g.len()).rev() {
+                stream.push_grad(0, j, &g[j]).unwrap();
+            }
+            stream.finish(&mut params).unwrap();
+            (dist.stats().bytes(TrafficClass::GradScatter),
+             dist.stats().bytes(TrafficClass::ParamGather))
+        };
+        let (rs_on, ag_on) = run(true);
+        let (rs_off, ag_off) = run(false);
+        assert_eq!(rs_on, rs_off);
+        assert_eq!(ag_on, ag_off);
+        let total = 272 * 4;
+        assert_eq!(ag_on, (3 * total) as u64);
+    }
+
+    #[test]
     fn streamed_step_reports_overlap_win() {
         let (mut params, _) = toy();
         // bucket_kb=1 → two readiness buckets for the toy layout.
@@ -1014,6 +1200,8 @@ mod tests {
                 "overlap {:.0} !< sequential {:.0}", t.overlapped_ns,
                 t.sequential_ns);
         assert!(t.speedup() > 1.0);
+        // ZeRO-1 defers the step: live == deferred comparator.
+        assert!((t.overlapped_ns - t.deferred_ns).abs() < 1e-9);
     }
 
     #[test]
@@ -1062,6 +1250,8 @@ mod tests {
         }
         let state = a.sync_state().unwrap();
         assert!(!state.is_empty());
+        // Every entry carries a rank prefix.
+        assert!(state.keys().all(|k| k.starts_with("rank")));
         assert!(a.stats().bytes(TrafficClass::StateSync) > 0);
         // Import into a fresh engine; both continue identically.
         let mut params_b = params.clone();
@@ -1071,6 +1261,13 @@ mod tests {
         step(&mut a, &mut params, &mut grng);
         step(&mut b, &mut params_b, &mut grng_b);
         assert_eq!(params, params_b);
+        // An unroutable entry is a loud error.
+        let mut bogus = StateDict::new();
+        for t in state.entries() {
+            bogus.insert_tensor(t.clone());
+        }
+        bogus.insert("rank9/m", &[1], vec![0.0]);
+        assert!(b.import_state(&bogus).is_err());
     }
 
     #[test]

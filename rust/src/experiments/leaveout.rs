@@ -1,12 +1,15 @@
 //! Fig 6 (Adam leave-x-out) and Fig 14 (blockwise GD beats AdamW on a
 //! 1-layer transformer) — the grid-search motivation experiments.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::quad::verdict;
 use super::RESULTS_DIR;
 use crate::data::{Batcher, Corpus, SyntheticSpec};
-use crate::optim::{AdamW, BlockwiseGd, Hyper, Optimizer, Schedule};
+use crate::optim::{AdamW, Arena, BlockwiseGd, GradView, Granularity,
+                   Hyper, Optimizer, ParamView, Schedule};
 use crate::partition::Strategy;
 use crate::runtime::{Engine, ModelRuntime};
 use crate::tensor::Tensor;
@@ -14,13 +17,15 @@ use crate::util::csv::{ascii_table, Csv};
 
 /// Adam everywhere except `left_out` tensors, which get a single
 /// grid-searched learning-rate multiplier (the Fig 6 "Adam
-/// (leave-one-out)" method).
+/// (leave-one-out)" method). Tensor-granular (the left-out redo
+/// applies per whole tensor).
 struct LeaveOut {
     adam: AdamW,
     left_out: Vec<usize>,
     /// Per-left-out-tensor lr multipliers (relative to the base lr).
     lr_mults: Vec<f32>,
-    momentum: Vec<Tensor>,
+    /// Arena-flat momentum for the left-out single-lr updates.
+    momentum: Vec<f32>,
     beta1: f32,
 }
 
@@ -28,12 +33,11 @@ impl LeaveOut {
     fn new(hp: Hyper, params: &[Tensor], left_out: Vec<usize>,
            lr_mults: Vec<f32>) -> LeaveOut {
         assert_eq!(left_out.len(), lr_mults.len());
+        let adam = AdamW::new(hp, params);
+        let total = adam.arena().total;
         LeaveOut {
-            adam: AdamW::new(hp, params),
-            momentum: params
-                .iter()
-                .map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
+            adam,
+            momentum: vec![0.0; total],
             left_out,
             lr_mults,
             beta1: hp.beta1,
@@ -46,24 +50,49 @@ impl Optimizer for LeaveOut {
         format!("adam_leaveout_x{}", self.left_out.len())
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
-        // Save left-out tensors, let Adam update everything, then redo
-        // the left-out ones with single-lr momentum-SGD.
-        let saved: Vec<(usize, Tensor)> = self
-            .left_out
+    fn arena(&self) -> &Arc<Arena> {
+        self.adam.arena()
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Tensor
+    }
+
+    fn begin_step(&mut self) {
+        self.adam.begin_step();
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        // Save left-out tensors in the segment, let Adam update
+        // everything, then redo the left-out ones with single-lr
+        // momentum-SGD.
+        let mut params = params;
+        let (lo, hi) = params.range();
+        let arena = Arc::clone(self.adam.arena());
+        let (i0, spans) = arena.spans_in(lo, hi);
+        let saved: Vec<(usize, usize, Vec<f32>)> = spans
             .iter()
-            .map(|&i| (i, params[i].clone()))
+            .enumerate()
+            .filter_map(|(k, sp)| {
+                let i = i0 + k;
+                self.left_out.iter().position(|&l| l == i).map(|slot| {
+                    let a = sp.offset - lo;
+                    (slot, i0 + k, params.data[a..a + sp.len].to_vec())
+                })
+            })
             .collect();
-        self.adam.step(params, grads, lr);
-        for (k, (i, saved_p)) in saved.into_iter().enumerate() {
-            let m = &mut self.momentum[i];
-            let g = &grads[i];
-            let mult = self.lr_mults[k];
-            params[i] = saved_p;
-            for j in 0..params[i].data.len() {
-                m.data[j] =
-                    self.beta1 * m.data[j] + (1.0 - self.beta1) * g.data[j];
-                params[i].data[j] -= lr * mult * m.data[j];
+        self.adam.step_segment(params.reborrow(), grads.reborrow(), lr);
+        for (slot, i, saved_p) in saved {
+            let sp = &arena.spans[i];
+            let a = sp.offset - lo;
+            let mult = self.lr_mults[slot];
+            params.data[a..a + sp.len].copy_from_slice(&saved_p);
+            for j in 0..sp.len {
+                let m = &mut self.momentum[sp.offset + j];
+                *m = self.beta1 * *m
+                    + (1.0 - self.beta1) * grads.data[a + j];
+                params.data[a + j] -= lr * mult * *m;
             }
         }
     }

@@ -24,6 +24,14 @@
 //! communication claims measurable; `repro report` cross-checks the
 //! measured traffic against the analytical [`cluster`] model.
 
+// Numeric-kernel house style: the optimizer/collective inner loops are
+// written as explicit indexed loops over parallel flat arrays (the
+// index IS the arena coordinate); iterator rewrites obscure that. CI
+// runs clippy with -D warnings under these carve-outs.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
+
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

@@ -24,7 +24,9 @@ fn usage() -> ! {
          repro selfcheck\n\ntrain keys include workers=N (data-parallel \
          engine), bucket_kb=K,\nzero1=BOOL (ZeRO-1 optimizer-state \
          sharding), zero2=BOOL (also shard\ngradients: reduce-scatter \
-         schedule), overlap=BOOL (streaming bucket\npipeline)\n\n\
+         schedule), overlap=BOOL (streaming bucket\npipeline), \
+         bucket_step=BOOL (ZeRO-2 overlap: step each bucket's\nshard \
+         segment as its reduce-scatter lands; default true)\n\n\
          artifacts dir: $ADAM_MINI_ARTIFACTS (default ./artifacts)"
     );
     std::process::exit(2);
@@ -93,8 +95,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if let Some(t) = trainer.step_timing() {
         println!(
             "overlap timeline (simulated link model): overlapped \
-             {:.2} ms/step vs sequential {:.2} ms/step ({:.2}x)",
-            t.overlapped_ns / 1e6, t.sequential_ns / 1e6, t.speedup()
+             {:.2} ms/step vs deferred-step {:.2} ms/step vs \
+             sequential {:.2} ms/step ({:.2}x vs sequential, {:.2}x \
+             vs deferred)",
+            t.overlapped_ns / 1e6, t.deferred_ns / 1e6,
+            t.sequential_ns / 1e6, t.speedup(), t.granular_gain()
         );
     }
     Ok(())

@@ -10,8 +10,15 @@
 //!
 //! Matrices factor v into row statistics R and column statistics C
 //! (O(r + c) memory); vectors fall back to full AdaGrad-style v.
+//! Tensor-granular: the row/column factors couple a whole tensor.
 
-use super::{Hyper, Optimizer};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::core::{check_state_len, Arena, GradView, Granularity,
+                  Optimizer, ParamView, StateDict};
+use super::Hyper;
 use crate::tensor::Tensor;
 
 const EPS1: f32 = 1e-30;
@@ -33,7 +40,10 @@ enum Factored {
 pub struct Adafactor {
     hp: Hyper,
     variant: AdafactorVariant,
-    m: Vec<Tensor>,
+    arena: Arc<Arena>,
+    /// Momentum, arena-flat.
+    m: Vec<f32>,
+    /// Per-span factored second moment.
     state: Vec<Factored>,
     t: u64,
 }
@@ -51,28 +61,22 @@ fn mat_dims(shape: &[usize]) -> Option<(usize, usize)> {
 impl Adafactor {
     pub fn new(hp: Hyper, params: &[Tensor], variant: AdafactorVariant)
         -> Adafactor {
-        let state = params
+        let arena = Arc::new(Arena::of(params));
+        let state = arena
+            .spans
             .iter()
-            .map(|p| match mat_dims(&p.shape) {
+            .map(|s| match mat_dims(&s.shape) {
                 Some((rows, cols)) => Factored::Mat {
                     r: vec![0.0; rows],
                     c: vec![0.0; cols],
                     rows,
                     cols,
                 },
-                None => Factored::Vec { v: vec![0.0; p.numel()] },
+                None => Factored::Vec { v: vec![0.0; s.len] },
             })
             .collect();
-        Adafactor {
-            hp,
-            variant,
-            m: params
-                .iter()
-                .map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
-            state,
-            t: 0,
-        }
+        let n = arena.total;
+        Adafactor { hp, variant, arena, m: vec![0.0; n], state, t: 0 }
     }
 
     fn beta2_t(&self) -> f32 {
@@ -94,14 +98,34 @@ impl Optimizer for Adafactor {
         }
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Tensor
+    }
+
+    fn begin_step(&mut self) {
         self.t += 1;
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        debug_assert!(self.t > 0, "step_segment before begin_step");
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let arena = Arc::clone(&self.arena);
+        let (i0, spans) = arena.spans_in(lo, hi);
         let b2 = self.beta2_t();
         let b1 = self.hp.beta1;
         let wd = 1.0 - lr * self.hp.weight_decay;
 
-        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
-            let n = p.numel();
+        for (k, sp) in spans.iter().enumerate() {
+            let i = i0 + k;
+            let a = sp.offset - lo;
+            let n = sp.len;
+            let g = &grads.data[a..a + n];
             // u = g / sqrt(v̂), with v̂ from factored or full state.
             let mut u = vec![0.0f32; n];
             match &mut self.state[i] {
@@ -111,47 +135,49 @@ impl Optimizer for Adafactor {
                     for ri in 0..rows {
                         let mut acc = 0.0;
                         for ci in 0..cols {
-                            let gv = g.data[ri * cols + ci];
+                            let gv = g[ri * cols + ci];
                             acc += gv * gv + EPS1;
                         }
-                        r[ri] = b2 * r[ri] + (1.0 - b2) * (acc / cols as f32);
+                        r[ri] = b2 * r[ri]
+                            + (1.0 - b2) * (acc / cols as f32);
                     }
                     for ci in 0..cols {
                         let mut acc = 0.0;
                         for ri in 0..rows {
-                            let gv = g.data[ri * cols + ci];
+                            let gv = g[ri * cols + ci];
                             acc += gv * gv + EPS1;
                         }
-                        c[ci] = b2 * c[ci] + (1.0 - b2) * (acc / rows as f32);
+                        c[ci] = b2 * c[ci]
+                            + (1.0 - b2) * (acc / rows as f32);
                     }
                     let r_mean: f32 =
                         r.iter().sum::<f32>() / rows as f32 + EPS1;
                     for ri in 0..rows {
                         for ci in 0..cols {
                             let vhat = r[ri] * c[ci] / r_mean;
-                            u[ri * cols + ci] = g.data[ri * cols + ci]
-                                / (vhat.sqrt() + EPS1);
+                            u[ri * cols + ci] =
+                                g[ri * cols + ci] / (vhat.sqrt() + EPS1);
                         }
                     }
                 }
                 Factored::Vec { v } => {
                     for j in 0..n {
-                        let gv = g.data[j];
+                        let gv = g[j];
                         v[j] = b2 * v[j] + (1.0 - b2) * (gv * gv + EPS1);
                         u[j] = gv / (v[j].sqrt() + EPS1);
                     }
                 }
             }
             // Update clipping: u /= max(1, RMS(u)/d).
-            let rms =
-                (u.iter().map(|x| x * x).sum::<f32>() / n as f32).sqrt();
+            let rms = (u.iter().map(|x| x * x).sum::<f32>() / n as f32)
+                .sqrt();
             let scale = 1.0 / (rms / CLIP_D).max(1.0);
             // Momentum on the clipped update, then apply.
-            let m = &mut self.m[i];
             for j in 0..n {
-                let mj = b1 * m.data[j] + (1.0 - b1) * u[j] * scale;
-                m.data[j] = mj;
-                p.data[j] = p.data[j] * wd - lr * mj;
+                let mj = b1 * self.m[sp.offset + j]
+                    + (1.0 - b1) * u[j] * scale;
+                self.m[sp.offset + j] = mj;
+                params.data[a + j] = params.data[a + j] * wd - lr * mj;
             }
         }
     }
@@ -165,7 +191,62 @@ impl Optimizer for Adafactor {
                 Factored::Vec { v } => v.len(),
             })
             .sum();
-        (factored + self.m.iter().map(Tensor::numel).sum::<usize>()) * 4
+        (factored + self.m.len()) * 4
+    }
+
+    /// Entries: `m` (arena-flat), per matrix tensor `r/<name>` and
+    /// `c/<name>`, per vector tensor `v/<name>`, `__step`.
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.insert("m", &[self.m.len()], self.m.clone());
+        for (sp, st) in self.arena.spans.iter().zip(&self.state) {
+            match st {
+                Factored::Mat { r, c, .. } => {
+                    sd.insert(format!("r/{}", sp.name), &[r.len()],
+                              r.clone());
+                    sd.insert(format!("c/{}", sp.name), &[c.len()],
+                              c.clone());
+                }
+                Factored::Vec { v } => {
+                    sd.insert(format!("v/{}", sp.name), &[v.len()],
+                              v.clone());
+                }
+            }
+        }
+        sd.set_step(self.t);
+        sd
+    }
+
+    fn state_len(&self) -> usize {
+        2 + self
+            .state
+            .iter()
+            .map(|s| match s {
+                Factored::Mat { .. } => 2,
+                Factored::Vec { .. } => 1,
+            })
+            .sum::<usize>()
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        check_state_len(state, self.state_len(), "adafactor")?;
+        self.m.copy_from_slice(state.data("m", self.m.len())?);
+        for (sp, st) in self.arena.spans.iter().zip(&mut self.state) {
+            match st {
+                Factored::Mat { r, c, .. } => {
+                    r.copy_from_slice(state.data(
+                        &format!("r/{}", sp.name), r.len())?);
+                    c.copy_from_slice(state.data(
+                        &format!("c/{}", sp.name), c.len())?);
+                }
+                Factored::Vec { v } => {
+                    v.copy_from_slice(state.data(
+                        &format!("v/{}", sp.name), v.len())?);
+                }
+            }
+        }
+        self.t = state.step()?;
+        Ok(())
     }
 }
 
@@ -222,5 +303,37 @@ mod tests {
         let opt = Adafactor::new(Hyper::default(), &params,
                                  AdafactorVariant::Original);
         assert_eq!(opt.state_bytes(), (32 + 32) * 4);
+    }
+
+    #[test]
+    fn state_roundtrips_with_named_factors() {
+        let mut rng = Rng::new(3);
+        let mut pa = vec![Tensor::randn("w", &[4, 3], 1.0, &mut rng),
+                          Tensor::randn("b", &[5], 1.0, &mut rng)];
+        let gs: Vec<Vec<Tensor>> = (0..4)
+            .map(|_| vec![Tensor::randn("w", &[4, 3], 1.0, &mut rng),
+                          Tensor::randn("b", &[5], 1.0, &mut rng)])
+            .collect();
+        let mut a = Adafactor::new(Hyper::default(), &pa,
+                                   AdafactorVariant::Zhai);
+        for g in &gs[..2] {
+            a.step(&mut pa, g, 1e-2);
+        }
+        let sd = a.state_dict();
+        // m + (r/w, c/w) + v/b + __step.
+        assert_eq!(sd.len(), 5);
+        assert_eq!(sd.len(), a.state_len());
+        assert!(sd.get("r/w").is_some());
+        assert!(sd.get("c/w").is_some());
+        assert!(sd.get("v/b").is_some());
+        let mut pb = pa.clone();
+        let mut b = Adafactor::new(Hyper::default(), &pb,
+                                   AdafactorVariant::Zhai);
+        b.load_state_dict(&sd).unwrap();
+        for g in &gs[2..] {
+            a.step(&mut pa, g, 1e-2);
+            b.step(&mut pb, g, 1e-2);
+        }
+        assert_eq!(pa, pb);
     }
 }

@@ -1,33 +1,35 @@
 //! AdamW (paper Algorithm 6) — the baseline everything is compared to.
 
-use anyhow::{bail, Result};
+use std::sync::Arc;
 
-use super::{decode_step, step_tensor, Hyper, Optimizer};
+use anyhow::Result;
+
+use super::core::{check_state_len, Arena, GradView, Granularity,
+                  Optimizer, ParamView, StateDict};
+use super::Hyper;
 use crate::tensor::Tensor;
 
-/// Decoupled-weight-decay Adam. State: full-size m and v per tensor.
+/// Decoupled-weight-decay Adam. State: full-size m and v, flat over
+/// the arena.
 pub struct AdamW {
     hp: Hyper,
-    m: Vec<Tensor>,
-    v: Vec<Tensor>,
+    arena: Arc<Arena>,
+    m: Vec<f32>,
+    v: Vec<f32>,
     t: u64,
 }
 
 impl AdamW {
     pub fn new(hp: Hyper, params: &[Tensor]) -> AdamW {
-        AdamW {
-            hp,
-            m: params.iter().map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
-            v: params.iter().map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
-            t: 0,
-        }
+        let arena = Arc::new(Arena::of(params));
+        let n = arena.total;
+        AdamW { hp, arena, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
     }
 
-    /// Access v (used by the leave-one-out experiment to seed blockwise
-    /// learning rates from Adam's own statistics).
-    pub fn v(&self) -> &[Tensor] {
+    /// Access v in arena-flat form (used by the leave-one-out
+    /// experiment to seed blockwise learning rates from Adam's own
+    /// statistics).
+    pub fn v(&self) -> &[f32] {
         &self.v
     }
 }
@@ -37,64 +39,62 @@ impl Optimizer for AdamW {
         "adamw".into()
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Element
+    }
+
+    fn begin_step(&mut self) {
         self.t += 1;
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        debug_assert!(self.t > 0, "step_segment before begin_step");
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
         let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
         let bc1 = 1.0 / (1.0 - beta1.powi(self.t as i32));
         let bc2 = 1.0 / (1.0 - beta2.powi(self.t as i32));
-        for ((p, g), (m, v)) in params
-            .iter_mut()
-            .zip(grads)
-            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
-        {
-            debug_assert_eq!(p.shape, g.shape);
-            let wd = 1.0 - lr * weight_decay;
-            for i in 0..p.data.len() {
-                let gi = g.data[i];
-                let mi = beta1 * m.data[i] + (1.0 - beta1) * gi;
-                let vi = beta2 * v.data[i] + (1.0 - beta2) * gi * gi;
-                m.data[i] = mi;
-                v.data[i] = vi;
-                p.data[i] = p.data[i] * wd
-                    - lr * (mi * bc1) / ((vi * bc2).sqrt() + eps);
-            }
+        let wd = 1.0 - lr * weight_decay;
+        let m = &mut self.m[lo..hi];
+        let v = &mut self.v[lo..hi];
+        for i in 0..params.data.len() {
+            let gi = grads.data[i];
+            let mi = beta1 * m[i] + (1.0 - beta1) * gi;
+            let vi = beta2 * v[i] + (1.0 - beta2) * gi * gi;
+            m[i] = mi;
+            v[i] = vi;
+            params.data[i] = params.data[i] * wd
+                - lr * (mi * bc1) / ((vi * bc2).sqrt() + eps);
         }
     }
 
     fn state_bytes(&self) -> usize {
-        (self.m.iter().map(Tensor::numel).sum::<usize>()
-            + self.v.iter().map(Tensor::numel).sum::<usize>())
-            * 4
+        (self.m.len() + self.v.len()) * 4
     }
 
-    /// State layout: m tensors, then v tensors, then `__step`.
-    fn state_export(&self) -> Vec<Tensor> {
-        let mut out = self.m.clone();
-        out.extend(self.v.iter().cloned());
-        out.push(step_tensor(self.t));
-        out
+    /// Entries: `m`, `v` (arena-flat), `__step`.
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.insert("m", &[self.m.len()], self.m.clone());
+        sd.insert("v", &[self.v.len()], self.v.clone());
+        sd.set_step(self.t);
+        sd
     }
 
     fn state_len(&self) -> usize {
-        2 * self.m.len() + 1
+        3
     }
 
-    fn state_import(&mut self, state: &[Tensor]) -> Result<()> {
-        let n = self.m.len();
-        if state.len() != 2 * n + 1 {
-            bail!("adamw: expected {} state tensors, got {}", 2 * n + 1,
-                  state.len());
-        }
-        self.t = decode_step(state)?;
-        for (dst, src) in self
-            .m
-            .iter_mut()
-            .chain(self.v.iter_mut())
-            .zip(&state[..2 * n])
-        {
-            src.assert_shape(&dst.shape)?;
-            dst.data.copy_from_slice(&src.data);
-        }
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        check_state_len(state, 3, "adamw")?;
+        self.m.copy_from_slice(state.data("m", self.m.len())?);
+        self.v.copy_from_slice(state.data("v", self.v.len())?);
+        self.t = state.step()?;
         Ok(())
     }
 }
@@ -172,18 +172,22 @@ mod tests {
             a.step(&mut pa, std::slice::from_ref(g), 1e-2);
         }
         // Export, import into a fresh instance, continue both.
-        let state = a.state_export();
+        let state = a.state_dict();
         assert_eq!(state.len(), 3);
+        assert_eq!(state.len(), a.state_len());
+        assert_eq!(state.step().unwrap(), 3);
         let mut pb = pa.clone();
         let mut b = AdamW::new(Hyper::default(), &pb);
-        b.state_import(&state).unwrap();
+        b.load_state_dict(&state).unwrap();
         for g in &gs[3..] {
             a.step(&mut pa, std::slice::from_ref(g), 1e-2);
             b.step(&mut pb, std::slice::from_ref(g), 1e-2);
         }
         assert_eq!(pa, pb);
         // Wrong arity is an error, not a silent drop.
-        assert!(b.state_import(&state[..1]).is_err());
+        let mut short = StateDict::new();
+        short.insert_tensor(state.entries()[0].clone());
+        assert!(b.load_state_dict(&short).is_err());
     }
 
     #[test]
@@ -191,5 +195,30 @@ mod tests {
         let params = vec![Tensor::zeros("w", &[10, 10])];
         let opt = AdamW::new(Hyper::default(), &params);
         assert_eq!(opt.state_bytes(), 2 * 100 * 4);
+    }
+
+    #[test]
+    fn segment_partition_matches_whole_step() {
+        // Elementwise update: ANY segment partition is bit-identical
+        // to the whole-model step.
+        let mut rng = Rng::new(4);
+        let params = vec![Tensor::randn("w", &[5, 4], 1.0, &mut rng)];
+        let g = Tensor::randn("w", &[5, 4], 1.0, &mut rng);
+        let mut pa = params.clone();
+        let mut a = AdamW::new(Hyper::default(), &pa);
+        a.step(&mut pa, std::slice::from_ref(&g), 1e-2);
+
+        let mut b = AdamW::new(Hyper::default(), &params);
+        let arena = Arc::clone(b.arena());
+        let mut flat = arena.flatten(&params);
+        let gflat = arena.flatten(std::slice::from_ref(&g));
+        b.begin_step();
+        for (lo, hi) in [(7usize, 20usize), (0, 3), (3, 7)] {
+            b.step_segment(ParamView::new(lo, &mut flat[lo..hi]),
+                           GradView::new(lo, &gflat[lo..hi]), 1e-2);
+        }
+        let mut pb = params.clone();
+        arena.unflatten(&flat, &mut pb);
+        assert_eq!(pa, pb);
     }
 }

@@ -5,12 +5,21 @@
 //! blockwise reduce defaults to `mean(g⊙g)` — the paper's choice — with
 //! the Appendix D.2 ablation alternatives (max/min/ℓ1/ℓ2) selectable
 //! for the Fig 15 experiment.
+//!
+//! State is arena-flat: `m` mirrors the parameters; `v_b` is one f32
+//! per block of the flat block grid (`cuts`), which is also the
+//! optimizer's [`Optimizer::segment_cuts`] grid — the ZeRO partitioner
+//! and the bucket scheduler align to it so shard- and bucket-granular
+//! stepping stays bit-identical to the whole-model step.
 
-use anyhow::{bail, Result};
+use std::sync::Arc;
 
-use super::{decode_step, step_tensor, Hyper, Optimizer};
+use anyhow::Result;
+
+use super::core::{check_state_len, Arena, GradView, Granularity,
+                  Optimizer, ParamView, StateDict};
+use super::Hyper;
 use crate::partition::BlockView;
-use crate::tensor::Tensor;
 
 /// Blockwise statistic borrowed from Adam's v (paper Appendix D.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,7 +42,7 @@ impl ReduceOp {
         }
     }
 
-    fn apply(&self, gsq: impl Iterator<Item = f32>, n: usize) -> f32 {
+    pub fn apply(&self, gsq: impl Iterator<Item = f32>, n: usize) -> f32 {
         // A zero-element block has no statistic; folding Min from
         // f32::MAX (or Max from an arbitrary floor) would fabricate a
         // bogus v_b. Define the degenerate reduce as 0 — the same
@@ -55,33 +64,55 @@ impl ReduceOp {
 /// The Adam-mini optimizer. State: full-size m + one f32 per block.
 pub struct AdamMini {
     hp: Hyper,
-    spec: Vec<BlockView>,
     reduce: ReduceOp,
-    m: Vec<Tensor>,
-    /// vb[i][b] = second-moment scalar for block b of tensor i.
-    vb: Vec<Vec<f32>>,
+    arena: Arc<Arena>,
+    /// Flat block grid: block `b` covers `[cuts[b], cuts[b+1])`.
+    cuts: Vec<usize>,
+    m: Vec<f32>,
+    /// vb[b] = second-moment scalar for flat block b.
+    vb: Vec<f32>,
     t: u64,
 }
 
 impl AdamMini {
     pub fn new(hp: Hyper, spec: Vec<BlockView>, reduce: ReduceOp)
         -> AdamMini {
-        let m = spec
-            .iter()
-            .map(|b| Tensor::zeros(&*b.name, &b.shape))
-            .collect();
-        let vb = spec.iter().map(|b| vec![0.0; b.num_blocks]).collect();
-        AdamMini { hp, spec, reduce, m, vb, t: 0 }
+        let arena = Arc::new(Arena::from_shapes(
+            spec.iter().map(|b| (b.name.clone(), b.shape.clone()))));
+        let mut cuts = vec![0usize];
+        let mut offset = 0;
+        for bv in &spec {
+            debug_assert_eq!(bv.shape.iter().product::<usize>(),
+                             bv.num_blocks * bv.block_size,
+                             "{}: partition mismatch", bv.name);
+            for b in 1..=bv.num_blocks {
+                cuts.push(offset + b * bv.block_size);
+            }
+            offset += bv.num_blocks * bv.block_size;
+        }
+        debug_assert_eq!(offset, arena.total);
+        let n_blocks = cuts.len() - 1;
+        let total = arena.total;
+        AdamMini {
+            hp,
+            reduce,
+            arena,
+            cuts,
+            m: vec![0.0; total],
+            vb: vec![0.0; n_blocks],
+            t: 0,
+        }
     }
 
-    /// The per-block second moments (inspection / checkpointing).
-    pub fn vb(&self) -> &[Vec<f32>] {
+    /// The per-block second moments, flat over the block grid
+    /// (inspection / checkpointing).
+    pub fn vb(&self) -> &[f32] {
         &self.vb
     }
 
     /// Number of learning-rate scalars this instance maintains.
     pub fn total_blocks(&self) -> usize {
-        self.vb.iter().map(Vec::len).sum()
+        self.vb.len()
     }
 }
 
@@ -90,80 +121,83 @@ impl Optimizer for AdamMini {
         format!("adam_mini[{}]", self.reduce.name())
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
-        assert_eq!(params.len(), self.spec.len());
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Block
+    }
+
+    fn segment_cuts(&self) -> Option<Vec<usize>> {
+        Some(self.cuts.clone())
+    }
+
+    fn begin_step(&mut self) {
         self.t += 1;
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        debug_assert!(self.t > 0, "step_segment before begin_step");
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let b0 = self
+            .cuts
+            .binary_search(&lo)
+            .unwrap_or_else(|_| {
+                panic!("segment lo {lo} is not on a block boundary")
+            });
         let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
         let bc1 = 1.0 / (1.0 - beta1.powi(self.t as i32));
         let bc2 = 1.0 / (1.0 - beta2.powi(self.t as i32));
         let wd = 1.0 - lr * weight_decay;
-
-        for (i, bv) in self.spec.iter().enumerate() {
-            let p = &mut params[i];
-            let g = &grads[i];
-            let m = &mut self.m[i];
-            debug_assert_eq!(p.numel(), bv.num_blocks * bv.block_size,
-                             "{}: partition mismatch", bv.name);
-            let bs = bv.block_size;
-            for b in 0..bv.num_blocks {
-                let lo = b * bs;
-                let hi = lo + bs;
-                let gb = &g.data[lo..hi];
-                // Blockwise second moment: ONE scalar per Hessian block.
-                let stat = self
-                    .reduce
-                    .apply(gb.iter().map(|x| x * x), bs);
-                let vb = beta2 * self.vb[i][b] + (1.0 - beta2) * stat;
-                self.vb[i][b] = vb;
-                let denom = (vb * bc2).sqrt() + eps;
-                for j in lo..hi {
-                    let mj = beta1 * m.data[j] + (1.0 - beta1) * g.data[j];
-                    m.data[j] = mj;
-                    p.data[j] = p.data[j] * wd - lr * (mj * bc1) / denom;
-                }
+        let mut b = b0;
+        while self.cuts[b] < hi {
+            let (blo, bhi) = (self.cuts[b], self.cuts[b + 1]);
+            assert!(bhi <= hi,
+                    "segment hi {hi} splits block [{blo}, {bhi})");
+            let gb = &grads.data[blo - lo..bhi - lo];
+            // Blockwise second moment: ONE scalar per Hessian block.
+            let stat = self.reduce.apply(gb.iter().map(|x| x * x),
+                                         gb.len());
+            let vb = beta2 * self.vb[b] + (1.0 - beta2) * stat;
+            self.vb[b] = vb;
+            let denom = (vb * bc2).sqrt() + eps;
+            for j in blo..bhi {
+                let gi = grads.data[j - lo];
+                let mj = beta1 * self.m[j] + (1.0 - beta1) * gi;
+                self.m[j] = mj;
+                params.data[j - lo] =
+                    params.data[j - lo] * wd - lr * (mj * bc1) / denom;
             }
+            b += 1;
         }
     }
 
     fn state_bytes(&self) -> usize {
-        (self.m.iter().map(Tensor::numel).sum::<usize>()
-            + self.total_blocks())
-            * 4
+        (self.m.len() + self.vb.len()) * 4
     }
 
-    /// State layout: m tensors, then one `<name>__vb` vector per
-    /// tensor (the per-block second moments), then `__step`. The v_b
-    /// vectors are what makes Adam-mini's sharded state sync cheap:
-    /// one scalar per Hessian block instead of one per parameter.
-    fn state_export(&self) -> Vec<Tensor> {
-        let mut out = self.m.clone();
-        for (bv, vb) in self.spec.iter().zip(&self.vb) {
-            out.push(Tensor::new(format!("{}__vb", bv.name),
-                                 &[vb.len()], vb.clone()));
-        }
-        out.push(step_tensor(self.t));
-        out
+    /// Entries: `m` (arena-flat), `vb` (one f32 per flat block — what
+    /// makes Adam-mini's sharded state sync cheap), `__step`.
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.insert("m", &[self.m.len()], self.m.clone());
+        sd.insert("vb", &[self.vb.len()], self.vb.clone());
+        sd.set_step(self.t);
+        sd
     }
 
     fn state_len(&self) -> usize {
-        2 * self.m.len() + 1
+        3
     }
 
-    fn state_import(&mut self, state: &[Tensor]) -> Result<()> {
-        let n = self.m.len();
-        if state.len() != 2 * n + 1 {
-            bail!("adam_mini: expected {} state tensors, got {}",
-                  2 * n + 1, state.len());
-        }
-        self.t = decode_step(state)?;
-        for (dst, src) in self.m.iter_mut().zip(&state[..n]) {
-            src.assert_shape(&dst.shape)?;
-            dst.data.copy_from_slice(&src.data);
-        }
-        for (dst, src) in self.vb.iter_mut().zip(&state[n..2 * n]) {
-            src.assert_shape(&[dst.len()])?;
-            dst.copy_from_slice(&src.data);
-        }
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        check_state_len(state, 3, "adam_mini")?;
+        self.m.copy_from_slice(state.data("m", self.m.len())?);
+        self.vb.copy_from_slice(state.data("vb", self.vb.len())?);
+        self.t = state.step()?;
         Ok(())
     }
 }
@@ -173,6 +207,7 @@ mod tests {
     use super::*;
     use crate::optim::adam::AdamW;
     use crate::partition::{block_view, Strategy};
+    use crate::tensor::Tensor;
     use crate::util::prng::Rng;
     use crate::util::prop::{check, prop_close};
 
@@ -301,20 +336,23 @@ mod tests {
         for g in &gs[..3] {
             a.step(&mut pa, std::slice::from_ref(g), 1e-2);
         }
-        let state = a.state_export();
+        let state = a.state_dict();
         // m + vb + __step.
         assert_eq!(state.len(), 3);
-        assert_eq!(state[1].shape, vec![4]);
+        assert_eq!(state.len(), a.state_len());
+        assert_eq!(state.require("vb").unwrap().numel(), 4);
         let mut pb = pa.clone();
         let mut b = AdamMini::new(Hyper::default(), spec(),
                                   ReduceOp::Mean);
-        b.state_import(&state).unwrap();
+        b.load_state_dict(&state).unwrap();
         for g in &gs[3..] {
             a.step(&mut pa, std::slice::from_ref(g), 1e-2);
             b.step(&mut pb, std::slice::from_ref(g), 1e-2);
         }
         assert_eq!(pa, pb);
-        assert!(b.state_import(&state[..2]).is_err());
+        let mut short = StateDict::new();
+        short.insert_tensor(state.entries()[0].clone());
+        assert!(b.load_state_dict(&short).is_err());
     }
 
     #[test]
@@ -332,5 +370,37 @@ mod tests {
         // Each block normalizes by its own RMS → both updates ≈ ±1.
         assert!((params[0].data[0] + 1.0).abs() < 1e-5);
         assert!((params[0].data[2] + 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn block_partitioned_segments_match_whole_step() {
+        // Stepping block-aligned segments one by one is bit-identical
+        // to the whole-model step (the ZeRO-2 bucket-stepping
+        // invariant).
+        let mut rng = Rng::new(8);
+        let params = vec![Tensor::randn("w", &[4, 4], 1.0, &mut rng)];
+        let g = Tensor::randn("w", &[4, 4], 1.0, &mut rng);
+        let spec = || vec![spec_one("w", &[4, 4], 4)];
+        let mut pa = params.clone();
+        let mut a = AdamMini::new(Hyper::default(), spec(),
+                                  ReduceOp::Mean);
+        a.step(&mut pa, std::slice::from_ref(&g), 1e-2);
+
+        let mut b = AdamMini::new(Hyper::default(), spec(),
+                                  ReduceOp::Mean);
+        let cuts = b.segment_cuts().unwrap();
+        assert_eq!(cuts, vec![0, 4, 8, 12, 16]);
+        let arena = Arc::clone(b.arena());
+        let mut flat = arena.flatten(&params);
+        let gflat = arena.flatten(std::slice::from_ref(&g));
+        b.begin_step();
+        // Step blocks out of order: {2}, {0, 1}, {3}.
+        for (lo, hi) in [(8usize, 12usize), (0, 8), (12, 16)] {
+            b.step_segment(ParamView::new(lo, &mut flat[lo..hi]),
+                           GradView::new(lo, &gflat[lo..hi]), 1e-2);
+        }
+        let mut pb = params.clone();
+        arena.unflatten(&flat, &mut pb);
+        assert_eq!(pa, pb);
     }
 }

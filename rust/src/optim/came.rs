@@ -4,9 +4,15 @@
 //! On top of the Adafactor factored second moment it keeps a *second*
 //! factored EMA of the instability (û − m)², whose inverse square root
 //! scales the momentum update (high residual → low confidence → small
-//! step).
+//! step). Tensor-granular: both factored EMAs couple a whole tensor.
 
-use super::{Hyper, Optimizer};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::core::{check_state_len, Arena, GradView, Granularity,
+                  Optimizer, ParamView, StateDict};
+use super::Hyper;
 use crate::tensor::Tensor;
 
 const EPS1: f32 = 1e-30;
@@ -36,19 +42,23 @@ enum State {
 
 pub struct Came {
     hp: Hyper,
-    m: Vec<Tensor>,
+    arena: Arc<Arena>,
+    /// Momentum, arena-flat.
+    m: Vec<f32>,
     state: Vec<State>,
     t: u64,
 }
 
 impl Came {
     pub fn new(hp: Hyper, params: &[Tensor]) -> Came {
-        let state = params
+        let arena = Arc::new(Arena::of(params));
+        let state = arena
+            .spans
             .iter()
-            .map(|p| {
-                if p.shape.len() >= 2 {
-                    let cols = *p.shape.last().unwrap();
-                    let rows = p.numel() / cols;
+            .map(|s| {
+                if s.shape.len() >= 2 {
+                    let cols = *s.shape.last().unwrap();
+                    let rows = s.len / cols;
                     State::Mat {
                         v: FactoredPair { r: vec![0.0; rows],
                                           c: vec![0.0; cols] },
@@ -58,20 +68,13 @@ impl Came {
                         cols,
                     }
                 } else {
-                    State::Vec { v: vec![0.0; p.numel()],
-                                 u: vec![0.0; p.numel()] }
+                    State::Vec { v: vec![0.0; s.len],
+                                 u: vec![0.0; s.len] }
                 }
             })
             .collect();
-        Came {
-            hp,
-            m: params
-                .iter()
-                .map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
-            state,
-            t: 0,
-        }
+        let n = arena.total;
+        Came { hp, arena, m: vec![0.0; n], state, t: 0 }
     }
 }
 
@@ -108,54 +111,75 @@ impl Optimizer for Came {
         "came".into()
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Tensor
+    }
+
+    fn begin_step(&mut self) {
         self.t += 1;
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        debug_assert!(self.t > 0, "step_segment before begin_step");
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let arena = Arc::clone(&self.arena);
+        let (i0, spans) = arena.spans_in(lo, hi);
         let b1 = self.hp.beta1;
         let b2 = self.hp.beta2;
         let wd = 1.0 - lr * self.hp.weight_decay;
 
-        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
-            let n = p.numel();
+        for (k, sp) in spans.iter().enumerate() {
+            let i = i0 + k;
+            let a = sp.offset - lo;
+            let n = sp.len;
+            let g = &grads.data[a..a + n];
             let mut uhat = vec![0.0f32; n];
             match &mut self.state[i] {
                 State::Mat { v, rows, cols, .. } => {
                     let (rows, cols) = (*rows, *cols);
                     let sq: Vec<f32> =
-                        g.data.iter().map(|x| x * x + EPS1).collect();
+                        g.iter().map(|x| x * x + EPS1).collect();
                     factored_update(v, &sq, rows, cols, b2);
                     let rm = r_mean(v, rows);
                     for ri in 0..rows {
                         for ci in 0..cols {
                             let vh = factored_get_pre(v, ri, ci, rm);
-                            uhat[ri * cols + ci] = g.data[ri * cols + ci]
-                                / (vh.sqrt() + EPS1);
+                            uhat[ri * cols + ci] =
+                                g[ri * cols + ci] / (vh.sqrt() + EPS1);
                         }
                     }
                 }
                 State::Vec { v, .. } => {
                     for j in 0..n {
-                        let gv = g.data[j];
+                        let gv = g[j];
                         v[j] = b2 * v[j] + (1.0 - b2) * (gv * gv + EPS1);
                         uhat[j] = gv / (v[j].sqrt() + EPS1);
                     }
                 }
             }
             // Clip like Adafactor.
-            let rms =
-                (uhat.iter().map(|x| x * x).sum::<f32>() / n as f32).sqrt();
+            let rms = (uhat.iter().map(|x| x * x).sum::<f32>()
+                / n as f32)
+                .sqrt();
             let scale = 1.0 / (rms / CLIP_D).max(1.0);
             for x in uhat.iter_mut() {
                 *x *= scale;
             }
             // Momentum.
-            let m = &mut self.m[i];
             for j in 0..n {
-                m.data[j] = b1 * m.data[j] + (1.0 - b1) * uhat[j];
+                self.m[sp.offset + j] =
+                    b1 * self.m[sp.offset + j] + (1.0 - b1) * uhat[j];
             }
             // Instability residual (û − m)², factored EMA → confidence.
             let res: Vec<f32> = (0..n)
                 .map(|j| {
-                    let d = uhat[j] - m.data[j];
+                    let d = uhat[j] - self.m[sp.offset + j];
                     d * d + EPS2
                 })
                 .collect();
@@ -168,16 +192,18 @@ impl Optimizer for Came {
                         for ci in 0..cols {
                             let s = factored_get_pre(u, ri, ci, rm);
                             let j = ri * cols + ci;
-                            p.data[j] = p.data[j] * wd
-                                - lr * m.data[j] / (s.sqrt() + EPS1);
+                            params.data[a + j] = params.data[a + j] * wd
+                                - lr * self.m[sp.offset + j]
+                                    / (s.sqrt() + EPS1);
                         }
                     }
                 }
                 State::Vec { u, .. } => {
                     for j in 0..n {
                         u[j] = BETA3 * u[j] + (1.0 - BETA3) * res[j];
-                        p.data[j] = p.data[j] * wd
-                            - lr * m.data[j] / (u[j].sqrt() + EPS1);
+                        params.data[a + j] = params.data[a + j] * wd
+                            - lr * self.m[sp.offset + j]
+                                / (u[j].sqrt() + EPS1);
                     }
                 }
             }
@@ -195,7 +221,75 @@ impl Optimizer for Came {
                 State::Vec { v, u } => v.len() + u.len(),
             })
             .sum();
-        (s + self.m.iter().map(Tensor::numel).sum::<usize>()) * 4
+        (s + self.m.len()) * 4
+    }
+
+    /// Entries: `m` (arena-flat); per matrix tensor `vr/<name>`,
+    /// `vc/<name>`, `ur/<name>`, `uc/<name>`; per vector tensor
+    /// `v/<name>`, `u/<name>`; `__step`.
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.insert("m", &[self.m.len()], self.m.clone());
+        for (sp, st) in self.arena.spans.iter().zip(&self.state) {
+            match st {
+                State::Mat { v, u, .. } => {
+                    sd.insert(format!("vr/{}", sp.name), &[v.r.len()],
+                              v.r.clone());
+                    sd.insert(format!("vc/{}", sp.name), &[v.c.len()],
+                              v.c.clone());
+                    sd.insert(format!("ur/{}", sp.name), &[u.r.len()],
+                              u.r.clone());
+                    sd.insert(format!("uc/{}", sp.name), &[u.c.len()],
+                              u.c.clone());
+                }
+                State::Vec { v, u } => {
+                    sd.insert(format!("v/{}", sp.name), &[v.len()],
+                              v.clone());
+                    sd.insert(format!("u/{}", sp.name), &[u.len()],
+                              u.clone());
+                }
+            }
+        }
+        sd.set_step(self.t);
+        sd
+    }
+
+    fn state_len(&self) -> usize {
+        2 + self
+            .state
+            .iter()
+            .map(|s| match s {
+                State::Mat { .. } => 4,
+                State::Vec { .. } => 2,
+            })
+            .sum::<usize>()
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        check_state_len(state, self.state_len(), "came")?;
+        self.m.copy_from_slice(state.data("m", self.m.len())?);
+        for (sp, st) in self.arena.spans.iter().zip(&mut self.state) {
+            match st {
+                State::Mat { v, u, .. } => {
+                    v.r.copy_from_slice(state.data(
+                        &format!("vr/{}", sp.name), v.r.len())?);
+                    v.c.copy_from_slice(state.data(
+                        &format!("vc/{}", sp.name), v.c.len())?);
+                    u.r.copy_from_slice(state.data(
+                        &format!("ur/{}", sp.name), u.r.len())?);
+                    u.c.copy_from_slice(state.data(
+                        &format!("uc/{}", sp.name), u.c.len())?);
+                }
+                State::Vec { v, u } => {
+                    v.copy_from_slice(state.data(
+                        &format!("v/{}", sp.name), v.len())?);
+                    u.copy_from_slice(state.data(
+                        &format!("u/{}", sp.name), u.len())?);
+                }
+            }
+        }
+        self.t = state.step()?;
+        Ok(())
     }
 }
 
@@ -224,5 +318,32 @@ mod tests {
         let opt = Came::new(Hyper::default(), &params);
         // m full + two factored pairs (v and confidence).
         assert_eq!(opt.state_bytes(), (64 * 64 + 4 * 64) * 4);
+    }
+
+    #[test]
+    fn state_roundtrips() {
+        let mut rng = Rng::new(6);
+        let mut pa = vec![Tensor::randn("w", &[3, 4], 1.0, &mut rng),
+                          Tensor::randn("b", &[3], 1.0, &mut rng)];
+        let gs: Vec<Vec<Tensor>> = (0..4)
+            .map(|_| vec![Tensor::randn("w", &[3, 4], 1.0, &mut rng),
+                          Tensor::randn("b", &[3], 1.0, &mut rng)])
+            .collect();
+        let mut a = Came::new(Hyper::default(), &pa);
+        for g in &gs[..2] {
+            a.step(&mut pa, g, 1e-2);
+        }
+        let sd = a.state_dict();
+        // m + 4 factors for w + 2 vectors for b + __step.
+        assert_eq!(sd.len(), 8);
+        assert_eq!(sd.len(), a.state_len());
+        let mut pb = pa.clone();
+        let mut b = Came::new(Hyper::default(), &pb);
+        b.load_state_dict(&sd).unwrap();
+        for g in &gs[2..] {
+            a.step(&mut pa, g, 1e-2);
+            b.step(&mut pb, g, 1e-2);
+        }
+        assert_eq!(pa, pb);
     }
 }

@@ -1,0 +1,516 @@
+//! The block-granular optimizer core: flat parameter arena, segment
+//! views, named state dicts, and the [`Optimizer`] trait every roster
+//! member implements.
+//!
+//! Adam-mini's premise is that optimizer state is *block-structured*
+//! (one `v_b` per dense Hessian block), and the distributed engine
+//! wants to drive updates at *bucket* granularity (step a shard range
+//! the moment its reduce-scatter lands). Both needs meet in one API:
+//!
+//! - [`Arena`] — the flattened parameter space (tensor order =
+//!   parameter order), shared by optimizers and the ZeRO partitioner.
+//!   Optimizer state is laid out against arena coordinates.
+//! - [`ParamView`] / [`GradView`] — a contiguous arena segment of
+//!   parameters (mutable) and gradients (shared), stepped in place:
+//!   no tensor-list clone round-trips anywhere on the step path.
+//! - [`Optimizer::step_segment`] — apply the current step's update to
+//!   one segment. [`Optimizer::begin_step`] opens a step (advances the
+//!   bias-correction counter once); any disjoint segment partition of
+//!   the arena then produces the same parameters as one whole-model
+//!   step, provided segment boundaries respect the optimizer's
+//!   [`Granularity`] (its [`Optimizer::segment_cuts`]).
+//! - [`Optimizer::step`] — the classic whole-model tensor-list step,
+//!   provided as a blanket wrapper: flatten, `begin_step`, one
+//!   full-range `step_segment`, write back.
+//! - [`StateDict`] — string-keyed state export/import (`"m"`, `"vb"`,
+//!   `"r/<tensor>"`, `"__step"`, ...) replacing the old fragile
+//!   positional `Vec<Tensor>` convention. Used by checkpointing, the
+//!   ZeRO state router (`rank<r>/...` prefixes) and `repro report`.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// One tensor's placement in the flattened parameter space.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// The flat parameter arena: tensor order is parameter order. A shard
+/// optimizer's arena covers only its shard (shard-local coordinates).
+#[derive(Debug, Clone)]
+pub struct Arena {
+    pub spans: Vec<Span>,
+    pub total: usize,
+}
+
+impl Arena {
+    pub fn of(params: &[Tensor]) -> Arena {
+        Arena::from_shapes(
+            params.iter().map(|p| (p.name.clone(), p.shape.clone())))
+    }
+
+    pub fn from_shapes(
+        shapes: impl IntoIterator<Item = (String, Vec<usize>)>) -> Arena {
+        let mut spans = Vec::new();
+        let mut offset = 0;
+        for (name, shape) in shapes {
+            let len: usize = shape.iter().product();
+            spans.push(Span { name, shape, offset, len });
+            offset += len;
+        }
+        Arena { spans, total: offset }
+    }
+
+    pub fn flatten(&self, params: &[Tensor]) -> Vec<f32> {
+        assert_eq!(params.len(), self.spans.len());
+        let mut flat = Vec::with_capacity(self.total);
+        for (p, s) in params.iter().zip(&self.spans) {
+            debug_assert_eq!(p.numel(), s.len, "{}: layout drift", s.name);
+            flat.extend_from_slice(&p.data);
+        }
+        flat
+    }
+
+    /// Copy a flat vector back into the tensor list.
+    pub fn unflatten(&self, flat: &[f32], params: &mut [Tensor]) {
+        assert_eq!(flat.len(), self.total);
+        assert_eq!(params.len(), self.spans.len());
+        for (p, s) in params.iter_mut().zip(&self.spans) {
+            p.data.copy_from_slice(&flat[s.offset..s.offset + s.len]);
+        }
+    }
+
+    /// flat += tensors (gradient accumulation into a worker's buffer).
+    pub fn accumulate(&self, flat: &mut [f32], grads: &[Tensor]) {
+        assert_eq!(flat.len(), self.total);
+        assert_eq!(grads.len(), self.spans.len());
+        for (g, s) in grads.iter().zip(&self.spans) {
+            for (x, y) in
+                flat[s.offset..s.offset + s.len].iter_mut().zip(&g.data)
+            {
+                *x += y;
+            }
+        }
+    }
+
+    /// The spans fully covered by the flat range `[lo, hi)`, plus the
+    /// index of the first. Panics if either boundary splits a tensor —
+    /// tensor-granular optimizers use this to reject invalid segments.
+    pub fn spans_in(&self, lo: usize, hi: usize) -> (usize, &[Span]) {
+        assert!(lo <= hi && hi <= self.total,
+                "segment [{lo}, {hi}) out of arena bounds {}", self.total);
+        if lo == hi {
+            return (0, &[]);
+        }
+        let start =
+            self.spans.partition_point(|s| s.offset + s.len <= lo);
+        let s0 = &self.spans[start];
+        assert_eq!(s0.offset, lo,
+                   "segment lo {lo} splits tensor {}", s0.name);
+        let end = self.spans.partition_point(|s| s.offset < hi);
+        let sl = &self.spans[end - 1];
+        assert_eq!(sl.offset + sl.len, hi,
+                   "segment hi {hi} splits tensor {}", sl.name);
+        (start, &self.spans[start..end])
+    }
+
+    /// Tensor boundaries as flat cut points (0, span offsets, total).
+    pub fn span_cuts(&self) -> Vec<usize> {
+        let mut cuts: Vec<usize> =
+            self.spans.iter().map(|s| s.offset).collect();
+        cuts.push(self.total);
+        cuts
+    }
+}
+
+/// Mutable view of one contiguous arena segment of parameters.
+pub struct ParamView<'a> {
+    lo: usize,
+    pub data: &'a mut [f32],
+}
+
+impl<'a> ParamView<'a> {
+    /// `lo` is the arena offset of `data[0]`.
+    pub fn new(lo: usize, data: &'a mut [f32]) -> ParamView<'a> {
+        ParamView { lo, data }
+    }
+
+    pub fn lo(&self) -> usize {
+        self.lo
+    }
+
+    pub fn hi(&self) -> usize {
+        self.lo + self.data.len()
+    }
+
+    pub fn range(&self) -> (usize, usize) {
+        (self.lo, self.hi())
+    }
+
+    /// Reborrow (for forwarding to an inner optimizer).
+    pub fn reborrow(&mut self) -> ParamView<'_> {
+        ParamView { lo: self.lo, data: &mut *self.data }
+    }
+}
+
+/// Shared view of the matching gradient segment.
+pub struct GradView<'a> {
+    lo: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> GradView<'a> {
+    pub fn new(lo: usize, data: &'a [f32]) -> GradView<'a> {
+        GradView { lo, data }
+    }
+
+    pub fn lo(&self) -> usize {
+        self.lo
+    }
+
+    pub fn hi(&self) -> usize {
+        self.lo + self.data.len()
+    }
+
+    pub fn reborrow(&self) -> GradView<'_> {
+        GradView { lo: self.lo, data: self.data }
+    }
+}
+
+/// Finest segmentation an optimizer's update decomposes over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// Per-coordinate update (AdamW, SGD, Lion, AdaGrad, Adan): any
+    /// segment boundary is valid.
+    Element,
+    /// Blockwise update (Adam-mini, blockwise GD): boundaries must
+    /// fall on the optimizer's block grid.
+    Block,
+    /// Whole-tensor coupling (LAMB trust ratio, factored second
+    /// moments, projections): boundaries must fall on tensor edges.
+    Tensor,
+}
+
+/// Name of the step-counter entry in a [`StateDict`].
+pub const STEP_TENSOR: &str = "__step";
+
+/// Encode a step counter as a 2-element tensor. Split into 24-bit
+/// halves so each is exactly representable in f32 (a single f32 would
+/// silently round counters past 2^24).
+pub fn step_tensor(t: u64) -> Tensor {
+    let lo = (t & 0xFF_FFFF) as f32;
+    let hi = (t >> 24) as f32;
+    Tensor::new(STEP_TENSOR, &[2], vec![lo, hi])
+}
+
+/// Decode a [`step_tensor`].
+pub fn decode_step(t: &Tensor) -> Result<u64> {
+    if t.numel() != 2 {
+        bail!("malformed {STEP_TENSOR} entry: {} elems", t.numel());
+    }
+    Ok(t.data[0] as u64 | ((t.data[1] as u64) << 24))
+}
+
+/// Named optimizer state: an ordered map of string keys to tensors.
+/// Keys are flat identifiers (`"m"`, `"v"`, `"vb"`), per-tensor
+/// entries (`"r/<tensor name>"`), the `"__step"` counter, and — in
+/// ZeRO-gathered dicts — rank-routed entries (`"rank2/m"`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StateDict {
+    /// Entries in insertion order; the tensor name IS the key.
+    entries: Vec<Tensor>,
+}
+
+impl StateDict {
+    pub fn new() -> StateDict {
+        StateDict::default()
+    }
+
+    /// Insert an entry. Panics on a duplicate key (an export bug, not
+    /// an input error).
+    pub fn insert(&mut self, key: impl Into<String>, shape: &[usize],
+                  data: Vec<f32>) {
+        let key = key.into();
+        assert!(self.get(&key).is_none(), "duplicate state key {key:?}");
+        self.entries.push(Tensor::new(key, shape, data));
+    }
+
+    /// Insert a pre-built tensor entry (name = key).
+    pub fn insert_tensor(&mut self, t: Tensor) {
+        assert!(self.get(&t.name).is_none(),
+                "duplicate state key {:?}", t.name);
+        self.entries.push(t);
+    }
+
+    pub fn set_step(&mut self, t: u64) {
+        self.insert_tensor(step_tensor(t));
+    }
+
+    /// The `__step` counter (error if absent or malformed).
+    pub fn step(&self) -> Result<u64> {
+        decode_step(self.require(STEP_TENSOR)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Tensor> {
+        self.entries.iter().find(|t| t.name == key)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&Tensor> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing state key {key:?}"))
+    }
+
+    /// Entry data with an exact length check.
+    pub fn data(&self, key: &str, len: usize) -> Result<&[f32]> {
+        let t = self.require(key)?;
+        if t.numel() != len {
+            bail!("state key {key:?}: {} elems, expected {len}",
+                  t.numel());
+        }
+        Ok(&t.data)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[Tensor] {
+        &self.entries
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|t| t.name.as_str())
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.entries.iter().map(Tensor::numel).sum()
+    }
+
+    pub fn into_tensors(self) -> Vec<Tensor> {
+        self.entries
+    }
+
+    /// Build from named tensors (checkpoint load). Duplicate names are
+    /// an error, never a silent shadow.
+    pub fn from_tensors(tensors: Vec<Tensor>) -> Result<StateDict> {
+        let mut sd = StateDict::new();
+        for t in tensors {
+            if sd.get(&t.name).is_some() {
+                bail!("duplicate state key {:?}", t.name);
+            }
+            sd.entries.push(t);
+        }
+        Ok(sd)
+    }
+
+    /// The sub-dict of entries whose key starts with `prefix`, with
+    /// the prefix stripped (ZeRO rank routing).
+    pub fn sub_dict(&self, prefix: &str) -> StateDict {
+        let mut sd = StateDict::new();
+        for t in &self.entries {
+            if let Some(rest) = t.name.strip_prefix(prefix) {
+                sd.entries.push(Tensor::new(rest, &t.shape,
+                                            t.data.clone()));
+            }
+        }
+        sd
+    }
+}
+
+/// Check an imported dict has exactly the expected entry count.
+pub fn check_state_len(sd: &StateDict, want: usize, who: &str)
+    -> Result<()> {
+    if sd.len() != want {
+        bail!("{who}: expected {want} state entries, got {} ({:?})",
+              sd.len(), sd.keys().collect::<Vec<_>>());
+    }
+    Ok(())
+}
+
+/// A host-side optimizer over a flat parameter [`Arena`].
+///
+/// Contract: one *model step* is `begin_step()` followed by
+/// `step_segment` calls covering any disjoint partition of the arena
+/// whose boundaries respect [`Optimizer::segment_cuts`]. The result is
+/// identical (bitwise) to a single full-range `step_segment` — the
+/// property the ZeRO-2 streaming pipeline relies on to step each
+/// bucket's shard the moment its reduce-scatter lands.
+pub trait Optimizer {
+    fn name(&self) -> String;
+
+    /// The arena this optimizer's state is laid out over.
+    fn arena(&self) -> &Arc<Arena>;
+
+    /// Finest valid segmentation of the update.
+    fn granularity(&self) -> Granularity;
+
+    /// Open the next optimizer step (advance bias-correction counters
+    /// once). Call exactly once per model step, before that step's
+    /// `step_segment` calls. Default: no step counter.
+    fn begin_step(&mut self) {}
+
+    /// Apply the current step's update to one contiguous arena
+    /// segment, in place. `params` and `grads` must cover the same
+    /// range, and the range must respect `segment_cuts`.
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32);
+
+    /// Bytes of optimizer state currently held (memory accounting).
+    fn state_bytes(&self) -> usize;
+
+    /// Named state export. Default: empty (stateless optimizer).
+    fn state_dict(&self) -> StateDict {
+        StateDict::new()
+    }
+
+    /// Entry count of [`Optimizer::state_dict`] WITHOUT materializing
+    /// it (the ZeRO state router sizes payloads with this). Must equal
+    /// `state_dict().len()`; the default matches the default (empty)
+    /// export.
+    fn state_len(&self) -> usize {
+        0
+    }
+
+    /// Restore state produced by [`Optimizer::state_dict`] on an
+    /// identically-constructed instance. Importing a non-empty dict
+    /// into a stateless optimizer is an error (never a silent drop).
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        if state.is_empty() {
+            return Ok(());
+        }
+        bail!("{}: optimizer state import not supported", self.name())
+    }
+
+    /// Valid segment boundaries: `None` means every element boundary
+    /// (elementwise updates); `Some(cuts)` means boundaries must be
+    /// drawn from `cuts` (sorted, includes 0 and total). Blockwise
+    /// optimizers override this with their block grid.
+    fn segment_cuts(&self) -> Option<Vec<usize>> {
+        match self.granularity() {
+            Granularity::Element => None,
+            // Conservative default for Block: tensor edges are always
+            // valid block boundaries; Adam-mini overrides with its
+            // finer Hessian-block grid.
+            Granularity::Block | Granularity::Tensor => {
+                Some(self.arena().span_cuts())
+            }
+        }
+    }
+
+    /// Whole-model step over tensor lists (the classic API): flatten
+    /// into the arena, `begin_step`, one full-range `step_segment`,
+    /// write back.
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        let arena = Arc::clone(self.arena());
+        let mut p = arena.flatten(params);
+        let g = arena.flatten(grads);
+        self.begin_step();
+        self.step_segment(ParamView::new(0, &mut p), GradView::new(0, &g),
+                          lr);
+        arena.unflatten(&p, params);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn toy_arena() -> Arena {
+        Arena::from_shapes(vec![
+            ("a".to_string(), vec![4, 3]),
+            ("b".to_string(), vec![6]),
+            ("c".to_string(), vec![2, 2]),
+        ])
+    }
+
+    #[test]
+    fn arena_layout_and_roundtrip() {
+        let mut rng = Rng::new(0);
+        let params = vec![
+            Tensor::randn("a", &[4, 3], 1.0, &mut rng),
+            Tensor::randn("b", &[6], 1.0, &mut rng),
+            Tensor::randn("c", &[2, 2], 1.0, &mut rng),
+        ];
+        let arena = Arena::of(&params);
+        assert_eq!(arena.total, 22);
+        assert_eq!(arena.span_cuts(), vec![0, 12, 18, 22]);
+        let flat = arena.flatten(&params);
+        let mut back: Vec<Tensor> = params
+            .iter()
+            .map(|p| Tensor::zeros(&*p.name, &p.shape))
+            .collect();
+        arena.unflatten(&flat, &mut back);
+        assert_eq!(back, params);
+    }
+
+    #[test]
+    fn spans_in_requires_tensor_alignment() {
+        let arena = toy_arena();
+        let (i0, spans) = arena.spans_in(12, 22);
+        assert_eq!(i0, 1);
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "b");
+        let (_, all) = arena.spans_in(0, 22);
+        assert_eq!(all.len(), 3);
+        let (_, none) = arena.spans_in(5, 5);
+        assert!(none.is_empty());
+        assert!(std::panic::catch_unwind(|| arena.spans_in(3, 22).0)
+            .is_err());
+        assert!(std::panic::catch_unwind(|| arena.spans_in(0, 13).0)
+            .is_err());
+    }
+
+    #[test]
+    fn state_dict_basics() {
+        let mut sd = StateDict::new();
+        sd.insert("m", &[3], vec![1.0, 2.0, 3.0]);
+        sd.set_step(5);
+        assert_eq!(sd.len(), 2);
+        assert_eq!(sd.step().unwrap(), 5);
+        assert_eq!(sd.data("m", 3).unwrap(), &[1.0, 2.0, 3.0]);
+        assert!(sd.data("m", 4).is_err());
+        assert!(sd.require("v").is_err());
+        // Round-trip through tensors.
+        let back =
+            StateDict::from_tensors(sd.clone().into_tensors()).unwrap();
+        assert_eq!(back, sd);
+        // Duplicate keys are loud.
+        let dup = vec![Tensor::zeros("m", &[1]), Tensor::zeros("m", &[1])];
+        assert!(StateDict::from_tensors(dup).is_err());
+    }
+
+    #[test]
+    fn state_dict_rank_routing() {
+        let mut sd = StateDict::new();
+        sd.insert("rank0/m", &[2], vec![1.0, 2.0]);
+        sd.insert("rank1/m", &[2], vec![3.0, 4.0]);
+        sd.insert("rank1/v", &[1], vec![5.0]);
+        let r1 = sd.sub_dict("rank1/");
+        assert_eq!(r1.len(), 2);
+        assert_eq!(r1.data("m", 2).unwrap(), &[3.0, 4.0]);
+        assert_eq!(r1.data("v", 1).unwrap(), &[5.0]);
+        assert_eq!(sd.sub_dict("rank9/").len(), 0);
+    }
+
+    #[test]
+    fn step_tensor_roundtrips_beyond_f32_integer_range() {
+        for t in [0u64, 1, 1 << 20, (1 << 24) + 1, (1 << 30) + 12345,
+                  (1 << 40) + 7] {
+            let enc = step_tensor(t);
+            assert_eq!(decode_step(&enc).unwrap(), t, "t = {t}");
+        }
+        assert!(decode_step(&Tensor::zeros("w", &[3])).is_err());
+    }
+}

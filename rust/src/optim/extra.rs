@@ -5,27 +5,35 @@
 //! and Adan (Xie et al. 2022 — Nesterov-momentum Adam, listed as a
 //! combinable diagonal method).
 
-use super::{Hyper, Optimizer};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::core::{check_state_len, Arena, GradView, Granularity,
+                  Optimizer, ParamView, StateDict};
+use super::Hyper;
 use crate::tensor::Tensor;
 
-/// AdaGrad with optional momentum.
+/// AdaGrad with optional momentum. Elementwise.
 pub struct AdaGrad {
     eps: f32,
     momentum: f32,
-    acc: Vec<Tensor>,
-    buf: Vec<Tensor>,
+    arena: Arc<Arena>,
+    acc: Vec<f32>,
+    buf: Vec<f32>,
 }
 
 impl AdaGrad {
     pub fn new(params: &[Tensor], momentum: f32, eps: f32) -> AdaGrad {
-        AdaGrad {
-            eps,
-            momentum,
-            acc: params.iter().map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
-            buf: params.iter().map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
-        }
+        let arena = Arc::new(Arena::of(params));
+        let n = arena.total;
+        AdaGrad { eps, momentum, arena, acc: vec![0.0; n],
+                  buf: vec![0.0; n] }
+    }
+
+    /// The monotone g² accumulator (inspection).
+    pub fn acc(&self) -> &[f32] {
+        &self.acc
     }
 }
 
@@ -34,24 +42,50 @@ impl Optimizer for AdaGrad {
         "adagrad".into()
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
-        for ((p, g), (a, b)) in params
-            .iter_mut()
-            .zip(grads)
-            .zip(self.acc.iter_mut().zip(self.buf.iter_mut()))
-        {
-            for i in 0..p.data.len() {
-                let gi = g.data[i];
-                a.data[i] += gi * gi;
-                let u = gi / (a.data[i].sqrt() + self.eps);
-                b.data[i] = self.momentum * b.data[i] + u;
-                p.data[i] -= lr * b.data[i];
-            }
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Element
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let acc = &mut self.acc[lo..hi];
+        let buf = &mut self.buf[lo..hi];
+        for i in 0..params.data.len() {
+            let gi = grads.data[i];
+            acc[i] += gi * gi;
+            let u = gi / (acc[i].sqrt() + self.eps);
+            buf[i] = self.momentum * buf[i] + u;
+            params.data[i] -= lr * buf[i];
         }
     }
 
     fn state_bytes(&self) -> usize {
-        self.acc.iter().map(Tensor::numel).sum::<usize>() * 4 * 2
+        (self.acc.len() + self.buf.len()) * 4
+    }
+
+    /// Entries: `acc` (monotone g²), `buf` (momentum).
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.insert("acc", &[self.acc.len()], self.acc.clone());
+        sd.insert("buf", &[self.buf.len()], self.buf.clone());
+        sd
+    }
+
+    fn state_len(&self) -> usize {
+        2
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        check_state_len(state, 2, "adagrad")?;
+        self.acc.copy_from_slice(state.data("acc", self.acc.len())?);
+        self.buf.copy_from_slice(state.data("buf", self.buf.len())?);
+        Ok(())
     }
 }
 
@@ -59,10 +93,12 @@ impl Optimizer for AdaGrad {
 /// partition granularity), and momentum over *normalized* gradients —
 /// m = β1·m + (g/√v_layer + λ·p). The paper (App. A) predicts the
 /// layer-wise granularity inherits the default-partition instability;
-/// `repro exp fig21` can be extended with it to check.
+/// `repro exp fig21` can be extended with it to check. Tensor-granular
+/// (v couples a whole tensor).
 pub struct NovoGrad {
     hp: Hyper,
-    m: Vec<Tensor>,
+    arena: Arc<Arena>,
+    m: Vec<f32>,
     /// One v per tensor (layer).
     v: Vec<f32>,
     t: u64,
@@ -70,13 +106,10 @@ pub struct NovoGrad {
 
 impl NovoGrad {
     pub fn new(hp: Hyper, params: &[Tensor]) -> NovoGrad {
-        NovoGrad {
-            hp,
-            m: params.iter().map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
-            v: vec![0.0; params.len()],
-            t: 0,
-        }
+        let arena = Arc::new(Arena::of(params));
+        let n = arena.total;
+        let spans = arena.spans.len();
+        NovoGrad { hp, arena, m: vec![0.0; n], v: vec![0.0; spans], t: 0 }
     }
 }
 
@@ -85,57 +118,103 @@ impl Optimizer for NovoGrad {
         "novograd".into()
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Tensor
+    }
+
+    fn begin_step(&mut self) {
         self.t += 1;
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        debug_assert!(self.t > 0, "step_segment before begin_step");
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let arena = Arc::clone(&self.arena);
+        let (i0, spans) = arena.spans_in(lo, hi);
         let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
-        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
-            let gsq: f32 =
-                g.data.iter().map(|x| (x * x)).sum::<f32>();
+        for (k, sp) in spans.iter().enumerate() {
+            let i = i0 + k;
+            let (a, b) = (sp.offset - lo, sp.offset - lo + sp.len);
+            let gsq: f32 = grads.data[a..b]
+                .iter()
+                .map(|x| x * x)
+                .sum::<f32>();
             self.v[i] = if self.t == 1 {
                 gsq
             } else {
                 beta2 * self.v[i] + (1.0 - beta2) * gsq
             };
             let denom = self.v[i].sqrt() + eps;
-            let m = &mut self.m[i];
-            for j in 0..p.data.len() {
-                let u = g.data[j] / denom + weight_decay * p.data[j];
-                m.data[j] = beta1 * m.data[j] + u;
-                p.data[j] -= lr * m.data[j];
+            for j in a..b {
+                let u = grads.data[j] / denom
+                    + weight_decay * params.data[j];
+                let mj = beta1 * self.m[lo + j] + u;
+                self.m[lo + j] = mj;
+                params.data[j] -= lr * mj;
             }
         }
     }
 
     fn state_bytes(&self) -> usize {
-        (self.m.iter().map(Tensor::numel).sum::<usize>() + self.v.len())
-            * 4
+        (self.m.len() + self.v.len()) * 4
+    }
+
+    /// Entries: `m` (arena-flat), `v` (one per tensor), `__step`.
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.insert("m", &[self.m.len()], self.m.clone());
+        sd.insert("v", &[self.v.len()], self.v.clone());
+        sd.set_step(self.t);
+        sd
+    }
+
+    fn state_len(&self) -> usize {
+        3
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        check_state_len(state, 3, "novograd")?;
+        self.m.copy_from_slice(state.data("m", self.m.len())?);
+        self.v.copy_from_slice(state.data("v", self.v.len())?);
+        self.t = state.step()?;
+        Ok(())
     }
 }
 
 /// Adan: Nesterov-style Adam with gradient-difference momentum.
+/// Elementwise (the g − g_prev difference is per-coordinate).
 pub struct Adan {
     hp: Hyper,
     /// β3 for the gradient-difference EMA.
     beta3: f32,
-    m: Vec<Tensor>,
-    d: Vec<Tensor>,
-    v: Vec<Tensor>,
-    prev_g: Vec<Tensor>,
+    arena: Arc<Arena>,
+    m: Vec<f32>,
+    d: Vec<f32>,
+    v: Vec<f32>,
+    prev_g: Vec<f32>,
     t: u64,
 }
 
 impl Adan {
     pub fn new(hp: Hyper, params: &[Tensor]) -> Adan {
-        let z = |_: &Tensor| ();
-        let mk = || {
-            params
-                .iter()
-                .map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect::<Vec<_>>()
-        };
-        let _ = z;
-        Adan { hp, beta3: 0.99, m: mk(), d: mk(), v: mk(), prev_g: mk(),
-               t: 0 }
+        let arena = Arc::new(Arena::of(params));
+        let n = arena.total;
+        Adan {
+            hp,
+            beta3: 0.99,
+            arena,
+            m: vec![0.0; n],
+            d: vec![0.0; n],
+            v: vec![0.0; n],
+            prev_g: vec![0.0; n],
+            t: 0,
+        }
     }
 }
 
@@ -144,32 +223,73 @@ impl Optimizer for Adan {
         "adan".into()
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Element
+    }
+
+    fn begin_step(&mut self) {
         self.t += 1;
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        debug_assert!(self.t > 0, "step_segment before begin_step");
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
         let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
         let b3 = self.beta3;
-        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
-            let (m, d, v, pg) = (&mut self.m[i], &mut self.d[i],
-                                 &mut self.v[i], &mut self.prev_g[i]);
-            for j in 0..p.data.len() {
-                let gj = g.data[j];
-                let diff = if self.t == 1 { 0.0 } else { gj - pg.data[j] };
-                m.data[j] = beta1 * m.data[j] + (1.0 - beta1) * gj;
-                d.data[j] = b3 * d.data[j] + (1.0 - b3) * diff;
-                let nest = gj + b3 * diff;
-                v.data[j] =
-                    beta2 * v.data[j] + (1.0 - beta2) * nest * nest;
-                let denom = v.data[j].sqrt() + eps;
-                let upd = (m.data[j] + b3 * d.data[j]) / denom;
-                p.data[j] = (p.data[j] - lr * upd)
-                    / (1.0 + lr * weight_decay);
-                pg.data[j] = gj;
-            }
+        let m = &mut self.m[lo..hi];
+        let d = &mut self.d[lo..hi];
+        let v = &mut self.v[lo..hi];
+        let pg = &mut self.prev_g[lo..hi];
+        for j in 0..params.data.len() {
+            let gj = grads.data[j];
+            let diff = if self.t == 1 { 0.0 } else { gj - pg[j] };
+            m[j] = beta1 * m[j] + (1.0 - beta1) * gj;
+            d[j] = b3 * d[j] + (1.0 - b3) * diff;
+            let nest = gj + b3 * diff;
+            v[j] = beta2 * v[j] + (1.0 - beta2) * nest * nest;
+            let denom = v[j].sqrt() + eps;
+            let upd = (m[j] + b3 * d[j]) / denom;
+            params.data[j] =
+                (params.data[j] - lr * upd) / (1.0 + lr * weight_decay);
+            pg[j] = gj;
         }
     }
 
     fn state_bytes(&self) -> usize {
-        4 * self.m.iter().map(Tensor::numel).sum::<usize>() * 4
+        (self.m.len() + self.d.len() + self.v.len() + self.prev_g.len())
+            * 4
+    }
+
+    /// Entries: `m`, `d`, `v`, `prev_g` (arena-flat), `__step`.
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.insert("m", &[self.m.len()], self.m.clone());
+        sd.insert("d", &[self.d.len()], self.d.clone());
+        sd.insert("v", &[self.v.len()], self.v.clone());
+        sd.insert("prev_g", &[self.prev_g.len()], self.prev_g.clone());
+        sd.set_step(self.t);
+        sd
+    }
+
+    fn state_len(&self) -> usize {
+        5
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        check_state_len(state, 5, "adan")?;
+        self.m.copy_from_slice(state.data("m", self.m.len())?);
+        self.d.copy_from_slice(state.data("d", self.d.len())?);
+        self.v.copy_from_slice(state.data("v", self.v.len())?);
+        self.prev_g
+            .copy_from_slice(state.data("prev_g", self.prev_g.len())?);
+        self.t = state.step()?;
+        Ok(())
     }
 }
 
@@ -221,8 +341,43 @@ mod tests {
         let g = Tensor::new("w", &[3], vec![1.0, 2.0, 0.0]);
         opt.step(&mut params, std::slice::from_ref(&g), 0.1);
         opt.step(&mut params, std::slice::from_ref(&g), 0.1);
-        assert!((opt.acc[0].data[0] - 2.0).abs() < 1e-6);
-        assert!((opt.acc[0].data[1] - 8.0).abs() < 1e-6);
-        assert_eq!(opt.acc[0].data[2], 0.0);
+        assert!((opt.acc[0] - 2.0).abs() < 1e-6);
+        assert!((opt.acc[1] - 8.0).abs() < 1e-6);
+        assert_eq!(opt.acc[2], 0.0);
+    }
+
+    #[test]
+    fn extras_state_roundtrips() {
+        let mut rng = Rng::new(2);
+        let p0 = vec![Tensor::randn("w", &[4, 4], 1.0, &mut rng)];
+        let gs: Vec<Tensor> =
+            (0..4).map(|_| Tensor::randn("w", &[4, 4], 1.0, &mut rng))
+                  .collect();
+        let hp = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let builders: Vec<Box<dyn Fn() -> Box<dyn Optimizer>>> = vec![
+            Box::new(move || Box::new(AdaGrad::new(
+                &[Tensor::zeros("w", &[4, 4])], 0.9, 1e-8))),
+            Box::new(move || Box::new(NovoGrad::new(
+                hp, &[Tensor::zeros("w", &[4, 4])]))),
+            Box::new(move || Box::new(Adan::new(
+                hp, &[Tensor::zeros("w", &[4, 4])]))),
+        ];
+        for make in &builders {
+            let mut pa = p0.clone();
+            let mut a = make();
+            for g in &gs[..2] {
+                a.step(&mut pa, std::slice::from_ref(g), 1e-2);
+            }
+            let sd = a.state_dict();
+            assert_eq!(sd.len(), a.state_len(), "{}", a.name());
+            let mut pb = pa.clone();
+            let mut b = make();
+            b.load_state_dict(&sd).unwrap();
+            for g in &gs[2..] {
+                a.step(&mut pa, std::slice::from_ref(g), 1e-2);
+                b.step(&mut pb, std::slice::from_ref(g), 1e-2);
+            }
+            assert_eq!(pa, pb, "{}", a.name());
+        }
     }
 }

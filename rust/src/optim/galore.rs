@@ -11,8 +11,15 @@
 //! The projector is the top-r eigenbasis of G·Gᵀ (equivalent to the
 //! top-r left singular vectors of G), recomputed every
 //! `update_proj_every` steps via the in-crate Jacobi eigensolver.
+//! Tensor-granular: the projection couples a whole tensor.
 
-use super::{Hyper, Optimizer};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::core::{check_state_len, Arena, GradView, Granularity,
+                  Optimizer, ParamView, StateDict};
+use super::Hyper;
 use crate::linalg::{eigh, Mat};
 use crate::tensor::Tensor;
 
@@ -48,19 +55,25 @@ pub struct Galore {
     mode: GaloreMode,
     rank: usize,
     update_proj_every: u64,
+    arena: Arc<Arena>,
     states: Vec<State>,
     t: u64,
+    /// Set by `begin_step` so every segment of one step agrees on
+    /// whether this is a projector-refresh step.
+    refresh_now: bool,
 }
 
 impl Galore {
     pub fn new(hp: Hyper, params: &[Tensor], rank: usize,
                mode: GaloreMode) -> Galore {
-        let states = params
+        let arena = Arc::new(Arena::of(params));
+        let states = arena
+            .spans
             .iter()
-            .map(|p| {
-                if p.shape.len() >= 2 {
-                    let cols = *p.shape.last().unwrap();
-                    let rows = p.numel() / cols;
+            .map(|s| {
+                if s.shape.len() >= 2 {
+                    let cols = *s.shape.last().unwrap();
+                    let rows = s.len / cols;
                     // Projector cost is O(rows^3) (Jacobi eigh of GGᵀ);
                     // cap it — larger tensors fall back to plain Adam
                     // (GaLore implementations likewise restrict target
@@ -80,11 +93,19 @@ impl Galore {
                         });
                     }
                 }
-                State::Vec { m: vec![0.0; p.numel()],
-                             v: vec![0.0; p.numel()] }
+                State::Vec { m: vec![0.0; s.len], v: vec![0.0; s.len] }
             })
             .collect();
-        Galore { hp, mode, rank, update_proj_every: 200, states, t: 0 }
+        Galore {
+            hp,
+            mode,
+            rank,
+            update_proj_every: 200,
+            arena,
+            states,
+            t: 0,
+            refresh_now: false,
+        }
     }
 
     /// Top-r eigenbasis of G·Gᵀ as the projector columns.
@@ -123,34 +144,54 @@ impl Optimizer for Galore {
         }
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Tensor
+    }
+
+    fn begin_step(&mut self) {
         self.t += 1;
+        self.refresh_now = (self.t - 1) % self.update_proj_every == 0;
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        debug_assert!(self.t > 0, "step_segment before begin_step");
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let arena = Arc::clone(&self.arena);
+        let (i0, spans) = arena.spans_in(lo, hi);
         let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
         let bc1 = 1.0 / (1.0 - beta1.powi(self.t as i32));
         let bc2 = 1.0 / (1.0 - beta2.powi(self.t as i32));
         let wd = 1.0 - lr * weight_decay;
-        let refresh = (self.t - 1) % self.update_proj_every == 0;
+        let refresh = self.refresh_now;
 
-        for ((p, g), state) in
-            params.iter_mut().zip(grads).zip(&mut self.states)
-        {
-            match state {
+        for (k, sp) in spans.iter().enumerate() {
+            let i = i0 + k;
+            let a = sp.offset - lo;
+            let g = &grads.data[a..a + sp.len];
+            let p = &mut params.data[a..a + sp.len];
+            match &mut self.states[i] {
                 State::Mat(st) => {
                     if refresh {
-                        Self::refresh_projector(st, &g.data);
+                        Self::refresh_projector(st, g);
                     }
                     let (rows, cols, r) = (st.rows, st.cols, st.r);
                     // Projected gradient ĝ = Pᵀ g  (r × cols).
                     let mut ghat = vec![0.0f32; r * cols];
-                    for i in 0..rows {
+                    for ri in 0..rows {
                         for c in 0..r {
-                            let pic = st.proj[i * r + c];
+                            let pic = st.proj[ri * r + c];
                             if pic == 0.0 {
                                 continue;
                             }
-                            for k in 0..cols {
-                                ghat[c * cols + k] +=
-                                    pic * g.data[i * cols + k];
+                            for kk in 0..cols {
+                                ghat[c * cols + kk] +=
+                                    pic * g[ri * cols + kk];
                             }
                         }
                     }
@@ -172,8 +213,8 @@ impl Optimizer for Galore {
                         }
                         GaloreMode::Mini => {
                             for row in 0..r {
-                                let lo = row * cols;
-                                let gsq: f32 = ghat[lo..lo + cols]
+                                let rlo = row * cols;
+                                let gsq: f32 = ghat[rlo..rlo + cols]
                                     .iter()
                                     .map(|x| x * x)
                                     .sum::<f32>()
@@ -182,7 +223,7 @@ impl Optimizer for Galore {
                                     + (1.0 - beta2) * gsq;
                                 st.v[row] = vb;
                                 let denom = (vb * bc2).sqrt() + eps;
-                                for j in lo..lo + cols {
+                                for j in rlo..rlo + cols {
                                     let mi = beta1 * st.m[j]
                                         + (1.0 - beta1) * ghat[j];
                                     st.m[j] = mi;
@@ -192,26 +233,26 @@ impl Optimizer for Galore {
                         }
                     }
                     // Back-project: Δ = P · upd; decoupled decay.
-                    for i in 0..rows {
-                        for k in 0..cols {
+                    for ri in 0..rows {
+                        for kk in 0..cols {
                             let mut acc = 0.0f32;
                             for c in 0..r {
-                                acc += st.proj[i * r + c]
-                                    * upd[c * cols + k];
+                                acc += st.proj[ri * r + c]
+                                    * upd[c * cols + kk];
                             }
-                            let j = i * cols + k;
-                            p.data[j] = p.data[j] * wd - lr * acc;
+                            let j = ri * cols + kk;
+                            p[j] = p[j] * wd - lr * acc;
                         }
                     }
                 }
                 State::Vec { m, v } => {
-                    for j in 0..p.data.len() {
-                        let gi = g.data[j];
+                    for j in 0..sp.len {
+                        let gi = g[j];
                         let mi = beta1 * m[j] + (1.0 - beta1) * gi;
                         let vi = beta2 * v[j] + (1.0 - beta2) * gi * gi;
                         m[j] = mi;
                         v[j] = vi;
-                        p.data[j] = p.data[j] * wd
+                        p[j] = p[j] * wd
                             - lr * (mi * bc1) / ((vi * bc2).sqrt() + eps);
                     }
                 }
@@ -228,6 +269,68 @@ impl Optimizer for Galore {
             })
             .sum::<usize>()
             * 4
+    }
+
+    /// Entries per projected tensor: `proj/<name>`, `m/<name>`,
+    /// `v/<name>` (projected-space shapes); per plain tensor:
+    /// `m/<name>`, `v/<name>`; plus `__step`.
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        for (sp, st) in self.arena.spans.iter().zip(&self.states) {
+            match st {
+                State::Mat(st) => {
+                    sd.insert(format!("proj/{}", sp.name),
+                              &[st.rows, st.r], st.proj.clone());
+                    sd.insert(format!("m/{}", sp.name), &[st.m.len()],
+                              st.m.clone());
+                    sd.insert(format!("v/{}", sp.name), &[st.v.len()],
+                              st.v.clone());
+                }
+                State::Vec { m, v } => {
+                    sd.insert(format!("m/{}", sp.name), &[m.len()],
+                              m.clone());
+                    sd.insert(format!("v/{}", sp.name), &[v.len()],
+                              v.clone());
+                }
+            }
+        }
+        sd.set_step(self.t);
+        sd
+    }
+
+    fn state_len(&self) -> usize {
+        1 + self
+            .states
+            .iter()
+            .map(|s| match s {
+                State::Mat(_) => 3,
+                State::Vec { .. } => 2,
+            })
+            .sum::<usize>()
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        check_state_len(state, self.state_len(), "galore")?;
+        for (sp, st) in self.arena.spans.iter().zip(&mut self.states) {
+            match st {
+                State::Mat(st) => {
+                    st.proj.copy_from_slice(state.data(
+                        &format!("proj/{}", sp.name), st.proj.len())?);
+                    st.m.copy_from_slice(state.data(
+                        &format!("m/{}", sp.name), st.m.len())?);
+                    st.v.copy_from_slice(state.data(
+                        &format!("v/{}", sp.name), st.v.len())?);
+                }
+                State::Vec { m, v } => {
+                    m.copy_from_slice(state.data(
+                        &format!("m/{}", sp.name), m.len())?);
+                    v.copy_from_slice(state.data(
+                        &format!("v/{}", sp.name), v.len())?);
+                }
+            }
+        }
+        self.t = state.step()?;
+        Ok(())
     }
 }
 
@@ -301,5 +404,34 @@ mod tests {
         let opt = Galore::new(Hyper::default(), &params, 4,
                               GaloreMode::Adam);
         assert_eq!(opt.state_bytes(), 2 * 8 * 4);
+    }
+
+    #[test]
+    fn state_roundtrips_including_projector() {
+        let mut rng = Rng::new(13);
+        let mut pa = vec![Tensor::randn("w", &[10, 8], 1.0, &mut rng),
+                          Tensor::randn("norm", &[6], 1.0, &mut rng)];
+        let gs: Vec<Vec<Tensor>> = (0..4)
+            .map(|_| vec![Tensor::randn("w", &[10, 8], 1.0, &mut rng),
+                          Tensor::randn("norm", &[6], 1.0, &mut rng)])
+            .collect();
+        let mut a = Galore::new(Hyper::default(), &pa, 3,
+                                GaloreMode::Mini);
+        for g in &gs[..2] {
+            a.step(&mut pa, g, 1e-2);
+        }
+        let sd = a.state_dict();
+        // proj/m/v for w + m/v for norm + __step.
+        assert_eq!(sd.len(), 6);
+        assert_eq!(sd.len(), a.state_len());
+        let mut pb = pa.clone();
+        let mut b = Galore::new(Hyper::default(), &pb, 3,
+                                GaloreMode::Mini);
+        b.load_state_dict(&sd).unwrap();
+        for g in &gs[2..] {
+            a.step(&mut pa, g, 1e-2);
+            b.step(&mut pb, g, 1e-2);
+        }
+        assert_eq!(pa, pb);
     }
 }

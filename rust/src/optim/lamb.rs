@@ -2,27 +2,32 @@
 //! trust ratio. Included because the paper explicitly contrasts it with
 //! Adam-mini (Appendix A): LAMB keeps the full coordinate-wise 1/√v AND
 //! adds layer-wise rescaling — it saves no memory.
+//!
+//! Tensor-granular: the trust ratio couples every coordinate of a
+//! tensor, so segments must cover whole tensors.
 
-use super::{Hyper, Optimizer};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::core::{check_state_len, Arena, GradView, Granularity,
+                  Optimizer, ParamView, StateDict};
+use super::Hyper;
 use crate::tensor::Tensor;
 
 pub struct Lamb {
     hp: Hyper,
-    m: Vec<Tensor>,
-    v: Vec<Tensor>,
+    arena: Arc<Arena>,
+    m: Vec<f32>,
+    v: Vec<f32>,
     t: u64,
 }
 
 impl Lamb {
     pub fn new(hp: Hyper, params: &[Tensor]) -> Lamb {
-        Lamb {
-            hp,
-            m: params.iter().map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
-            v: params.iter().map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
-            t: 0,
-        }
+        let arena = Arc::new(Arena::of(params));
+        let n = arena.total;
+        Lamb { hp, arena, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
     }
 }
 
@@ -31,49 +36,86 @@ impl Optimizer for Lamb {
         "lamb".into()
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Tensor
+    }
+
+    fn begin_step(&mut self) {
         self.t += 1;
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        debug_assert!(self.t > 0, "step_segment before begin_step");
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let arena = Arc::clone(&self.arena);
+        let (_, spans) = arena.spans_in(lo, hi);
         let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
         let bc1 = 1.0 / (1.0 - beta1.powi(self.t as i32));
         let bc2 = 1.0 / (1.0 - beta2.powi(self.t as i32));
-        for ((p, g), (m, v)) in params
-            .iter_mut()
-            .zip(grads)
-            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
-        {
-            let n = p.data.len();
+        for sp in spans {
+            let (a, b) = (sp.offset - lo, sp.offset - lo + sp.len);
             // r = m̂ / (√v̂ + ε), then add decoupled decay into the
             // trust-ratio direction (Algorithm 7 line 10).
-            let mut dir = vec![0.0f32; n];
-            for i in 0..n {
-                let gi = g.data[i];
-                let mi = beta1 * m.data[i] + (1.0 - beta1) * gi;
-                let vi = beta2 * v.data[i] + (1.0 - beta2) * gi * gi;
-                m.data[i] = mi;
-                v.data[i] = vi;
-                dir[i] = (mi * bc1) / ((vi * bc2).sqrt() + eps)
-                    + weight_decay * p.data[i];
+            let mut dir = vec![0.0f32; sp.len];
+            let mut p_sq = 0.0f64;
+            for j in a..b {
+                let gi = grads.data[j];
+                let pi = params.data[j];
+                let mi = beta1 * self.m[lo + j] + (1.0 - beta1) * gi;
+                let vi = beta2 * self.v[lo + j] + (1.0 - beta2) * gi * gi;
+                self.m[lo + j] = mi;
+                self.v[lo + j] = vi;
+                dir[j - a] = (mi * bc1) / ((vi * bc2).sqrt() + eps)
+                    + weight_decay * pi;
+                p_sq += pi as f64 * pi as f64;
             }
-            let p_norm = p.norm() as f32;
-            let d_norm =
-                (dir.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>())
-                    .sqrt() as f32;
+            let p_norm = p_sq.sqrt() as f32;
+            let d_norm = (dir
+                .iter()
+                .map(|x| (*x as f64) * (*x as f64))
+                .sum::<f64>())
+                .sqrt() as f32;
             // φ(‖p‖)/‖r + λp‖ with φ = identity; 1.0 fallback at zero.
             let trust = if p_norm > 0.0 && d_norm > 0.0 {
                 p_norm / d_norm
             } else {
                 1.0
             };
-            for i in 0..n {
-                p.data[i] -= lr * trust * dir[i];
+            for j in a..b {
+                params.data[j] -= lr * trust * dir[j - a];
             }
         }
     }
 
     fn state_bytes(&self) -> usize {
-        (self.m.iter().map(Tensor::numel).sum::<usize>()
-            + self.v.iter().map(Tensor::numel).sum::<usize>())
-            * 4
+        (self.m.len() + self.v.len()) * 4
+    }
+
+    /// Entries: `m`, `v` (arena-flat), `__step`.
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.insert("m", &[self.m.len()], self.m.clone());
+        sd.insert("v", &[self.v.len()], self.v.clone());
+        sd.set_step(self.t);
+        sd
+    }
+
+    fn state_len(&self) -> usize {
+        3
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        check_state_len(state, 3, "lamb")?;
+        self.m.copy_from_slice(state.data("m", self.m.len())?);
+        self.v.copy_from_slice(state.data("v", self.v.len())?);
+        self.t = state.step()?;
+        Ok(())
     }
 }
 
@@ -122,5 +164,22 @@ mod tests {
             opt.step(&mut params, &[g], 1e-2);
         }
         assert!(params[0].sq_norm() < 0.5 * start);
+    }
+
+    #[test]
+    fn state_roundtrips() {
+        let mut rng = Rng::new(12);
+        let mut pa = vec![Tensor::randn("w", &[3, 3], 1.0, &mut rng)];
+        let g = Tensor::randn("w", &[3, 3], 1.0, &mut rng);
+        let mut a = Lamb::new(Hyper::default(), &pa);
+        a.step(&mut pa, std::slice::from_ref(&g), 1e-2);
+        let sd = a.state_dict();
+        assert_eq!(sd.len(), a.state_len());
+        let mut pb = pa.clone();
+        let mut b = Lamb::new(Hyper::default(), &pb);
+        b.load_state_dict(&sd).unwrap();
+        a.step(&mut pa, std::slice::from_ref(&g), 1e-2);
+        b.step(&mut pb, std::slice::from_ref(&g), 1e-2);
+        assert_eq!(pa, pb);
     }
 }

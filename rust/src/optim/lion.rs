@@ -2,23 +2,26 @@
 //! Adam-mini in the paper's Appendix D.8 (with the "lr 10× smaller than
 //! AdamW" tuning rule).
 
-use super::{Hyper, Optimizer};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::core::{check_state_len, Arena, GradView, Granularity,
+                  Optimizer, ParamView, StateDict};
+use super::Hyper;
 use crate::tensor::Tensor;
 
 pub struct Lion {
     hp: Hyper,
-    m: Vec<Tensor>,
+    arena: Arc<Arena>,
+    m: Vec<f32>,
 }
 
 impl Lion {
     pub fn new(hp: Hyper, params: &[Tensor]) -> Lion {
-        Lion {
-            hp,
-            m: params
-                .iter()
-                .map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
-        }
+        let arena = Arc::new(Arena::of(params));
+        let n = arena.total;
+        Lion { hp, arena, m: vec![0.0; n] }
     }
 }
 
@@ -27,22 +30,50 @@ impl Optimizer for Lion {
         "lion".into()
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Element
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
         let Hyper { beta1, beta2, weight_decay, .. } = self.hp;
         let wd = 1.0 - lr * weight_decay;
-        for ((p, g), m) in params.iter_mut().zip(grads).zip(&mut self.m) {
-            for i in 0..p.data.len() {
-                // Update direction: sign of the interpolated momentum.
-                let c = beta1 * m.data[i] + (1.0 - beta1) * g.data[i];
-                p.data[i] = p.data[i] * wd - lr * c.signum();
-                // Momentum EMA uses β2 (Lion's defining asymmetry).
-                m.data[i] = beta2 * m.data[i] + (1.0 - beta2) * g.data[i];
-            }
+        let m = &mut self.m[lo..hi];
+        for i in 0..params.data.len() {
+            let gi = grads.data[i];
+            // Update direction: sign of the interpolated momentum.
+            let c = beta1 * m[i] + (1.0 - beta1) * gi;
+            params.data[i] = params.data[i] * wd - lr * c.signum();
+            // Momentum EMA uses β2 (Lion's defining asymmetry).
+            m[i] = beta2 * m[i] + (1.0 - beta2) * gi;
         }
     }
 
     fn state_bytes(&self) -> usize {
-        self.m.iter().map(Tensor::numel).sum::<usize>() * 4
+        self.m.len() * 4
+    }
+
+    /// Entries: `m` (the sign-momentum EMA).
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.insert("m", &[self.m.len()], self.m.clone());
+        sd
+    }
+
+    fn state_len(&self) -> usize {
+        1
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        check_state_len(state, 1, "lion")?;
+        self.m.copy_from_slice(state.data("m", self.m.len())?);
+        Ok(())
     }
 }
 
@@ -65,5 +96,21 @@ mod tests {
         let params = vec![Tensor::zeros("w", &[10, 10])];
         let opt = Lion::new(Hyper::default(), &params);
         assert_eq!(opt.state_bytes(), 100 * 4);
+    }
+
+    #[test]
+    fn state_roundtrips() {
+        let mut params = vec![Tensor::new("w", &[2], vec![1.0, -1.0])];
+        let g = vec![Tensor::new("w", &[2], vec![0.5, 0.25])];
+        let mut a = Lion::new(Hyper::default(), &params);
+        a.step(&mut params, &g, 0.1);
+        let sd = a.state_dict();
+        assert_eq!(sd.len(), a.state_len());
+        let mut pb = params.clone();
+        let mut b = Lion::new(Hyper::default(), &pb);
+        b.load_state_dict(&sd).unwrap();
+        a.step(&mut params, &g, 0.1);
+        b.step(&mut pb, &g, 0.1);
+        assert_eq!(params, pb);
     }
 }

@@ -1,20 +1,30 @@
 //! The optimizer roster: every method the paper compares (§3, App. D).
 //!
-//! All optimizers implement [`Optimizer`] over host [`Tensor`] lists and
-//! consume gradients produced by the AOT `grad` artifact — one compiled
-//! graph serves the whole roster, which is how the paper's grid-search
-//! experiments (leave-one-out, blockwise-GD, lr sweeps) stay cheap.
+//! All optimizers implement the block-granular [`Optimizer`] trait from
+//! [`core`]: state lives flat over an [`Arena`] (the flattened
+//! parameter space), updates apply to contiguous [`ParamView`] /
+//! [`GradView`] segments in place, and state exports as a named
+//! [`StateDict`]. One model step is `begin_step()` plus `step_segment`
+//! calls over any disjoint partition whose boundaries respect the
+//! optimizer's [`Granularity`] — which is how the ZeRO-2 streaming
+//! pipeline steps each bucket's shard the moment its reduce-scatter
+//! lands. The classic whole-model `step(&mut [Tensor], &[Tensor], lr)`
+//! survives as a blanket wrapper, so experiment drivers are unchanged.
 //!
+//! Gradients come from the AOT `grad` artifact — one compiled graph
+//! serves the whole roster, which is how the paper's grid-search
+//! experiments (leave-one-out, blockwise-GD, lr sweeps) stay cheap.
 //! AdamW and Adam-mini additionally exist as *fused* L1 Pallas kernels
 //! inside the `train_*` artifacts; `tests/` verifies the host and fused
 //! paths agree to float tolerance.
 
 pub mod adafactor;
-pub mod extra;
-pub mod galore;
 pub mod adam;
 pub mod adam_mini;
 pub mod came;
+pub mod core;
+pub mod extra;
+pub mod galore;
 pub mod lamb;
 pub mod lion;
 pub mod schedule;
@@ -22,11 +32,14 @@ pub mod sgd;
 pub mod sm3;
 
 pub use adafactor::{Adafactor, AdafactorVariant};
-pub use extra::{AdaGrad, Adan, NovoGrad};
-pub use galore::{Galore, GaloreMode};
 pub use adam::AdamW;
 pub use adam_mini::{AdamMini, ReduceOp};
 pub use came::Came;
+pub use self::core::{check_state_len, decode_step, step_tensor, Arena,
+                     GradView, Granularity, Optimizer, ParamView, Span,
+                     StateDict, STEP_TENSOR};
+pub use extra::{AdaGrad, Adan, NovoGrad};
+pub use galore::{Galore, GaloreMode};
 pub use lamb::Lamb;
 pub use lion::Lion;
 pub use schedule::Schedule;
@@ -50,68 +63,6 @@ pub struct Hyper {
 impl Default for Hyper {
     fn default() -> Self {
         Hyper { beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.1 }
-    }
-}
-
-/// A host-side optimizer stepping a list of parameter tensors.
-pub trait Optimizer {
-    fn name(&self) -> String;
-
-    /// Apply one update. `lr` is the scheduled learning rate for this
-    /// step; implementations track their own step counter for bias
-    /// correction.
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32);
-
-    /// Bytes of optimizer state currently held (memory accounting).
-    fn state_bytes(&self) -> usize;
-
-    /// Export optimizer state as named tensors (checkpointing and
-    /// ZeRO-1 state-sync). The step counter travels as a `__step`
-    /// scalar tensor. Default: empty — optimizers without an
-    /// implementation checkpoint as "fresh state" (the pre-existing
-    /// behavior, now explicit).
-    fn state_export(&self) -> Vec<Tensor> {
-        Vec::new()
-    }
-
-    /// Restore state produced by [`Optimizer::state_export`] on an
-    /// identically-constructed instance. Importing a non-empty list
-    /// into an optimizer without an implementation is an error (never
-    /// a silent drop).
-    fn state_import(&mut self, state: &[Tensor]) -> Result<()> {
-        if state.is_empty() {
-            return Ok(());
-        }
-        bail!("{}: optimizer state import not supported", self.name())
-    }
-
-    /// Number of tensors [`Optimizer::state_export`] returns, without
-    /// materializing them (ZeRO-1 state routing). Implementations with
-    /// a real export should override this to avoid the clone.
-    fn state_len(&self) -> usize {
-        self.state_export().len()
-    }
-}
-
-/// Name used by the `__step` counter tensor in exported state.
-pub const STEP_TENSOR: &str = "__step";
-
-/// Helper: encode a step counter as a 2-element state tensor. Split
-/// into 24-bit halves so each is exactly representable in f32 (a
-/// single f32 would silently round counters past 2^24).
-pub fn step_tensor(t: u64) -> Tensor {
-    let lo = (t & 0xFF_FFFF) as f32;
-    let hi = (t >> 24) as f32;
-    Tensor::new(STEP_TENSOR, &[2], vec![lo, hi])
-}
-
-/// Helper: decode the `__step` tensor (must be the last list entry).
-pub fn decode_step(state: &[Tensor]) -> Result<u64> {
-    match state.last() {
-        Some(t) if t.name == STEP_TENSOR && t.numel() == 2 => {
-            Ok(t.data[0] as u64 | ((t.data[1] as u64) << 24))
-        }
-        _ => bail!("exported state must end with a {STEP_TENSOR} tensor"),
     }
 }
 
@@ -139,9 +90,9 @@ impl ModelMeta {
 
 /// Construct any roster optimizer by name (the config-file hook).
 ///
-/// Recognized names: `adamw`, `adam_mini`, `adam_mini_default`,
-/// `adam_mini_value_whole`, `adafactor`, `adafactor_zhai`, `came`,
-/// `sm3`, `lion`, `lamb`, `sgd`.
+/// Every name in [`ROSTER`] is constructible here and vice versa —
+/// `roster_matches_by_name` asserts the parity so a sweep driver can
+/// never silently skip a member again.
 pub fn by_name(name: &str, hp: Hyper, params: &[Tensor], meta: &ModelMeta)
     -> Result<Box<dyn Optimizer>> {
     Ok(match name {
@@ -173,10 +124,12 @@ pub fn by_name(name: &str, hp: Hyper, params: &[Tensor], meta: &ModelMeta)
     })
 }
 
-/// All roster names (for sweep drivers).
+/// All roster names (for sweep drivers). Kept in parity with
+/// [`by_name`] — including `adam_mini_value_whole` (App. D.6
+/// strategy II), which used to be constructible but missing here.
 pub const ROSTER: &[&str] = &[
-    "adamw", "adam_mini", "adam_mini_default", "adafactor",
-    "adafactor_zhai", "came", "sm3", "lion", "lamb", "sgd",
+    "adamw", "adam_mini", "adam_mini_default", "adam_mini_value_whole",
+    "adafactor", "adafactor_zhai", "came", "sm3", "lion", "lamb", "sgd",
     "adagrad", "novograd", "adan", "galore", "galore_mini",
 ];
 
@@ -200,17 +153,6 @@ mod tests {
     }
 
     #[test]
-    fn step_tensor_roundtrips_beyond_f32_integer_range() {
-        for t in [0u64, 1, 1 << 20, (1 << 24) + 1, (1 << 30) + 12345,
-                  (1 << 40) + 7] {
-            let enc = step_tensor(t);
-            assert_eq!(decode_step(&[enc]).unwrap(), t, "t = {t}");
-        }
-        assert!(decode_step(&[Tensor::zeros("w", &[2])]).is_err());
-        assert!(decode_step(&[]).is_err());
-    }
-
-    #[test]
     fn factory_builds_whole_roster() {
         let (params, meta) = toy_params();
         for name in ROSTER {
@@ -219,6 +161,35 @@ mod tests {
             assert!(!opt.name().is_empty());
         }
         assert!(by_name("bogus", Hyper::default(), &params, &meta).is_err());
+    }
+
+    #[test]
+    fn roster_matches_by_name() {
+        // Satellite invariant: every by_name-documented member is in
+        // ROSTER exactly once (adam_mini_value_whole was silently
+        // missing from every sweep driver before this).
+        let (params, meta) = toy_params();
+        assert!(ROSTER.contains(&"adam_mini_value_whole"));
+        let mut seen = std::collections::BTreeSet::new();
+        for name in ROSTER {
+            assert!(seen.insert(*name), "duplicate roster entry {name}");
+            by_name(name, Hyper::default(), &params, &meta)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert_eq!(ROSTER.len(), 16);
+    }
+
+    #[test]
+    fn roster_state_len_never_materializes_wrong_count() {
+        // state_len() must agree with the materialized dict for every
+        // member (the old default silently cloned the whole export).
+        let (params, meta) = toy_params();
+        for name in ROSTER {
+            let opt =
+                by_name(name, Hyper::default(), &params, &meta).unwrap();
+            assert_eq!(opt.state_len(), opt.state_dict().len(),
+                       "{name}: state_len drift");
+        }
     }
 
     #[test]

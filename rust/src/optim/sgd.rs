@@ -3,27 +3,28 @@
 //! gradient descent where each Hessian block gets its own fixed
 //! learning-rate multiplier.
 
-use super::Optimizer;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::core::{check_state_len, Arena, GradView, Granularity,
+                  Optimizer, ParamView, StateDict};
 use crate::partition::BlockView;
 use crate::tensor::Tensor;
 
-/// Heavy-ball SGD.
+/// Heavy-ball SGD. State: one arena-flat momentum buffer (zero-init,
+/// so the first step's `momentum·0 + g = g` needs no special case).
 pub struct Sgd {
     momentum: f32,
-    buf: Vec<Tensor>,
-    initialized: bool,
+    arena: Arc<Arena>,
+    buf: Vec<f32>,
 }
 
 impl Sgd {
     pub fn new(momentum: f32, params: &[Tensor]) -> Sgd {
-        Sgd {
-            momentum,
-            buf: params
-                .iter()
-                .map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
-            initialized: false,
-        }
+        let arena = Arc::new(Arena::of(params));
+        let n = arena.total;
+        Sgd { momentum, arena, buf: vec![0.0; n] }
     }
 }
 
@@ -32,40 +33,67 @@ impl Optimizer for Sgd {
         "sgd".into()
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
-        for ((p, g), b) in params.iter_mut().zip(grads).zip(&mut self.buf) {
-            for i in 0..p.data.len() {
-                let v = if self.initialized {
-                    self.momentum * b.data[i] + g.data[i]
-                } else {
-                    g.data[i]
-                };
-                b.data[i] = v;
-                p.data[i] -= lr * v;
-            }
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Element
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let buf = &mut self.buf[lo..hi];
+        for i in 0..params.data.len() {
+            let v = self.momentum * buf[i] + grads.data[i];
+            buf[i] = v;
+            params.data[i] -= lr * v;
         }
-        self.initialized = true;
     }
 
     fn state_bytes(&self) -> usize {
-        self.buf.iter().map(Tensor::numel).sum::<usize>() * 4
+        self.buf.len() * 4
+    }
+
+    /// Entries: `buf` (the momentum buffer).
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.insert("buf", &[self.buf.len()], self.buf.clone());
+        sd
+    }
+
+    fn state_len(&self) -> usize {
+        1
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        check_state_len(state, 1, "sgd")?;
+        self.buf.copy_from_slice(state.data("buf", self.buf.len())?);
+        Ok(())
     }
 }
 
 /// Blockwise GD: update for block b is `lr * block_lr[b] * g` — the
 /// "collect the optimal per-block learning rates" method the paper uses
 /// to show a single good lr per dense Hessian block beats Adam.
+/// Memoryless (no state to checkpoint); `block_lrs` is configuration
+/// set by the grid-search drivers.
 pub struct BlockwiseGd {
-    spec: Vec<BlockView>,
+    arena: Arc<Arena>,
+    /// Flat block grid: block `b` covers `[cuts[b], cuts[b+1])`.
+    cuts: Vec<usize>,
     /// Per-tensor, per-block lr multipliers (grid-searched by callers).
     pub block_lrs: Vec<Vec<f32>>,
+    /// First flat-block index of each tensor.
+    block_offsets: Vec<usize>,
 }
 
 impl BlockwiseGd {
     pub fn new(spec: Vec<BlockView>) -> BlockwiseGd {
-        let block_lrs = spec.iter().map(|b| vec![1.0; b.num_blocks])
-            .collect();
-        BlockwiseGd { spec, block_lrs }
+        let lrs = spec.iter().map(|b| vec![1.0; b.num_blocks]).collect();
+        BlockwiseGd::with_lrs(spec, lrs)
     }
 
     pub fn with_lrs(spec: Vec<BlockView>, block_lrs: Vec<Vec<f32>>)
@@ -74,7 +102,25 @@ impl BlockwiseGd {
         for (s, l) in spec.iter().zip(&block_lrs) {
             assert_eq!(s.num_blocks, l.len());
         }
-        BlockwiseGd { spec, block_lrs }
+        let arena = Arc::new(Arena::from_shapes(
+            spec.iter().map(|b| (b.name.clone(), b.shape.clone()))));
+        let mut cuts = vec![0usize];
+        let mut block_offsets = Vec::with_capacity(spec.len());
+        let mut offset = 0;
+        for bv in &spec {
+            block_offsets.push(cuts.len() - 1);
+            for b in 1..=bv.num_blocks {
+                cuts.push(offset + b * bv.block_size);
+            }
+            offset += bv.num_blocks * bv.block_size;
+        }
+        BlockwiseGd { arena, cuts, block_lrs, block_offsets }
+    }
+
+    /// lr multiplier of flat block `b`.
+    fn lr_of(&self, b: usize) -> f32 {
+        let i = self.block_offsets.partition_point(|&o| o <= b) - 1;
+        self.block_lrs[i][b - self.block_offsets[i]]
     }
 }
 
@@ -83,17 +129,38 @@ impl Optimizer for BlockwiseGd {
         "blockwise_gd".into()
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
-        for (i, bv) in self.spec.iter().enumerate() {
-            let p = &mut params[i];
-            let g = &grads[i];
-            let bs = bv.block_size;
-            for b in 0..bv.num_blocks {
-                let s = lr * self.block_lrs[i][b];
-                for j in b * bs..(b + 1) * bs {
-                    p.data[j] -= s * g.data[j];
-                }
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Block
+    }
+
+    fn segment_cuts(&self) -> Option<Vec<usize>> {
+        Some(self.cuts.clone())
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let b0 = self
+            .cuts
+            .binary_search(&lo)
+            .unwrap_or_else(|_| {
+                panic!("segment lo {lo} is not on a block boundary")
+            });
+        let mut b = b0;
+        while self.cuts[b] < hi {
+            let (blo, bhi) = (self.cuts[b], self.cuts[b + 1]);
+            assert!(bhi <= hi,
+                    "segment hi {hi} splits block [{blo}, {bhi})");
+            let s = lr * self.lr_of(b);
+            for j in blo..bhi {
+                params.data[j - lo] -= s * grads.data[j - lo];
             }
+            b += 1;
         }
     }
 
@@ -128,6 +195,22 @@ mod tests {
     }
 
     #[test]
+    fn sgd_state_roundtrips() {
+        let mut params = vec![Tensor::new("w", &[2], vec![0.0, 0.0])];
+        let g = vec![Tensor::new("w", &[2], vec![1.0, -2.0])];
+        let mut a = Sgd::new(0.9, &params);
+        a.step(&mut params, &g, 0.1);
+        let sd = a.state_dict();
+        assert_eq!(sd.len(), a.state_len());
+        let mut pb = params.clone();
+        let mut b = Sgd::new(0.9, &pb);
+        b.load_state_dict(&sd).unwrap();
+        a.step(&mut params, &g, 0.1);
+        b.step(&mut pb, &g, 0.1);
+        assert_eq!(params, pb);
+    }
+
+    #[test]
     fn blockwise_gd_uses_per_block_lr() {
         let spec = vec![BlockView {
             name: "w".into(),
@@ -142,5 +225,21 @@ mod tests {
         let grads = vec![Tensor::ones("w", &[4])];
         opt.step(&mut params, &grads, 0.1);
         assert_eq!(params[0].data, vec![-0.1, -0.1, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn blockwise_gd_flat_block_lookup_spans_tensors() {
+        let spec = vec![
+            BlockView { name: "a".into(), shape: vec![4], num_blocks: 2,
+                        block_size: 2, category: Category::Whole },
+            BlockView { name: "b".into(), shape: vec![3], num_blocks: 1,
+                        block_size: 3, category: Category::Whole },
+        ];
+        let opt = BlockwiseGd::with_lrs(
+            spec, vec![vec![2.0, 3.0], vec![5.0]]);
+        assert_eq!(opt.lr_of(0), 2.0);
+        assert_eq!(opt.lr_of(1), 3.0);
+        assert_eq!(opt.lr_of(2), 5.0);
+        assert_eq!(opt.segment_cuts().unwrap(), vec![0, 2, 4, 7]);
     }
 }

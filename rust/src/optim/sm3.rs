@@ -5,8 +5,15 @@
 //! For a matrix (r × c) it keeps one accumulator per row and one per
 //! column; the per-coordinate second-moment estimate is
 //! `min(row_acc[i], col_acc[j])`, monotonically grown by `g²`.
+//! Tensor-granular: the row/column cover couples a whole tensor.
 
-use super::{Hyper, Optimizer};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::core::{check_state_len, Arena, GradView, Granularity,
+                  Optimizer, ParamView, StateDict};
+use super::Hyper;
 use crate::tensor::Tensor;
 
 enum Cover {
@@ -16,18 +23,22 @@ enum Cover {
 
 pub struct Sm3 {
     hp: Hyper,
-    m: Vec<Tensor>,
+    arena: Arc<Arena>,
+    /// Momentum, arena-flat.
+    m: Vec<f32>,
     cover: Vec<Cover>,
 }
 
 impl Sm3 {
     pub fn new(hp: Hyper, params: &[Tensor]) -> Sm3 {
-        let cover = params
+        let arena = Arc::new(Arena::of(params));
+        let cover = arena
+            .spans
             .iter()
-            .map(|p| {
-                if p.shape.len() >= 2 {
-                    let cols = *p.shape.last().unwrap();
-                    let rows = p.numel() / cols;
+            .map(|s| {
+                if s.shape.len() >= 2 {
+                    let cols = *s.shape.last().unwrap();
+                    let rows = s.len / cols;
                     Cover::Mat {
                         row: vec![0.0; rows],
                         col: vec![0.0; cols],
@@ -35,18 +46,17 @@ impl Sm3 {
                         cols,
                     }
                 } else {
-                    Cover::Vec { acc: vec![0.0; p.numel()] }
+                    Cover::Vec { acc: vec![0.0; s.len] }
                 }
             })
             .collect();
-        Sm3 {
-            hp,
-            m: params
-                .iter()
-                .map(|p| Tensor::zeros(&*p.name, &p.shape))
-                .collect(),
-            cover,
-        }
+        let n = arena.total;
+        Sm3 { hp, arena, m: vec![0.0; n], cover }
+    }
+
+    #[cfg(test)]
+    fn cover(&self, i: usize) -> &Cover {
+        &self.cover[i]
     }
 }
 
@@ -55,12 +65,26 @@ impl Optimizer for Sm3 {
         "sm3".into()
     }
 
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+    fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Tensor
+    }
+
+    fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                    lr: f32) {
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let arena = Arc::clone(&self.arena);
+        let (i0, spans) = arena.spans_in(lo, hi);
         let b1 = self.hp.beta1;
         let eps = self.hp.eps;
         let wd = 1.0 - lr * self.hp.weight_decay;
-        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
-            let m = &mut self.m[i];
+        for (k, sp) in spans.iter().enumerate() {
+            let i = i0 + k;
+            let a = sp.offset - lo;
             match &mut self.cover[i] {
                 Cover::Mat { row, col, rows, cols } => {
                     let (rows, cols) = (*rows, *cols);
@@ -71,27 +95,31 @@ impl Optimizer for Sm3 {
                     for ri in 0..rows {
                         for ci in 0..cols {
                             let j = ri * cols + ci;
-                            let gv = g.data[j];
+                            let gv = grads.data[a + j];
                             let nu = row[ri].min(col[ci]) + gv * gv;
                             new_row[ri] = new_row[ri].max(nu);
                             new_col[ci] = new_col[ci].max(nu);
                             let u = gv / (nu.sqrt() + eps);
-                            let mj = b1 * m.data[j] + (1.0 - b1) * u;
-                            m.data[j] = mj;
-                            p.data[j] = p.data[j] * wd - lr * mj;
+                            let mj = b1 * self.m[sp.offset + j]
+                                + (1.0 - b1) * u;
+                            self.m[sp.offset + j] = mj;
+                            params.data[a + j] =
+                                params.data[a + j] * wd - lr * mj;
                         }
                     }
                     *row = new_row;
                     *col = new_col;
                 }
                 Cover::Vec { acc } => {
-                    for j in 0..p.data.len() {
-                        let gv = g.data[j];
+                    for j in 0..sp.len {
+                        let gv = grads.data[a + j];
                         acc[j] += gv * gv;
                         let u = gv / (acc[j].sqrt() + eps);
-                        let mj = b1 * m.data[j] + (1.0 - b1) * u;
-                        m.data[j] = mj;
-                        p.data[j] = p.data[j] * wd - lr * mj;
+                        let mj = b1 * self.m[sp.offset + j]
+                            + (1.0 - b1) * u;
+                        self.m[sp.offset + j] = mj;
+                        params.data[a + j] =
+                            params.data[a + j] * wd - lr * mj;
                     }
                 }
             }
@@ -107,7 +135,60 @@ impl Optimizer for Sm3 {
                 Cover::Vec { acc } => acc.len(),
             })
             .sum();
-        (c + self.m.iter().map(Tensor::numel).sum::<usize>()) * 4
+        (c + self.m.len()) * 4
+    }
+
+    /// Entries: `m` (arena-flat); per matrix tensor `row/<name>` and
+    /// `col/<name>`; per vector tensor `acc/<name>`.
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.insert("m", &[self.m.len()], self.m.clone());
+        for (sp, cv) in self.arena.spans.iter().zip(&self.cover) {
+            match cv {
+                Cover::Mat { row, col, .. } => {
+                    sd.insert(format!("row/{}", sp.name), &[row.len()],
+                              row.clone());
+                    sd.insert(format!("col/{}", sp.name), &[col.len()],
+                              col.clone());
+                }
+                Cover::Vec { acc } => {
+                    sd.insert(format!("acc/{}", sp.name), &[acc.len()],
+                              acc.clone());
+                }
+            }
+        }
+        sd
+    }
+
+    fn state_len(&self) -> usize {
+        1 + self
+            .cover
+            .iter()
+            .map(|c| match c {
+                Cover::Mat { .. } => 2,
+                Cover::Vec { .. } => 1,
+            })
+            .sum::<usize>()
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<()> {
+        check_state_len(state, self.state_len(), "sm3")?;
+        self.m.copy_from_slice(state.data("m", self.m.len())?);
+        for (sp, cv) in self.arena.spans.iter().zip(&mut self.cover) {
+            match cv {
+                Cover::Mat { row, col, .. } => {
+                    row.copy_from_slice(state.data(
+                        &format!("row/{}", sp.name), row.len())?);
+                    col.copy_from_slice(state.data(
+                        &format!("col/{}", sp.name), col.len())?);
+                }
+                Cover::Vec { acc } => {
+                    acc.copy_from_slice(state.data(
+                        &format!("acc/{}", sp.name), acc.len())?);
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -127,7 +208,7 @@ mod tests {
                                  2.0, 2.0, 0.3]);
         let mut opt = Sm3::new(hp, &params);
         opt.step(&mut params, &[g.clone()], 0.1);
-        if let Cover::Mat { row, col, .. } = &opt.cover[0] {
+        if let Cover::Mat { row, col, .. } = opt.cover(0) {
             for ri in 0..3 {
                 for ci in 0..3 {
                     let gsq = g.data[ri * 3 + ci].powi(2);
@@ -158,5 +239,32 @@ mod tests {
         let params = vec![Tensor::zeros("w", &[100, 100])];
         let opt = Sm3::new(Hyper::default(), &params);
         assert_eq!(opt.state_bytes(), (100 * 100 + 200) * 4);
+    }
+
+    #[test]
+    fn state_roundtrips() {
+        let mut rng = Rng::new(7);
+        let mut pa = vec![Tensor::randn("w", &[3, 3], 1.0, &mut rng),
+                          Tensor::randn("b", &[4], 1.0, &mut rng)];
+        let gs: Vec<Vec<Tensor>> = (0..4)
+            .map(|_| vec![Tensor::randn("w", &[3, 3], 1.0, &mut rng),
+                          Tensor::randn("b", &[4], 1.0, &mut rng)])
+            .collect();
+        let mut a = Sm3::new(Hyper::default(), &pa);
+        for g in &gs[..2] {
+            a.step(&mut pa, g, 1e-2);
+        }
+        let sd = a.state_dict();
+        // m + row/w + col/w + acc/b.
+        assert_eq!(sd.len(), 4);
+        assert_eq!(sd.len(), a.state_len());
+        let mut pb = pa.clone();
+        let mut b = Sm3::new(Hyper::default(), &pb);
+        b.load_state_dict(&sd).unwrap();
+        for g in &gs[2..] {
+            a.step(&mut pa, g, 1e-2);
+            b.step(&mut pb, g, 1e-2);
+        }
+        assert_eq!(pa, pb);
     }
 }

@@ -9,6 +9,7 @@ use super::engine::{lit_i32, lit_scalar, lit_to_scalar, lit_to_tensor,
                     tensor_to_lit, Engine, Executable};
 use super::manifest::ModelManifest;
 use crate::data::Batch;
+use crate::optim::StateDict;
 use crate::partition::Strategy;
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
@@ -279,6 +280,26 @@ impl FusedTrainer {
                 Ok((m, v))
             }
         }
+    }
+
+    /// Current optimizer state as a named [`StateDict`] — the same
+    /// key convention the host optimizers export (`m/<tensor>`,
+    /// `v/<tensor>`, `__step`), so fused-path state is inspectable
+    /// next to host-path checkpoints even though the fused trainer
+    /// has no import ABI (its state is device-resident).
+    pub fn state_dict(&self) -> Result<StateDict> {
+        let (m, v) = self.state_tensors()?;
+        let mut sd = StateDict::new();
+        for t in &m {
+            sd.insert(format!("m/{}", t.name), &t.shape,
+                      t.data.clone());
+        }
+        for t in &v {
+            sd.insert(format!("v/{}", t.name), &t.shape,
+                      t.data.clone());
+        }
+        sd.set_step(self.t);
+        Ok(sd)
     }
 
     /// Optimizer-state bytes held by this fused trainer.

@@ -1,0 +1,193 @@
+//! Contract tests for the block-granular optimizer core
+//! (`optim::core`) across the FULL roster:
+//!
+//! 1. **Segment partitioning** — one model step executed as
+//!    `begin_step` + `step_segment` over an arbitrary (shuffled)
+//!    partition of the arena is bit-identical to the whole-model
+//!    `step`, for every roster member, with partition boundaries drawn
+//!    from the optimizer's own `segment_cuts` (any boundary for
+//!    elementwise members). This is the invariant the ZeRO-2
+//!    bucket-granular streaming pipeline rests on.
+//! 2. **StateDict round trip** — export → import into a fresh
+//!    instance → identical continued trajectory, for every member
+//!    (not just AdamW/Adam-mini), plus arity/key checking (a truncated
+//!    dict is a loud error, never a silent drop).
+
+use std::sync::Arc;
+
+use adam_mini::optim::{self, by_name, GradView, Granularity, Hyper,
+                       ModelMeta, Optimizer, ParamView, StateDict};
+use adam_mini::tensor::Tensor;
+use adam_mini::util::prng::Rng;
+
+/// Mixed inventory: a matrix big enough for GaLore's projected path
+/// and Adafactor's factored path, a stacked 3-D attention tensor, a
+/// stacked norm, and a bare vector.
+fn toy() -> (Vec<Tensor>, ModelMeta) {
+    let mut rng = Rng::new(7);
+    let params = vec![
+        Tensor::randn("embed", &[16, 12], 0.5, &mut rng),
+        Tensor::randn("wq", &[2, 4, 4], 0.5, &mut rng),
+        Tensor::randn("attn_norm", &[2, 4], 0.5, &mut rng),
+        Tensor::randn("final_norm", &[5], 0.5, &mut rng),
+    ];
+    let meta = ModelMeta {
+        n_heads: 2,
+        stacked: vec!["wq".into(), "attn_norm".into()],
+    };
+    (params, meta)
+}
+
+fn rand_grads(params: &[Tensor], rng: &mut Rng) -> Vec<Tensor> {
+    params
+        .iter()
+        .map(|p| Tensor::randn(&*p.name, &p.shape, 0.5, rng))
+        .collect()
+}
+
+/// A random disjoint partition of `[0, total)` honoring `cuts`
+/// (`None` = any boundary), in shuffled application order.
+fn random_partition(cuts: Option<Vec<usize>>, total: usize,
+                    rng: &mut Rng) -> Vec<(usize, usize)> {
+    let candidates: Vec<usize> = match cuts {
+        None => (1..total).collect(),
+        Some(c) => {
+            c.into_iter().filter(|&x| x > 0 && x < total).collect()
+        }
+    };
+    let mut chosen: Vec<usize> = candidates
+        .into_iter()
+        .filter(|_| rng.below(3) == 0)
+        .collect();
+    chosen.push(0);
+    chosen.push(total);
+    chosen.sort_unstable();
+    chosen.dedup();
+    let mut segs: Vec<(usize, usize)> =
+        chosen.windows(2).map(|w| (w[0], w[1])).collect();
+    rng.shuffle(&mut segs);
+    segs
+}
+
+#[test]
+fn arbitrary_segment_partitions_match_whole_step_for_roster() {
+    let (params0, meta) = toy();
+    for name in optim::ROSTER {
+        let mut rng = Rng::new(0xC0FFEE);
+        let mut pa = params0.clone();
+        let mut a =
+            by_name(name, Hyper::default(), &pa, &meta).unwrap();
+        let mut b =
+            by_name(name, Hyper::default(), &params0, &meta).unwrap();
+        let arena = Arc::clone(b.arena());
+        let mut flat = arena.flatten(&params0);
+        for _step in 0..5 {
+            let grads = rand_grads(&pa, &mut rng);
+            a.step(&mut pa, &grads, 1e-2);
+            let gflat = arena.flatten(&grads);
+            let segs = random_partition(b.segment_cuts(), arena.total,
+                                        &mut rng);
+            assert!(!segs.is_empty(), "{name}");
+            b.begin_step();
+            for (lo, hi) in segs {
+                b.step_segment(
+                    ParamView::new(lo, &mut flat[lo..hi]),
+                    GradView::new(lo, &gflat[lo..hi]), 1e-2);
+            }
+        }
+        let mut pb = params0.clone();
+        arena.unflatten(&flat, &mut pb);
+        assert_eq!(pa, pb, "{name}: segment partition diverged");
+    }
+}
+
+#[test]
+fn segment_cuts_are_consistent_with_granularity() {
+    let (params, meta) = toy();
+    for name in optim::ROSTER {
+        let opt =
+            by_name(name, Hyper::default(), &params, &meta).unwrap();
+        let total = opt.arena().total;
+        match opt.segment_cuts() {
+            None => assert_eq!(opt.granularity(), Granularity::Element,
+                               "{name}: only elementwise updates may \
+                                accept arbitrary boundaries"),
+            Some(cuts) => {
+                assert!(cuts.windows(2).all(|w| w[0] < w[1]),
+                        "{name}: cuts must be strictly sorted");
+                assert_eq!(cuts.first(), Some(&0), "{name}");
+                assert_eq!(cuts.last(), Some(&total), "{name}");
+                // Every tensor boundary is a valid cut (a segment can
+                // always stop at a span edge).
+                for cut in opt.arena().span_cuts() {
+                    assert!(cuts.binary_search(&cut).is_ok(),
+                            "{name}: span boundary {cut} missing from \
+                             cuts");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn state_dict_roundtrip_resumes_identically_for_roster() {
+    let (params0, meta) = toy();
+    for name in optim::ROSTER {
+        let mut rng = Rng::new(0xABCD);
+        let gs: Vec<Vec<Tensor>> =
+            (0..6).map(|_| rand_grads(&params0, &mut rng)).collect();
+        let mut pa = params0.clone();
+        let mut a =
+            by_name(name, Hyper::default(), &pa, &meta).unwrap();
+        for g in &gs[..3] {
+            a.step(&mut pa, g, 1e-2);
+        }
+        let sd = a.state_dict();
+        assert_eq!(sd.len(), a.state_len(),
+                   "{name}: state_len must not drift from the dict");
+        assert!(!sd.is_empty(),
+                "{name}: every roster member checkpoints real state");
+        let mut pb = pa.clone();
+        let mut b =
+            by_name(name, Hyper::default(), &params0, &meta).unwrap();
+        b.load_state_dict(&sd).unwrap();
+        for g in &gs[3..] {
+            a.step(&mut pa, g, 1e-2);
+            b.step(&mut pb, g, 1e-2);
+        }
+        assert_eq!(pa, pb, "{name}: restored trajectory diverged");
+        // A truncated dict is an error, never a silent drop.
+        let mut short = StateDict::new();
+        for t in sd.entries().iter().skip(1) {
+            short.insert_tensor(t.clone());
+        }
+        assert!(b.load_state_dict(&short).is_err(),
+                "{name}: truncated state must be rejected");
+    }
+}
+
+#[test]
+fn segment_stepping_in_shard_coordinates_matches_global() {
+    // A shard optimizer built over a sub-inventory (shard-local
+    // arena) must produce the same updates as the matching range of a
+    // full-arena optimizer — the ZeRO worker contract.
+    let mut rng = Rng::new(99);
+    let full = vec![Tensor::randn("w", &[8, 4], 0.5, &mut rng)];
+    let g = Tensor::randn("w", &[8, 4], 0.5, &mut rng);
+    // Full-space AdamW.
+    let mut pa = full.clone();
+    let mut a = optim::AdamW::new(Hyper::default(), &pa);
+    a.step(&mut pa, std::slice::from_ref(&g), 1e-2);
+    // Two "shards" [0, 12) and [12, 32), each its own optimizer.
+    let mut flat: Vec<f32> = full[0].data.clone();
+    let gflat = &g.data;
+    for (lo, hi) in [(0usize, 12usize), (12, 32)] {
+        let shard = vec![Tensor::new("w_shard", &[hi - lo],
+                                     flat[lo..hi].to_vec())];
+        let mut opt = optim::AdamW::new(Hyper::default(), &shard);
+        opt.begin_step();
+        opt.step_segment(ParamView::new(0, &mut flat[lo..hi]),
+                         GradView::new(0, &gflat[lo..hi]), 1e-2);
+    }
+    assert_eq!(flat, pa[0].data);
+}
