@@ -8,7 +8,8 @@
 //!   the backward pass and the L1 Pallas optimizer kernel — the
 //!   production hot path.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -19,6 +20,7 @@ use crate::optim::{self, AdamMini, Optimizer, ReduceOp, Schedule};
 use crate::partition::Strategy;
 use crate::runtime::{Engine, ModelRuntime};
 use crate::runtime::model::FusedTrainer;
+use crate::telemetry::{Event, EventBus, Telemetry};
 use crate::tensor::Tensor;
 use crate::util::csv::Csv;
 use crate::util::timer::Timer;
@@ -159,6 +161,17 @@ pub struct Trainer<'e> {
     /// Optional parameter-snapshot recording (Fig 9b trajectories):
     /// (every_k, snapshots).
     pub snapshots: Option<(usize, Vec<Vec<Tensor>>)>,
+    /// Attached observer; the publisher bus is cached separately so
+    /// the step path never touches the telemetry mutex.
+    telemetry: Option<Arc<Mutex<Telemetry>>>,
+    bus: Option<Arc<EventBus>>,
+}
+
+/// Publish onto an optionally-attached bus (no-op when detached).
+fn pub_ev(bus: &Option<Arc<EventBus>>, event: Event) {
+    if let Some(b) = bus {
+        b.publish(event);
+    }
 }
 
 impl<'e> Trainer<'e> {
@@ -231,7 +244,23 @@ impl<'e> Trainer<'e> {
             cfg: cfg.clone(),
             step: 0,
             snapshots: None,
+            telemetry: None,
+            bus: None,
         })
+    }
+
+    /// Attach a telemetry subscriber: caches its publisher bus and
+    /// threads the handle into every emitting layer (dist workers,
+    /// the comm ledger, the artifact engine). [`Trainer::train`]
+    /// pumps the subscriber once per step.
+    pub fn attach_telemetry(&mut self, t: Arc<Mutex<Telemetry>>) {
+        let bus = t.lock().unwrap_or_else(|e| e.into_inner()).bus();
+        if let TrainerMode::Dist { dist, .. } = &mut self.mode {
+            dist.attach_bus(Arc::clone(&bus));
+        }
+        self.rt.engine.attach_bus(Arc::clone(&bus));
+        self.bus = Some(bus);
+        self.telemetry = Some(t);
     }
 
     /// Enable parameter snapshots every `k` steps (Fig 9b).
@@ -262,6 +291,18 @@ impl<'e> Trainer<'e> {
     pub fn step_once(&mut self) -> Result<f32> {
         self.step += 1;
         let lr = self.schedule.lr(self.step);
+        let step = self.step as u64;
+        // Dist mode emits its own step brackets from inside the
+        // worker engine; the host/fused paths bracket here.
+        let dist_mode = matches!(self.mode, TrainerMode::Dist { .. });
+        if !dist_mode {
+            pub_ev(&self.bus, Event::StepBegin {
+                step,
+                n_micro: self.cfg.grad_accum.max(1),
+                workers: 1,
+            });
+        }
+        let t0 = Instant::now();
         let loss = match &mut self.mode {
             TrainerMode::Fused(fused) => {
                 // Fast path: state stays literal-resident; host params
@@ -308,6 +349,7 @@ impl<'e> Trainer<'e> {
                 // 1-worker run does — the loss-equivalence invariant.
                 let accum = self.cfg.grad_accum.max(1);
                 let mut total_loss = 0.0;
+                let n = dist.workers();
                 let reduced = if self.cfg.overlap {
                     // Streaming pipeline: each readiness bucket's
                     // collective launches while later gradients are
@@ -315,19 +357,31 @@ impl<'e> Trainer<'e> {
                     let mut stream = dist.begin_step(accum, lr);
                     for i in 0..accum {
                         let batch = self.batcher.next_batch();
-                        total_loss += self.rt.grad_streamed(
+                        let l = self.rt.grad_streamed(
                             &self.params, &batch,
                             |j, g| stream.push_grad(i, j, &g))?;
+                        total_loss += l;
+                        pub_ev(&self.bus, Event::LossReported {
+                            step,
+                            rank: (i % n) as i64,
+                            loss: l as f64,
+                            lr: lr as f64,
+                        });
                     }
                     stream.finish(&mut self.params)?
                 } else {
-                    let n = dist.workers();
                     let mut local = dist.grad_buffers();
                     for i in 0..accum {
                         let batch = self.batcher.next_batch();
                         let (loss, g) =
                             self.rt.grad(&self.params, &batch)?;
                         total_loss += loss;
+                        pub_ev(&self.bus, Event::LossReported {
+                            step,
+                            rank: (i % n) as i64,
+                            loss: loss as f64,
+                            lr: lr as f64,
+                        });
                         dist.layout().accumulate(&mut local[i % n], &g);
                     }
                     dist.step(&mut self.params, local, accum, lr)?
@@ -338,6 +392,20 @@ impl<'e> Trainer<'e> {
                 total_loss / accum as f32
             }
         };
+        if !dist_mode {
+            pub_ev(&self.bus, Event::StepEnd {
+                step,
+                wall_ns: t0.elapsed().as_secs_f64() * 1e9,
+            });
+        }
+        // Cluster-level loss (rank -1): this is the number `repro top`
+        // sparklines and the run history record.
+        pub_ev(&self.bus, Event::LossReported {
+            step,
+            rank: -1,
+            loss: loss as f64,
+            lr: lr as f64,
+        });
         if self.snapshots.as_ref().is_some_and(
             |(every, _)| self.step % every == 0)
         {
@@ -361,6 +429,13 @@ impl<'e> Trainer<'e> {
             * self.cfg.grad_accum.max(1)) as f64;
         for _ in 0..self.cfg.steps {
             let loss = self.step_once()?;
+            // Drain the bus once per step (skip, never block, if an
+            // external observer holds the lock right now).
+            if let Some(t) = &self.telemetry {
+                if let Ok(mut t) = t.try_lock() {
+                    t.pump()?;
+                }
+            }
             let lr = self.schedule.lr(self.step);
             let log_now = self.step % self.cfg.log_every.max(1) == 0
                 || self.step == 1 || self.step == self.cfg.steps;
@@ -449,7 +524,13 @@ impl<'e> Trainer<'e> {
                 None => dist.sync_state()?,
             },
         };
-        super::checkpoint::save_run(path, &self.params, &state)
+        let path = path.as_ref();
+        super::checkpoint::save_run(path, &self.params, &state)?;
+        pub_ev(&self.bus, Event::CheckpointSaved {
+            step: self.step as u64,
+            path: path.display().to_string(),
+        });
+        Ok(())
     }
 
     /// Restore a [`Trainer::save_run_checkpoint`] file into this

@@ -390,6 +390,21 @@ impl StepTiming {
     pub fn granular_gain(&self) -> f64 {
         self.deferred_ns / self.overlapped_ns.max(1e-9)
     }
+
+    /// Machine-readable form (for `results/report.json` and traces).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("overlapped_ns", Json::num(self.overlapped_ns)),
+            ("deferred_ns", Json::num(self.deferred_ns)),
+            ("sequential_ns", Json::num(self.sequential_ns)),
+            ("compute_ns", Json::num(self.compute_ns)),
+            ("comm_ns", Json::num(self.comm_ns)),
+            ("step_ns", Json::num(self.step_ns)),
+            ("speedup", Json::num(self.speedup())),
+            ("granular_gain", Json::num(self.granular_gain())),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -557,6 +572,24 @@ mod tests {
                 t.deferred_ns);
         assert!(t.deferred_ns < t.sequential_ns);
         assert!(t.granular_gain() > 1.0);
+    }
+
+    #[test]
+    fn step_timing_serializes() {
+        let t = StepTiming {
+            overlapped_ns: 100.0,
+            deferred_ns: 150.0,
+            sequential_ns: 200.0,
+            compute_ns: 80.0,
+            comm_ns: 90.0,
+            step_ns: 30.0,
+        };
+        let j = t.to_json();
+        assert_eq!(j.get("overlapped_ns").unwrap().as_f64().unwrap(),
+                   100.0);
+        assert_eq!(j.get("speedup").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("granular_gain").unwrap().as_f64().unwrap(),
+                   1.5);
     }
 
     #[test]

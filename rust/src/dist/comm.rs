@@ -9,7 +9,10 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+
+use crate::telemetry::{Event, EventBus};
+use crate::util::json::Json;
 
 /// What a message carries — the ledger the traffic report groups by.
 ///
@@ -100,6 +103,10 @@ pub struct CommStats {
     /// integral, NOT wall-clock: messages on different links overlap.
     sim_link_ns: AtomicU64,
     link: LinkModel,
+    /// Optional telemetry tap: every recorded message is mirrored as
+    /// an [`Event::Message`], so an event consumer can rebuild this
+    /// ledger byte-for-byte.
+    bus: OnceLock<Arc<EventBus>>,
 }
 
 impl CommStats {
@@ -108,7 +115,14 @@ impl CommStats {
             classes: Default::default(),
             sim_link_ns: AtomicU64::new(0),
             link,
+            bus: OnceLock::new(),
         }
+    }
+
+    /// Mirror every future message into `bus` (idempotent; first
+    /// attach wins).
+    pub fn attach_bus(&self, bus: Arc<EventBus>) {
+        let _ = self.bus.set(bus);
     }
 
     fn record(&self, class: TrafficClass, bytes: u64) {
@@ -118,6 +132,15 @@ impl CommStats {
         let t = self.link.latency_ns
             + bytes as f64 / self.link.bytes_per_sec * 1e9;
         self.sim_link_ns.fetch_add(t as u64, Ordering::Relaxed);
+    }
+
+    /// Record one message from `rank`, publishing it to the attached
+    /// bus (if any) with sender attribution.
+    fn record_from(&self, rank: usize, class: TrafficClass, bytes: u64) {
+        self.record(class, bytes);
+        if let Some(bus) = self.bus.get() {
+            bus.publish(Event::Message { rank, class: class.name(), bytes });
+        }
     }
 
     /// Total bytes moved so far in one traffic class.
@@ -149,6 +172,26 @@ impl CommStats {
             ],
         }
     }
+
+    /// Machine-readable ledger: per-class bytes/messages plus the
+    /// modeled link-time integral.
+    pub fn to_json(&self) -> Json {
+        let classes = TrafficClass::ALL
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("class", Json::str(c.name())),
+                    ("bytes", Json::num(self.bytes(*c) as f64)),
+                    ("messages", Json::num(self.messages(*c) as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("classes", Json::Arr(classes)),
+            ("total_bytes", Json::num(self.total_bytes() as f64)),
+            ("sim_link_secs", Json::num(self.sim_link_secs())),
+        ])
+    }
 }
 
 /// Byte counters frozen at one instant.
@@ -161,6 +204,19 @@ impl CommSnapshot {
     /// Bytes moved in `class` between `self` (earlier) and `later`.
     pub fn delta(&self, later: &CommSnapshot, class: TrafficClass) -> u64 {
         later.bytes[class.idx()] - self.bytes[class.idx()]
+    }
+
+    /// Frozen per-class byte counters as a JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            TrafficClass::ALL
+                .iter()
+                .map(|c| {
+                    (c.name().to_string(),
+                     Json::num(self.bytes[c.idx()] as f64))
+                })
+                .collect(),
+        )
     }
 }
 
@@ -216,7 +272,7 @@ pub struct RingNode {
 impl RingNode {
     /// Send to the right ring neighbour (accounted).
     pub fn send_right(&self, class: TrafficClass, data: Vec<f32>) {
-        self.stats.record(class, (data.len() * 4) as u64);
+        self.stats.record_from(self.rank, class, (data.len() * 4) as u64);
         self.right.send(data).expect("ring neighbour hung up");
     }
 
@@ -231,7 +287,8 @@ impl RingNode {
         -> Option<Vec<Vec<f32>>> {
         match &self.root_rx {
             None => {
-                self.stats.record(class, (payload.len() * 4) as u64);
+                self.stats
+                    .record_from(self.rank, class, (payload.len() * 4) as u64);
                 self.to_root
                     .send((self.rank, payload))
                     .expect("root hung up");
@@ -373,6 +430,31 @@ mod tests {
         assert_eq!(stats.bytes(TrafficClass::GradScatter), 2 * 32);
         assert_eq!(stats.bytes(TrafficClass::GradReduce), 0);
         assert_eq!(stats.total_bytes(), 2 * 32);
+    }
+
+    #[test]
+    fn attached_bus_mirrors_ledger() {
+        let (nodes, stats) = ring_world(2, LinkModel::default());
+        let bus = EventBus::new(64);
+        stats.attach_bus(Arc::clone(&bus));
+        std::thread::scope(|s| {
+            for node in nodes {
+                s.spawn(move || {
+                    node.send_right(TrafficClass::GradReduce,
+                                    vec![1.0; 8]);
+                    node.recv_left();
+                });
+            }
+        });
+        let mut event_bytes = 0u64;
+        for st in bus.drain() {
+            if let Event::Message { class, bytes, .. } = st.event {
+                assert_eq!(class, "grad_reduce");
+                event_bytes += bytes;
+            }
+        }
+        assert_eq!(event_bytes, stats.bytes(TrafficClass::GradReduce));
+        assert_eq!(bus.dropped(), 0);
     }
 
     #[test]

@@ -64,8 +64,10 @@ use crate::cluster::{ring_allgather_bytes, ring_allreduce_bytes,
                      ADAM_MINI_PROFILE};
 use crate::optim::{self, Hyper, ModelMeta, ReduceOp};
 use crate::partition::{partition_spec, Strategy};
+use crate::telemetry::{Event, Telemetry, DEFAULT_BUS_CAPACITY};
 use crate::tensor::Tensor;
 use crate::util::csv::ascii_table;
+use crate::util::json::Json;
 use crate::util::prng::Rng;
 
 /// The probe inventory used by the traffic report and the all-reduce
@@ -108,6 +110,116 @@ fn probe_spec(params: &[Tensor]) -> Result<Vec<crate::partition::BlockView>> {
     let meta = probe_meta();
     partition_spec(&shapes, meta.n_heads, &meta.stacked,
                    Strategy::Hessian)
+}
+
+/// Probe-inventory [`DistTrainer`]: adam_mini with ZeRO-1 state
+/// sharding, bucket-granular stepping, and the `zero2` gradient
+/// schedule lever — the configuration every telemetry probe drives.
+fn probe_trainer(workers: usize, zero2: bool)
+    -> Result<(DistTrainer, Vec<Tensor>)> {
+    let (params, _) = probe_params(0xD157);
+    let spec = Some(probe_spec(&params)?);
+    let dist = DistTrainer::new(&params, DistOptions {
+        workers,
+        bucket_kb: 64,
+        zero1: true,
+        zero2,
+        bucket_step: true,
+        optimizer: "adam_mini".into(),
+        reduce: ReduceOp::Mean,
+        hp: Hyper::default(),
+        spec,
+        ..Default::default()
+    })?;
+    Ok((dist, params))
+}
+
+/// One streamed probe step: synthetic gradients pushed in reverse
+/// parameter order (the backward pass's production order), through
+/// the overlapped bucket pipeline.
+fn stream_probe_step(dist: &mut DistTrainer, params: &mut Vec<Tensor>,
+                     rng: &mut Rng, lr: f32) -> Result<()> {
+    let grads: Vec<Tensor> = params
+        .iter()
+        .map(|p| Tensor::randn(&*p.name, &p.shape, 0.01, rng))
+        .collect();
+    let mut stream = dist.begin_step(1, lr);
+    for j in (0..grads.len()).rev() {
+        stream.push_grad(0, j, &grads[j])?;
+    }
+    stream.finish(params)?;
+    Ok(())
+}
+
+/// Record a real telemetry trace without needing model artifacts:
+/// drive the probe inventory through the streamed ZeRO pipeline with
+/// a bus attached and every event written to a JSONL trace at `path`
+/// (the `repro top --record` backend). Returns (published, dropped)
+/// bus counts.
+pub fn record_probe_trace(path: impl AsRef<std::path::Path>,
+                          workers: usize, steps: usize, zero2: bool)
+    -> Result<(u64, u64)> {
+    let (mut dist, mut params) = probe_trainer(workers, zero2)?;
+    let mut tel = Telemetry::with_trace(DEFAULT_BUS_CAPACITY, &path)?;
+    let bus = tel.bus();
+    dist.attach_bus(tel.bus());
+    let mut rng = Rng::new(7);
+    for s in 0..steps {
+        let lr = 1e-4;
+        stream_probe_step(&mut dist, &mut params, &mut rng, lr)?;
+        // Synthetic cluster loss so the console sparkline has a
+        // curve to draw (deterministic decay, no wall clock).
+        bus.publish(Event::LossReported {
+            step: (s + 1) as u64,
+            rank: -1,
+            loss: 1.0 + 4.5 * (-0.15 * s as f64).exp(),
+            lr: lr as f64,
+        });
+        tel.pump()?;
+    }
+    tel.finish_mut()?;
+    Ok((bus.published(), bus.dropped()))
+}
+
+/// Live `repro top` backend (no artifacts needed): drive the probe
+/// inventory through the streamed pipeline on this thread while a
+/// spawned console thread pumps and renders the shared telemetry.
+pub fn probe_top_live(workers: usize, steps: usize, zero2: bool,
+                      interval_ms: u64) -> Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    let (mut dist, mut params) = probe_trainer(workers, zero2)?;
+    let tel = Arc::new(Mutex::new(Telemetry::new(DEFAULT_BUS_CAPACITY)));
+    let bus = tel.lock().unwrap_or_else(|e| e.into_inner()).bus();
+    dist.attach_bus(Arc::clone(&bus));
+    let done = Arc::new(AtomicBool::new(false));
+    let console = {
+        let tel = Arc::clone(&tel);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            crate::telemetry::top::live_loop(&tel, &done, interval_ms);
+        })
+    };
+    let mut rng = Rng::new(7);
+    for s in 0..steps {
+        let lr = 1e-4;
+        stream_probe_step(&mut dist, &mut params, &mut rng, lr)?;
+        bus.publish(Event::LossReported {
+            step: (s + 1) as u64,
+            rank: -1,
+            loss: 1.0 + 4.5 * (-0.15 * s as f64).exp(),
+            lr: lr as f64,
+        });
+        // Pace the probe so the console has time to draw each step.
+        std::thread::sleep(std::time::Duration::from_millis(
+            interval_ms.clamp(20, 150)));
+    }
+    done.store(true, Ordering::Relaxed);
+    console.join().ok();
+    println!("live probe done: {} steps, {} events published, {} \
+              dropped", steps, bus.published(), bus.dropped());
+    Ok(())
 }
 
 /// Measured vs `cluster.rs`-modeled traffic for one optimizer on the
@@ -218,13 +330,17 @@ pub fn measure_traffic(optimizer: &str, workers: usize, bucket_kb: usize,
 
 /// The `repro report` section: measured vs modeled bytes for AdamW and
 /// Adam-mini on the probe inventory, 4 sharded workers, both gradient
-/// schedules (ZeRO-1 all-reduce vs ZeRO-2 reduce-scatter).
+/// schedules (ZeRO-1 all-reduce vs ZeRO-2 reduce-scatter). Also writes
+/// the machine-readable mirror `results/report.json` (traffic rows,
+/// summaries, the modeled [`StepTiming`] of a streamed probe step,
+/// and the per-class ledger snapshot).
 pub fn traffic_report() -> Result<()> {
     let (workers, bucket_kb, steps) = (4, 64, 3);
     let (_, n_params) = probe_params(0xD157);
     println!("\nDist traffic: measured (in-process engine, {workers} \
               sharded workers, {n_params} params) vs cluster.rs model");
     let mut table = Vec::new();
+    let mut json_rows = Vec::new();
     let mut state_sync = Vec::new();
     // AdamW step bytes per schedule [zero1, zero2] — the headline
     // reduce-scatter saving printed under the table.
@@ -258,6 +374,14 @@ pub fn traffic_report() -> Result<()> {
                     format!("{:.0}", row.modeled_bytes),
                     format!("{:+.2}%", row.delta_pct()),
                 ]);
+                json_rows.push(Json::obj(vec![
+                    ("optimizer", Json::str(&row.optimizer)),
+                    ("schedule", Json::str(schedule)),
+                    ("class", Json::str(row.class)),
+                    ("measured_bytes", Json::num(row.measured_bytes)),
+                    ("modeled_bytes", Json::num(row.modeled_bytes)),
+                    ("delta_pct", Json::num(row.delta_pct())),
+                ]));
             }
         }
     }
@@ -281,6 +405,35 @@ pub fn traffic_report() -> Result<()> {
                            strictly fewer bytes]" }
              else { "[FAIL]" });
     state_dict_schema_report()?;
+
+    // One streamed ZeRO-2 probe step for the timing/ledger sections.
+    let (timing, ledger) = {
+        let (mut dist, mut params) = probe_trainer(workers, true)?;
+        let mut rng = Rng::new(11);
+        stream_probe_step(&mut dist, &mut params, &mut rng, 1e-4)?;
+        (dist.last_step_timing(), dist.stats().to_json())
+    };
+    std::fs::create_dir_all(crate::experiments::RESULTS_DIR)?;
+    let report = Json::obj(vec![
+        ("schema", Json::num(1)),
+        ("workers", Json::num(workers as f64)),
+        ("probe_params", Json::num(n_params as f64)),
+        ("traffic", Json::Arr(json_rows)),
+        ("state_sync_bytes", Json::obj(vec![
+            ("adamw", Json::num(aw)),
+            ("adam_mini", Json::num(am)),
+        ])),
+        ("step_bytes_adamw", Json::obj(vec![
+            ("zero1", Json::num(z1)),
+            ("zero2", Json::num(z2)),
+        ])),
+        ("step_timing",
+         timing.map(|t| t.to_json()).unwrap_or(Json::Null)),
+        ("ledger", ledger),
+    ]);
+    let out = format!("{}/report.json", crate::experiments::RESULTS_DIR);
+    std::fs::write(&out, report.to_string())?;
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -45,6 +45,7 @@ use anyhow::{bail, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use super::allreduce::{clip_ranges, ring_all_gather, ring_all_reduce,
                        ring_reduce_scatter, ring_reduce_scatter_bucketed};
@@ -58,7 +59,15 @@ use super::shard::{block_cuts, build_shard_optimizer, pieces_for,
                    Partition, SendOptimizer};
 use crate::optim::{GradView, Hyper, ParamView, ReduceOp, StateDict};
 use crate::partition::BlockView;
+use crate::telemetry::{Event, EventBus};
 use crate::tensor::Tensor;
+
+/// Publish to an optional bus (the no-telemetry path stays a branch).
+fn pub_ev(bus: &Option<Arc<EventBus>>, event: Event) {
+    if let Some(b) = bus {
+        b.publish(event);
+    }
+}
 
 /// Which step schedule the engine runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -143,6 +152,8 @@ struct WorkerSlot {
     shard_range: (usize, usize),
     /// Full parameter replica (sharded modes only; kept in flat form).
     flat_params: Vec<f32>,
+    /// Telemetry publisher handle (None when no bus is attached).
+    bus: Option<Arc<EventBus>>,
 }
 
 /// Step this worker's whole shard against `reduced` (only the shard's
@@ -150,7 +161,7 @@ struct WorkerSlot {
 /// round-trip — then all-gather the updated parameters.
 fn step_shard_and_gather(slot: &mut WorkerSlot,
                          ranges: &[(usize, usize)], reduced: &[f32],
-                         lr: f32) {
+                         lr: f32, step: u64) {
     let (a, b) = slot.shard_range;
     if let Some(opt) = &mut slot.opt {
         opt.begin_step();
@@ -160,6 +171,10 @@ fn step_shard_and_gather(slot: &mut WorkerSlot,
                 GradView::new(0, &reduced[a..b]), lr);
         }
     }
+    // bucket == -1: the whole-shard (deferred) optimizer step.
+    pub_ev(&slot.bus, Event::ShardStepped {
+        step, rank: slot.node.rank, bucket: -1, lo: a, hi: b,
+    });
     ring_all_gather(&slot.node, ranges, &mut slot.flat_params,
                     TrafficClass::ParamGather);
 }
@@ -179,6 +194,8 @@ pub struct DistTrainer {
     compute: ComputeModel,
     last_timing: Option<StepTiming>,
     steps: u64,
+    /// Telemetry publisher handle (see [`DistTrainer::attach_bus`]).
+    bus: Option<Arc<EventBus>>,
 }
 
 impl DistTrainer {
@@ -254,6 +271,7 @@ impl DistTrainer {
                 shard_range: range,
                 flat_params: if mode.sharded() { flat.clone() }
                              else { Vec::new() },
+                bus: None,
             });
         }
         Ok(DistTrainer {
@@ -269,7 +287,21 @@ impl DistTrainer {
             compute: opts.compute,
             last_timing: None,
             steps: 0,
+            bus: None,
         })
+    }
+
+    /// Attach a telemetry bus: step lifecycle, bucket readiness,
+    /// collective launch/land, shard steps, and every transport
+    /// message are published from here on. Telemetry never alters the
+    /// training math — publishers fire strictly after (or around) the
+    /// numeric work they describe.
+    pub fn attach_bus(&mut self, bus: Arc<EventBus>) {
+        self.stats.attach_bus(Arc::clone(&bus));
+        for slot in &mut self.slots {
+            slot.bus = Some(Arc::clone(&bus));
+        }
+        self.bus = Some(bus);
     }
 
     pub fn workers(&self) -> usize {
@@ -356,6 +388,11 @@ impl DistTrainer {
             }
         }
         self.steps += 1;
+        let step = self.steps;
+        pub_ev(&self.bus, Event::StepBegin {
+            step, n_micro, workers: n,
+        });
+        let t0 = Instant::now();
         let inv = 1.0 / n_micro.max(1) as f32;
         let bucket = self.bucket_elems;
         let mode = self.mode;
@@ -384,7 +421,7 @@ impl DistTrainer {
                                     *x *= inv;
                                 }
                                 step_shard_and_gather(
-                                    slot, ranges, grad, lr);
+                                    slot, ranges, grad, lr, step);
                             }
                             StepMode::Zero2 => {
                                 ring_reduce_scatter_bucketed(
@@ -398,7 +435,7 @@ impl DistTrainer {
                                     *x *= inv;
                                 }
                                 step_shard_and_gather(
-                                    slot, ranges, grad, lr);
+                                    slot, ranges, grad, lr, step);
                             }
                         }
                     })
@@ -411,6 +448,9 @@ impl DistTrainer {
             }
             Ok(())
         })?;
+        pub_ev(&self.bus, Event::StepEnd {
+            step, wall_ns: t0.elapsed().as_secs_f64() * 1e9,
+        });
         if self.mode.sharded() {
             self.layout.unflatten(&self.slots[0].flat_params, params);
             Ok(None)
@@ -440,6 +480,11 @@ impl DistTrainer {
         let inv = 1.0 / n_micro.max(1) as f32;
         let mode = self.mode;
         let granular = self.granular;
+        // finish() increments the counter; this stream IS that step.
+        let step = self.steps + 1;
+        pub_ev(&self.bus, Event::StepBegin {
+            step, n_micro, workers: n,
+        });
         let ranges = self.partition.ranges.clone();
         let mut to_workers = Vec::with_capacity(n);
         let mut joins = Vec::with_capacity(n);
@@ -449,7 +494,7 @@ impl DistTrainer {
             let ranges = ranges.clone();
             joins.push(std::thread::spawn(move || {
                 worker_stream_loop(slot, rx, layout, ranges, mode,
-                                   granular, inv, lr)
+                                   granular, inv, lr, step)
             }));
             to_workers.push(tx);
         }
@@ -468,6 +513,8 @@ impl DistTrainer {
             launched: 0,
             timeline,
             n_micro: n_micro.max(1),
+            step,
+            t0: Instant::now(),
         }
     }
 
@@ -581,9 +628,10 @@ struct BucketJob {
 fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
                       layout: Arc<FlatLayout>,
                       ranges: Vec<(usize, usize)>, mode: StepMode,
-                      granular: bool, inv: f32, lr: f32)
+                      granular: bool, inv: f32, lr: f32, step: u64)
     -> (WorkerSlot, Option<Vec<f32>>) {
     let rank = slot.node.rank;
+    let bus = slot.bus.clone();
     let bucket_step = granular && mode == StepMode::Zero2;
     if bucket_step {
         // One model step: open it once; segments follow per bucket.
@@ -599,11 +647,24 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
         vec![0.0f32; layout.total]
     };
     while let Ok(mut job) = rx.recv() {
+        let bucket_bytes = (job.data.len() * 4) as u64;
         match mode {
             StepMode::Replicated | StepMode::Zero1 => {
                 let len = job.data.len().max(1);
+                pub_ev(&bus, Event::CollectiveLaunched {
+                    step, rank, bucket: job.idx,
+                    class: TrafficClass::GradReduce.name(),
+                    bytes: bucket_bytes,
+                });
+                let t = Instant::now();
                 ring_all_reduce(&slot.node, &mut job.data, len,
                                 TrafficClass::GradReduce);
+                pub_ev(&bus, Event::CollectiveLanded {
+                    step, rank, bucket: job.idx,
+                    class: TrafficClass::GradReduce.name(),
+                    bytes: bucket_bytes,
+                    ns: t.elapsed().as_secs_f64() * 1e9,
+                });
                 for x in job.data.iter_mut() {
                     *x *= inv;
                 }
@@ -611,8 +672,20 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
             }
             StepMode::Zero2 => {
                 let clipped = clip_ranges(&ranges, job.lo, job.hi);
+                pub_ev(&bus, Event::CollectiveLaunched {
+                    step, rank, bucket: job.idx,
+                    class: TrafficClass::GradScatter.name(),
+                    bytes: bucket_bytes,
+                });
+                let t = Instant::now();
                 ring_reduce_scatter(&slot.node, &clipped, &mut job.data,
                                     TrafficClass::GradScatter);
+                pub_ev(&bus, Event::CollectiveLanded {
+                    step, rank, bucket: job.idx,
+                    class: TrafficClass::GradScatter.name(),
+                    bytes: bucket_bytes,
+                    ns: t.elapsed().as_secs_f64() * 1e9,
+                });
                 let (a, b) = clipped[rank];
                 for x in job.data[a..b].iter_mut() {
                     *x *= inv;
@@ -632,11 +705,27 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
                                               &job.data[a..b]),
                                 lr);
                         }
+                        pub_ev(&bus, Event::ShardStepped {
+                            step, rank, bucket: job.idx as i64,
+                            lo: glo, hi: ghi,
+                        });
                     }
+                    pub_ev(&bus, Event::CollectiveLaunched {
+                        step, rank, bucket: job.idx,
+                        class: TrafficClass::ParamGather.name(),
+                        bytes: bucket_bytes,
+                    });
+                    let t = Instant::now();
                     ring_all_gather(
                         &slot.node, &clipped,
                         &mut slot.flat_params[job.lo..job.hi],
                         TrafficClass::ParamGather);
+                    pub_ev(&bus, Event::CollectiveLanded {
+                        step, rank, bucket: job.idx,
+                        class: TrafficClass::ParamGather.name(),
+                        bytes: bucket_bytes,
+                        ns: t.elapsed().as_secs_f64() * 1e9,
+                    });
                 } else {
                     reduced[job.lo + a..job.lo + b]
                         .copy_from_slice(&job.data[a..b]);
@@ -655,7 +744,8 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
             (slot, None)
         }
         StepMode::Zero1 | StepMode::Zero2 => {
-            step_shard_and_gather(&mut slot, &ranges, &reduced, lr);
+            step_shard_and_gather(&mut slot, &ranges, &reduced, lr,
+                                  step);
             (slot, None)
         }
     }
@@ -685,6 +775,9 @@ pub struct StepStream<'a> {
     launched: usize,
     timeline: OverlapTimeline,
     n_micro: usize,
+    /// The step number this stream executes (assigned at begin_step).
+    step: u64,
+    t0: Instant,
 }
 
 impl StepStream<'_> {
@@ -724,6 +817,13 @@ impl StepStream<'_> {
             for b in gated {
                 self.pending[b] -= 1;
                 if self.pending[b] == 0 {
+                    let bk = self.trainer.plan.buckets[b];
+                    pub_ev(&self.trainer.bus, Event::BucketReady {
+                        step: self.step,
+                        bucket: b,
+                        spans: bk.n_spans(),
+                        elems: bk.elems(),
+                    });
                     self.launch(b);
                 }
             }
@@ -838,6 +938,10 @@ impl StepStream<'_> {
         }
         self.trainer.steps += 1;
         self.trainer.last_timing = Some(self.timeline.timing());
+        pub_ev(&self.trainer.bus, Event::StepEnd {
+            step: self.step,
+            wall_ns: self.t0.elapsed().as_secs_f64() * 1e9,
+        });
         if sharded {
             let flat = std::mem::take(
                 &mut self.trainer.slots[0].flat_params);

@@ -1,0 +1,115 @@
+//! `repro report --bench-history`: diff the latest bench JSONs
+//! (`results/BENCH_*.json`, written by `cargo bench`) against the
+//! committed baselines in `results/baseline/`, joined per record
+//! name on `mean_ns`.
+//!
+//! The baselines are a perf trajectory anchor: CI uploads each run's
+//! fresh JSONs as artifacts, and this table makes a regression
+//! visible as a `+NN%` delta without any external dashboard.
+
+use anyhow::Result;
+
+use crate::util::csv::ascii_table;
+use crate::util::json::Json;
+
+use super::RESULTS_DIR;
+
+const BENCHES: [&str; 3] =
+    ["BENCH_dist.json", "BENCH_overlap.json", "BENCH_optim.json"];
+
+/// `(name, mean_ns)` per record, or `None` if the file is absent.
+fn load_records(path: &str) -> Result<Option<Vec<(String, f64)>>> {
+    if !std::path::Path::new(path).exists() {
+        return Ok(None);
+    }
+    let j = Json::parse(&std::fs::read_to_string(path)?)?;
+    let mut out = Vec::new();
+    for r in j.get("records")?.as_arr()? {
+        out.push((
+            r.get("name")?.as_str()?.to_string(),
+            r.get("mean_ns")?.as_f64()?,
+        ));
+    }
+    Ok(Some(out))
+}
+
+/// Rows for one bench file's diff (exposed for the unit test).
+fn diff_rows(cur: &[(String, f64)], base: &[(String, f64)])
+    -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    for (name, cur_ns) in cur {
+        let (base_str, delta) = match base
+            .iter()
+            .find(|(n, _)| n == name)
+        {
+            Some((_, base_ns)) => (
+                format!("{base_ns:.0}"),
+                format!("{:+.1}%",
+                        100.0 * (cur_ns - base_ns) / base_ns),
+            ),
+            None => ("-".to_string(), "new".to_string()),
+        };
+        rows.push(vec![name.clone(), base_str,
+                       format!("{cur_ns:.0}"), delta]);
+    }
+    for (name, base_ns) in base {
+        if !cur.iter().any(|(n, _)| n == name) {
+            rows.push(vec![name.clone(), format!("{base_ns:.0}"),
+                           "-".to_string(), "gone".to_string()]);
+        }
+    }
+    rows
+}
+
+/// Print the three bench diffs (graceful when either side is missing:
+/// a fresh checkout has baselines but no current run yet).
+pub fn report() -> Result<()> {
+    println!("Bench history: latest {RESULTS_DIR}/BENCH_*.json vs \
+              committed {RESULTS_DIR}/baseline/ (mean_ns)");
+    let mut rows = Vec::new();
+    for file in BENCHES {
+        let cur = load_records(&format!("{RESULTS_DIR}/{file}"))?;
+        let base =
+            load_records(&format!("{RESULTS_DIR}/baseline/{file}"))?;
+        match (cur, base) {
+            (None, _) => println!(
+                "  {file}: no current run (cargo bench writes it)"),
+            (_, None) => println!("  {file}: no committed baseline"),
+            (Some(cur), Some(base)) => {
+                rows.extend(diff_rows(&cur, &base));
+            }
+        }
+    }
+    if rows.is_empty() {
+        println!("(nothing to diff)");
+    } else {
+        println!("{}", ascii_table(
+            &["Record", "Baseline ns", "Latest ns", "Delta"], &rows));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diff_joins_by_name() {
+        let base = vec![("a".to_string(), 100.0),
+                        ("b".to_string(), 200.0)];
+        let cur = vec![("a".to_string(), 150.0),
+                       ("c".to_string(), 50.0)];
+        let rows = diff_rows(&cur, &base);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0], vec!["a", "100", "150", "+50.0%"]);
+        assert_eq!(rows[1], vec!["c", "-", "50", "new"]);
+        assert_eq!(rows[2], vec!["b", "200", "-", "gone"]);
+    }
+
+    #[test]
+    fn load_missing_is_none() {
+        assert!(load_records("results/definitely_absent.json")
+            .unwrap()
+            .is_none());
+    }
+}

@@ -5,6 +5,7 @@
 //! wall-clock (CI mode); EXPERIMENTS.md records full-mode runs.
 
 pub mod align;
+pub mod bench_history;
 pub mod hessian_exp;
 pub mod leaveout;
 pub mod nonllm;

@@ -4,11 +4,14 @@
 //!   train [--config FILE] [key=value ...]   run one training job
 //!   exp <name|all> [--quick]                regenerate a paper artifact
 //!   list                                    models + experiments
-//!   report                                  memory/throughput summary
+//!   report [--bench-history]                memory/throughput summary
+//!   top [...]                               live telemetry console
 //!   selfcheck                               load+run every artifact once
 //!
 //! (Argument parsing is hand-rolled: clap is not in the vendored crate
 //! set — see DESIGN.md.)
+
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -16,17 +19,31 @@ use adam_mini::config::TrainConfig;
 use adam_mini::coordinator::Trainer;
 use adam_mini::experiments;
 use adam_mini::runtime::{manifest, Engine};
+use adam_mini::telemetry::{self, Telemetry, DEFAULT_BUS_CAPACITY};
 
 fn usage() -> ! {
     eprintln!(
         "usage:\n  repro train [--config FILE] [key=value ...]\n  \
-         repro exp <name|all> [--quick]\n  repro list\n  repro report\n  \
+         repro exp <name|all> [--quick]\n  repro list\n  \
+         repro report [--bench-history]\n  \
+         repro top [workers=N steps=K zero2=BOOL interval=MS]\n  \
+         repro top --replay FILE.jsonl [--once] [interval=MS]\n  \
+         repro top --record FILE.jsonl [workers=N steps=K zero2=BOOL]\n  \
+         repro top --check FILE.jsonl\n  \
          repro selfcheck\n\ntrain keys include workers=N (data-parallel \
          engine), bucket_kb=K,\nzero1=BOOL (ZeRO-1 optimizer-state \
          sharding), zero2=BOOL (also shard\ngradients: reduce-scatter \
          schedule), overlap=BOOL (streaming bucket\npipeline), \
          bucket_step=BOOL (ZeRO-2 overlap: step each bucket's\nshard \
-         segment as its reduce-scatter lands; default true)\n\n\
+         segment as its reduce-scatter lands; default true),\n\
+         trace=FILE.jsonl (record every telemetry event; a \
+         Chrome-trace\nsibling FILE.chrome.json is exported at the \
+         end — load it in\nabout://tracing)\n\ntop: live dashboard \
+         over an artifact-free dist probe. --replay\nre-renders a \
+         recorded trace (--once prints one plain frame, no\nTTY \
+         needed — the CI mode); --record writes a probe trace; \
+         --check\nvalidates one (every line parses, seq gaps <= \
+         reported drops)\n\n\
          artifacts dir: $ADAM_MINI_ARTIFACTS (default ./artifacts)"
     );
     std::process::exit(2);
@@ -38,14 +55,75 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args[1..]),
         Some("exp") => cmd_exp(&args[1..]),
         Some("list") => cmd_list(),
-        Some("report") => {
-            experiments::throughput::table1()?;
-            experiments::throughput::table2()?;
-            adam_mini::dist::traffic_report()
-        }
+        Some("report") => cmd_report(&args[1..]),
+        Some("top") => cmd_top(&args[1..]),
         Some("selfcheck") => cmd_selfcheck(),
         _ => usage(),
     }
+}
+
+fn cmd_report(args: &[String]) -> Result<()> {
+    if args.iter().any(|a| a == "--bench-history") {
+        return experiments::bench_history::report();
+    }
+    experiments::throughput::table1()?;
+    experiments::throughput::table2()?;
+    adam_mini::dist::traffic_report()
+}
+
+fn cmd_top(args: &[String]) -> Result<()> {
+    let (mut workers, mut steps, mut zero2) = (4usize, 40usize, true);
+    let mut interval: u64 = 120;
+    let (mut replay, mut record, mut check) = (None, None, None);
+    let mut once = false;
+    let mut i = 0;
+    while i < args.len() {
+        let path_arg = |args: &[String], i: usize| {
+            args.get(i).cloned().unwrap_or_else(|| usage())
+        };
+        match args[i].as_str() {
+            "--replay" => {
+                i += 1;
+                replay = Some(path_arg(args, i));
+            }
+            "--record" => {
+                i += 1;
+                record = Some(path_arg(args, i));
+            }
+            "--check" => {
+                i += 1;
+                check = Some(path_arg(args, i));
+            }
+            "--once" => once = true,
+            kv if kv.contains('=') => {
+                let (k, v) = kv.split_once('=').unwrap();
+                match k {
+                    "workers" => workers = v.parse()?,
+                    "steps" => steps = v.parse()?,
+                    "zero2" => zero2 = v.parse()?,
+                    "interval" => interval = v.parse()?,
+                    _ => usage(),
+                }
+            }
+            _ => usage(),
+        }
+        i += 1;
+    }
+    if let Some(path) = check {
+        println!("{}", telemetry::check_report(&path)?);
+        return Ok(());
+    }
+    if let Some(path) = record {
+        let (published, dropped) = adam_mini::dist::record_probe_trace(
+            &path, workers, steps, zero2)?;
+        println!("recorded {path}: {published} events published, \
+                  {dropped} dropped");
+        return Ok(());
+    }
+    if let Some(path) = replay {
+        return telemetry::top::replay(&path, once, interval);
+    }
+    adam_mini::dist::probe_top_live(workers, steps, zero2, interval)
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
@@ -66,6 +144,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
     println!("config: {}", cfg.to_json());
     let engine = Engine::new(manifest::default_dir())?;
     let mut trainer = Trainer::from_config(&engine, &cfg)?;
+    let tel = if cfg.trace.is_empty() {
+        None
+    } else {
+        let t = Arc::new(Mutex::new(Telemetry::with_trace(
+            DEFAULT_BUS_CAPACITY, &cfg.trace)?));
+        trainer.attach_telemetry(Arc::clone(&t));
+        Some(t)
+    };
     let hist = trainer.train(false)?;
     let path = hist.write_csv("results/train")?;
     println!(
@@ -101,6 +187,19 @@ fn cmd_train(args: &[String]) -> Result<()> {
             t.overlapped_ns / 1e6, t.deferred_ns / 1e6,
             t.sequential_ns / 1e6, t.speedup(), t.granular_gain()
         );
+    }
+    if let Some(t) = tel {
+        let mut t = t.lock().unwrap_or_else(|e| e.into_inner());
+        let bus = t.bus();
+        if let Some(path) = t.finish_mut()? {
+            let chrome = telemetry::export_chrome(&path)?;
+            println!(
+                "trace: {} ({} events, {} dropped)  chrome: {} \
+                 (open in about://tracing)",
+                path.display(), bus.published(), bus.dropped(),
+                chrome.display()
+            );
+        }
     }
     Ok(())
 }

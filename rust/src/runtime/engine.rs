@@ -4,10 +4,13 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::{IoSpec, Manifest};
+use crate::telemetry::{Event, EventBus};
 use crate::tensor::Tensor;
 
 /// A compiled executable + its I/O contract.
@@ -62,6 +65,8 @@ pub struct Engine {
     pub manifest: Manifest,
     dir: PathBuf,
     cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Telemetry tap: artifact compile (cache-miss) events.
+    bus: RefCell<Option<Arc<EventBus>>>,
 }
 
 impl Engine {
@@ -72,7 +77,13 @@ impl Engine {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
         Ok(Engine { client, manifest, dir, cache: RefCell::new(
-            HashMap::new()) })
+            HashMap::new()), bus: RefCell::new(None) })
+    }
+
+    /// Publish [`Event::ArtifactLoaded`] for every future cache-miss
+    /// compile.
+    pub fn attach_bus(&self, bus: Arc<EventBus>) {
+        *self.bus.borrow_mut() = Some(bus);
     }
 
     /// Engine over the default artifacts dir ($ADAM_MINI_ARTIFACTS).
@@ -94,6 +105,7 @@ impl Engine {
             return Ok(exe.clone());
         }
         let path = self.dir.join(&info.file);
+        let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().unwrap())
             .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
@@ -102,6 +114,12 @@ impl Engine {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {}: {e:?}", info.file))?;
+        if let Some(bus) = self.bus.borrow().as_ref() {
+            bus.publish(Event::ArtifactLoaded {
+                name: format!("{model}/{key}"),
+                ms: t0.elapsed().as_secs_f64() * 1e3,
+            });
+        }
         let exe = Rc::new(Executable {
             exe,
             inputs: info.inputs.clone(),

@@ -1,0 +1,246 @@
+//! Typed telemetry events + the lock-light bounded `EventBus`.
+//!
+//! Publishers live on the training hot path (worker threads, the ring
+//! transport, the trainer loop), so `publish` must never block: it
+//! takes the ring lock with `try_lock` and counts a drop on
+//! contention instead of waiting. The ring is bounded; when full the
+//! oldest event is overwritten (again counted as a drop). Sequence
+//! numbers are assigned under the same lock, so a consumer that sees
+//! gaps in `seq` can attribute every gap to a reported drop — this is
+//! the invariant the CI trace check relies on.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::dist::TrafficClass;
+
+/// One telemetry event. Ranks are `i64` so `-1` can mean
+/// "cluster-wide" (e.g. the mean loss across workers); `bucket` is
+/// `i64` so `-1` can mean "whole shard" (the deferred, non-granular
+/// optimizer step).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A training step is starting (driver side).
+    StepBegin { step: u64, n_micro: usize, workers: usize },
+    /// A training step finished; `wall_ns` is measured wall time.
+    StepEnd { step: u64, wall_ns: f64 },
+    /// All micro-batch gradients for a bucket have landed; the bucket
+    /// is being handed to the worker collectives.
+    BucketReady { step: u64, bucket: usize, spans: usize, elems: usize },
+    /// A worker is entering a collective for a bucket.
+    CollectiveLaunched {
+        step: u64,
+        rank: usize,
+        bucket: usize,
+        class: &'static str,
+        bytes: u64,
+    },
+    /// The collective completed; `ns` is measured wall time.
+    CollectiveLanded {
+        step: u64,
+        rank: usize,
+        bucket: usize,
+        class: &'static str,
+        bytes: u64,
+        ns: f64,
+    },
+    /// A worker stepped its optimizer shard (or the shard∩bucket
+    /// segment when `bucket == -1` is false).
+    ShardStepped { step: u64, rank: usize, bucket: i64, lo: usize, hi: usize },
+    /// Loss for one worker (`rank >= 0`) or the cluster mean
+    /// (`rank == -1`).
+    LossReported { step: u64, rank: i64, loss: f64, lr: f64 },
+    /// A run checkpoint was written.
+    CheckpointSaved { step: u64, path: String },
+    /// One point-to-point transport message (ledger hook). Summing
+    /// `bytes` per class reproduces `CommStats` exactly.
+    Message { rank: usize, class: &'static str, bytes: u64 },
+    /// A compiled artifact was loaded (cache miss) by the engine.
+    ArtifactLoaded { name: String, ms: f64 },
+}
+
+impl Event {
+    /// Stable short tag used in JSONL traces and metrics keys.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::StepBegin { .. } => "step_begin",
+            Event::StepEnd { .. } => "step_end",
+            Event::BucketReady { .. } => "bucket_ready",
+            Event::CollectiveLaunched { .. } => "collective_launched",
+            Event::CollectiveLanded { .. } => "collective_landed",
+            Event::ShardStepped { .. } => "shard_stepped",
+            Event::LossReported { .. } => "loss",
+            Event::CheckpointSaved { .. } => "checkpoint",
+            Event::Message { .. } => "message",
+            Event::ArtifactLoaded { .. } => "artifact",
+        }
+    }
+}
+
+/// Map a traffic-class name back to the `&'static str` the enum
+/// variants carry (used when reconstructing events from a trace).
+pub fn intern_class(name: &str) -> &'static str {
+    for c in TrafficClass::ALL {
+        if c.name() == name {
+            return c.name();
+        }
+    }
+    "unknown"
+}
+
+/// An event stamped with its bus-assigned sequence number and
+/// microseconds since the bus was created.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stamped {
+    pub seq: u64,
+    pub t_us: f64,
+    pub event: Event,
+}
+
+struct Ring {
+    buf: VecDeque<Stamped>,
+    next_seq: u64,
+}
+
+/// Bounded multi-producer event ring. Cheap to clone via `Arc`.
+pub struct EventBus {
+    inner: Mutex<Ring>,
+    dropped: AtomicU64,
+    capacity: usize,
+    epoch: Instant,
+}
+
+impl EventBus {
+    pub fn new(capacity: usize) -> Arc<EventBus> {
+        Arc::new(EventBus {
+            inner: Mutex::new(Ring {
+                buf: VecDeque::with_capacity(capacity.max(1)),
+                next_seq: 0,
+            }),
+            dropped: AtomicU64::new(0),
+            capacity: capacity.max(1),
+            epoch: Instant::now(),
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Ring> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Publish without ever blocking: lock contention or a full ring
+    /// both count as drops. Returns true if the event was enqueued.
+    pub fn publish(&self, event: Event) -> bool {
+        let mut ring = match self.inner.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::WouldBlock) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            Err(std::sync::TryLockError::Poisoned(e)) => e.into_inner(),
+        };
+        if ring.buf.len() >= self.capacity {
+            ring.buf.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        let seq = ring.next_seq;
+        ring.next_seq += 1;
+        let t_us = self.epoch.elapsed().as_secs_f64() * 1e6;
+        ring.buf.push_back(Stamped { seq, t_us, event });
+        true
+    }
+
+    /// Drain everything currently buffered (subscriber side; may
+    /// briefly contend with publishers, which then drop).
+    pub fn drain(&self) -> Vec<Stamped> {
+        let mut ring = self.lock();
+        let buf = std::mem::take(&mut ring.buf);
+        buf.into()
+    }
+
+    /// Total events dropped (full ring or publish contention).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Total events ever assigned a sequence number.
+    pub fn published(&self) -> u64 {
+        self.lock().next_seq
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(step: u64) -> Event {
+        Event::StepBegin { step, n_micro: 1, workers: 1 }
+    }
+
+    #[test]
+    fn seq_is_monotonic() {
+        let bus = EventBus::new(16);
+        for s in 0..5 {
+            bus.publish(ev(s));
+        }
+        let got = bus.drain();
+        let seqs: Vec<u64> = got.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+        assert_eq!(bus.dropped(), 0);
+    }
+
+    #[test]
+    fn full_ring_drops_oldest() {
+        let bus = EventBus::new(3);
+        for s in 0..7 {
+            bus.publish(ev(s));
+        }
+        let got = bus.drain();
+        assert_eq!(got.len(), 3);
+        // Newest three survive; four were dropped.
+        assert_eq!(got[0].seq, 4);
+        assert_eq!(got[2].seq, 6);
+        assert_eq!(bus.dropped(), 4);
+        assert_eq!(bus.published(), 7);
+    }
+
+    #[test]
+    fn gaps_bounded_by_drops() {
+        let bus = EventBus::new(2);
+        for s in 0..10 {
+            bus.publish(ev(s));
+        }
+        let got = bus.drain();
+        let mut gaps = 0u64;
+        for w in got.windows(2) {
+            gaps += w[1].seq - w[0].seq - 1;
+        }
+        // First surviving seq also implies earlier drops.
+        gaps += got.first().map(|s| s.seq).unwrap_or(0);
+        assert!(gaps <= bus.dropped());
+    }
+
+    #[test]
+    fn concurrent_publish_never_blocks() {
+        let bus = EventBus::new(8);
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let b = Arc::clone(&bus);
+            joins.push(std::thread::spawn(move || {
+                for s in 0..1000 {
+                    b.publish(ev(t * 1000 + s));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let survived = bus.drain().len() as u64;
+        assert_eq!(survived + bus.dropped(), bus.published());
+    }
+}

@@ -1,0 +1,437 @@
+//! Metrics registry: named counters/gauges/histograms fed by the
+//! event bus, plus per-worker and cluster-wide aggregates consumed by
+//! the `repro top` dashboard and `results/report.json`.
+//!
+//! Histograms use fixed log2-spaced buckets: `observe` is O(buckets)
+//! worst-case but allocation-free, and p50/p95 come from the
+//! cumulative counts (quantiles are bucket upper bounds, i.e. exact
+//! to within one bucket; `max` is tracked exactly).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::event::{Event, Stamped};
+
+/// Fixed-bucket histogram over positive values.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Upper bound of each bucket (log2-spaced). Values above the
+    /// last bound land in the last bucket.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Buckets with upper bounds `lo * 2^i` for `i in 0..n`.
+    pub fn log2(lo: f64, n: usize) -> Histogram {
+        let bounds = (0..n).map(|i| lo * (1u64 << i) as f64).collect();
+        Histogram { bounds, counts: vec![0; n], count: 0, sum: 0.0, max: 0.0 }
+    }
+
+    /// Default nanosecond histogram: 64 ns .. ~36 s in 30 buckets.
+    pub fn ns() -> Histogram {
+        Histogram::log2(64.0, 30)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let i = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len() - 1);
+        self.counts[i] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Upper bound of the bucket holding quantile `q` in [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target.max(1) {
+                return self.bounds[i].min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.p50())),
+            ("p95", Json::num(self.p95())),
+            ("max", Json::num(self.max)),
+        ])
+    }
+}
+
+/// Per-bucket collective progress within the current step, one lane
+/// cell per (worker, bucket). States are ordered; a lane only ever
+/// advances within a step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LaneState {
+    Launched,
+    Landed,
+    Stepped,
+    Gathered,
+}
+
+impl LaneState {
+    pub fn glyph(&self) -> char {
+        match self {
+            LaneState::Launched => '~',
+            LaneState::Landed => '=',
+            LaneState::Stepped => '+',
+            LaneState::Gathered => '#',
+        }
+    }
+}
+
+/// Rolling per-worker aggregate.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStat {
+    pub step: u64,
+    pub loss: Option<f64>,
+    /// Bytes sent per traffic class (from `Event::Message`, so this
+    /// matches the transport ledger exactly).
+    pub bytes: BTreeMap<String, u64>,
+    pub messages: u64,
+    pub collectives: u64,
+    pub shard_steps: u64,
+}
+
+impl WorkerStat {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.values().sum()
+    }
+}
+
+/// Cap on the retained cluster-loss series (sparkline source).
+const LOSS_SERIES_CAP: usize = 512;
+
+/// The registry: subscribe with [`MetricsRegistry::observe`], read
+/// aggregates from the public fields / accessors.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+    /// Per-worker rolling aggregates, keyed by rank.
+    pub workers: BTreeMap<usize, WorkerStat>,
+    /// Cluster-mean loss per step (rank == -1 reports), capped.
+    pub loss_series: Vec<f64>,
+    /// Buckets announced ready in the current step: bucket -> elems.
+    pub ready_buckets: BTreeMap<usize, usize>,
+    /// Current-step collective lanes: (rank, bucket) -> state.
+    pub lanes: BTreeMap<(usize, usize), LaneState>,
+    /// Most recent StepBegin payload.
+    pub last_step: u64,
+    pub n_micro: usize,
+    pub world: usize,
+    /// Events dropped by the bus (set by the pump, not from events).
+    pub bus_dropped: u64,
+    /// Last checkpoint path, if any.
+    pub last_checkpoint: Option<String>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn hist(&mut self, name: &str) -> &mut Histogram {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(Histogram::ns)
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    fn worker(&mut self, rank: usize) -> &mut WorkerStat {
+        self.workers.entry(rank).or_default()
+    }
+
+    fn lane_advance(&mut self, rank: usize, bucket: i64, s: LaneState) {
+        if bucket < 0 {
+            return;
+        }
+        let cell =
+            self.lanes.entry((rank, bucket as usize)).or_insert(s);
+        if s > *cell {
+            *cell = s;
+        }
+    }
+
+    /// Fold one stamped event into the aggregates.
+    pub fn observe(&mut self, st: &Stamped) {
+        match &st.event {
+            Event::StepBegin { step, n_micro, workers } => {
+                self.counter_add("steps_begun", 1);
+                self.last_step = *step;
+                self.n_micro = *n_micro;
+                self.world = (*workers).max(self.world);
+                self.ready_buckets.clear();
+                self.lanes.clear();
+            }
+            Event::StepEnd { wall_ns, .. } => {
+                self.counter_add("steps_done", 1);
+                self.hist("step_wall_ns").observe(*wall_ns);
+                self.gauge_set("last_step_wall_ns", *wall_ns);
+            }
+            Event::BucketReady { bucket, elems, .. } => {
+                self.counter_add("buckets_ready", 1);
+                self.ready_buckets.insert(*bucket, *elems);
+            }
+            Event::CollectiveLaunched { rank, bucket, .. } => {
+                self.counter_add("collectives_launched", 1);
+                self.lane_advance(*rank, *bucket as i64,
+                                  LaneState::Launched);
+            }
+            Event::CollectiveLanded { rank, bucket, class, ns, .. } => {
+                self.counter_add("collectives_landed", 1);
+                let lane = if *class == "param_gather" {
+                    LaneState::Gathered
+                } else {
+                    LaneState::Landed
+                };
+                self.lane_advance(*rank, *bucket as i64, lane);
+                self.hist("collective_ns").observe(*ns);
+                let key = format!("collective_ns/{class}");
+                self.hist(&key).observe(*ns);
+                self.worker(*rank).collectives += 1;
+            }
+            Event::ShardStepped { rank, bucket, .. } => {
+                self.counter_add("shard_steps", 1);
+                self.lane_advance(*rank, *bucket, LaneState::Stepped);
+                self.worker(*rank).shard_steps += 1;
+            }
+            Event::LossReported { step, rank, loss, lr } => {
+                if *rank < 0 {
+                    if self.loss_series.len() >= LOSS_SERIES_CAP {
+                        self.loss_series.remove(0);
+                    }
+                    self.loss_series.push(*loss);
+                    self.gauge_set("loss", *loss);
+                    self.gauge_set("lr", *lr);
+                } else {
+                    let w = self.worker(*rank as usize);
+                    w.loss = Some(*loss);
+                    w.step = *step;
+                }
+            }
+            Event::CheckpointSaved { path, .. } => {
+                self.counter_add("checkpoints", 1);
+                self.last_checkpoint = Some(path.clone());
+            }
+            Event::Message { rank, class, bytes } => {
+                self.counter_add("messages", 1);
+                let w = self.worker(*rank);
+                w.messages += 1;
+                *w.bytes.entry(class.to_string()).or_insert(0) += bytes;
+            }
+            Event::ArtifactLoaded { ms, .. } => {
+                self.counter_add("artifacts_loaded", 1);
+                self.hist("artifact_load_ns").observe(ms * 1e6);
+            }
+        }
+    }
+
+    /// Cluster bytes per class, summed over workers.
+    pub fn cluster_bytes(&self) -> BTreeMap<String, u64> {
+        let mut out: BTreeMap<String, u64> = BTreeMap::new();
+        for w in self.workers.values() {
+            for (class, b) in &w.bytes {
+                *out.entry(class.clone()).or_insert(0) += b;
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v)))
+                .collect(),
+        );
+        let hists = Json::Obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| (k.clone(), h.to_json()))
+                .collect(),
+        );
+        let workers = Json::Arr(
+            self.workers
+                .iter()
+                .map(|(rank, w)| {
+                    Json::obj(vec![
+                        ("rank", Json::num(*rank as f64)),
+                        ("step", Json::num(w.step as f64)),
+                        ("loss",
+                         w.loss.map(Json::Num).unwrap_or(Json::Null)),
+                        ("bytes", Json::Obj(
+                            w.bytes
+                                .iter()
+                                .map(|(c, b)| {
+                                    (c.clone(), Json::num(*b as f64))
+                                })
+                                .collect(),
+                        )),
+                        ("messages", Json::num(w.messages as f64)),
+                        ("collectives", Json::num(w.collectives as f64)),
+                        ("shard_steps",
+                         Json::num(w.shard_steps as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+            ("workers", workers),
+            ("loss_series", Json::arr_f64(&self.loss_series)),
+            ("bus_dropped", Json::num(self.bus_dropped as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stamp(seq: u64, event: Event) -> Stamped {
+        Stamped { seq, t_us: seq as f64, event }
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::log2(1.0, 20);
+        for v in 1..=100 {
+            h.observe(v as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.p50() >= 50.0 && h.p50() <= 64.0);
+        assert!(h.p95() >= 95.0 && h.p95() <= 128.0);
+        assert_eq!(h.max(), 100.0);
+        // Overflow goes to the last bucket but max stays exact.
+        h.observe(1e12);
+        assert_eq!(h.max(), 1e12);
+    }
+
+    #[test]
+    fn events_aggregate_per_worker() {
+        let mut m = MetricsRegistry::new();
+        m.observe(&stamp(0, Event::StepBegin {
+            step: 1, n_micro: 2, workers: 2,
+        }));
+        m.observe(&stamp(1, Event::Message {
+            rank: 0, class: "grad_reduce", bytes: 128,
+        }));
+        m.observe(&stamp(2, Event::Message {
+            rank: 0, class: "grad_reduce", bytes: 64,
+        }));
+        m.observe(&stamp(3, Event::LossReported {
+            step: 1, rank: 0, loss: 2.5, lr: 1e-3,
+        }));
+        m.observe(&stamp(4, Event::LossReported {
+            step: 1, rank: -1, loss: 2.25, lr: 1e-3,
+        }));
+        assert_eq!(m.workers[&0].bytes["grad_reduce"], 192);
+        assert_eq!(m.workers[&0].loss, Some(2.5));
+        assert_eq!(m.loss_series, vec![2.25]);
+        assert_eq!(m.cluster_bytes()["grad_reduce"], 192);
+    }
+
+    #[test]
+    fn lanes_advance_and_reset() {
+        let mut m = MetricsRegistry::new();
+        m.observe(&stamp(0, Event::CollectiveLaunched {
+            step: 1, rank: 0, bucket: 3, class: "grad_scatter",
+            bytes: 8,
+        }));
+        m.observe(&stamp(1, Event::CollectiveLanded {
+            step: 1, rank: 0, bucket: 3, class: "grad_scatter",
+            bytes: 8, ns: 100.0,
+        }));
+        assert_eq!(m.lanes[&(0, 3)], LaneState::Landed);
+        // A late Launched for the same cell must not regress it.
+        m.observe(&stamp(2, Event::CollectiveLaunched {
+            step: 1, rank: 0, bucket: 3, class: "param_gather",
+            bytes: 8,
+        }));
+        assert_eq!(m.lanes[&(0, 3)], LaneState::Landed);
+        m.observe(&stamp(3, Event::StepBegin {
+            step: 2, n_micro: 1, workers: 1,
+        }));
+        assert!(m.lanes.is_empty());
+    }
+
+    #[test]
+    fn json_snapshot_has_sections() {
+        let mut m = MetricsRegistry::new();
+        m.counter_add("x", 2);
+        m.gauge_set("g", 1.5);
+        m.hist("h").observe(100.0);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("counters").unwrap().get("x").unwrap()
+                .as_usize().unwrap(),
+            2
+        );
+        assert!(j.get("histograms").unwrap().opt("h").is_some());
+    }
+}

@@ -1,0 +1,156 @@
+//! Telemetry: event bus, metrics registry, trace export, and the
+//! `repro top` operator console.
+//!
+//! The [`EventBus`] is the single seam between the training stack
+//! and every observer: publishers (`dist::worker`, `dist::comm`,
+//! `coordinator::trainer`, `runtime::engine`) call
+//! `bus.publish(Event::..)` on the hot path (never blocking; see
+//! `event.rs` for the drop policy), and one [`Telemetry`] pump drains
+//! the bus, folding each event into the [`MetricsRegistry`] and, when
+//! tracing, appending it to a JSONL [`TraceWriter`]. DESIGN.md's
+//! "Telemetry" section documents the taxonomy and schema versioning.
+
+pub mod event;
+pub mod metrics;
+pub mod top;
+pub mod trace;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+pub use event::{Event, EventBus, Stamped};
+pub use metrics::MetricsRegistry;
+pub use trace::TraceWriter;
+
+use crate::util::json::Json;
+
+/// Default bus capacity: large enough that a well-pumped training
+/// run never drops, small enough to bound memory if nobody drains.
+pub const DEFAULT_BUS_CAPACITY: usize = 65_536;
+
+/// The subscriber half: owns the registry and optional trace sink,
+/// drains the shared bus. Publishers only ever see the `Arc<EventBus>`.
+pub struct Telemetry {
+    bus: Arc<EventBus>,
+    pub metrics: MetricsRegistry,
+    trace: Option<TraceWriter>,
+}
+
+impl Telemetry {
+    pub fn new(capacity: usize) -> Telemetry {
+        Telemetry {
+            bus: EventBus::new(capacity),
+            metrics: MetricsRegistry::new(),
+            trace: None,
+        }
+    }
+
+    /// Telemetry that also records every pumped event to a JSONL
+    /// trace at `path`.
+    pub fn with_trace(capacity: usize, path: impl AsRef<Path>)
+        -> Result<Telemetry> {
+        let mut t = Telemetry::new(capacity);
+        t.trace = Some(TraceWriter::create(path)?);
+        Ok(t)
+    }
+
+    /// The shared publisher handle to attach to trainers/engines.
+    pub fn bus(&self) -> Arc<EventBus> {
+        Arc::clone(&self.bus)
+    }
+
+    /// Drain everything buffered on the bus into the registry (and
+    /// the trace, if recording). Returns the number of events pumped.
+    pub fn pump(&mut self) -> Result<usize> {
+        let batch = self.bus.drain();
+        for st in &batch {
+            self.metrics.observe(st);
+            if let Some(w) = &mut self.trace {
+                w.write(st)?;
+            }
+        }
+        self.metrics.bus_dropped = self.bus.dropped();
+        Ok(batch.len())
+    }
+
+    /// Final pump + trace footer. Returns the finished trace path, if
+    /// one was recording. Safe to call once through an
+    /// `Arc<Mutex<Telemetry>>` (consumes only the writer, not self).
+    pub fn finish_mut(&mut self) -> Result<Option<PathBuf>> {
+        self.pump()?;
+        match self.trace.take() {
+            Some(w) => {
+                let path = w.path.clone();
+                w.finish(self.bus.published(), self.bus.dropped())?;
+                Ok(Some(path))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+/// Export `<trace>.jsonl` as a sibling `<trace>.chrome.json` for
+/// about://tracing; returns the written path.
+pub fn export_chrome(jsonl: impl AsRef<Path>) -> Result<PathBuf> {
+    let jsonl = jsonl.as_ref();
+    let (events, _dropped) = trace::read_trace(jsonl)?;
+    let out = jsonl.with_extension("chrome.json");
+    std::fs::write(&out, trace::chrome_trace(&events).to_string())?;
+    Ok(out)
+}
+
+/// One-line textual summary of a validated trace (CI schema check).
+pub fn check_report(path: impl AsRef<Path>) -> Result<String> {
+    let (n, gaps, dropped) = trace::validate(&path)?;
+    Ok(format!(
+        "trace ok: {n} events, {gaps} seq gaps <= {dropped} \
+         reported drops"
+    ))
+}
+
+/// Machine-readable bus health snapshot.
+pub fn bus_to_json(bus: &EventBus) -> Json {
+    Json::obj(vec![
+        ("published", Json::num(bus.published() as f64)),
+        ("dropped", Json::num(bus.dropped() as f64)),
+        ("capacity", Json::num(bus.capacity() as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pump_feeds_metrics_and_trace() {
+        let dir = std::env::temp_dir().join("adam_mini_telemetry_mod");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pump.jsonl");
+        let mut t = Telemetry::with_trace(128, &path).unwrap();
+        let bus = t.bus();
+        bus.publish(Event::StepBegin { step: 1, n_micro: 1, workers: 2 });
+        bus.publish(Event::LossReported {
+            step: 1, rank: -1, loss: 0.5, lr: 1e-3,
+        });
+        assert_eq!(t.pump().unwrap(), 2);
+        assert_eq!(t.metrics.loss_series, vec![0.5]);
+        let trace_path = t.finish_mut().unwrap().unwrap();
+        assert_eq!(trace_path, path);
+        let (n, gaps, dropped) = trace::validate(&path).unwrap();
+        assert_eq!((n, gaps, dropped), (2, 0, 0));
+        let chrome = export_chrome(&path).unwrap();
+        let text = std::fs::read_to_string(chrome).unwrap();
+        assert!(text.contains("traceEvents"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn finish_without_trace_is_none() {
+        let mut t = Telemetry::new(8);
+        t.bus().publish(Event::StepEnd { step: 1, wall_ns: 10.0 });
+        assert!(t.finish_mut().unwrap().is_none());
+        assert_eq!(t.metrics.counter("steps_done"), 1);
+    }
+}

@@ -1,0 +1,281 @@
+//! `repro top` — live operator console.
+//!
+//! Rendering is a pure function from a [`MetricsRegistry`] snapshot
+//! to a `String` frame, so the same code drives the live ANSI
+//! dashboard, `--replay <trace> --once` in CI (no TTY: one plain
+//! frame on stdout), and unit tests. Only the live loop emits ANSI
+//! control codes.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::dist::TrafficClass;
+
+use super::metrics::MetricsRegistry;
+use super::trace::read_trace;
+use super::Telemetry;
+
+/// Unicode sparkline of a series, rescaled to `width` columns.
+pub fn sparkline(series: &[f64], width: usize) -> String {
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if series.is_empty() || width == 0 {
+        return String::new();
+    }
+    // Downsample by taking the last `width` points.
+    let tail = if series.len() > width {
+        &series[series.len() - width..]
+    } else {
+        series
+    };
+    let lo = tail.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = tail.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    tail.iter()
+        .map(|v| {
+            let t = ((v - lo) / span * 7.0).round() as usize;
+            GLYPHS[t.min(7)]
+        })
+        .collect()
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+fn fmt_loss(loss: Option<f64>) -> String {
+    match loss {
+        Some(l) => format!("{l:.4}"),
+        None => "-".to_string(),
+    }
+}
+
+/// Render one dashboard frame (no ANSI control codes).
+pub fn render_frame(m: &MetricsRegistry) -> String {
+    let mut out = String::new();
+    let world = m.world.max(m.workers.len());
+    out.push_str(&format!(
+        "repro top — step {}  micro {}  world {}  drops {}\n",
+        m.last_step, m.n_micro, world, m.bus_dropped
+    ));
+    if m.bus_dropped > 0 {
+        out.push_str(
+            "  !! event bus under backpressure: drops recorded; \
+             aggregates remain exact, lanes may skip\n",
+        );
+    }
+    // Cluster loss + sparkline.
+    let loss = m.gauge("loss");
+    let lr = m.gauge("lr");
+    out.push_str(&format!(
+        "loss {}  lr {}  {}\n",
+        fmt_loss(loss),
+        lr.map(|v| format!("{v:.2e}")).unwrap_or_else(|| "-".into()),
+        sparkline(&m.loss_series, 48)
+    ));
+    // Workers table.
+    let mut header = vec!["rank".to_string(), "step".to_string(),
+                          "loss".to_string()];
+    for c in TrafficClass::ALL {
+        header.push(c.name().to_string());
+    }
+    header.push("coll".to_string());
+    header.push("msgs".to_string());
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (rank, w) in &m.workers {
+        let mut row = vec![
+            format!("w{rank}"),
+            format!("{}", w.step),
+            fmt_loss(w.loss),
+        ];
+        for c in TrafficClass::ALL {
+            let b = w.bytes.get(c.name()).copied().unwrap_or(0);
+            row.push(fmt_bytes(b));
+        }
+        row.push(format!("{}", w.collectives));
+        row.push(format!("{}", w.messages));
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        rows.push(vec!["-".to_string(); header.len()]);
+    }
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    out.push_str(&crate::util::csv::ascii_table(&hdr_refs, &rows));
+    // Per-worker collective lanes for the current step.
+    let max_bucket =
+        m.lanes.keys().map(|(_, b)| *b).max().map(|b| b + 1);
+    if let Some(n_buckets) = max_bucket {
+        out.push_str(
+            "lanes: . pending  ~ launched  = landed  + stepped  \
+             # gathered\n",
+        );
+        let mut ranks: Vec<usize> = m.workers.keys().copied().collect();
+        if ranks.is_empty() {
+            ranks = m.lanes.keys().map(|(r, _)| *r).collect();
+            ranks.dedup();
+        }
+        for rank in ranks {
+            let lane: String = (0..n_buckets)
+                .map(|b| {
+                    m.lanes
+                        .get(&(rank, b))
+                        .map(|s| s.glyph())
+                        .unwrap_or('.')
+                })
+                .collect();
+            out.push_str(&format!("w{rank} [{lane}]\n"));
+        }
+    }
+    // Latency digest.
+    let steps = m.counter("steps_done");
+    if steps > 0 {
+        out.push_str(&format!("steps done {steps}"));
+        if let Some(w) = m.gauge("last_step_wall_ns") {
+            out.push_str(&format!("  last step {:.2} ms", w / 1e6));
+        }
+        out.push('\n');
+    }
+    if let Some(ck) = &m.last_checkpoint {
+        out.push_str(&format!("checkpoint: {ck}\n"));
+    }
+    out
+}
+
+/// Live console loop (runs on its own thread): pump + render the
+/// shared telemetry every `interval_ms` until `done` flips, then
+/// leave one final frame. Uses `try_lock` so it never stalls the
+/// training thread's per-step pump.
+pub fn live_loop(tel: &Arc<Mutex<Telemetry>>, done: &AtomicBool,
+                 interval_ms: u64) {
+    loop {
+        if done.load(Ordering::Relaxed) {
+            let mut t = tel.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = t.pump();
+            print!("\x1b[2J\x1b[H{}", render_frame(&t.metrics));
+            let _ = std::io::stdout().flush();
+            break;
+        }
+        if let Ok(mut t) = tel.try_lock() {
+            let _ = t.pump();
+            print!("\x1b[2J\x1b[H{}", render_frame(&t.metrics));
+            let _ = std::io::stdout().flush();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(
+            interval_ms.max(16)));
+    }
+    println!();
+}
+
+/// Build a registry by folding a recorded trace, then return it with
+/// the footer's drop count applied.
+pub fn registry_from_trace(path: impl AsRef<Path>)
+    -> Result<MetricsRegistry> {
+    let (events, dropped) = read_trace(path)?;
+    let mut m = MetricsRegistry::new();
+    for st in &events {
+        m.observe(st);
+    }
+    m.bus_dropped = dropped;
+    Ok(m)
+}
+
+/// Replay a recorded trace: `once=true` prints a single plain frame
+/// (CI / no TTY); otherwise frames are re-rendered event-by-event
+/// with ANSI clear codes at ~`interval_ms` cadence.
+pub fn replay(path: impl AsRef<Path>, once: bool, interval_ms: u64)
+    -> Result<()> {
+    if once {
+        let m = registry_from_trace(path)?;
+        print!("{}", render_frame(&m));
+        return Ok(());
+    }
+    let (events, dropped) = read_trace(&path)?;
+    let mut m = MetricsRegistry::new();
+    m.bus_dropped = dropped;
+    let chunk = (events.len() / 60).max(1);
+    for (i, st) in events.iter().enumerate() {
+        m.observe(st);
+        if i % chunk == 0 || i + 1 == events.len() {
+            print!("\x1b[2J\x1b[H{}", render_frame(&m));
+            std::thread::sleep(
+                std::time::Duration::from_millis(interval_ms),
+            );
+        }
+    }
+    println!("replay done: {} events", events.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::event::{Event, Stamped};
+
+    #[test]
+    fn sparkline_scales() {
+        let s = sparkline(&[0.0, 1.0, 2.0, 3.0], 8);
+        assert_eq!(s.chars().count(), 4);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+        assert_eq!(sparkline(&[], 8), "");
+        // Constant series stays at the floor glyph.
+        assert_eq!(sparkline(&[5.0, 5.0], 8), "▁▁");
+    }
+
+    #[test]
+    fn bytes_humanize() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MB");
+    }
+
+    #[test]
+    fn frame_renders_workers_and_lanes() {
+        let mut m = MetricsRegistry::new();
+        let mut feed = |seq: u64, event: Event| {
+            m.observe(&Stamped { seq, t_us: seq as f64, event });
+        };
+        feed(0, Event::StepBegin { step: 3, n_micro: 2, workers: 2 });
+        feed(1, Event::Message {
+            rank: 0, class: "grad_scatter", bytes: 4096,
+        });
+        feed(2, Event::LossReported {
+            step: 3, rank: 0, loss: 1.5, lr: 1e-3,
+        });
+        feed(3, Event::LossReported {
+            step: 3, rank: -1, loss: 1.5, lr: 1e-3,
+        });
+        feed(4, Event::CollectiveLaunched {
+            step: 3, rank: 0, bucket: 1, class: "grad_scatter",
+            bytes: 4096,
+        });
+        let frame = render_frame(&m);
+        assert!(frame.contains("step 3"));
+        assert!(frame.contains("w0"));
+        assert!(frame.contains("4.0 KB"));
+        assert!(frame.contains("1.5000"));
+        assert!(frame.contains("[.~]"), "lane row missing: {frame}");
+        assert!(!frame.contains('\x1b'), "plain frame must be ANSI-free");
+    }
+
+    #[test]
+    fn empty_registry_still_renders() {
+        let frame = render_frame(&MetricsRegistry::new());
+        assert!(frame.contains("repro top"));
+    }
+}

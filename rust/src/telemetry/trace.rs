@@ -1,0 +1,451 @@
+//! Trace recording: JSONL sink (one event per line) and a
+//! Chrome-trace-format exporter so step/bucket/collective spans open
+//! in about://tracing.
+//!
+//! Schema (version 1): every line is a flat JSON object carrying
+//! `{"v":1,"seq":N,"t_us":T,"ev":KIND,...}`. The first line is a
+//! `trace_begin` header, the last a `trace_end` footer with the bus's
+//! published/dropped totals — `validate` checks that sequence numbers
+//! are strictly increasing and that the total gap count never exceeds
+//! the reported drops (the bus assigns `seq` under the same lock that
+//! drops, so a clean trace can have gaps only where drops happened).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::event::{intern_class, Event, Stamped};
+
+/// Trace schema version written into every line.
+pub const TRACE_VERSION: u64 = 1;
+
+fn base_obj(st: &Stamped) -> Vec<(&'static str, Json)> {
+    vec![
+        ("v", Json::num(TRACE_VERSION as f64)),
+        ("seq", Json::num(st.seq as f64)),
+        ("t_us", Json::num(st.t_us)),
+        ("ev", Json::str(st.event.kind())),
+    ]
+}
+
+/// Encode one stamped event as a single flat JSON line.
+pub fn encode_line(st: &Stamped) -> String {
+    let mut kv = base_obj(st);
+    match &st.event {
+        Event::StepBegin { step, n_micro, workers } => {
+            kv.push(("step", Json::num(*step as f64)));
+            kv.push(("n_micro", Json::num(*n_micro as f64)));
+            kv.push(("workers", Json::num(*workers as f64)));
+        }
+        Event::StepEnd { step, wall_ns } => {
+            kv.push(("step", Json::num(*step as f64)));
+            kv.push(("wall_ns", Json::num(*wall_ns)));
+        }
+        Event::BucketReady { step, bucket, spans, elems } => {
+            kv.push(("step", Json::num(*step as f64)));
+            kv.push(("bucket", Json::num(*bucket as f64)));
+            kv.push(("spans", Json::num(*spans as f64)));
+            kv.push(("elems", Json::num(*elems as f64)));
+        }
+        Event::CollectiveLaunched { step, rank, bucket, class, bytes } => {
+            kv.push(("step", Json::num(*step as f64)));
+            kv.push(("rank", Json::num(*rank as f64)));
+            kv.push(("bucket", Json::num(*bucket as f64)));
+            kv.push(("class", Json::str(*class)));
+            kv.push(("bytes", Json::num(*bytes as f64)));
+        }
+        Event::CollectiveLanded { step, rank, bucket, class, bytes, ns } => {
+            kv.push(("step", Json::num(*step as f64)));
+            kv.push(("rank", Json::num(*rank as f64)));
+            kv.push(("bucket", Json::num(*bucket as f64)));
+            kv.push(("class", Json::str(*class)));
+            kv.push(("bytes", Json::num(*bytes as f64)));
+            kv.push(("ns", Json::num(*ns)));
+        }
+        Event::ShardStepped { step, rank, bucket, lo, hi } => {
+            kv.push(("step", Json::num(*step as f64)));
+            kv.push(("rank", Json::num(*rank as f64)));
+            kv.push(("bucket", Json::num(*bucket as f64)));
+            kv.push(("lo", Json::num(*lo as f64)));
+            kv.push(("hi", Json::num(*hi as f64)));
+        }
+        Event::LossReported { step, rank, loss, lr } => {
+            kv.push(("step", Json::num(*step as f64)));
+            kv.push(("rank", Json::num(*rank as f64)));
+            kv.push(("loss", Json::num(*loss)));
+            kv.push(("lr", Json::num(*lr)));
+        }
+        Event::CheckpointSaved { step, path } => {
+            kv.push(("step", Json::num(*step as f64)));
+            kv.push(("path", Json::str(path.clone())));
+        }
+        Event::Message { rank, class, bytes } => {
+            kv.push(("rank", Json::num(*rank as f64)));
+            kv.push(("class", Json::str(*class)));
+            kv.push(("bytes", Json::num(*bytes as f64)));
+        }
+        Event::ArtifactLoaded { name, ms } => {
+            kv.push(("name", Json::str(name.clone())));
+            kv.push(("ms", Json::num(*ms)));
+        }
+    }
+    Json::obj(kv).to_string()
+}
+
+/// Decode one JSONL line back into a stamped event. Header/footer
+/// lines (`trace_begin` / `trace_end`) return `Ok(None)`.
+pub fn decode_line(line: &str) -> Result<Option<Stamped>> {
+    let j = Json::parse(line).context("unparseable trace line")?;
+    let v = j.get("v")?.as_usize()? as u64;
+    if v != TRACE_VERSION {
+        bail!("trace schema v{v} (reader supports v{TRACE_VERSION})");
+    }
+    let ev = j.get("ev")?.as_str()?.to_string();
+    if ev == "trace_begin" || ev == "trace_end" {
+        return Ok(None);
+    }
+    let seq = j.get("seq")?.as_usize()? as u64;
+    let t_us = j.get("t_us")?.as_f64()?;
+    let step = |j: &Json| -> Result<u64> {
+        Ok(j.get("step")?.as_usize()? as u64)
+    };
+    let rank = |j: &Json| -> Result<usize> { j.get("rank")?.as_usize() };
+    let event = match ev.as_str() {
+        "step_begin" => Event::StepBegin {
+            step: step(&j)?,
+            n_micro: j.get("n_micro")?.as_usize()?,
+            workers: j.get("workers")?.as_usize()?,
+        },
+        "step_end" => Event::StepEnd {
+            step: step(&j)?,
+            wall_ns: j.get("wall_ns")?.as_f64()?,
+        },
+        "bucket_ready" => Event::BucketReady {
+            step: step(&j)?,
+            bucket: j.get("bucket")?.as_usize()?,
+            spans: j.get("spans")?.as_usize()?,
+            elems: j.get("elems")?.as_usize()?,
+        },
+        "collective_launched" => Event::CollectiveLaunched {
+            step: step(&j)?,
+            rank: rank(&j)?,
+            bucket: j.get("bucket")?.as_usize()?,
+            class: intern_class(j.get("class")?.as_str()?),
+            bytes: j.get("bytes")?.as_usize()? as u64,
+        },
+        "collective_landed" => Event::CollectiveLanded {
+            step: step(&j)?,
+            rank: rank(&j)?,
+            bucket: j.get("bucket")?.as_usize()?,
+            class: intern_class(j.get("class")?.as_str()?),
+            bytes: j.get("bytes")?.as_usize()? as u64,
+            ns: j.get("ns")?.as_f64()?,
+        },
+        "shard_stepped" => Event::ShardStepped {
+            step: step(&j)?,
+            rank: rank(&j)?,
+            bucket: j.get("bucket")?.as_f64()? as i64,
+            lo: j.get("lo")?.as_usize()?,
+            hi: j.get("hi")?.as_usize()?,
+        },
+        "loss" => Event::LossReported {
+            step: step(&j)?,
+            rank: j.get("rank")?.as_f64()? as i64,
+            loss: j.get("loss")?.as_f64()?,
+            lr: j.get("lr")?.as_f64()?,
+        },
+        "checkpoint" => Event::CheckpointSaved {
+            step: step(&j)?,
+            path: j.get("path")?.as_str()?.to_string(),
+        },
+        "message" => Event::Message {
+            rank: rank(&j)?,
+            class: intern_class(j.get("class")?.as_str()?),
+            bytes: j.get("bytes")?.as_usize()? as u64,
+        },
+        "artifact" => Event::ArtifactLoaded {
+            name: j.get("name")?.as_str()?.to_string(),
+            ms: j.get("ms")?.as_f64()?,
+        },
+        other => bail!("unknown event kind {other:?}"),
+    };
+    Ok(Some(Stamped { seq, t_us, event }))
+}
+
+/// Buffered JSONL trace sink.
+pub struct TraceWriter {
+    w: BufWriter<File>,
+    pub path: PathBuf,
+    lines: u64,
+}
+
+impl TraceWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<TraceWriter> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut w = BufWriter::new(File::create(&path)?);
+        let hdr = Json::obj(vec![
+            ("v", Json::num(TRACE_VERSION as f64)),
+            ("ev", Json::str("trace_begin")),
+        ]);
+        writeln!(w, "{hdr}")?;
+        Ok(TraceWriter { w, path, lines: 0 })
+    }
+
+    pub fn write(&mut self, st: &Stamped) -> Result<()> {
+        writeln!(self.w, "{}", encode_line(st))?;
+        self.lines += 1;
+        Ok(())
+    }
+
+    /// Write the footer (with the bus's totals) and flush.
+    pub fn finish(mut self, published: u64, dropped: u64) -> Result<()> {
+        let ftr = Json::obj(vec![
+            ("v", Json::num(TRACE_VERSION as f64)),
+            ("ev", Json::str("trace_end")),
+            ("published", Json::num(published as f64)),
+            ("dropped", Json::num(dropped as f64)),
+        ]);
+        writeln!(self.w, "{ftr}")?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Read a whole JSONL trace; returns the events plus the footer's
+/// reported drop count (0 if the footer is missing).
+pub fn read_trace(path: impl AsRef<Path>) -> Result<(Vec<Stamped>, u64)> {
+    let text = std::fs::read_to_string(path.as_ref()).with_context(|| {
+        format!("reading trace {}", path.as_ref().display())
+    })?;
+    let mut events = Vec::new();
+    let mut dropped = 0u64;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(st) = decode_line(line)? {
+            events.push(st);
+        } else {
+            let j = Json::parse(line)?;
+            if let Some(d) = j.opt("dropped") {
+                dropped = d.as_usize()? as u64;
+            }
+        }
+    }
+    Ok((events, dropped))
+}
+
+/// Schema check: every line parses, sequence numbers strictly
+/// increase, and total gaps do not exceed the reported drops. Returns
+/// (events, gaps, dropped) for reporting.
+pub fn validate(path: impl AsRef<Path>) -> Result<(usize, u64, u64)> {
+    let (events, dropped) = read_trace(path)?;
+    let mut gaps = 0u64;
+    let mut prev: Option<u64> = None;
+    for st in &events {
+        if let Some(p) = prev {
+            if st.seq <= p {
+                bail!("seq not increasing: {} after {}", st.seq, p);
+            }
+            gaps += st.seq - p - 1;
+        } else {
+            gaps += st.seq;
+        }
+        prev = Some(st.seq);
+    }
+    if gaps > dropped {
+        bail!("trace has {gaps} seq gaps but only {dropped} \
+               reported drops");
+    }
+    Ok((events.len(), gaps, dropped))
+}
+
+/// Export a recorded trace as a Chrome trace (about://tracing /
+/// Perfetto). Collectives become complete-event spans per worker
+/// (tid = rank + 1), steps become spans on tid 0, and losses become
+/// counter samples.
+pub fn chrome_trace(events: &[Stamped]) -> Json {
+    let mut out = Vec::new();
+    let span = |name: String, ts: f64, dur: f64, tid: u64| {
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(ts)),
+            ("dur", Json::num(dur.max(0.001))),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(tid as f64)),
+        ])
+    };
+    // Pair step begin/end on tid 0.
+    let mut step_begin: Vec<(u64, f64)> = Vec::new();
+    // Open collectives keyed by (rank, bucket, class).
+    let mut open: Vec<((usize, usize, &'static str), f64)> = Vec::new();
+    for st in events {
+        match &st.event {
+            Event::StepBegin { step, .. } => {
+                step_begin.push((*step, st.t_us));
+            }
+            Event::StepEnd { step, .. } => {
+                if let Some(pos) =
+                    step_begin.iter().position(|(s, _)| s == step)
+                {
+                    let (_, ts) = step_begin.remove(pos);
+                    out.push(span(format!("step {step}"), ts,
+                                  st.t_us - ts, 0));
+                }
+            }
+            Event::CollectiveLaunched { rank, bucket, class, .. } => {
+                open.push(((*rank, *bucket, class), st.t_us));
+            }
+            Event::CollectiveLanded { rank, bucket, class, .. } => {
+                let key = (*rank, *bucket, *class);
+                if let Some(pos) =
+                    open.iter().position(|(k, _)| *k == key)
+                {
+                    let (_, ts) = open.remove(pos);
+                    out.push(span(
+                        format!("{class} b{bucket}"),
+                        ts,
+                        st.t_us - ts,
+                        (*rank + 1) as u64,
+                    ));
+                }
+            }
+            Event::LossReported { rank, loss, .. } if *rank < 0 => {
+                out.push(Json::obj(vec![
+                    ("name", Json::str("loss")),
+                    ("ph", Json::str("C")),
+                    ("ts", Json::num(st.t_us)),
+                    ("pid", Json::num(0.0)),
+                    ("args", Json::obj(vec![
+                        ("loss", Json::num(*loss)),
+                    ])),
+                ]));
+            }
+            _ => {}
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<Stamped> {
+        let evs = vec![
+            Event::StepBegin { step: 1, n_micro: 2, workers: 2 },
+            Event::BucketReady { step: 1, bucket: 0, spans: 3,
+                                 elems: 256 },
+            Event::CollectiveLaunched {
+                step: 1, rank: 0, bucket: 0, class: "grad_scatter",
+                bytes: 1024,
+            },
+            Event::Message { rank: 0, class: "grad_scatter",
+                             bytes: 512 },
+            Event::CollectiveLanded {
+                step: 1, rank: 0, bucket: 0, class: "grad_scatter",
+                bytes: 1024, ns: 5_000.0,
+            },
+            Event::ShardStepped { step: 1, rank: 0, bucket: 0,
+                                  lo: 0, hi: 64 },
+            Event::LossReported { step: 1, rank: -1, loss: 1.25,
+                                  lr: 1e-3 },
+            Event::CheckpointSaved { step: 1, path: "x/ck".into() },
+            Event::ArtifactLoaded { name: "bigram/fwd".into(),
+                                    ms: 3.5 },
+        ];
+        evs.into_iter()
+            .enumerate()
+            .map(|(i, event)| Stamped {
+                seq: i as u64,
+                t_us: i as f64 * 10.0,
+                event,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        for st in sample_events() {
+            let line = encode_line(&st);
+            let back = decode_line(&line).unwrap().unwrap();
+            assert_eq!(back, st, "roundtrip failed for {line}");
+        }
+    }
+
+    #[test]
+    fn write_read_validate() {
+        let dir = std::env::temp_dir().join("adam_mini_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let mut w = TraceWriter::create(&path).unwrap();
+        let evs = sample_events();
+        for st in &evs {
+            w.write(st).unwrap();
+        }
+        w.finish(evs.len() as u64, 0).unwrap();
+        let (read, dropped) = read_trace(&path).unwrap();
+        assert_eq!(read, evs);
+        assert_eq!(dropped, 0);
+        let (n, gaps, d) = validate(&path).unwrap();
+        assert_eq!((n, gaps, d), (evs.len(), 0, 0));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn validate_rejects_unreported_gaps() {
+        let dir = std::env::temp_dir().join("adam_mini_trace_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gap.jsonl");
+        let mut w = TraceWriter::create(&path).unwrap();
+        let mut evs = sample_events();
+        evs.remove(3); // unreported gap in seq
+        for st in &evs {
+            w.write(st).unwrap();
+        }
+        w.finish(9, 0).unwrap();
+        assert!(validate(&path).is_err());
+        // The same gap with a matching drop count is fine.
+        let path2 = dir.join("gap_ok.jsonl");
+        let mut w = TraceWriter::create(&path2).unwrap();
+        for st in &evs {
+            w.write(st).unwrap();
+        }
+        w.finish(9, 1).unwrap();
+        assert!(validate(&path2).is_ok());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn chrome_export_pairs_spans() {
+        let j = chrome_trace(&sample_events());
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // One collective span + one loss counter (no StepEnd in the
+        // sample, so no step span).
+        let spans: Vec<_> = evs
+            .iter()
+            .filter(|e| {
+                e.get("ph").unwrap().as_str().unwrap() == "X"
+            })
+            .collect();
+        assert_eq!(spans.len(), 1);
+        let s = spans[0];
+        assert_eq!(s.get("name").unwrap().as_str().unwrap(),
+                   "grad_scatter b0");
+        assert_eq!(s.get("tid").unwrap().as_usize().unwrap(), 1);
+        assert!(s.get("dur").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

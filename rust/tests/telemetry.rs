@@ -1,0 +1,300 @@
+//! Integration tests for the telemetry subsystem against the real
+//! dist engine (artifact-free).
+//!
+//! The contract under test, end to end: attaching an [`EventBus`]
+//! never changes training math (N-vs-1 bit-exactness holds in all
+//! four overlap × zero2 combinations), event-derived byte totals
+//! match the transport ledger to the byte, per-bucket events respect
+//! causal order (BucketReady ≤ CollectiveLaunched ≤ CollectiveLanded
+//! ≤ ShardStepped ≤ param-gather), a tiny bus reports drops without
+//! deadlocking or perturbing the run, and a recorded trace survives
+//! the validate → Chrome-export → `repro top` render pipeline.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use adam_mini::dist::{record_probe_trace, DistOptions, DistTrainer,
+                      TrafficClass};
+use adam_mini::optim::{by_name, Hyper, ModelMeta, ReduceOp};
+use adam_mini::partition::{BlockView, Strategy};
+use adam_mini::telemetry::{top, trace, Event, EventBus,
+                           MetricsRegistry};
+use adam_mini::tensor::Tensor;
+use adam_mini::util::prng::Rng;
+
+const D: usize = 32;
+
+fn toy_params(seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    vec![Tensor::randn("embed", &[D, D], 0.1, &mut rng)]
+}
+
+fn toy_meta() -> ModelMeta {
+    ModelMeta { n_heads: 1, stacked: vec![] }
+}
+
+fn toy_spec(params: &[Tensor]) -> Vec<BlockView> {
+    toy_meta().spec_for(params, Strategy::Hessian).unwrap()
+}
+
+fn toy_options(optimizer: &str, workers: usize, zero2: bool,
+               spec: Option<Vec<BlockView>>) -> DistOptions {
+    DistOptions {
+        workers,
+        bucket_kb: 1,
+        zero1: true,
+        zero2,
+        bucket_step: true,
+        optimizer: optimizer.into(),
+        reduce: ReduceOp::Mean,
+        spec,
+        ..Default::default()
+    }
+}
+
+/// One deterministic synthetic gradient per step — the SAME stream
+/// for every run shape, so parameter trajectories are comparable
+/// bit-for-bit.
+fn grad_stream(steps: usize) -> Vec<Tensor> {
+    let mut rng = Rng::new(0x9E17);
+    (0..steps)
+        .map(|_| Tensor::randn("embed", &[D, D], 0.02, &mut rng))
+        .collect()
+}
+
+/// Reference: single-replica host optimizer on the shared stream.
+fn run_host(optimizer: &str, steps: usize) -> Vec<Tensor> {
+    let mut params = toy_params(1);
+    let mut opt = by_name(optimizer, Hyper::default(), &params,
+                          &toy_meta()).unwrap();
+    for g in grad_stream(steps) {
+        opt.step(&mut params, std::slice::from_ref(&g), 2e-2);
+    }
+    params
+}
+
+/// N-worker run on the shared stream (one micro-batch per step, so
+/// ranks 1.. are idle — the bit-exactness configuration), optionally
+/// with a bus attached.
+fn run_dist(optimizer: &str, workers: usize, zero2: bool,
+            overlap: bool, steps: usize, bus: Option<Arc<EventBus>>)
+    -> Vec<Tensor> {
+    let mut params = toy_params(1);
+    let spec = if optimizer.starts_with("adam_mini") {
+        Some(toy_spec(&params))
+    } else {
+        None
+    };
+    let mut dist = DistTrainer::new(
+        &params, toy_options(optimizer, workers, zero2, spec))
+        .unwrap();
+    if let Some(b) = bus {
+        dist.attach_bus(b);
+    }
+    for g in grad_stream(steps) {
+        if overlap {
+            let mut stream = dist.begin_step(1, 2e-2);
+            stream.push_grad(0, 0, &g).unwrap();
+            stream.finish(&mut params).unwrap();
+        } else {
+            let mut local = dist.grad_buffers();
+            dist.layout()
+                .accumulate(&mut local[0], std::slice::from_ref(&g));
+            dist.step(&mut params, local, 1, 2e-2).unwrap();
+        }
+    }
+    params
+}
+
+#[test]
+fn events_are_causally_ordered_per_bucket() {
+    // workers=4, overlap, ZeRO-2, bucket-granular stepping, 1 KB
+    // buckets: the busiest schedule the engine has. Every bucket's
+    // event chain must respect causal order by bus sequence number.
+    let bus = EventBus::new(1 << 16);
+    run_dist("adamw", 4, true, true, 3, Some(Arc::clone(&bus)));
+    let events = bus.drain();
+    assert_eq!(bus.dropped(), 0);
+    for w in events.windows(2) {
+        assert!(w[0].seq < w[1].seq, "seq must be strictly increasing");
+    }
+    #[derive(Default, Clone, Copy)]
+    struct Marks {
+        scatter_launch: Option<u64>,
+        scatter_land: Option<u64>,
+        stepped: Option<u64>,
+        gather_launch: Option<u64>,
+        gather_land: Option<u64>,
+    }
+    let mut ready: HashMap<(u64, i64), u64> = HashMap::new();
+    let mut marks: HashMap<(u64, usize, i64), Marks> = HashMap::new();
+    for st in &events {
+        match &st.event {
+            Event::BucketReady { step, bucket, .. } => {
+                ready.insert((*step, *bucket as i64), st.seq);
+            }
+            Event::CollectiveLaunched {
+                step, rank, bucket, class, ..
+            } => {
+                let m = marks
+                    .entry((*step, *rank, *bucket as i64))
+                    .or_default();
+                match *class {
+                    "grad_scatter" => m.scatter_launch = Some(st.seq),
+                    "param_gather" => m.gather_launch = Some(st.seq),
+                    _ => {}
+                }
+            }
+            Event::CollectiveLanded {
+                step, rank, bucket, class, ..
+            } => {
+                let m = marks
+                    .entry((*step, *rank, *bucket as i64))
+                    .or_default();
+                match *class {
+                    "grad_scatter" => m.scatter_land = Some(st.seq),
+                    "param_gather" => m.gather_land = Some(st.seq),
+                    _ => {}
+                }
+            }
+            Event::ShardStepped { step, rank, bucket, .. }
+                if *bucket >= 0 =>
+            {
+                marks
+                    .entry((*step, *rank, *bucket))
+                    .or_default()
+                    .stepped = Some(st.seq);
+            }
+            _ => {}
+        }
+    }
+    let mut full_chains = 0;
+    for ((step, rank, bucket), m) in &marks {
+        let key = format!("step {step} rank {rank} bucket {bucket}");
+        let r = ready.get(&(*step, *bucket)).copied();
+        if let (Some(r), Some(sl), Some(sd)) =
+            (r, m.scatter_launch, m.scatter_land)
+        {
+            assert!(r <= sl, "{key}: ready {r} > launch {sl}");
+            assert!(sl < sd, "{key}: launch {sl} >= land {sd}");
+            if let Some(stp) = m.stepped {
+                assert!(sd < stp, "{key}: land {sd} >= stepped {stp}");
+                if let (Some(gl), Some(gd)) =
+                    (m.gather_launch, m.gather_land)
+                {
+                    assert!(stp < gl,
+                            "{key}: stepped {stp} >= gather {gl}");
+                    assert!(gl < gd, "{key}: gather launch >= land");
+                    full_chains += 1;
+                }
+            }
+        }
+    }
+    assert!(full_chains > 0,
+            "no full ready->scatter->step->gather chains observed");
+}
+
+#[test]
+fn event_bytes_match_ledger_exactly() {
+    // Fold Message events into the registry; per-class totals must
+    // equal the transport ledger to the byte — including the
+    // state_sync gather.
+    let bus = EventBus::new(1 << 16);
+    let mut params = toy_params(1);
+    let spec = Some(toy_spec(&params));
+    let mut dist = DistTrainer::new(
+        &params, toy_options("adam_mini", 3, true, spec)).unwrap();
+    dist.attach_bus(Arc::clone(&bus));
+    for g in grad_stream(4) {
+        let mut stream = dist.begin_step(1, 2e-2);
+        stream.push_grad(0, 0, &g).unwrap();
+        stream.finish(&mut params).unwrap();
+    }
+    dist.sync_state().unwrap();
+    assert_eq!(bus.dropped(), 0);
+    let mut m = MetricsRegistry::new();
+    for st in bus.drain() {
+        m.observe(&st);
+    }
+    for c in TrafficClass::ALL {
+        let from_events: u64 = m
+            .workers
+            .values()
+            .map(|w| w.bytes.get(c.name()).copied().unwrap_or(0))
+            .sum();
+        assert_eq!(from_events, dist.stats().bytes(c),
+                   "class {}", c.name());
+        assert!(from_events > 0, "class {} saw no traffic", c.name());
+    }
+}
+
+#[test]
+fn bus_attachment_never_changes_the_math() {
+    // The acceptance gate: with a bus attached, every (overlap x
+    // zero2) combination stays bit-identical to the host run.
+    for optimizer in ["adamw", "adam_mini"] {
+        let reference = run_host(optimizer, 25);
+        for zero2 in [false, true] {
+            for overlap in [false, true] {
+                let bus = EventBus::new(1 << 16);
+                let got = run_dist(optimizer, 4, zero2, overlap, 25,
+                                   Some(Arc::clone(&bus)));
+                assert!(bus.published() > 0);
+                assert_eq!(got, reference,
+                           "{optimizer} zero2={zero2} \
+                            overlap={overlap}");
+            }
+        }
+    }
+}
+
+#[test]
+fn tiny_bus_drops_without_deadlock_or_perturbation() {
+    // Capacity 8 against a schedule that emits hundreds of events:
+    // the run must complete (publish never blocks), report drops,
+    // keep seq gaps bounded by the drop count, and leave parameters
+    // bit-identical to the bus-free run.
+    let clean = run_dist("adamw", 4, true, true, 10, None);
+    let bus = EventBus::new(8);
+    let noisy =
+        run_dist("adamw", 4, true, true, 10, Some(Arc::clone(&bus)));
+    assert_eq!(noisy, clean, "tiny bus perturbed the math");
+    let drained = bus.drain();
+    assert!(drained.len() <= 8);
+    assert!(bus.dropped() > 0, "capacity-8 bus should have dropped");
+    let mut gaps = drained.first().map(|s| s.seq).unwrap_or(0);
+    for w in drained.windows(2) {
+        gaps += w[1].seq - w[0].seq - 1;
+    }
+    assert!(gaps <= bus.dropped(),
+            "{gaps} seq gaps > {} reported drops", bus.dropped());
+}
+
+#[test]
+fn probe_trace_records_validates_and_renders() {
+    // The CI smoke path as a test: record an artifact-free probe
+    // trace, validate its schema (gap-free), export Chrome spans,
+    // and render a `repro top` frame from it without a TTY.
+    let dir = std::env::temp_dir().join("amck_telemetry");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("probe.jsonl");
+    let (published, dropped) =
+        record_probe_trace(&path, 2, 2, true).unwrap();
+    assert!(published > 0);
+    assert_eq!(dropped, 0);
+    let (n, gaps, drops) = trace::validate(&path).unwrap();
+    assert_eq!(n as u64, published);
+    assert_eq!((gaps, drops), (0, 0));
+    let (events, _) = trace::read_trace(&path).unwrap();
+    assert_eq!(events.len() as u64, published);
+    let text = trace::chrome_trace(&events).to_string();
+    assert!(text.contains("traceEvents"));
+    assert!(text.contains("\"ph\":\"X\""), "no complete spans: {text}");
+    let m = top::registry_from_trace(&path).unwrap();
+    let frame = top::render_frame(&m);
+    assert!(frame.contains("repro top"));
+    assert!(frame.contains("w0"), "worker rows missing:\n{frame}");
+    assert!(frame.contains("w1"), "worker rows missing:\n{frame}");
+    assert!(!frame.contains('\x1b'), "frame must be ANSI-free");
+    std::fs::remove_dir_all(dir).ok();
+}
