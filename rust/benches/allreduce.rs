@@ -148,6 +148,7 @@ fn main() {
     std::fs::create_dir_all("results").expect("mkdir results");
     let out = Json::obj(vec![
         ("bench", Json::str("dist_allreduce")),
+        ("provenance", Json::str("measured")),
         ("records", Json::Arr(bucket_records)),
     ]);
     std::fs::write("results/BENCH_dist.json", out.to_string())
@@ -155,6 +156,7 @@ fn main() {
     println!("wrote results/BENCH_dist.json");
     let out = Json::obj(vec![
         ("bench", Json::str("dist_overlap")),
+        ("provenance", Json::str("measured")),
         ("records", Json::Arr(step_records)),
     ]);
     std::fs::write("results/BENCH_overlap.json", out.to_string())

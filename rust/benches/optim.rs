@@ -1,49 +1,35 @@
-//! Bench: step throughput of the block-granular optimizer API —
-//! roster × (whole-model `step` vs partitioned `step_segment`) on the
-//! ~1.6M-param probe inventory.
+//! Bench: optimizer step throughput across the roster, three ways —
+//! the §3.4 "throughput comparison" microbench on the ~1.6M-param
+//! probe inventory.
 //!
-//! The whole/segment delta isolates the cost of segment dispatch
-//! (binary searches, span lookups, per-segment loop setup) that the
-//! ZeRO-2 bucket-granular pipeline pays per bucket — it should stay in
-//! the noise next to the update arithmetic. Emits
-//! `results/BENCH_optim.json` to seed the optimizer-step perf
-//! trajectory across PRs.
+//! - `scalar`: the pre-kernel pipeline, faithfully emulated — a
+//!   separate gradient scale pass, then flatten → whole-arena
+//!   `step_segment` → unflatten, with the optimizer built under
+//!   `simd=off` (the scalar parity oracle).
+//! - `simd`: the identical pipeline with the optimizer built under
+//!   `simd=on` — isolates the vector-kernel win alone.
+//! - `fused`: `step_scaled` — the gradient scale folds into the
+//!   update sweep and parameters step in place, span by span. No
+//!   scale pass, no flatten/unflatten temporaries. This is the path
+//!   the trainer and the ZeRO shard step actually run.
+//!
+//! Emits `results/BENCH_optim.json` (provenance `"measured"`) for the
+//! `repro report --bench-history --gate` regression check.
 
 use std::sync::Arc;
 
 use adam_mini::dist::{probe_meta, probe_params};
-use adam_mini::optim::{self, GradView, Hyper, Optimizer, ParamView};
+use adam_mini::optim::{self, kernels, GradView, Hyper, Optimizer,
+                       ParamView, SimdPolicy};
 use adam_mini::tensor::Tensor;
 use adam_mini::util::json::Json;
 use adam_mini::util::prng::Rng;
 use adam_mini::util::timer::Bench;
 
-/// Split `[0, total)` into ~`want` pieces honoring the cut grid
-/// (`None` = any boundary), mimicking a bucket plan.
-fn segments(cuts: Option<Vec<usize>>, total: usize, want: usize)
-    -> Vec<(usize, usize)> {
-    let mut bounds = vec![0usize];
-    match cuts {
-        None => {
-            for k in 1..want {
-                bounds.push(k * total / want);
-            }
-        }
-        Some(cs) => {
-            for k in 1..want {
-                let target = k * total / want;
-                let idx = cs.partition_point(|&c| c < target);
-                let pick = cs.get(idx).copied().unwrap_or(total);
-                if pick > *bounds.last().unwrap() && pick < total {
-                    bounds.push(pick);
-                }
-            }
-        }
-    }
-    bounds.push(total);
-    bounds.dedup();
-    bounds.windows(2).map(|w| (w[0], w[1])).collect()
-}
+/// A scale factor close enough to 1 that repeated in-place application
+/// cannot drift the payload, but not exactly 1.0 — the compiler must
+/// not be able to fold the multiply away.
+const GSCALE: f32 = 0.999_999_9;
 
 fn main() {
     let (params, n) = probe_params(0xB0B);
@@ -53,66 +39,78 @@ fn main() {
         .iter()
         .map(|p| Tensor::randn(&*p.name, &p.shape, 0.01, &mut rng))
         .collect();
-    println!("optimizer step bench: {n} params, whole vs segmented\n");
+    println!("optimizer step bench: {n} params, \
+              scalar vs simd vs fused\n");
 
     let bench = Bench::quick();
     let mut records = Vec::new();
     for name in optim::ROSTER {
-        // Whole-model tensor-list step (the classic path).
-        let mut p_whole = params.clone();
-        let mut opt =
-            optim::by_name(name, Hyper::default(), &p_whole, &meta)
-                .unwrap();
-        let r_whole = bench.run(&format!("optstep/{name}/whole"), || {
-            opt.step(&mut p_whole, &grads, 1e-4);
-        });
-
-        // Segment-partitioned step over flat views (the dist path).
-        let mut opt_seg =
-            optim::by_name(name, Hyper::default(), &params, &meta)
-                .unwrap();
-        let arena = Arc::clone(opt_seg.arena());
-        let mut flat = arena.flatten(&params);
-        let gflat = arena.flatten(&grads);
-        let segs = segments(opt_seg.segment_cuts(), arena.total, 16);
-        let n_segs = segs.len();
-        let r_seg = bench.run(&format!("optstep/{name}/segmented"),
-                              || {
-            opt_seg.begin_step();
-            for &(lo, hi) in &segs {
-                opt_seg.step_segment(
-                    ParamView::new(lo, &mut flat[lo..hi]),
-                    GradView::new(lo, &gflat[lo..hi]), 1e-4);
-            }
-        });
-
-        let overhead =
-            (r_seg.mean_ns - r_whole.mean_ns) / r_whole.mean_ns;
-        println!(
-            "  -> {name}: whole {:.2} ns/param, segmented ({n_segs} \
-             segs) {:.2} ns/param ({:+.1}% vs whole), state {:.1} KB\n",
-            r_whole.mean_ns / n as f64, r_seg.mean_ns / n as f64,
-            overhead * 100.0, opt.state_bytes() as f64 / 1e3);
-        for (mode, r) in [("whole", &r_whole), ("segmented", &r_seg)] {
+        let mut mean = [0.0f64; 3];
+        for (mi, mode) in ["scalar", "simd", "fused"]
+            .iter()
+            .enumerate()
+        {
+            // Dispatch is cached at construction from the thread-local
+            // policy, so set it before building each optimizer.
+            kernels::set_policy(if *mode == "scalar" {
+                SimdPolicy::Off
+            } else {
+                SimdPolicy::On
+            });
+            let mut p = params.clone();
+            let mut opt =
+                optim::by_name(name, Hyper::default(), &p, &meta)
+                    .unwrap();
+            let rec_name = format!("optstep/{name}/{mode}");
+            let r = if *mode == "fused" {
+                bench.run(&rec_name, || {
+                    opt.step_scaled(&mut p, &grads, 1e-4, GSCALE);
+                })
+            } else {
+                // The pre-kernel pipeline: scale pass + flatten +
+                // whole-arena segment step + unflatten.
+                let arena = Arc::clone(opt.arena());
+                let mut gflat = arena.flatten(&grads);
+                bench.run(&rec_name, || {
+                    for x in gflat.iter_mut() {
+                        *x *= GSCALE;
+                    }
+                    let mut flat = arena.flatten(&p);
+                    opt.begin_step();
+                    let total = arena.total;
+                    opt.step_segment(
+                        ParamView::new(0, &mut flat[..total]),
+                        GradView::new(0, &gflat[..total]), 1e-4);
+                    arena.unflatten(&flat, &mut p);
+                })
+            };
+            mean[mi] = r.mean_ns;
             records.push(Json::obj(vec![
                 ("name", Json::str(&r.name)),
                 ("optimizer", Json::str(*name)),
                 ("mode", Json::str(mode)),
-                ("segments", Json::num(if mode == "whole" { 1.0 }
-                                       else { n_segs as f64 })),
                 ("payload_elems", Json::num(n as f64)),
                 ("iters", Json::num(r.iters as f64)),
                 ("mean_ns", Json::num(r.mean_ns)),
                 ("p50_ns", Json::num(r.p50_ns)),
                 ("p95_ns", Json::num(r.p95_ns)),
                 ("ns_per_param", Json::num(r.mean_ns / n as f64)),
+                ("elems_per_sec",
+                 Json::num(n as f64 / (r.mean_ns / 1e9))),
             ]));
         }
+        println!(
+            "  -> {name}: scalar {:.2} ns/param, simd {:.2} \
+             ({:.2}x), fused {:.2} ({:.2}x vs scalar)\n",
+            mean[0] / n as f64, mean[1] / n as f64, mean[0] / mean[1],
+            mean[2] / n as f64, mean[0] / mean[2]);
     }
+    kernels::set_policy(SimdPolicy::Auto);
 
     std::fs::create_dir_all("results").expect("mkdir results");
     let out = Json::obj(vec![
         ("bench", Json::str("optim_step")),
+        ("provenance", Json::str("measured")),
         ("records", Json::Arr(records)),
     ]);
     std::fs::write("results/BENCH_optim.json", out.to_string())

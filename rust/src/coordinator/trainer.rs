@@ -188,11 +188,19 @@ impl<'e> Trainer<'e> {
             ..engine.manifest.hyper()
         };
 
-        let mode = if cfg.fused {
-            if cfg.workers > 1 {
-                bail!("the fused artifact path is single-worker; drop \
-                       fused=true or workers={}", cfg.workers);
-            }
+        // Resolve the kernel dispatch policy BEFORE any optimizer is
+        // constructed: every optimizer caches its scalar/vector
+        // dispatch from the thread-local policy at build time.
+        optim::kernels::set_policy(
+            optim::kernels::SimdPolicy::parse(&cfg.simd)?);
+        if cfg.clip > 0.0 && (cfg.workers > 1 || cfg.fused) {
+            bail!("clip={} needs the host optimizer path: the global \
+                   grad-norm pass folds into the in-process fused \
+                   kernels only (run workers=1 without fused=true)",
+                  cfg.clip);
+        }
+
+        let mode = if cfg.fused && cfg.workers <= 1 {
             let key = match cfg.optimizer.as_str() {
                 "adamw" => "train_adamw",
                 "adam_mini" => "train_adam_mini",
@@ -201,6 +209,16 @@ impl<'e> Trainer<'e> {
             };
             TrainerMode::Fused(rt.fused(key)?)
         } else if cfg.workers > 1 {
+            if cfg.fused {
+                // The XLA train_* artifact path is single-worker; a
+                // multi-worker fused run steps its shards through the
+                // in-process fused SIMD kernels instead of erroring.
+                println!(
+                    "fused=true with workers={}: the XLA train_* \
+                     artifact path is single-worker, so this run uses \
+                     the in-process fused SIMD step kernels (run \
+                     workers=1 to use the artifact)", cfg.workers);
+            }
             // ZeRO-2 implies state sharding; both degrade to
             // replicated mode for non-shardable optimizers.
             let can_shard = dist::shardable(&cfg.optimizer);
@@ -221,6 +239,11 @@ impl<'e> Trainer<'e> {
                 reduce: parse_reduce(&cfg.reduce_op)?,
                 hp,
                 spec,
+                compute: dist::ComputeModel {
+                    step_ns_per_elem:
+                        optim::kernels::measured_step_ns_per_elem(),
+                    ..Default::default()
+                },
                 ..Default::default()
             })?;
             let replicated = if sharded {
@@ -311,7 +334,11 @@ impl<'e> Trainer<'e> {
                 fused.step_device(&self.params, &batch, lr)?
             }
             TrainerMode::Host(opt) => {
-                // Gradient accumulation: average grads over micro-steps.
+                // Gradient accumulation: micro-batch grads sum in
+                // place. The 1/accum average and the global-norm clip
+                // factor fold into the fused update sweep as a single
+                // per-element gradient scale — no separate normalize
+                // or clip pass ever writes the gradient buffers.
                 let accum = self.cfg.grad_accum.max(1);
                 let mut total_loss = 0.0;
                 let mut grads: Option<Vec<Tensor>> = None;
@@ -329,16 +356,11 @@ impl<'e> Trainer<'e> {
                         }
                     });
                 }
-                let mut grads = grads.unwrap();
-                if accum > 1 {
-                    let inv = 1.0 / accum as f32;
-                    for g in grads.iter_mut() {
-                        for x in g.data.iter_mut() {
-                            *x *= inv;
-                        }
-                    }
-                }
-                opt.step(&mut self.params, &grads, lr);
+                let grads = grads.unwrap();
+                let inv = 1.0 / accum as f32;
+                let gscale =
+                    inv * clip_scale(&grads, inv, self.cfg.clip as f32);
+                opt.step_scaled(&mut self.params, &grads, lr, gscale);
                 total_loss / accum as f32
             }
             TrainerMode::Dist { dist, replicated } => {
@@ -562,6 +584,19 @@ impl<'e> Trainer<'e> {
         }
         Ok(())
     }
+}
+
+/// Global-norm clip factor `min(1, clip / ‖ḡ‖)` for a SUMMED gradient
+/// whose averaged form is `inv ×` the sum. The norm costs one
+/// read-only reduction; the factor itself applies inside the fused
+/// update sweep, so clipping adds no gradient-write pass.
+fn clip_scale(grads: &[Tensor], inv: f32, clip: f32) -> f32 {
+    if clip <= 0.0 {
+        return 1.0;
+    }
+    let sq: f64 = grads.iter().map(|g| g.sq_norm()).sum();
+    let norm = sq.sqrt() as f32 * inv;
+    if norm > clip { clip / norm } else { 1.0 }
 }
 
 fn make_corpus(rt: &ModelRuntime, cfg: &TrainConfig) -> Result<Corpus> {

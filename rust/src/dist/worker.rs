@@ -15,9 +15,10 @@
 //!    bucket's collective launches the moment its last tensor arrives)
 //!    executes one of three schedules:
 //!    - **ZeRO-1**: bucketed ring all-reduce, step this worker's shard
-//!      over its contiguous range (`Optimizer::step_segment` on the
-//!      flat buffers — no tensor-list clone round-trips), ring
-//!      all-gather the updated parameters;
+//!      over its contiguous range (`Optimizer::step_segment_scaled` on
+//!      the flat buffers — no tensor-list clone round-trips, and the
+//!      1/n_micro average folds into the fused update sweep instead of
+//!      a separate scale pass), ring all-gather the updated parameters;
 //!    - **ZeRO-2**: bucketed ring **reduce-scatter** (each worker only
 //!      ever holds its gradient shard reduced — `(N−1)·P` bytes
 //!      instead of the all-reduce's `2(N−1)·P`), step the shard,
@@ -158,17 +159,20 @@ struct WorkerSlot {
 
 /// Step this worker's whole shard against `reduced` (only the shard's
 /// own range is read) through the segment API — no shard-clone
-/// round-trip — then all-gather the updated parameters.
+/// round-trip — then all-gather the updated parameters. `reduced`
+/// holds the UNNORMALIZED gradient sum; the `gscale` factor (the
+/// 1/n_micro average) folds into the fused update sweep instead of a
+/// separate scale pass over the buffer.
 fn step_shard_and_gather(slot: &mut WorkerSlot,
                          ranges: &[(usize, usize)], reduced: &[f32],
-                         lr: f32, step: u64) {
+                         lr: f32, gscale: f32, step: u64) {
     let (a, b) = slot.shard_range;
     if let Some(opt) = &mut slot.opt {
         opt.begin_step();
         if b > a {
-            opt.step_segment(
+            opt.step_segment_scaled(
                 ParamView::new(0, &mut slot.flat_params[a..b]),
-                GradView::new(0, &reduced[a..b]), lr);
+                GradView::new(0, &reduced[a..b]), lr, gscale);
         }
     }
     // bucket == -1: the whole-shard (deferred) optimizer step.
@@ -414,28 +418,23 @@ impl DistTrainer {
                                 }
                             }
                             StepMode::Zero1 => {
+                                // The 1/n_micro average folds into the
+                                // fused shard step (no scale pass).
                                 ring_all_reduce(
                                     &slot.node, grad, bucket,
                                     TrafficClass::GradReduce);
-                                for x in grad.iter_mut() {
-                                    *x *= inv;
-                                }
                                 step_shard_and_gather(
-                                    slot, ranges, grad, lr, step);
+                                    slot, ranges, grad, lr, inv, step);
                             }
                             StepMode::Zero2 => {
+                                // Only this worker's shard of the
+                                // gradient is complete; the average
+                                // folds into the fused shard step.
                                 ring_reduce_scatter_bucketed(
                                     &slot.node, ranges, grad, bucket,
                                     TrafficClass::GradScatter);
-                                // Only this worker's shard of the
-                                // gradient is complete — scale and
-                                // step just that.
-                                let (a, b) = ranges[slot.node.rank];
-                                for x in grad[a..b].iter_mut() {
-                                    *x *= inv;
-                                }
                                 step_shard_and_gather(
-                                    slot, ranges, grad, lr, step);
+                                    slot, ranges, grad, lr, inv, step);
                             }
                         }
                     })
@@ -665,8 +664,15 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
                     bytes: bucket_bytes,
                     ns: t.elapsed().as_secs_f64() * 1e9,
                 });
-                for x in job.data.iter_mut() {
-                    *x *= inv;
+                if mode == StepMode::Replicated {
+                    // The caller receives the reduced gradient and
+                    // runs the replicated update itself — hand back
+                    // the AVERAGED form. ZeRO-1 instead keeps the raw
+                    // sum and folds 1/n_micro into the deferred fused
+                    // shard step.
+                    for x in job.data.iter_mut() {
+                        *x *= inv;
+                    }
                 }
                 reduced[job.lo..job.hi].copy_from_slice(&job.data);
             }
@@ -687,23 +693,22 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
                     ns: t.elapsed().as_secs_f64() * 1e9,
                 });
                 let (a, b) = clipped[rank];
-                for x in job.data[a..b].iter_mut() {
-                    *x *= inv;
-                }
                 if bucket_step {
                     // Step the shard∩bucket segment NOW (shard-local
-                    // coordinates), then gather this bucket's params.
+                    // coordinates) with the 1/n_micro average folded
+                    // into the fused sweep, then gather this bucket's
+                    // params.
                     let shard_lo = slot.shard_range.0;
                     if b > a {
                         let (glo, ghi) = (job.lo + a, job.lo + b);
                         if let Some(opt) = &mut slot.opt {
-                            opt.step_segment(
+                            opt.step_segment_scaled(
                                 ParamView::new(
                                     glo - shard_lo,
                                     &mut slot.flat_params[glo..ghi]),
                                 GradView::new(glo - shard_lo,
                                               &job.data[a..b]),
-                                lr);
+                                lr, inv);
                         }
                         pub_ev(&bus, Event::ShardStepped {
                             step, rank, bucket: job.idx as i64,
@@ -745,7 +750,7 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
         }
         StepMode::Zero1 | StepMode::Zero2 => {
             step_shard_and_gather(&mut slot, &ranges, &reduced, lr,
-                                  step);
+                                  inv, step);
             (slot, None)
         }
     }

@@ -6,8 +6,16 @@
 //! The baselines are a perf trajectory anchor: CI uploads each run's
 //! fresh JSONs as artifacts, and this table makes a regression
 //! visible as a `+NN%` delta without any external dashboard.
+//!
+//! Every bench JSON carries a `provenance` field: `"measured"` means a
+//! bench binary timed it on real hardware, `"seeded"` means it was
+//! hand-planted to bootstrap the trajectory. `--gate` turns the diff
+//! into a CI check — any record more than [`GATE_THRESHOLD`] slower
+//! than a MEASURED baseline fails the run. Seeded baselines never
+//! gate: failing CI over a made-up number would teach everyone to
+//! ignore the gate.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::util::csv::ascii_table;
 use crate::util::json::Json;
@@ -17,20 +25,41 @@ use super::RESULTS_DIR;
 const BENCHES: [&str; 3] =
     ["BENCH_dist.json", "BENCH_overlap.json", "BENCH_optim.json"];
 
-/// `(name, mean_ns)` per record, or `None` if the file is absent.
-fn load_records(path: &str) -> Result<Option<Vec<(String, f64)>>> {
+/// Relative slowdown vs a measured baseline that fails `--gate`.
+pub const GATE_THRESHOLD: f64 = 0.15;
+
+/// One loaded bench JSON: where its numbers came from + the records.
+struct BenchFile {
+    provenance: String,
+    records: Vec<(String, f64)>,
+}
+
+impl BenchFile {
+    fn measured(&self) -> bool {
+        self.provenance == "measured"
+    }
+}
+
+/// Parse a bench JSON, or `None` if the file is absent. A missing
+/// `provenance` key reads as `"seeded"` (pre-provenance files were
+/// all hand-planted).
+fn load_records(path: &str) -> Result<Option<BenchFile>> {
     if !std::path::Path::new(path).exists() {
         return Ok(None);
     }
     let j = Json::parse(&std::fs::read_to_string(path)?)?;
-    let mut out = Vec::new();
+    let provenance = j
+        .get("provenance")
+        .and_then(|p| Ok(p.as_str()?.to_string()))
+        .unwrap_or_else(|_| "seeded".to_string());
+    let mut records = Vec::new();
     for r in j.get("records")?.as_arr()? {
-        out.push((
+        records.push((
             r.get("name")?.as_str()?.to_string(),
             r.get("mean_ns")?.as_f64()?,
         ));
     }
-    Ok(Some(out))
+    Ok(Some(BenchFile { provenance, records }))
 }
 
 /// Rows for one bench file's diff (exposed for the unit test).
@@ -61,12 +90,33 @@ fn diff_rows(cur: &[(String, f64)], base: &[(String, f64)])
     rows
 }
 
-/// Print the three bench diffs (graceful when either side is missing:
-/// a fresh checkout has baselines but no current run yet).
-pub fn report() -> Result<()> {
+/// Records slower than `threshold` vs the baseline: `(name, frac)`.
+/// New/gone records never regress (there is nothing to compare).
+fn regressions(cur: &[(String, f64)], base: &[(String, f64)],
+               threshold: f64) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for (name, cur_ns) in cur {
+        if let Some((_, base_ns)) =
+            base.iter().find(|(n, _)| n == name)
+        {
+            let frac = (cur_ns - base_ns) / base_ns;
+            if frac > threshold {
+                out.push((name.clone(), frac));
+            }
+        }
+    }
+    out
+}
+
+/// Print the bench diffs (graceful when either side is missing: a
+/// fresh checkout has baselines but no current run yet). With
+/// `gate=true`, error out when any record regresses more than
+/// [`GATE_THRESHOLD`] against a MEASURED baseline.
+pub fn report(gate: bool) -> Result<()> {
     println!("Bench history: latest {RESULTS_DIR}/BENCH_*.json vs \
               committed {RESULTS_DIR}/baseline/ (mean_ns)");
     let mut rows = Vec::new();
+    let mut failures = Vec::new();
     for file in BENCHES {
         let cur = load_records(&format!("{RESULTS_DIR}/{file}"))?;
         let base =
@@ -76,7 +126,20 @@ pub fn report() -> Result<()> {
                 "  {file}: no current run (cargo bench writes it)"),
             (_, None) => println!("  {file}: no committed baseline"),
             (Some(cur), Some(base)) => {
-                rows.extend(diff_rows(&cur, &base));
+                println!("  {file}: baseline provenance = {}{}",
+                         base.provenance,
+                         if base.measured() { " (gating)" }
+                         else { " (informational only)" });
+                rows.extend(diff_rows(&cur.records, &base.records));
+                if gate && base.measured() {
+                    for (name, frac) in regressions(
+                        &cur.records, &base.records, GATE_THRESHOLD)
+                    {
+                        failures.push(format!(
+                            "{name}: {:+.1}% vs measured baseline",
+                            100.0 * frac));
+                    }
+                }
             }
         }
     }
@@ -85,6 +148,15 @@ pub fn report() -> Result<()> {
     } else {
         println!("{}", ascii_table(
             &["Record", "Baseline ns", "Latest ns", "Delta"], &rows));
+    }
+    if !failures.is_empty() {
+        bail!("bench gate: {} record(s) regressed more than {:.0}%:\n  \
+               {}", failures.len(), GATE_THRESHOLD * 100.0,
+              failures.join("\n  "));
+    }
+    if gate {
+        println!("bench gate: no regression beyond {:.0}% vs any \
+                  measured baseline", GATE_THRESHOLD * 100.0);
     }
     Ok(())
 }
@@ -111,5 +183,44 @@ mod tests {
         assert!(load_records("results/definitely_absent.json")
             .unwrap()
             .is_none());
+    }
+
+    #[test]
+    fn regressions_respect_the_threshold() {
+        let base = vec![("a".to_string(), 100.0),
+                        ("b".to_string(), 100.0),
+                        ("c".to_string(), 100.0)];
+        let cur = vec![("a".to_string(), 114.0),   // +14%: under
+                       ("b".to_string(), 120.0),   // +20%: over
+                       ("d".to_string(), 900.0)];  // new: skipped
+        let r = regressions(&cur, &base, GATE_THRESHOLD);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].0, "b");
+        assert!((r[0].1 - 0.20).abs() < 1e-9);
+        // Faster records never trip the gate.
+        let fast = vec![("a".to_string(), 10.0)];
+        assert!(regressions(&fast, &base, GATE_THRESHOLD).is_empty());
+    }
+
+    #[test]
+    fn provenance_parses_with_seeded_default() {
+        let dir = std::env::temp_dir().join("bench_hist_prov_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let with = dir.join("with.json");
+        std::fs::write(&with,
+            r#"{"bench":"x","provenance":"measured",
+                "records":[{"name":"a","mean_ns":1.0}]}"#).unwrap();
+        let f = load_records(with.to_str().unwrap())
+            .unwrap().unwrap();
+        assert!(f.measured());
+        assert_eq!(f.records, vec![("a".to_string(), 1.0)]);
+        let without = dir.join("without.json");
+        std::fs::write(&without,
+            r#"{"bench":"x","records":[{"name":"a","mean_ns":1.0}]}"#)
+            .unwrap();
+        let f = load_records(without.to_str().unwrap())
+            .unwrap().unwrap();
+        assert_eq!(f.provenance, "seeded");
+        assert!(!f.measured());
     }
 }

@@ -4,7 +4,7 @@
 //!   train [--config FILE] [key=value ...]   run one training job
 //!   exp <name|all> [--quick]                regenerate a paper artifact
 //!   list                                    models + experiments
-//!   report [--bench-history]                memory/throughput summary
+//!   report [--bench-history [--gate]]       memory/throughput summary
 //!   top [...]                               live telemetry console
 //!   selfcheck                               load+run every artifact once
 //!
@@ -25,7 +25,7 @@ fn usage() -> ! {
     eprintln!(
         "usage:\n  repro train [--config FILE] [key=value ...]\n  \
          repro exp <name|all> [--quick]\n  repro list\n  \
-         repro report [--bench-history]\n  \
+         repro report [--bench-history [--gate]]\n  \
          repro top [workers=N steps=K zero2=BOOL interval=MS]\n  \
          repro top --replay FILE.jsonl [--once] [interval=MS]\n  \
          repro top --record FILE.jsonl [workers=N steps=K zero2=BOOL]\n  \
@@ -36,6 +36,9 @@ fn usage() -> ! {
          schedule), overlap=BOOL (streaming bucket\npipeline), \
          bucket_step=BOOL (ZeRO-2 overlap: step each bucket's\nshard \
          segment as its reduce-scatter lands; default true),\n\
+         simd=auto|on|off (optimizer kernel dispatch; off = scalar\n\
+         parity oracle), clip=X (global-norm gradient clip, folded\n\
+         into the fused update sweep; host path only, 0 = off),\n\
          trace=FILE.jsonl (record every telemetry event; a \
          Chrome-trace\nsibling FILE.chrome.json is exported at the \
          end — load it in\nabout://tracing)\n\ntop: live dashboard \
@@ -64,7 +67,8 @@ fn main() -> Result<()> {
 
 fn cmd_report(args: &[String]) -> Result<()> {
     if args.iter().any(|a| a == "--bench-history") {
-        return experiments::bench_history::report();
+        let gate = args.iter().any(|a| a == "--gate");
+        return experiments::bench_history::report(gate);
     }
     experiments::throughput::table1()?;
     experiments::throughput::table2()?;

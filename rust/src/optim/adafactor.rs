@@ -18,6 +18,7 @@ use anyhow::Result;
 
 use super::core::{check_state_len, Arena, GradView, Granularity,
                   Optimizer, ParamView, StateDict};
+use super::kernels::{self, Dispatch};
 use super::Hyper;
 use crate::tensor::Tensor;
 
@@ -41,6 +42,7 @@ pub struct Adafactor {
     hp: Hyper,
     variant: AdafactorVariant,
     arena: Arc<Arena>,
+    dispatch: Dispatch,
     /// Momentum, arena-flat.
     m: Vec<f32>,
     /// Per-span factored second moment.
@@ -76,7 +78,9 @@ impl Adafactor {
             })
             .collect();
         let n = arena.total;
-        Adafactor { hp, variant, arena, m: vec![0.0; n], state, t: 0 }
+        Adafactor { hp, variant, arena,
+                    dispatch: Dispatch::for_arena(n), m: vec![0.0; n],
+                    state, t: 0 }
     }
 
     fn beta2_t(&self) -> f32 {
@@ -86,6 +90,85 @@ impl Adafactor {
                 1.0 - (self.t as f32).powf(-0.8)
             }
             AdafactorVariant::Zhai => self.hp.beta2,
+        }
+    }
+
+    fn step_impl(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                 lr: f32, gscale: f32) {
+        debug_assert!(self.t > 0, "step_segment before begin_step");
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let arena = Arc::clone(&self.arena);
+        let (i0, spans) = arena.spans_in(lo, hi);
+        let b2 = self.beta2_t();
+        let b1 = self.hp.beta1;
+        let wd = 1.0 - lr * self.hp.weight_decay;
+        let d = self.dispatch;
+
+        for (k, sp) in spans.iter().enumerate() {
+            let i = i0 + k;
+            let a = sp.offset - lo;
+            let n = sp.len;
+            let g = &grads.data[a..a + n];
+            // u = g / sqrt(v̂), with v̂ from factored or full state.
+            let mut u = vec![0.0f32; n];
+            match &mut self.state[i] {
+                Factored::Mat { r, c, rows, cols } => {
+                    let (rows, cols) = (*rows, *cols);
+                    // Row statistics: the inner Σ g² + ε1 per row runs
+                    // through the vectorizable fold (reassociates
+                    // under Vector dispatch — ULP tolerance).
+                    for ri in 0..rows {
+                        let acc = kernels::sq_eps_sum(
+                            d, &g[ri * cols..(ri + 1) * cols], gscale,
+                            EPS1);
+                        r[ri] = b2 * r[ri]
+                            + (1.0 - b2) * (acc / cols as f32);
+                    }
+                    // Column statistics: accumulate row by row across
+                    // the column axis — strided elementwise, so this
+                    // fold is bitwise identical under both dispatches
+                    // (each column's partial sums stay in row order,
+                    // exactly like the scalar column-major loop).
+                    let mut cacc = vec![0.0f32; cols];
+                    for ri in 0..rows {
+                        kernels::col_sq_accumulate(
+                            d, &g[ri * cols..(ri + 1) * cols], gscale,
+                            EPS1, &mut cacc);
+                    }
+                    for ci in 0..cols {
+                        c[ci] = b2 * c[ci]
+                            + (1.0 - b2) * (cacc[ci] / rows as f32);
+                    }
+                    let r_mean: f32 =
+                        r.iter().sum::<f32>() / rows as f32 + EPS1;
+                    for ri in 0..rows {
+                        for ci in 0..cols {
+                            let vhat = r[ri] * c[ci] / r_mean;
+                            u[ri * cols + ci] = g[ri * cols + ci]
+                                * gscale
+                                / (vhat.sqrt() + EPS1);
+                        }
+                    }
+                }
+                Factored::Vec { v } => {
+                    for j in 0..n {
+                        let gv = g[j] * gscale;
+                        v[j] = b2 * v[j] + (1.0 - b2) * (gv * gv + EPS1);
+                        u[j] = gv / (v[j].sqrt() + EPS1);
+                    }
+                }
+            }
+            // Update clipping: u /= max(1, RMS(u)/d).
+            let rms = kernels::sq_mean(d, &u, 1.0).sqrt();
+            let scale = 1.0 / (rms / CLIP_D).max(1.0);
+            // Momentum on the clipped update, then apply.
+            for j in 0..n {
+                let mj = b1 * self.m[sp.offset + j]
+                    + (1.0 - b1) * u[j] * scale;
+                self.m[sp.offset + j] = mj;
+                params.data[a + j] = params.data[a + j] * wd - lr * mj;
+            }
         }
     }
 }
@@ -112,74 +195,12 @@ impl Optimizer for Adafactor {
 
     fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
                     lr: f32) {
-        debug_assert!(self.t > 0, "step_segment before begin_step");
-        assert_eq!(params.range(), (grads.lo(), grads.hi()));
-        let (lo, hi) = params.range();
-        let arena = Arc::clone(&self.arena);
-        let (i0, spans) = arena.spans_in(lo, hi);
-        let b2 = self.beta2_t();
-        let b1 = self.hp.beta1;
-        let wd = 1.0 - lr * self.hp.weight_decay;
+        self.step_impl(params, grads, lr, 1.0);
+    }
 
-        for (k, sp) in spans.iter().enumerate() {
-            let i = i0 + k;
-            let a = sp.offset - lo;
-            let n = sp.len;
-            let g = &grads.data[a..a + n];
-            // u = g / sqrt(v̂), with v̂ from factored or full state.
-            let mut u = vec![0.0f32; n];
-            match &mut self.state[i] {
-                Factored::Mat { r, c, rows, cols } => {
-                    let (rows, cols) = (*rows, *cols);
-                    // Row/col means of g² + ε1.
-                    for ri in 0..rows {
-                        let mut acc = 0.0;
-                        for ci in 0..cols {
-                            let gv = g[ri * cols + ci];
-                            acc += gv * gv + EPS1;
-                        }
-                        r[ri] = b2 * r[ri]
-                            + (1.0 - b2) * (acc / cols as f32);
-                    }
-                    for ci in 0..cols {
-                        let mut acc = 0.0;
-                        for ri in 0..rows {
-                            let gv = g[ri * cols + ci];
-                            acc += gv * gv + EPS1;
-                        }
-                        c[ci] = b2 * c[ci]
-                            + (1.0 - b2) * (acc / rows as f32);
-                    }
-                    let r_mean: f32 =
-                        r.iter().sum::<f32>() / rows as f32 + EPS1;
-                    for ri in 0..rows {
-                        for ci in 0..cols {
-                            let vhat = r[ri] * c[ci] / r_mean;
-                            u[ri * cols + ci] =
-                                g[ri * cols + ci] / (vhat.sqrt() + EPS1);
-                        }
-                    }
-                }
-                Factored::Vec { v } => {
-                    for j in 0..n {
-                        let gv = g[j];
-                        v[j] = b2 * v[j] + (1.0 - b2) * (gv * gv + EPS1);
-                        u[j] = gv / (v[j].sqrt() + EPS1);
-                    }
-                }
-            }
-            // Update clipping: u /= max(1, RMS(u)/d).
-            let rms = (u.iter().map(|x| x * x).sum::<f32>() / n as f32)
-                .sqrt();
-            let scale = 1.0 / (rms / CLIP_D).max(1.0);
-            // Momentum on the clipped update, then apply.
-            for j in 0..n {
-                let mj = b1 * self.m[sp.offset + j]
-                    + (1.0 - b1) * u[j] * scale;
-                self.m[sp.offset + j] = mj;
-                params.data[a + j] = params.data[a + j] * wd - lr * mj;
-            }
-        }
+    fn step_segment_scaled(&mut self, params: ParamView<'_>,
+                           grads: GradView<'_>, lr: f32, gscale: f32) {
+        self.step_impl(params, grads, lr, gscale);
     }
 
     fn state_bytes(&self) -> usize {

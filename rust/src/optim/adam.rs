@@ -6,14 +6,18 @@ use anyhow::Result;
 
 use super::core::{check_state_len, Arena, GradView, Granularity,
                   Optimizer, ParamView, StateDict};
+use super::kernels::{self, AdamCoef, Dispatch};
 use super::Hyper;
 use crate::tensor::Tensor;
 
 /// Decoupled-weight-decay Adam. State: full-size m and v, flat over
-/// the arena.
+/// the arena. The update sweep runs through the fused kernel layer
+/// (`optim::kernels::adamw_step`); the dispatch is resolved from the
+/// thread-local simd policy once here, at construction.
 pub struct AdamW {
     hp: Hyper,
     arena: Arc<Arena>,
+    dispatch: Dispatch,
     m: Vec<f32>,
     v: Vec<f32>,
     t: u64,
@@ -23,7 +27,30 @@ impl AdamW {
     pub fn new(hp: Hyper, params: &[Tensor]) -> AdamW {
         let arena = Arc::new(Arena::of(params));
         let n = arena.total;
-        AdamW { hp, arena, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+        let dispatch = Dispatch::for_arena(n);
+        AdamW { hp, arena, dispatch, m: vec![0.0; n], v: vec![0.0; n],
+                t: 0 }
+    }
+
+    fn step_impl(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                 lr: f32, gscale: f32) {
+        debug_assert!(self.t > 0, "step_segment before begin_step");
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
+        let k = AdamCoef {
+            beta1,
+            beta2,
+            eps,
+            bc1: 1.0 / (1.0 - beta1.powi(self.t as i32)),
+            bc2: 1.0 / (1.0 - beta2.powi(self.t as i32)),
+            wd: 1.0 - lr * weight_decay,
+            lr,
+            gscale,
+        };
+        kernels::adamw_step(self.dispatch, params.data, grads.data,
+                            &mut self.m[lo..hi], &mut self.v[lo..hi],
+                            &k);
     }
 
     /// Access v in arena-flat form (used by the leave-one-out
@@ -53,24 +80,12 @@ impl Optimizer for AdamW {
 
     fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
                     lr: f32) {
-        debug_assert!(self.t > 0, "step_segment before begin_step");
-        assert_eq!(params.range(), (grads.lo(), grads.hi()));
-        let (lo, hi) = params.range();
-        let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
-        let bc1 = 1.0 / (1.0 - beta1.powi(self.t as i32));
-        let bc2 = 1.0 / (1.0 - beta2.powi(self.t as i32));
-        let wd = 1.0 - lr * weight_decay;
-        let m = &mut self.m[lo..hi];
-        let v = &mut self.v[lo..hi];
-        for i in 0..params.data.len() {
-            let gi = grads.data[i];
-            let mi = beta1 * m[i] + (1.0 - beta1) * gi;
-            let vi = beta2 * v[i] + (1.0 - beta2) * gi * gi;
-            m[i] = mi;
-            v[i] = vi;
-            params.data[i] = params.data[i] * wd
-                - lr * (mi * bc1) / ((vi * bc2).sqrt() + eps);
-        }
+        self.step_impl(params, grads, lr, 1.0);
+    }
+
+    fn step_segment_scaled(&mut self, params: ParamView<'_>,
+                           grads: GradView<'_>, lr: f32, gscale: f32) {
+        self.step_impl(params, grads, lr, gscale);
     }
 
     fn state_bytes(&self) -> usize {

@@ -18,6 +18,7 @@ use anyhow::Result;
 
 use super::core::{check_state_len, Arena, GradView, Granularity,
                   Optimizer, ParamView, StateDict};
+use super::kernels::{self, Dispatch, MiniCoef};
 use super::Hyper;
 use crate::partition::BlockView;
 
@@ -66,6 +67,7 @@ pub struct AdamMini {
     hp: Hyper,
     reduce: ReduceOp,
     arena: Arc<Arena>,
+    dispatch: Dispatch,
     /// Flat block grid: block `b` covers `[cuts[b], cuts[b+1])`.
     cuts: Vec<usize>,
     m: Vec<f32>,
@@ -97,10 +99,62 @@ impl AdamMini {
             hp,
             reduce,
             arena,
+            dispatch: Dispatch::for_arena(total),
             cuts,
             m: vec![0.0; total],
             vb: vec![0.0; n_blocks],
             t: 0,
+        }
+    }
+
+    fn step_impl(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                 lr: f32, gscale: f32) {
+        debug_assert!(self.t > 0, "step_segment before begin_step");
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let b0 = self
+            .cuts
+            .binary_search(&lo)
+            .unwrap_or_else(|_| {
+                panic!("segment lo {lo} is not on a block boundary")
+            });
+        let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
+        let bc2 = 1.0 / (1.0 - beta2.powi(self.t as i32));
+        let k = MiniCoef {
+            beta1,
+            bc1: 1.0 / (1.0 - beta1.powi(self.t as i32)),
+            wd: 1.0 - lr * weight_decay,
+            lr,
+            gscale,
+        };
+        let mut b = b0;
+        while self.cuts[b] < hi {
+            let (blo, bhi) = (self.cuts[b], self.cuts[b + 1]);
+            assert!(bhi <= hi,
+                    "segment hi {hi} splits block [{blo}, {bhi})");
+            let gb = &grads.data[blo - lo..bhi - lo];
+            // Blockwise second moment: ONE scalar per Hessian block.
+            // The hot (paper-default) Mean statistic goes through the
+            // vectorizable kernel; the Fig 15 ablation reduces stay
+            // on the scalar fold (cold path).
+            let stat = match self.reduce {
+                ReduceOp::Mean => {
+                    kernels::sq_mean(self.dispatch, gb, gscale)
+                }
+                _ => self.reduce.apply(
+                    gb.iter().map(|x| {
+                        let y = x * gscale;
+                        y * y
+                    }),
+                    gb.len()),
+            };
+            let vb = beta2 * self.vb[b] + (1.0 - beta2) * stat;
+            self.vb[b] = vb;
+            let denom = (vb * bc2).sqrt() + eps;
+            kernels::adam_mini_block(
+                self.dispatch, &mut params.data[blo - lo..bhi - lo], gb,
+                &mut self.m[blo..bhi], denom, &k);
+            b += 1;
         }
     }
 
@@ -139,40 +193,12 @@ impl Optimizer for AdamMini {
 
     fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
                     lr: f32) {
-        debug_assert!(self.t > 0, "step_segment before begin_step");
-        assert_eq!(params.range(), (grads.lo(), grads.hi()));
-        let (lo, hi) = params.range();
-        let b0 = self
-            .cuts
-            .binary_search(&lo)
-            .unwrap_or_else(|_| {
-                panic!("segment lo {lo} is not on a block boundary")
-            });
-        let Hyper { beta1, beta2, eps, weight_decay } = self.hp;
-        let bc1 = 1.0 / (1.0 - beta1.powi(self.t as i32));
-        let bc2 = 1.0 / (1.0 - beta2.powi(self.t as i32));
-        let wd = 1.0 - lr * weight_decay;
-        let mut b = b0;
-        while self.cuts[b] < hi {
-            let (blo, bhi) = (self.cuts[b], self.cuts[b + 1]);
-            assert!(bhi <= hi,
-                    "segment hi {hi} splits block [{blo}, {bhi})");
-            let gb = &grads.data[blo - lo..bhi - lo];
-            // Blockwise second moment: ONE scalar per Hessian block.
-            let stat = self.reduce.apply(gb.iter().map(|x| x * x),
-                                         gb.len());
-            let vb = beta2 * self.vb[b] + (1.0 - beta2) * stat;
-            self.vb[b] = vb;
-            let denom = (vb * bc2).sqrt() + eps;
-            for j in blo..bhi {
-                let gi = grads.data[j - lo];
-                let mj = beta1 * self.m[j] + (1.0 - beta1) * gi;
-                self.m[j] = mj;
-                params.data[j - lo] =
-                    params.data[j - lo] * wd - lr * (mj * bc1) / denom;
-            }
-            b += 1;
-        }
+        self.step_impl(params, grads, lr, 1.0);
+    }
+
+    fn step_segment_scaled(&mut self, params: ParamView<'_>,
+                           grads: GradView<'_>, lr: f32, gscale: f32) {
+        self.step_impl(params, grads, lr, gscale);
     }
 
     fn state_bytes(&self) -> usize {

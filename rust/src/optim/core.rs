@@ -366,6 +366,26 @@ pub trait Optimizer {
     fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
                     lr: f32);
 
+    /// [`Optimizer::step_segment`] with every gradient read
+    /// pre-multiplied by `gscale` — the hook the fused kernel layer
+    /// (`optim::kernels`) implements so micro-batch averaging and
+    /// global-norm clipping fold into the update sweep instead of
+    /// costing their own pass over the gradient. `g * gscale` is the
+    /// same float whether staged in a buffer or computed inline, so
+    /// overriding this never changes the trajectory — only the pass
+    /// count. The default materializes a scaled copy, which is
+    /// correct for any optimizer; kernel-migrated members override.
+    fn step_segment_scaled(&mut self, params: ParamView<'_>,
+                           grads: GradView<'_>, lr: f32, gscale: f32) {
+        if gscale == 1.0 {
+            return self.step_segment(params, grads, lr);
+        }
+        let lo = grads.lo();
+        let scaled: Vec<f32> =
+            grads.data.iter().map(|x| x * gscale).collect();
+        self.step_segment(params, GradView::new(lo, &scaled), lr);
+    }
+
     /// Bytes of optimizer state currently held (memory accounting).
     fn state_bytes(&self) -> usize;
 
@@ -408,17 +428,33 @@ pub trait Optimizer {
         }
     }
 
-    /// Whole-model step over tensor lists (the classic API): flatten
-    /// into the arena, `begin_step`, one full-range `step_segment`,
-    /// write back.
+    /// Whole-model step over tensor lists (the classic API):
+    /// [`Optimizer::step_scaled`] with unit gradient scale.
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        self.step_scaled(params, grads, lr, 1.0);
+    }
+
+    /// Whole-model fused step: one `begin_step`, then one in-place
+    /// sweep per tensor span with `gscale` (micro-batch averaging ×
+    /// clip factor) folded into each segment's gradient reads. No
+    /// flatten/unflatten round trip: every tensor edge is a valid
+    /// segment cut at every granularity (see
+    /// [`Optimizer::segment_cuts`]), so stepping span-by-span in
+    /// place is bitwise the whole-arena step minus two full-model
+    /// copies each way.
+    fn step_scaled(&mut self, params: &mut [Tensor], grads: &[Tensor],
+                   lr: f32, gscale: f32) {
         let arena = Arc::clone(self.arena());
-        let mut p = arena.flatten(params);
-        let g = arena.flatten(grads);
+        assert_eq!(params.len(), arena.spans.len(), "params/arena drift");
+        assert_eq!(grads.len(), arena.spans.len(), "grads/arena drift");
         self.begin_step();
-        self.step_segment(ParamView::new(0, &mut p), GradView::new(0, &g),
-                          lr);
-        arena.unflatten(&p, params);
+        for (i, sp) in arena.spans.iter().enumerate() {
+            debug_assert_eq!(params[i].data.len(), sp.len,
+                             "{}: span length drift", sp.name);
+            self.step_segment_scaled(
+                ParamView::new(sp.offset, &mut params[i].data),
+                GradView::new(sp.offset, &grads[i].data), lr, gscale);
+        }
     }
 }
 

@@ -11,6 +11,7 @@ use anyhow::Result;
 
 use super::core::{check_state_len, Arena, GradView, Granularity,
                   Optimizer, ParamView, StateDict};
+use super::kernels::{self, Dispatch};
 use super::Hyper;
 use crate::tensor::Tensor;
 
@@ -19,6 +20,7 @@ pub struct AdaGrad {
     eps: f32,
     momentum: f32,
     arena: Arc<Arena>,
+    dispatch: Dispatch,
     acc: Vec<f32>,
     buf: Vec<f32>,
 }
@@ -27,8 +29,19 @@ impl AdaGrad {
     pub fn new(params: &[Tensor], momentum: f32, eps: f32) -> AdaGrad {
         let arena = Arc::new(Arena::of(params));
         let n = arena.total;
-        AdaGrad { eps, momentum, arena, acc: vec![0.0; n],
+        AdaGrad { eps, momentum, arena,
+                  dispatch: Dispatch::for_arena(n), acc: vec![0.0; n],
                   buf: vec![0.0; n] }
+    }
+
+    fn step_impl(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                 lr: f32, gscale: f32) {
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        kernels::adagrad_step(self.dispatch, params.data, grads.data,
+                              &mut self.acc[lo..hi],
+                              &mut self.buf[lo..hi], self.momentum,
+                              self.eps, lr, gscale);
     }
 
     /// The monotone g² accumulator (inspection).
@@ -52,17 +65,12 @@ impl Optimizer for AdaGrad {
 
     fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
                     lr: f32) {
-        assert_eq!(params.range(), (grads.lo(), grads.hi()));
-        let (lo, hi) = params.range();
-        let acc = &mut self.acc[lo..hi];
-        let buf = &mut self.buf[lo..hi];
-        for i in 0..params.data.len() {
-            let gi = grads.data[i];
-            acc[i] += gi * gi;
-            let u = gi / (acc[i].sqrt() + self.eps);
-            buf[i] = self.momentum * buf[i] + u;
-            params.data[i] -= lr * buf[i];
-        }
+        self.step_impl(params, grads, lr, 1.0);
+    }
+
+    fn step_segment_scaled(&mut self, params: ParamView<'_>,
+                           grads: GradView<'_>, lr: f32, gscale: f32) {
+        self.step_impl(params, grads, lr, gscale);
     }
 
     fn state_bytes(&self) -> usize {

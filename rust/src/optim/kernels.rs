@@ -1,0 +1,703 @@
+//! SIMD kernel layer: fused one-pass update sweeps for the hot
+//! roster members, behind a runtime scalar/vector dispatch.
+//!
+//! Stable Rust has no `portable_simd`, so the vector path is the
+//! classic hand-unrolled form: fixed [`LANES`]-wide blocks staged
+//! through arrays, which LLVM's loop/SLP vectorizers turn into wide
+//! registers (including the sqrt/div chains in the Adam family).
+//! Both dispatches share one `#[inline(always)]` per-element
+//! function per kernel, so elementwise math is *bitwise identical*
+//! across dispatch and across any chunking — the segment-partition
+//! and N-vs-1 dist invariants survive vectorization untouched.
+//!
+//! Reductions are the exception: the vector path keeps [`LANES`]
+//! independent accumulators and tree-folds them at the end, which
+//! reassociates the sum relative to the scalar left fold. That is
+//! inherent to vectorized reduction, so those kernels ([`sq_mean`],
+//! [`sq_eps_sum`]) carry a documented ULP tolerance instead of a
+//! bitwise contract (see DESIGN.md "Kernel layer"). The column fold
+//! ([`col_sq_accumulate`]) is *not* a reassociating reduction — each
+//! column's partial sums accumulate in row order under both
+//! dispatches — so it stays bitwise.
+//!
+//! Dispatch is resolved from a thread-local policy (config key
+//! `simd=auto|on|off`) exactly once per arena, at optimizer
+//! construction; workers spawned afterwards inherit the decision
+//! through the constructed optimizer, never re-consult the policy.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+/// Lane width of the hand-unrolled vector path (f32 × 8 = one AVX2
+/// register; narrower targets split it, wider ones fuse pairs).
+pub const LANES: usize = 8;
+
+/// The `simd` config key: `auto` (default) | `on` | `off`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdPolicy {
+    Auto,
+    On,
+    Off,
+}
+
+impl SimdPolicy {
+    pub fn parse(s: &str) -> Result<SimdPolicy> {
+        Ok(match s {
+            "auto" => SimdPolicy::Auto,
+            "on" => SimdPolicy::On,
+            "off" => SimdPolicy::Off,
+            other => bail!("simd must be auto|on|off, got {other:?}"),
+        })
+    }
+}
+
+thread_local! {
+    static POLICY: Cell<SimdPolicy> =
+        const { Cell::new(SimdPolicy::Auto) };
+}
+
+/// Set the kernel dispatch policy for optimizers constructed on this
+/// thread from here on. Thread-local so parallel tests pinning
+/// `on`/`off` cannot race each other; trainers and the dist engine
+/// construct every optimizer on the driver thread, so one call there
+/// covers the whole run.
+pub fn set_policy(p: SimdPolicy) {
+    POLICY.with(|c| c.set(p));
+}
+
+/// The policy optimizers constructed on this thread will resolve.
+pub fn policy() -> SimdPolicy {
+    POLICY.with(|c| c.get())
+}
+
+/// A resolved kernel dispatch, cached per optimizer at construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    Scalar,
+    Vector,
+}
+
+impl Dispatch {
+    /// Resolve the thread-local policy once per arena (called from
+    /// optimizer constructors). `auto` always takes the vector path:
+    /// a size heuristic here would hand a model arena and its ZeRO
+    /// shards different dispatches — and the vectorized block
+    /// reductions different summation orders — silently breaking the
+    /// N-vs-1 bit-exactness invariant. `_total` is the hook for a
+    /// future heuristic that respects that constraint (it would have
+    /// to key on per-block size, which shards preserve, never on
+    /// arena size, which they do not).
+    pub fn for_arena(_total: usize) -> Dispatch {
+        match policy() {
+            SimdPolicy::Off => Dispatch::Scalar,
+            SimdPolicy::On | SimdPolicy::Auto => Dispatch::Vector,
+        }
+    }
+}
+
+// ---------------------------------------------------------------- AdamW
+
+/// Per-step AdamW constants, precomputed once per `begin_step` so
+/// the sweep does no per-element recomputation: bias corrections,
+/// the decoupled-decay factor `wd = 1 - lr·λ`, and the gradient
+/// scale (micro-batch averaging × clip factor) folded into every
+/// gradient read.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamCoef {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub bc1: f32,
+    pub bc2: f32,
+    pub wd: f32,
+    pub lr: f32,
+    pub gscale: f32,
+}
+
+#[inline(always)]
+fn adamw_el(pi: f32, gi: f32, mi: &mut f32, vi: &mut f32,
+            k: &AdamCoef) -> f32 {
+    let gi = gi * k.gscale;
+    let mn = k.beta1 * *mi + (1.0 - k.beta1) * gi;
+    let vn = k.beta2 * *vi + (1.0 - k.beta2) * gi * gi;
+    *mi = mn;
+    *vi = vn;
+    pi * k.wd - k.lr * (mn * k.bc1) / ((vn * k.bc2).sqrt() + k.eps)
+}
+
+/// Fused AdamW sweep: moments, bias correction, decay, and the
+/// folded gradient scale in one read-modify-write pass.
+pub fn adamw_step(d: Dispatch, p: &mut [f32], g: &[f32], m: &mut [f32],
+                  v: &mut [f32], k: &AdamCoef) {
+    debug_assert!(g.len() == p.len() && m.len() == p.len()
+                  && v.len() == p.len());
+    match d {
+        Dispatch::Scalar => {
+            for i in 0..p.len() {
+                p[i] = adamw_el(p[i], g[i], &mut m[i], &mut v[i], k);
+            }
+        }
+        Dispatch::Vector => {
+            let n = p.len();
+            let main = n - n % LANES;
+            let mut i = 0;
+            while i < main {
+                let mut pl = [0.0f32; LANES];
+                let mut gl = [0.0f32; LANES];
+                let mut ml = [0.0f32; LANES];
+                let mut vl = [0.0f32; LANES];
+                pl.copy_from_slice(&p[i..i + LANES]);
+                gl.copy_from_slice(&g[i..i + LANES]);
+                ml.copy_from_slice(&m[i..i + LANES]);
+                vl.copy_from_slice(&v[i..i + LANES]);
+                for l in 0..LANES {
+                    pl[l] = adamw_el(pl[l], gl[l], &mut ml[l],
+                                     &mut vl[l], k);
+                }
+                p[i..i + LANES].copy_from_slice(&pl);
+                m[i..i + LANES].copy_from_slice(&ml);
+                v[i..i + LANES].copy_from_slice(&vl);
+                i += LANES;
+            }
+            for j in main..n {
+                p[j] = adamw_el(p[j], g[j], &mut m[j], &mut v[j], k);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ Adam-mini
+
+/// Per-step Adam-mini constants for the elementwise half of a block
+/// update (the block's `denom` is computed from the reduction first).
+#[derive(Debug, Clone, Copy)]
+pub struct MiniCoef {
+    pub beta1: f32,
+    pub bc1: f32,
+    pub wd: f32,
+    pub lr: f32,
+    pub gscale: f32,
+}
+
+#[inline(always)]
+fn mini_el(pi: f32, gi: f32, mi: &mut f32, denom: f32,
+           k: &MiniCoef) -> f32 {
+    let gi = gi * k.gscale;
+    let mn = k.beta1 * *mi + (1.0 - k.beta1) * gi;
+    *mi = mn;
+    pi * k.wd - k.lr * (mn * k.bc1) / denom
+}
+
+/// Elementwise half of one Adam-mini block: first-moment EMA and the
+/// parameter update against the block-shared `denom`. Bitwise across
+/// dispatch (no reduction here).
+pub fn adam_mini_block(d: Dispatch, p: &mut [f32], g: &[f32],
+                       m: &mut [f32], denom: f32, k: &MiniCoef) {
+    debug_assert!(g.len() == p.len() && m.len() == p.len());
+    match d {
+        Dispatch::Scalar => {
+            for i in 0..p.len() {
+                p[i] = mini_el(p[i], g[i], &mut m[i], denom, k);
+            }
+        }
+        Dispatch::Vector => {
+            let n = p.len();
+            let main = n - n % LANES;
+            let mut i = 0;
+            while i < main {
+                let mut pl = [0.0f32; LANES];
+                let mut gl = [0.0f32; LANES];
+                let mut ml = [0.0f32; LANES];
+                pl.copy_from_slice(&p[i..i + LANES]);
+                gl.copy_from_slice(&g[i..i + LANES]);
+                ml.copy_from_slice(&m[i..i + LANES]);
+                for l in 0..LANES {
+                    pl[l] = mini_el(pl[l], gl[l], &mut ml[l], denom, k);
+                }
+                p[i..i + LANES].copy_from_slice(&pl);
+                m[i..i + LANES].copy_from_slice(&ml);
+                i += LANES;
+            }
+            for j in main..n {
+                p[j] = mini_el(p[j], g[j], &mut m[j], denom, k);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ reductions
+
+/// Deterministic tree fold of the lane accumulators. Fixed shape, so
+/// the vector reduction is reproducible run-to-run — it differs from
+/// the scalar left fold only by reassociation (ULP-level).
+#[inline(always)]
+fn fold_lanes(acc: [f32; LANES]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+#[inline(always)]
+fn sq_sum(d: Dispatch, g: &[f32], gscale: f32) -> f32 {
+    match d {
+        Dispatch::Scalar => {
+            let mut s = 0.0f32;
+            for &x in g {
+                let y = x * gscale;
+                s += y * y;
+            }
+            s
+        }
+        Dispatch::Vector => {
+            let n = g.len();
+            let main = n - n % LANES;
+            let mut acc = [0.0f32; LANES];
+            let mut i = 0;
+            while i < main {
+                for l in 0..LANES {
+                    let y = g[i + l] * gscale;
+                    acc[l] += y * y;
+                }
+                i += LANES;
+            }
+            let mut rem = 0.0f32;
+            for &x in &g[main..] {
+                let y = x * gscale;
+                rem += y * y;
+            }
+            // Blocks shorter than LANES fold all-zero lanes: the
+            // result is exactly the scalar remainder sum, so small
+            // blocks stay bitwise even under Vector dispatch.
+            fold_lanes(acc) + rem
+        }
+    }
+}
+
+/// Mean of squared (scaled) gradients over a block — Adam-mini's
+/// default `vb` statistic. Vector dispatch reassociates the sum
+/// (ULP tolerance); empty blocks yield 0 like `ReduceOp::Mean`.
+pub fn sq_mean(d: Dispatch, g: &[f32], gscale: f32) -> f32 {
+    if g.is_empty() {
+        return 0.0;
+    }
+    sq_sum(d, g, gscale) / g.len() as f32
+}
+
+/// Adafactor row-statistic inner fold: `Σ (g·gscale)² + eps1` over
+/// one row. Vector dispatch reassociates (ULP tolerance).
+pub fn sq_eps_sum(d: Dispatch, row: &[f32], gscale: f32,
+                  eps1: f32) -> f32 {
+    match d {
+        Dispatch::Scalar => {
+            let mut s = 0.0f32;
+            for &x in row {
+                let y = x * gscale;
+                s += y * y + eps1;
+            }
+            s
+        }
+        Dispatch::Vector => {
+            let n = row.len();
+            let main = n - n % LANES;
+            let mut acc = [0.0f32; LANES];
+            let mut i = 0;
+            while i < main {
+                for l in 0..LANES {
+                    let y = row[i + l] * gscale;
+                    acc[l] += y * y + eps1;
+                }
+                i += LANES;
+            }
+            let mut rem = 0.0f32;
+            for &x in &row[main..] {
+                let y = x * gscale;
+                rem += y * y + eps1;
+            }
+            fold_lanes(acc) + rem
+        }
+    }
+}
+
+/// One row's contribution to Adafactor's column statistics:
+/// `acc[ci] += (row[ci]·gscale)² + eps1`, vectorized across columns.
+/// Each column's partial sums land in row order under both
+/// dispatches — this is a strided elementwise accumulate, not a
+/// reassociating reduction, so it is bitwise.
+pub fn col_sq_accumulate(d: Dispatch, row: &[f32], gscale: f32,
+                         eps1: f32, acc: &mut [f32]) {
+    debug_assert_eq!(row.len(), acc.len());
+    match d {
+        Dispatch::Scalar => {
+            for ci in 0..row.len() {
+                let y = row[ci] * gscale;
+                acc[ci] += y * y + eps1;
+            }
+        }
+        Dispatch::Vector => {
+            let n = row.len();
+            let main = n - n % LANES;
+            let mut i = 0;
+            while i < main {
+                let mut rl = [0.0f32; LANES];
+                let mut al = [0.0f32; LANES];
+                rl.copy_from_slice(&row[i..i + LANES]);
+                al.copy_from_slice(&acc[i..i + LANES]);
+                for l in 0..LANES {
+                    let y = rl[l] * gscale;
+                    al[l] += y * y + eps1;
+                }
+                acc[i..i + LANES].copy_from_slice(&al);
+                i += LANES;
+            }
+            for ci in main..n {
+                let y = row[ci] * gscale;
+                acc[ci] += y * y + eps1;
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- Lion / SGD
+
+/// Lion per-step constants (`wd = 1 - lr·λ`).
+#[derive(Debug, Clone, Copy)]
+pub struct LionCoef {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub wd: f32,
+    pub lr: f32,
+    pub gscale: f32,
+}
+
+#[inline(always)]
+fn lion_el(pi: f32, gi: f32, mi: &mut f32, k: &LionCoef) -> f32 {
+    let gi = gi * k.gscale;
+    let c = k.beta1 * *mi + (1.0 - k.beta1) * gi;
+    let out = pi * k.wd - k.lr * c.signum();
+    *mi = k.beta2 * *mi + (1.0 - k.beta2) * gi;
+    out
+}
+
+/// Fused Lion sweep (sign update reads the pre-update momentum; the
+/// β₂ EMA writes after, matching the reference asymmetry).
+pub fn lion_step(d: Dispatch, p: &mut [f32], g: &[f32], m: &mut [f32],
+                 k: &LionCoef) {
+    debug_assert!(g.len() == p.len() && m.len() == p.len());
+    match d {
+        Dispatch::Scalar => {
+            for i in 0..p.len() {
+                p[i] = lion_el(p[i], g[i], &mut m[i], k);
+            }
+        }
+        Dispatch::Vector => {
+            let n = p.len();
+            let main = n - n % LANES;
+            let mut i = 0;
+            while i < main {
+                let mut pl = [0.0f32; LANES];
+                let mut gl = [0.0f32; LANES];
+                let mut ml = [0.0f32; LANES];
+                pl.copy_from_slice(&p[i..i + LANES]);
+                gl.copy_from_slice(&g[i..i + LANES]);
+                ml.copy_from_slice(&m[i..i + LANES]);
+                for l in 0..LANES {
+                    pl[l] = lion_el(pl[l], gl[l], &mut ml[l], k);
+                }
+                p[i..i + LANES].copy_from_slice(&pl);
+                m[i..i + LANES].copy_from_slice(&ml);
+                i += LANES;
+            }
+            for j in main..n {
+                p[j] = lion_el(p[j], g[j], &mut m[j], k);
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn sgd_el(pi: f32, gi: f32, bi: &mut f32, momentum: f32, lr: f32,
+          gscale: f32) -> f32 {
+    let v = momentum * *bi + gi * gscale;
+    *bi = v;
+    pi - lr * v
+}
+
+/// Fused SGD-with-momentum sweep.
+pub fn sgd_step(d: Dispatch, p: &mut [f32], g: &[f32], buf: &mut [f32],
+                momentum: f32, lr: f32, gscale: f32) {
+    debug_assert!(g.len() == p.len() && buf.len() == p.len());
+    match d {
+        Dispatch::Scalar => {
+            for i in 0..p.len() {
+                p[i] = sgd_el(p[i], g[i], &mut buf[i], momentum, lr,
+                              gscale);
+            }
+        }
+        Dispatch::Vector => {
+            let n = p.len();
+            let main = n - n % LANES;
+            let mut i = 0;
+            while i < main {
+                let mut pl = [0.0f32; LANES];
+                let mut gl = [0.0f32; LANES];
+                let mut bl = [0.0f32; LANES];
+                pl.copy_from_slice(&p[i..i + LANES]);
+                gl.copy_from_slice(&g[i..i + LANES]);
+                bl.copy_from_slice(&buf[i..i + LANES]);
+                for l in 0..LANES {
+                    pl[l] = sgd_el(pl[l], gl[l], &mut bl[l], momentum,
+                                   lr, gscale);
+                }
+                p[i..i + LANES].copy_from_slice(&pl);
+                buf[i..i + LANES].copy_from_slice(&bl);
+                i += LANES;
+            }
+            for j in main..n {
+                p[j] = sgd_el(p[j], g[j], &mut buf[j], momentum, lr,
+                              gscale);
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn adagrad_el(pi: f32, gi: f32, ai: &mut f32, bi: &mut f32,
+              momentum: f32, eps: f32, lr: f32, gscale: f32) -> f32 {
+    let gi = gi * gscale;
+    *ai += gi * gi;
+    let u = gi / (ai.sqrt() + eps);
+    *bi = momentum * *bi + u;
+    pi - lr * *bi
+}
+
+/// Fused AdaGrad-with-momentum sweep.
+pub fn adagrad_step(d: Dispatch, p: &mut [f32], g: &[f32],
+                    acc: &mut [f32], buf: &mut [f32], momentum: f32,
+                    eps: f32, lr: f32, gscale: f32) {
+    debug_assert!(g.len() == p.len() && acc.len() == p.len()
+                  && buf.len() == p.len());
+    match d {
+        Dispatch::Scalar => {
+            for i in 0..p.len() {
+                p[i] = adagrad_el(p[i], g[i], &mut acc[i], &mut buf[i],
+                                  momentum, eps, lr, gscale);
+            }
+        }
+        Dispatch::Vector => {
+            let n = p.len();
+            let main = n - n % LANES;
+            let mut i = 0;
+            while i < main {
+                let mut pl = [0.0f32; LANES];
+                let mut gl = [0.0f32; LANES];
+                let mut al = [0.0f32; LANES];
+                let mut bl = [0.0f32; LANES];
+                pl.copy_from_slice(&p[i..i + LANES]);
+                gl.copy_from_slice(&g[i..i + LANES]);
+                al.copy_from_slice(&acc[i..i + LANES]);
+                bl.copy_from_slice(&buf[i..i + LANES]);
+                for l in 0..LANES {
+                    pl[l] = adagrad_el(pl[l], gl[l], &mut al[l],
+                                       &mut bl[l], momentum, eps, lr,
+                                       gscale);
+                }
+                p[i..i + LANES].copy_from_slice(&pl);
+                acc[i..i + LANES].copy_from_slice(&al);
+                buf[i..i + LANES].copy_from_slice(&bl);
+                i += LANES;
+            }
+            for j in main..n {
+                p[j] = adagrad_el(p[j], g[j], &mut acc[j], &mut buf[j],
+                                  momentum, eps, lr, gscale);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------- calibration
+
+/// Measured fused-kernel cost in ns per element, calibrated once per
+/// process (best of 5 timed vector AdamW sweeps over a 64 K-element
+/// arena, after one warm pass) and cached. The dist engine feeds
+/// this into `ComputeModel::step_ns_per_elem` so the overlapped /
+/// deferred / sequential clocks in `StepTiming` price optimizer
+/// compute at the real post-SIMD rate instead of the 1 ns/elem
+/// placeholder. Clamped to a sane range so a preempted probe cannot
+/// poison the timeline model.
+pub fn measured_step_ns_per_elem() -> f64 {
+    static CAL: OnceLock<f64> = OnceLock::new();
+    *CAL.get_or_init(|| {
+        const N: usize = 1 << 16;
+        let g: Vec<f32> = (0..N)
+            .map(|i| ((i % 997) as f32 - 498.0) * 1e-5)
+            .collect();
+        let mut p = vec![0.1f32; N];
+        let mut m = vec![0.0f32; N];
+        let mut v = vec![0.0f32; N];
+        let k = AdamCoef {
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            bc1: 1.0,
+            bc2: 1.0,
+            wd: 1.0,
+            lr: 1e-3,
+            gscale: 1.0,
+        };
+        adamw_step(Dispatch::Vector, &mut p, &g, &mut m, &mut v, &k);
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let t = std::time::Instant::now();
+            adamw_step(Dispatch::Vector, &mut p, &g, &mut m, &mut v,
+                       &k);
+            best = best.min(t.elapsed().as_nanos() as f64 / N as f64);
+        }
+        best.clamp(0.02, 50.0)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(n: usize, seed: u32) -> Vec<f32> {
+        let mut x = seed;
+        (0..n)
+            .map(|_| {
+                x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+                (x >> 8) as f32 / (1u32 << 24) as f32 - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn policy_parses_and_rejects() {
+        assert_eq!(SimdPolicy::parse("auto").unwrap(), SimdPolicy::Auto);
+        assert_eq!(SimdPolicy::parse("on").unwrap(), SimdPolicy::On);
+        assert_eq!(SimdPolicy::parse("off").unwrap(), SimdPolicy::Off);
+        assert!(SimdPolicy::parse("fast").is_err());
+    }
+
+    #[test]
+    fn dispatch_resolves_thread_local_policy() {
+        set_policy(SimdPolicy::Off);
+        assert_eq!(Dispatch::for_arena(1 << 20), Dispatch::Scalar);
+        set_policy(SimdPolicy::On);
+        assert_eq!(Dispatch::for_arena(3), Dispatch::Vector);
+        set_policy(SimdPolicy::Auto);
+        // `auto` is size-independent by design (N-vs-1 invariant).
+        assert_eq!(Dispatch::for_arena(1), Dispatch::Vector);
+    }
+
+    #[test]
+    fn adamw_vector_is_bitwise_scalar_on_odd_lengths() {
+        for n in [1usize, 7, 8, 9, 64, 103] {
+            let g = probe(n, 1);
+            let k = AdamCoef {
+                beta1: 0.9, beta2: 0.95, eps: 1e-8,
+                bc1: 1.0 / (1.0 - 0.9f32), bc2: 1.0 / (1.0 - 0.95f32),
+                wd: 1.0 - 1e-3 * 0.1, lr: 1e-3, gscale: 0.25,
+            };
+            let (mut pa, mut ma, mut va) =
+                (probe(n, 2), probe(n, 3), vec![0.5f32; n]);
+            let (mut pb, mut mb, mut vb) =
+                (pa.clone(), ma.clone(), va.clone());
+            adamw_step(Dispatch::Scalar, &mut pa, &g, &mut ma,
+                       &mut va, &k);
+            adamw_step(Dispatch::Vector, &mut pb, &g, &mut mb,
+                       &mut vb, &k);
+            assert_eq!(pa, pb, "n={n}");
+            assert_eq!(ma, mb, "n={n}");
+            assert_eq!(va, vb, "n={n}");
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_are_bitwise_across_dispatch() {
+        let n = 101;
+        let g = probe(n, 11);
+        // Lion.
+        let lk = LionCoef { beta1: 0.9, beta2: 0.99, wd: 0.999,
+                            lr: 1e-3, gscale: 0.5 };
+        let (mut pa, mut ma) = (probe(n, 12), probe(n, 13));
+        let (mut pb, mut mb) = (pa.clone(), ma.clone());
+        lion_step(Dispatch::Scalar, &mut pa, &g, &mut ma, &lk);
+        lion_step(Dispatch::Vector, &mut pb, &g, &mut mb, &lk);
+        assert_eq!(pa, pb);
+        assert_eq!(ma, mb);
+        // SGD.
+        let (mut pa, mut ba) = (probe(n, 14), probe(n, 15));
+        let (mut pb, mut bb) = (pa.clone(), ba.clone());
+        sgd_step(Dispatch::Scalar, &mut pa, &g, &mut ba, 0.9, 1e-2,
+                 0.125);
+        sgd_step(Dispatch::Vector, &mut pb, &g, &mut bb, 0.9, 1e-2,
+                 0.125);
+        assert_eq!(pa, pb);
+        assert_eq!(ba, bb);
+        // AdaGrad.
+        let (mut pa, mut aa, mut ba) =
+            (probe(n, 16), vec![0.1f32; n], probe(n, 17));
+        let (mut pb, mut ab, mut bb) =
+            (pa.clone(), aa.clone(), ba.clone());
+        adagrad_step(Dispatch::Scalar, &mut pa, &g, &mut aa, &mut ba,
+                     0.9, 1e-8, 1e-2, 2.0);
+        adagrad_step(Dispatch::Vector, &mut pb, &g, &mut ab, &mut bb,
+                     0.9, 1e-8, 1e-2, 2.0);
+        assert_eq!(pa, pb);
+        assert_eq!(aa, ab);
+        assert_eq!(ba, bb);
+        // Adam-mini elementwise half.
+        let mk = MiniCoef { beta1: 0.9, bc1: 10.0, wd: 0.999,
+                            lr: 1e-3, gscale: 0.5 };
+        let (mut pa, mut ma) = (probe(n, 18), probe(n, 19));
+        let (mut pb, mut mb) = (pa.clone(), ma.clone());
+        adam_mini_block(Dispatch::Scalar, &mut pa, &g, &mut ma, 0.7,
+                        &mk);
+        adam_mini_block(Dispatch::Vector, &mut pb, &g, &mut mb, 0.7,
+                        &mk);
+        assert_eq!(pa, pb);
+        assert_eq!(ma, mb);
+        // Column accumulate (strided elementwise, bitwise by design).
+        let rows: Vec<Vec<f32>> =
+            (0..7).map(|r| probe(13, 30 + r)).collect();
+        let mut ca = vec![0.0f32; 13];
+        let mut cb = vec![0.0f32; 13];
+        for row in &rows {
+            col_sq_accumulate(Dispatch::Scalar, row, 0.5, 1e-30,
+                              &mut ca);
+            col_sq_accumulate(Dispatch::Vector, row, 0.5, 1e-30,
+                              &mut cb);
+        }
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn reductions_match_scalar_within_ulp_tolerance() {
+        for n in [1usize, 5, 8, 65, 1000] {
+            let g = probe(n, 21);
+            let a = sq_mean(Dispatch::Scalar, &g, 0.5);
+            let b = sq_mean(Dispatch::Vector, &g, 0.5);
+            let tol = 1e-6 * a.abs().max(1e-12);
+            assert!((a - b).abs() <= tol, "sq_mean n={n}: {a} vs {b}");
+            let a = sq_eps_sum(Dispatch::Scalar, &g, 0.5, 1e-30);
+            let b = sq_eps_sum(Dispatch::Vector, &g, 0.5, 1e-30);
+            let tol = 1e-6 * a.abs().max(1e-12);
+            assert!((a - b).abs() <= tol,
+                    "sq_eps_sum n={n}: {a} vs {b}");
+        }
+        // Sub-LANES blocks fold zero lanes: exactly the scalar sum.
+        let g = probe(5, 22);
+        assert_eq!(sq_mean(Dispatch::Scalar, &g, 1.0),
+                   sq_mean(Dispatch::Vector, &g, 1.0));
+        assert_eq!(sq_mean(Dispatch::Vector, &[], 1.0), 0.0);
+    }
+
+    #[test]
+    fn calibration_is_cached_and_sane() {
+        let a = measured_step_ns_per_elem();
+        let b = measured_step_ns_per_elem();
+        assert_eq!(a, b);
+        assert!((0.02..=50.0).contains(&a));
+    }
+}

@@ -8,12 +8,14 @@ use anyhow::Result;
 
 use super::core::{check_state_len, Arena, GradView, Granularity,
                   Optimizer, ParamView, StateDict};
+use super::kernels::{self, Dispatch, LionCoef};
 use super::Hyper;
 use crate::tensor::Tensor;
 
 pub struct Lion {
     hp: Hyper,
     arena: Arc<Arena>,
+    dispatch: Dispatch,
     m: Vec<f32>,
 }
 
@@ -21,7 +23,19 @@ impl Lion {
     pub fn new(hp: Hyper, params: &[Tensor]) -> Lion {
         let arena = Arc::new(Arena::of(params));
         let n = arena.total;
-        Lion { hp, arena, m: vec![0.0; n] }
+        Lion { hp, arena, dispatch: Dispatch::for_arena(n),
+               m: vec![0.0; n] }
+    }
+
+    fn step_impl(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                 lr: f32, gscale: f32) {
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        let Hyper { beta1, beta2, weight_decay, .. } = self.hp;
+        let k = LionCoef { beta1, beta2, wd: 1.0 - lr * weight_decay,
+                           lr, gscale };
+        kernels::lion_step(self.dispatch, params.data, grads.data,
+                           &mut self.m[lo..hi], &k);
     }
 }
 
@@ -40,19 +54,12 @@ impl Optimizer for Lion {
 
     fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
                     lr: f32) {
-        assert_eq!(params.range(), (grads.lo(), grads.hi()));
-        let (lo, hi) = params.range();
-        let Hyper { beta1, beta2, weight_decay, .. } = self.hp;
-        let wd = 1.0 - lr * weight_decay;
-        let m = &mut self.m[lo..hi];
-        for i in 0..params.data.len() {
-            let gi = grads.data[i];
-            // Update direction: sign of the interpolated momentum.
-            let c = beta1 * m[i] + (1.0 - beta1) * gi;
-            params.data[i] = params.data[i] * wd - lr * c.signum();
-            // Momentum EMA uses β2 (Lion's defining asymmetry).
-            m[i] = beta2 * m[i] + (1.0 - beta2) * gi;
-        }
+        self.step_impl(params, grads, lr, 1.0);
+    }
+
+    fn step_segment_scaled(&mut self, params: ParamView<'_>,
+                           grads: GradView<'_>, lr: f32, gscale: f32) {
+        self.step_impl(params, grads, lr, gscale);
     }
 
     fn state_bytes(&self) -> usize {

@@ -25,6 +25,7 @@ pub mod came;
 pub mod core;
 pub mod extra;
 pub mod galore;
+pub mod kernels;
 pub mod lamb;
 pub mod lion;
 pub mod schedule;
@@ -40,6 +41,7 @@ pub use self::core::{check_state_len, decode_step, step_tensor, Arena,
                      StateDict, STEP_TENSOR};
 pub use extra::{AdaGrad, Adan, NovoGrad};
 pub use galore::{Galore, GaloreMode};
+pub use kernels::{Dispatch, SimdPolicy};
 pub use lamb::Lamb;
 pub use lion::Lion;
 pub use schedule::Schedule;

@@ -9,6 +9,7 @@ use anyhow::Result;
 
 use super::core::{check_state_len, Arena, GradView, Granularity,
                   Optimizer, ParamView, StateDict};
+use super::kernels::{self, Dispatch};
 use crate::partition::BlockView;
 use crate::tensor::Tensor;
 
@@ -17,6 +18,7 @@ use crate::tensor::Tensor;
 pub struct Sgd {
     momentum: f32,
     arena: Arc<Arena>,
+    dispatch: Dispatch,
     buf: Vec<f32>,
 }
 
@@ -24,7 +26,17 @@ impl Sgd {
     pub fn new(momentum: f32, params: &[Tensor]) -> Sgd {
         let arena = Arc::new(Arena::of(params));
         let n = arena.total;
-        Sgd { momentum, arena, buf: vec![0.0; n] }
+        Sgd { momentum, arena, dispatch: Dispatch::for_arena(n),
+              buf: vec![0.0; n] }
+    }
+
+    fn step_impl(&mut self, params: ParamView<'_>, grads: GradView<'_>,
+                 lr: f32, gscale: f32) {
+        assert_eq!(params.range(), (grads.lo(), grads.hi()));
+        let (lo, hi) = params.range();
+        kernels::sgd_step(self.dispatch, params.data, grads.data,
+                          &mut self.buf[lo..hi], self.momentum, lr,
+                          gscale);
     }
 }
 
@@ -43,14 +55,12 @@ impl Optimizer for Sgd {
 
     fn step_segment(&mut self, params: ParamView<'_>, grads: GradView<'_>,
                     lr: f32) {
-        assert_eq!(params.range(), (grads.lo(), grads.hi()));
-        let (lo, hi) = params.range();
-        let buf = &mut self.buf[lo..hi];
-        for i in 0..params.data.len() {
-            let v = self.momentum * buf[i] + grads.data[i];
-            buf[i] = v;
-            params.data[i] -= lr * v;
-        }
+        self.step_impl(params, grads, lr, 1.0);
+    }
+
+    fn step_segment_scaled(&mut self, params: ParamView<'_>,
+                           grads: GradView<'_>, lr: f32, gscale: f32) {
+        self.step_impl(params, grads, lr, gscale);
     }
 
     fn state_bytes(&self) -> usize {

@@ -1,0 +1,261 @@
+//! Parity contracts for the SIMD kernel layer (`optim::kernels`):
+//!
+//! 1. **Scalar oracle** — the whole roster stepped under `simd=on`
+//!    matches `simd=off` bit-for-bit for elementwise members (the
+//!    vector path stages chunks through the same `#[inline(always)]`
+//!    per-element functions), and within a stated ULP-scale tolerance
+//!    for members whose block/row reductions reassociate under the
+//!    lane tree fold (`adam_mini*`, `adafactor*` — see DESIGN.md
+//!    "Kernel layer").
+//! 2. **Folded gradient scale** — `step_scaled(…, gscale)` is
+//!    bit-identical to pre-scaling the gradients and calling `step`:
+//!    `g * gscale` is the same f32 multiply whether staged in a buffer
+//!    or folded into the fused sweep.
+//! 3. **Vector partition invariance** — under `simd=on`, a partitioned
+//!    `step_segment_scaled` walk equals the whole-model `step_scaled`
+//!    bitwise (the invariant ZeRO bucket-granular stepping rests on).
+//! 4. **N-vs-1 dist bit-exactness at `simd=on`** — every shardable
+//!    roster member, (zero2 × overlap) matrix, 4 workers vs 1, single
+//!    micro-batch: identical parameters.
+
+use std::sync::Arc;
+
+use adam_mini::dist::{DistOptions, DistTrainer};
+use adam_mini::optim::{self, by_name, kernels, GradView, Hyper,
+                       ModelMeta, Optimizer, ParamView, SimdPolicy};
+use adam_mini::partition::Strategy;
+use adam_mini::tensor::Tensor;
+use adam_mini::util::prng::Rng;
+
+/// Mixed inventory (same shapes as the optim_core contract tests).
+fn toy() -> (Vec<Tensor>, ModelMeta) {
+    let mut rng = Rng::new(7);
+    let params = vec![
+        Tensor::randn("embed", &[16, 12], 0.5, &mut rng),
+        Tensor::randn("wq", &[2, 4, 4], 0.5, &mut rng),
+        Tensor::randn("attn_norm", &[2, 4], 0.5, &mut rng),
+        Tensor::randn("final_norm", &[5], 0.5, &mut rng),
+    ];
+    let meta = ModelMeta {
+        n_heads: 2,
+        stacked: vec!["wq".into(), "attn_norm".into()],
+    };
+    (params, meta)
+}
+
+fn rand_grads(params: &[Tensor], rng: &mut Rng) -> Vec<Tensor> {
+    params
+        .iter()
+        .map(|p| Tensor::randn(&*p.name, &p.shape, 0.5, rng))
+        .collect()
+}
+
+/// Members whose update folds a reassociating reduction (block sums,
+/// factored row/col sums) through the lane-tree kernels — vector and
+/// scalar dispatch agree to tolerance, not bitwise.
+fn reassociates(name: &str) -> bool {
+    name.starts_with("adam_mini") || name.starts_with("adafactor")
+}
+
+#[test]
+fn vector_roster_matches_scalar_oracle() {
+    let (params0, meta) = toy();
+    for name in optim::ROSTER {
+        let run = |policy: SimdPolicy| {
+            kernels::set_policy(policy);
+            let mut p = params0.clone();
+            let mut opt =
+                by_name(name, Hyper::default(), &p, &meta).unwrap();
+            let mut rng = Rng::new(0x51D);
+            for _ in 0..5 {
+                let g = rand_grads(&p, &mut rng);
+                opt.step(&mut p, &g, 1e-2);
+            }
+            p
+        };
+        let on = run(SimdPolicy::On);
+        let off = run(SimdPolicy::Off);
+        kernels::set_policy(SimdPolicy::Auto);
+        if reassociates(name) {
+            for (a, b) in on.iter().zip(&off) {
+                let d = a.max_abs_diff(b);
+                assert!(d < 1e-5,
+                        "{name} {}: vector-vs-scalar drift {d}",
+                        a.name);
+            }
+        } else {
+            assert_eq!(on, off,
+                       "{name}: elementwise updates must be bitwise \
+                        identical across dispatch");
+        }
+    }
+}
+
+#[test]
+fn folded_gscale_matches_prescaled_gradients_bitwise() {
+    let (params0, meta) = toy();
+    const GS: f32 = 0.5;
+    for name in optim::ROSTER {
+        let mut rng = Rng::new(0xFADE);
+        let gs: Vec<Vec<Tensor>> =
+            (0..4).map(|_| rand_grads(&params0, &mut rng)).collect();
+        // Fused: the scale rides into the update sweep.
+        let mut pa = params0.clone();
+        let mut a =
+            by_name(name, Hyper::default(), &pa, &meta).unwrap();
+        for g in &gs {
+            a.step_scaled(&mut pa, g, 1e-2, GS);
+        }
+        // Oracle: materialize g * GS, then plain step.
+        let mut pb = params0.clone();
+        let mut b =
+            by_name(name, Hyper::default(), &pb, &meta).unwrap();
+        for g in &gs {
+            let scaled: Vec<Tensor> = g
+                .iter()
+                .map(|t| {
+                    let mut t2 = t.clone();
+                    for x in t2.data.iter_mut() {
+                        *x *= GS;
+                    }
+                    t2
+                })
+                .collect();
+            b.step(&mut pb, &scaled, 1e-2);
+        }
+        assert_eq!(pa, pb,
+                   "{name}: folded gscale diverged from pre-scaled \
+                    gradients");
+    }
+}
+
+/// A random disjoint partition of `[0, total)` honoring `cuts`
+/// (`None` = any boundary), in shuffled application order.
+fn random_partition(cuts: Option<Vec<usize>>, total: usize,
+                    rng: &mut Rng) -> Vec<(usize, usize)> {
+    let candidates: Vec<usize> = match cuts {
+        None => (1..total).collect(),
+        Some(c) => {
+            c.into_iter().filter(|&x| x > 0 && x < total).collect()
+        }
+    };
+    let mut chosen: Vec<usize> = candidates
+        .into_iter()
+        .filter(|_| rng.below(3) == 0)
+        .collect();
+    chosen.push(0);
+    chosen.push(total);
+    chosen.sort_unstable();
+    chosen.dedup();
+    let mut segs: Vec<(usize, usize)> =
+        chosen.windows(2).map(|w| (w[0], w[1])).collect();
+    rng.shuffle(&mut segs);
+    segs
+}
+
+#[test]
+fn vector_partition_with_folded_scale_is_bitwise() {
+    kernels::set_policy(SimdPolicy::On);
+    let (params0, meta) = toy();
+    const GS: f32 = 0.75;
+    for name in optim::ROSTER {
+        let mut rng = Rng::new(0xBEEF);
+        let mut pa = params0.clone();
+        let mut a =
+            by_name(name, Hyper::default(), &pa, &meta).unwrap();
+        let mut b =
+            by_name(name, Hyper::default(), &params0, &meta).unwrap();
+        let arena = Arc::clone(b.arena());
+        let mut flat = arena.flatten(&params0);
+        for _ in 0..3 {
+            let g = rand_grads(&pa, &mut rng);
+            a.step_scaled(&mut pa, &g, 1e-2, GS);
+            let gflat = arena.flatten(&g);
+            let segs = random_partition(b.segment_cuts(), arena.total,
+                                        &mut rng);
+            b.begin_step();
+            for (lo, hi) in segs {
+                b.step_segment_scaled(
+                    ParamView::new(lo, &mut flat[lo..hi]),
+                    GradView::new(lo, &gflat[lo..hi]), 1e-2, GS);
+            }
+        }
+        let mut pb = params0.clone();
+        arena.unflatten(&flat, &mut pb);
+        assert_eq!(pa, pb, "{name}: vector partition diverged");
+    }
+    kernels::set_policy(SimdPolicy::Auto);
+}
+
+/// Dist-shaped inventory (same shapes as the dist engine unit tests).
+fn toy_dist() -> (Vec<Tensor>, ModelMeta) {
+    let mut rng = Rng::new(20);
+    let params = vec![
+        Tensor::randn("embed", &[16, 8], 0.5, &mut rng),
+        Tensor::randn("wq", &[2, 8, 8], 0.5, &mut rng),
+        Tensor::randn("attn_norm", &[2, 8], 0.5, &mut rng),
+    ];
+    let meta = ModelMeta {
+        n_heads: 2,
+        stacked: vec!["wq".into(), "attn_norm".into()],
+    };
+    (params, meta)
+}
+
+/// Drive 5 single-micro-batch sharded steps and return the params.
+fn run_world(optimizer: &str, workers: usize, zero2: bool,
+             overlap: bool) -> Vec<Tensor> {
+    let (mut params, meta) = toy_dist();
+    let spec = if optimizer.starts_with("adam_mini") {
+        Some(meta.spec_for(&params, Strategy::Hessian).unwrap())
+    } else {
+        None
+    };
+    let mut dist = DistTrainer::new(&params, DistOptions {
+        workers,
+        bucket_kb: 1,
+        zero1: true,
+        zero2,
+        optimizer: optimizer.into(),
+        spec,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(4242);
+    for _ in 0..5 {
+        let g = rand_grads(&params, &mut rng);
+        if overlap {
+            let mut stream = dist.begin_step(1, 1e-2);
+            for j in (0..g.len()).rev() {
+                stream.push_grad(0, j, &g[j]).unwrap();
+            }
+            stream.finish(&mut params).unwrap();
+        } else {
+            let mut local = dist.grad_buffers();
+            dist.layout().accumulate(&mut local[0], &g);
+            dist.step(&mut params, local, 1, 1e-2).unwrap();
+        }
+    }
+    params
+}
+
+#[test]
+fn n_vs_1_dist_is_bit_exact_with_simd_on() {
+    // Dispatch must not depend on arena size: shard arenas are much
+    // smaller than the host arena, so any size heuristic would give
+    // N-worker and 1-worker runs different summation orders. This
+    // matrix pins the invariant for every shardable roster member.
+    kernels::set_policy(SimdPolicy::On);
+    for optimizer in ["adamw", "adam_mini", "sgd", "lion", "adagrad"] {
+        let reference = run_world(optimizer, 1, false, false);
+        for zero2 in [false, true] {
+            for overlap in [false, true] {
+                let got = run_world(optimizer, 4, zero2, overlap);
+                assert_eq!(reference, got,
+                           "{optimizer} zero2={zero2} \
+                            overlap={overlap}: 4-vs-1 drift");
+            }
+        }
+    }
+    kernels::set_policy(SimdPolicy::Auto);
+}
