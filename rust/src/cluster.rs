@@ -124,6 +124,17 @@ pub fn ring_reducescatter_bytes(payload_bytes: f64, workers: usize)
     }
 }
 
+/// Expected extra bytes the socket transport's stop-and-wait ARQ
+/// retransmits when every data frame is independently lost with
+/// probability `p`: a frame needs `1/(1−p)` attempts on average, so
+/// retries add `base · p/(1−p)` bytes on top of the base payload
+/// (the `retry` ledger class the fault-matrix tests bound).
+pub fn retry_overhead_bytes(base_bytes: f64, p_loss: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p_loss),
+            "loss probability must be in [0, 1)");
+    base_bytes * p_loss / (1.0 - p_loss)
+}
+
 impl OptProfile {
     /// Bytes of optimizer state a full state synchronization must move
     /// (the ZeRO-1 checkpoint-gather payload). Adam-mini's is half of
@@ -335,6 +346,12 @@ mod tests {
         let n = 1e9;
         assert_eq!(ADAM_MINI_PROFILE.state_sync_payload(n),
                    0.5 * ADAMW_PROFILE.state_sync_payload(n));
+        // Retry overhead: no faults → no retries; 20% drop → 1/4 of
+        // the base payload again; monotone in the loss rate.
+        assert_eq!(retry_overhead_bytes(1e6, 0.0), 0.0);
+        assert_eq!(retry_overhead_bytes(1e6, 0.2), 0.25e6);
+        assert!(retry_overhead_bytes(1e6, 0.5)
+                > retry_overhead_bytes(1e6, 0.2));
     }
 
     #[test]

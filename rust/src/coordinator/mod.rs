@@ -1,6 +1,7 @@
 //! Training coordinator (L3): the step loop that drives AOT executables,
 //! host or fused optimizers, schedules, metrics and checkpoints.
 
+pub mod bigram;
 pub mod checkpoint;
 pub mod trainer;
 

@@ -244,6 +244,8 @@ impl<'e> Trainer<'e> {
                         optim::kernels::measured_step_ns_per_elem(),
                     ..Default::default()
                 },
+                transport: dist::parse_transport(
+                    &cfg.transport, &cfg.fault, cfg.fault_seed)?,
                 ..Default::default()
             })?;
             let replicated = if sharded {

@@ -12,8 +12,13 @@
 //! run is bit-reproducible for a given world size. The order differs
 //! from a naive left-to-right sum, which is why cross-world-size
 //! comparisons are to float tolerance, not bit-exact.
+//!
+//! Every collective returns `Result`: a dead or hung peer surfaces as
+//! a typed [`DistError`] from the underlying link instead of a panic,
+//! and the worker layer decides how to unwind the step.
 
 use super::comm::{RingNode, TrafficClass};
+use super::error::DistError;
 
 /// Balanced split of `len` elements into `n` chunks: chunk `c` is
 /// `[c*len/n, (c+1)*len/n)` (sizes differ by at most one).
@@ -24,23 +29,25 @@ pub fn chunk_range(len: usize, n: usize, c: usize) -> (usize, usize) {
 /// In-place ring all-reduce (sum) of `data` across the world, processed
 /// in buckets of at most `bucket_elems` elements. Every rank ends with
 /// the identical (bitwise) elementwise sum.
-pub fn ring_all_reduce(node: &RingNode, data: &mut [f32],
-                       bucket_elems: usize, class: TrafficClass) {
+pub fn ring_all_reduce(node: &mut RingNode, data: &mut [f32],
+                       bucket_elems: usize, class: TrafficClass)
+    -> Result<(), DistError> {
     if node.world <= 1 || data.is_empty() {
-        return;
+        return Ok(());
     }
     let bucket = bucket_elems.max(1);
     let mut off = 0;
     while off < data.len() {
         let hi = (off + bucket).min(data.len());
-        bucket_all_reduce(node, &mut data[off..hi], class);
+        bucket_all_reduce(node, &mut data[off..hi], class)?;
         off = hi;
     }
+    Ok(())
 }
 
 /// One bucket: reduce-scatter (N−1 steps) + all-gather (N−1 steps).
-fn bucket_all_reduce(node: &RingNode, buf: &mut [f32],
-                     class: TrafficClass) {
+fn bucket_all_reduce(node: &mut RingNode, buf: &mut [f32],
+                     class: TrafficClass) -> Result<(), DistError> {
     let (n, r) = (node.world, node.rank);
     // Reduce-scatter: after step s, the partial for chunk (r−s−1) has
     // accumulated s+2 ranks' contributions at rank r. After N−1 steps
@@ -48,10 +55,10 @@ fn bucket_all_reduce(node: &RingNode, buf: &mut [f32],
     for s in 0..n - 1 {
         let send_c = (r + n - s) % n;
         let (lo, hi) = chunk_range(buf.len(), n, send_c);
-        node.send_right(class, buf[lo..hi].to_vec());
+        node.send_right(class, buf[lo..hi].to_vec())?;
         let recv_c = (r + n - s - 1) % n;
         let (lo, hi) = chunk_range(buf.len(), n, recv_c);
-        let incoming = node.recv_left();
+        let incoming = node.recv_left()?;
         debug_assert_eq!(incoming.len(), hi - lo);
         for (x, y) in buf[lo..hi].iter_mut().zip(&incoming) {
             *x += y;
@@ -61,13 +68,14 @@ fn bucket_all_reduce(node: &RingNode, buf: &mut [f32],
     for s in 0..n - 1 {
         let send_c = (r + 1 + n - s) % n;
         let (lo, hi) = chunk_range(buf.len(), n, send_c);
-        node.send_right(class, buf[lo..hi].to_vec());
+        node.send_right(class, buf[lo..hi].to_vec())?;
         let recv_c = (r + n - s) % n;
         let (lo, hi) = chunk_range(buf.len(), n, recv_c);
-        let incoming = node.recv_left();
+        let incoming = node.recv_left()?;
         debug_assert_eq!(incoming.len(), hi - lo);
         buf[lo..hi].copy_from_slice(&incoming);
     }
+    Ok(())
 }
 
 /// Ring reduce-scatter over a flat buffer partitioned into per-rank
@@ -79,12 +87,13 @@ fn bucket_all_reduce(node: &RingNode, buf: &mut [f32],
 ///
 /// Cluster-total traffic: `(N−1)·payload` bytes — half an all-reduce,
 /// the byte saving the ZeRO-2 schedule banks every step.
-pub fn ring_reduce_scatter(node: &RingNode, chunks: &[(usize, usize)],
-                           buf: &mut [f32], class: TrafficClass) {
+pub fn ring_reduce_scatter(node: &mut RingNode,
+                           chunks: &[(usize, usize)], buf: &mut [f32],
+                           class: TrafficClass) -> Result<(), DistError> {
     let (n, r) = (node.world, node.rank);
     assert_eq!(chunks.len(), n, "one chunk per rank");
     if n <= 1 {
-        return;
+        return Ok(());
     }
     debug_assert_eq!(chunks[0].0, 0, "chunks must start at 0");
     debug_assert_eq!(chunks[n - 1].1, buf.len(),
@@ -97,15 +106,16 @@ pub fn ring_reduce_scatter(node: &RingNode, chunks: &[(usize, usize)],
     for s in 0..n - 1 {
         let send_c = (r + n - 1 - s) % n;
         let (lo, hi) = chunks[send_c];
-        node.send_right(class, buf[lo..hi].to_vec());
+        node.send_right(class, buf[lo..hi].to_vec())?;
         let recv_c = (r + n - 2 - s) % n;
         let (lo, hi) = chunks[recv_c];
-        let incoming = node.recv_left();
+        let incoming = node.recv_left()?;
         debug_assert_eq!(incoming.len(), hi - lo);
         for (x, y) in buf[lo..hi].iter_mut().zip(&incoming) {
             *x += y;
         }
     }
+    Ok(())
 }
 
 /// Clip sorted contiguous per-rank `ranges` to the window `[lo, hi)`,
@@ -127,45 +137,49 @@ pub fn clip_ranges(ranges: &[(usize, usize)], lo: usize, hi: usize)
 /// the window. Peak message size is bounded like the bucketed
 /// all-reduce; cluster-total traffic stays `(N−1)·payload` regardless
 /// of bucket size.
-pub fn ring_reduce_scatter_bucketed(node: &RingNode,
+pub fn ring_reduce_scatter_bucketed(node: &mut RingNode,
                                     ranges: &[(usize, usize)],
                                     buf: &mut [f32], bucket_elems: usize,
-                                    class: TrafficClass) {
+                                    class: TrafficClass)
+    -> Result<(), DistError> {
     if node.world <= 1 || buf.is_empty() {
-        return;
+        return Ok(());
     }
     let bucket = bucket_elems.max(1);
     let mut off = 0;
     while off < buf.len() {
         let hi = (off + bucket).min(buf.len());
         let clipped = clip_ranges(ranges, off, hi);
-        ring_reduce_scatter(node, &clipped, &mut buf[off..hi], class);
+        ring_reduce_scatter(node, &clipped, &mut buf[off..hi], class)?;
         off = hi;
     }
+    Ok(())
 }
 
 /// Ring all-gather over a shared flat buffer partitioned into per-rank
 /// ranges (`ranges[w]` = the slice rank `w` is authoritative for; the
 /// ZeRO-1 shard map). On return every rank's `buf` holds every range's
 /// up-to-date contents. Ranges may be empty.
-pub fn ring_all_gather(node: &RingNode, ranges: &[(usize, usize)],
-                       buf: &mut [f32], class: TrafficClass) {
+pub fn ring_all_gather(node: &mut RingNode, ranges: &[(usize, usize)],
+                       buf: &mut [f32], class: TrafficClass)
+    -> Result<(), DistError> {
     let (n, r) = (node.world, node.rank);
     assert_eq!(ranges.len(), n, "one range per rank");
     if n <= 1 {
-        return;
+        return Ok(());
     }
     let mut send_c = r;
     for s in 0..n - 1 {
         let (lo, hi) = ranges[send_c];
-        node.send_right(class, buf[lo..hi].to_vec());
+        node.send_right(class, buf[lo..hi].to_vec())?;
         let recv_c = (r + n - 1 - s) % n;
         let (lo, hi) = ranges[recv_c];
-        let incoming = node.recv_left();
+        let incoming = node.recv_left()?;
         debug_assert_eq!(incoming.len(), hi - lo);
         buf[lo..hi].copy_from_slice(&incoming);
         send_c = recv_c;
     }
+    Ok(())
 }
 
 /// Reference sum for tests: elementwise sum of every rank's vector.
@@ -195,10 +209,11 @@ mod tests {
             let handles: Vec<_> = nodes
                 .into_iter()
                 .zip(inputs)
-                .map(|(node, mut data)| {
+                .map(|(mut node, mut data)| {
                     s.spawn(move || {
-                        ring_all_reduce(&node, &mut data, bucket,
-                                        TrafficClass::GradReduce);
+                        ring_all_reduce(&mut node, &mut data, bucket,
+                                        TrafficClass::GradReduce)
+                            .unwrap();
                         data
                     })
                 })
@@ -272,12 +287,13 @@ mod tests {
             let handles: Vec<_> = nodes
                 .into_iter()
                 .zip(inputs)
-                .map(|(node, mut data)| {
+                .map(|(mut node, mut data)| {
                     let ranges = &ranges;
                     s.spawn(move || {
                         ring_reduce_scatter_bucketed(
-                            &node, ranges, &mut data, bucket,
-                            TrafficClass::GradScatter);
+                            &mut node, ranges, &mut data, bucket,
+                            TrafficClass::GradScatter)
+                            .unwrap();
                         data
                     })
                 })
@@ -386,7 +402,7 @@ mod tests {
             let handles: Vec<_> = nodes
                 .into_iter()
                 .enumerate()
-                .map(|(w, node)| {
+                .map(|(w, mut node)| {
                     let ranges = &ranges;
                     s.spawn(move || {
                         // Rank knows only its own range's true values.
@@ -395,8 +411,9 @@ mod tests {
                         for i in lo..hi {
                             buf[i] = i as f32;
                         }
-                        ring_all_gather(&node, ranges, &mut buf,
-                                        TrafficClass::ParamGather);
+                        ring_all_gather(&mut node, ranges, &mut buf,
+                                        TrafficClass::ParamGather)
+                            .unwrap();
                         buf
                     })
                 })

@@ -1,16 +1,35 @@
-//! In-process transport for the data-parallel engine.
+//! Transports for the data-parallel engine.
 //!
-//! Workers are threads; links are `mpsc` channels arranged in a ring
-//! (plus a direct gather link to rank 0 for checkpoint-style state
-//! collection). Every message is accounted — bytes and message count
-//! per [`TrafficClass`], plus a simulated link-time integral under an
+//! Every worker owns a [`RingNode`]: ring neighbours plus a direct
+//! gather link to rank 0 for checkpoint-style state collection. Two
+//! transports implement the same interface behind an internal link
+//! enum:
+//!
+//! - **channel** — workers are threads; links are `mpsc` channels.
+//!   This is the seed behavior, bit-identical to what it always was.
+//! - **socket** — links are localhost TCP streams speaking the
+//!   length-framed codec of `transport::framer`, wrapped in the
+//!   retry/timeout middleware of `transport::retryer`. Workers can be
+//!   threads (`transport=tcp`) or OS processes (`transport=socket`).
+//!
+//! Every message is accounted — bytes and message count per
+//! [`TrafficClass`], plus a simulated link-time integral under an
 //! `alpha + bytes/beta` cost model — so a run's measured traffic can be
 //! cross-checked against the analytical `cluster.rs` predictions.
+//! Retransmissions are accounted under [`TrafficClass::Retry`]: the
+//! four base classes stay byte-exact across transports (and across
+//! fault injection), and the retry ledger isolates the overhead.
+//!
+//! Link failures no longer panic: sends and receives return a typed
+//! [`DistError`] naming the rank and the peer, which the worker layer
+//! propagates instead of crashing the trainer.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, OnceLock};
 
+use super::error::DistError;
+use super::transport::SocketLink;
 use crate::telemetry::{Event, EventBus};
 use crate::util::json::Json;
 
@@ -19,7 +38,9 @@ use crate::util::json::Json;
 /// The gradient phases are attributed separately on purpose: a ZeRO-2
 /// step's reduce-scatter must never be lumped under the all-reduce
 /// class, or the measured-vs-modeled cross-check would double-count
-/// one schedule's bytes against the other's closed form.
+/// one schedule's bytes against the other's closed form. The same
+/// discipline puts retransmitted bytes in their own class: a lossy
+/// link must not inflate the base ledgers the closed forms predict.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TrafficClass {
     /// Gradient ring all-reduce (ZeRO-1 / replicated schedules).
@@ -30,14 +51,18 @@ pub enum TrafficClass {
     ParamGather,
     /// Optimizer-state collection (checkpoint / state round-trip).
     StateSync,
+    /// Retransmitted payload bytes (socket transport only): every
+    /// attempt after the first, whatever base class it carries.
+    Retry,
 }
 
 impl TrafficClass {
-    pub const ALL: [TrafficClass; 4] = [
+    pub const ALL: [TrafficClass; 5] = [
         TrafficClass::GradReduce,
         TrafficClass::GradScatter,
         TrafficClass::ParamGather,
         TrafficClass::StateSync,
+        TrafficClass::Retry,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -46,6 +71,7 @@ impl TrafficClass {
             TrafficClass::GradScatter => "grad_scatter",
             TrafficClass::ParamGather => "param_gather",
             TrafficClass::StateSync => "state_sync",
+            TrafficClass::Retry => "retry",
         }
     }
 
@@ -55,6 +81,7 @@ impl TrafficClass {
             TrafficClass::GradScatter => 1,
             TrafficClass::ParamGather => 2,
             TrafficClass::StateSync => 3,
+            TrafficClass::Retry => 4,
         }
     }
 }
@@ -98,7 +125,7 @@ struct ClassCounters {
 
 /// Cluster-wide traffic ledger, shared by every endpoint.
 pub struct CommStats {
-    classes: [ClassCounters; 4],
+    classes: [ClassCounters; 5],
     /// Sum of per-message modeled times (ns). An aggregate link-time
     /// integral, NOT wall-clock: messages on different links overlap.
     sim_link_ns: AtomicU64,
@@ -136,10 +163,19 @@ impl CommStats {
 
     /// Record one message from `rank`, publishing it to the attached
     /// bus (if any) with sender attribution.
-    fn record_from(&self, rank: usize, class: TrafficClass, bytes: u64) {
+    pub(crate) fn record_from(&self, rank: usize, class: TrafficClass,
+                              bytes: u64) {
         self.record(class, bytes);
         if let Some(bus) = self.bus.get() {
             bus.publish(Event::Message { rank, class: class.name(), bytes });
+        }
+    }
+
+    /// Publish a non-ledger event (retries, timeouts) to the attached
+    /// bus, if any.
+    pub(crate) fn publish(&self, event: Event) {
+        if let Some(bus) = self.bus.get() {
+            bus.publish(event);
         }
     }
 
@@ -169,6 +205,7 @@ impl CommStats {
                 self.bytes(TrafficClass::GradScatter),
                 self.bytes(TrafficClass::ParamGather),
                 self.bytes(TrafficClass::StateSync),
+                self.bytes(TrafficClass::Retry),
             ],
         }
     }
@@ -197,7 +234,7 @@ impl CommStats {
 /// Byte counters frozen at one instant.
 #[derive(Debug, Clone, Copy)]
 pub struct CommSnapshot {
-    bytes: [u64; 4],
+    bytes: [u64; 5],
 }
 
 impl CommSnapshot {
@@ -246,6 +283,13 @@ impl<T> CollectiveHandle<T> {
         self.rx.recv().expect("collective dropped before completing")
     }
 
+    /// Like `wait`, but a completion side dropped without resolving
+    /// (a comm thread that died mid-collective) yields `None` instead
+    /// of panicking.
+    pub fn wait_opt(self) -> Option<T> {
+        self.rx.recv().ok()
+    }
+
     pub fn try_ready(&self) -> Option<T> {
         self.rx.try_recv().ok()
     }
@@ -257,51 +301,119 @@ pub fn collective_handle<T>() -> (CollectiveDone<T>, CollectiveHandle<T>) {
     (CollectiveDone { tx }, CollectiveHandle { rx })
 }
 
+/// The wire under a [`RingNode`]: in-process mpsc channels (the seed
+/// transport) or framed TCP streams with retry middleware.
+enum LinkImpl {
+    Channel {
+        right: Sender<Vec<f32>>,
+        left: Receiver<Vec<f32>>,
+        /// Absent at rank 0 — the root must not hold a sender clone,
+        /// or a dead worker would deadlock the gather instead of
+        /// closing the channel.
+        to_root: Option<Sender<(usize, Vec<f32>)>>,
+        /// Present only at rank 0.
+        root_rx: Option<Receiver<(usize, Vec<f32>)>>,
+    },
+    Socket(Box<SocketLink>),
+}
+
 /// One worker's endpoints: ring neighbours + the rank-0 gather link.
 pub struct RingNode {
     pub rank: usize,
     pub world: usize,
-    right: Sender<Vec<f32>>,
-    left: Receiver<Vec<f32>>,
-    to_root: Sender<(usize, Vec<f32>)>,
-    /// Present only at rank 0.
-    root_rx: Option<Receiver<(usize, Vec<f32>)>>,
+    link: LinkImpl,
     stats: Arc<CommStats>,
 }
 
 impl RingNode {
+    /// Wrap a connected socket link (see `transport::socket_ring_world`
+    /// and `transport::proc`).
+    pub(crate) fn from_socket(rank: usize, world: usize,
+                              link: SocketLink, stats: Arc<CommStats>)
+        -> RingNode {
+        RingNode { rank, world, link: LinkImpl::Socket(Box::new(link)), stats }
+    }
+
+    fn right_peer(&self) -> usize {
+        (self.rank + 1) % self.world
+    }
+
+    fn left_peer(&self) -> usize {
+        (self.rank + self.world - 1) % self.world
+    }
+
     /// Send to the right ring neighbour (accounted).
-    pub fn send_right(&self, class: TrafficClass, data: Vec<f32>) {
+    pub fn send_right(&mut self, class: TrafficClass, data: Vec<f32>)
+        -> Result<(), DistError> {
         self.stats.record_from(self.rank, class, (data.len() * 4) as u64);
-        self.right.send(data).expect("ring neighbour hung up");
+        let (rank, peer) = (self.rank, self.right_peer());
+        match &mut self.link {
+            LinkImpl::Channel { right, .. } => right
+                .send(data)
+                .map_err(|_| DistError::PeerDisconnected { rank, peer }),
+            LinkImpl::Socket(sock) => {
+                sock.send_right(class, &data, &self.stats)
+            }
+        }
     }
 
     /// Receive from the left ring neighbour (blocking).
-    pub fn recv_left(&self) -> Vec<f32> {
-        self.left.recv().expect("ring neighbour hung up")
+    pub fn recv_left(&mut self) -> Result<Vec<f32>, DistError> {
+        let (rank, peer) = (self.rank, self.left_peer());
+        match &mut self.link {
+            LinkImpl::Channel { left, .. } => left
+                .recv()
+                .map_err(|_| DistError::PeerDisconnected { rank, peer }),
+            LinkImpl::Socket(sock) => sock.recv_left(),
+        }
     }
 
     /// Gather one payload per rank at rank 0. Non-root ranks send and
-    /// get `None`; rank 0 collects (its own payload moves no bytes).
-    pub fn gather_to_root(&self, class: TrafficClass, payload: Vec<f32>)
-        -> Option<Vec<Vec<f32>>> {
-        match &self.root_rx {
-            None => {
-                self.stats
-                    .record_from(self.rank, class, (payload.len() * 4) as u64);
-                self.to_root
-                    .send((self.rank, payload))
-                    .expect("root hung up");
-                None
-            }
-            Some(rx) => {
-                let mut out: Vec<Vec<f32>> = vec![Vec::new(); self.world];
-                out[self.rank] = payload;
-                for _ in 0..self.world - 1 {
-                    let (rank, data) = rx.recv().expect("worker hung up");
-                    out[rank] = data;
+    /// get `Ok(None)`; rank 0 collects (its own payload moves no
+    /// bytes).
+    pub fn gather_to_root(&mut self, class: TrafficClass,
+                          payload: Vec<f32>)
+        -> Result<Option<Vec<Vec<f32>>>, DistError> {
+        if self.world == 1 {
+            return Ok(Some(vec![payload]));
+        }
+        let rank = self.rank;
+        if rank != 0 {
+            self.stats
+                .record_from(rank, class, (payload.len() * 4) as u64);
+        }
+        match &mut self.link {
+            LinkImpl::Channel { to_root, root_rx, .. } => match root_rx {
+                None => {
+                    let tx = to_root
+                        .as_ref()
+                        .ok_or(DistError::CommHangup { rank })?;
+                    tx.send((rank, payload)).map_err(|_| {
+                        DistError::PeerDisconnected { rank, peer: 0 }
+                    })?;
+                    Ok(None)
                 }
-                Some(out)
+                Some(rx) => {
+                    let mut out: Vec<Vec<f32>> =
+                        vec![Vec::new(); self.world];
+                    let mut got = vec![false; self.world];
+                    out[rank] = payload;
+                    got[rank] = true;
+                    for _ in 0..self.world - 1 {
+                        let (from, data) = rx.recv().map_err(|_| {
+                            DistError::PeerDisconnected {
+                                rank,
+                                peer: first_missing(&got),
+                            }
+                        })?;
+                        out[from] = data;
+                        got[from] = true;
+                    }
+                    Ok(Some(out))
+                }
+            },
+            LinkImpl::Socket(sock) => {
+                sock.gather_to_root(class, payload, &self.stats)
             }
         }
     }
@@ -309,6 +421,11 @@ impl RingNode {
     pub fn stats(&self) -> &Arc<CommStats> {
         &self.stats
     }
+}
+
+/// Lowest rank whose payload never arrived (for error attribution).
+pub(crate) fn first_missing(got: &[bool]) -> usize {
+    got.iter().position(|g| !g).unwrap_or(0)
 }
 
 /// Build an N-worker ring world; returns one node per rank plus the
@@ -335,10 +452,16 @@ pub fn ring_world(world: usize, link: LinkModel)
         nodes.push(RingNode {
             rank,
             world,
-            right: txs[rank].clone(),
-            left: rxs[left_link].take().expect("link already claimed"),
-            to_root: root_tx.clone(),
-            root_rx: if rank == 0 { root_rx.take() } else { None },
+            link: LinkImpl::Channel {
+                right: txs[rank].clone(),
+                left: rxs[left_link].take().expect("link already claimed"),
+                to_root: if rank == 0 {
+                    None
+                } else {
+                    Some(root_tx.clone())
+                },
+                root_rx: if rank == 0 { root_rx.take() } else { None },
+            },
             stats: stats.clone(),
         });
     }
@@ -355,11 +478,12 @@ mod tests {
         std::thread::scope(|s| {
             // Threads take ownership: &RingNode is !Send (mpsc
             // Receiver is !Sync).
-            for node in nodes {
+            for mut node in nodes {
                 s.spawn(move || {
                     node.send_right(TrafficClass::GradReduce,
-                                    vec![node.rank as f32; 4]);
-                    let got = node.recv_left();
+                                    vec![node.rank as f32; 4])
+                        .unwrap();
+                    let got = node.recv_left().unwrap();
                     let left = (node.rank + 2) % 3;
                     assert_eq!(got, vec![left as f32; 4]);
                 });
@@ -368,6 +492,7 @@ mod tests {
         assert_eq!(stats.bytes(TrafficClass::GradReduce), 3 * 16);
         assert_eq!(stats.messages(TrafficClass::GradReduce), 3);
         assert_eq!(stats.bytes(TrafficClass::ParamGather), 0);
+        assert_eq!(stats.bytes(TrafficClass::Retry), 0);
         assert!(stats.sim_link_secs() > 0.0);
     }
 
@@ -378,14 +503,23 @@ mod tests {
         let results: Vec<_> = std::thread::scope(|s| {
             let handles: Vec<_> = nodes
                 .into_iter()
-                .map(|node| {
+                .map(|mut node| {
                     s.spawn(move || {
                         node.gather_to_root(TrafficClass::StateSync,
                                             vec![node.rank as f32])
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(rank, h)| {
+                    h.join()
+                        .map_err(|_| DistError::WorkerPanicked { rank })
+                        .and_then(|r| r)
+                        .unwrap()
+                })
+                .collect()
         });
         let gathered = results[0].clone().expect("rank 0 gathers");
         for (r, payload) in gathered.iter().enumerate() {
@@ -406,6 +540,13 @@ mod tests {
     }
 
     #[test]
+    fn dropped_completion_resolves_wait_opt_to_none() {
+        let (done, handle) = collective_handle::<u32>();
+        drop(done);
+        assert!(handle.wait_opt().is_none());
+    }
+
+    #[test]
     fn link_model_times_are_additive() {
         let link = LinkModel { latency_ns: 100.0, bytes_per_sec: 1e9 };
         // 1000 B at 1 GB/s = 1000 ns + 100 ns latency.
@@ -419,11 +560,12 @@ mod tests {
         // all-reduce ledger.
         let (nodes, stats) = ring_world(2, LinkModel::default());
         std::thread::scope(|s| {
-            for node in nodes {
+            for mut node in nodes {
                 s.spawn(move || {
                     node.send_right(TrafficClass::GradScatter,
-                                    vec![0.0; 8]);
-                    node.recv_left();
+                                    vec![0.0; 8])
+                        .unwrap();
+                    node.recv_left().unwrap();
                 });
             }
         });
@@ -438,11 +580,12 @@ mod tests {
         let bus = EventBus::new(64);
         stats.attach_bus(Arc::clone(&bus));
         std::thread::scope(|s| {
-            for node in nodes {
+            for mut node in nodes {
                 s.spawn(move || {
                     node.send_right(TrafficClass::GradReduce,
-                                    vec![1.0; 8]);
-                    node.recv_left();
+                                    vec![1.0; 8])
+                        .unwrap();
+                    node.recv_left().unwrap();
                 });
             }
         });
@@ -459,12 +602,55 @@ mod tests {
 
     #[test]
     fn single_worker_world_is_valid() {
-        let (nodes, stats) = ring_world(1, LinkModel::default());
+        let (mut nodes, stats) = ring_world(1, LinkModel::default());
         assert_eq!(nodes.len(), 1);
         let got = nodes[0]
             .gather_to_root(TrafficClass::StateSync, vec![7.0])
+            .unwrap()
             .unwrap();
         assert_eq!(got, vec![vec![7.0]]);
         assert_eq!(stats.total_bytes(), 0);
+    }
+
+    #[test]
+    fn dead_peer_is_a_typed_error_naming_the_rank() {
+        let (mut nodes, _stats) = ring_world(2, LinkModel::default());
+        // Rank 1 dies: its inbound link (rank 0's right) is gone.
+        let dead = nodes.remove(1);
+        drop(dead);
+        let err = nodes[0]
+            .send_right(TrafficClass::GradReduce, vec![1.0; 4])
+            .unwrap_err();
+        assert_eq!(err,
+                   DistError::PeerDisconnected { rank: 0, peer: 1 });
+        let err = nodes[0].recv_left().unwrap_err();
+        assert_eq!(err,
+                   DistError::PeerDisconnected { rank: 0, peer: 1 });
+    }
+
+    #[test]
+    fn dead_worker_fails_the_root_gather_with_its_rank() {
+        let (mut nodes, _stats) = ring_world(3, LinkModel::default());
+        let dead = nodes.remove(2);
+        drop(dead);
+        let results: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .map(|mut node| {
+                    s.spawn(move || {
+                        node.gather_to_root(TrafficClass::StateSync,
+                                            vec![node.rank as f32])
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Rank 1 delivered; rank 0 then waited on rank 2, whose
+        // channel sender is gone once every live sender finished.
+        assert_eq!(
+            results[0],
+            Err(DistError::PeerDisconnected { rank: 0, peer: 2 })
+        );
+        assert_eq!(results[1], Ok(None));
     }
 }

@@ -1,0 +1,126 @@
+//! Typed failures of the distributed engine.
+//!
+//! Every comm-layer and worker-thread failure surfaces as a
+//! [`DistError`] naming the rank where it was observed (and the peer
+//! that caused it, when there is one), instead of the join-panics the
+//! engine used to die with. `DistError` implements `std::error::Error`,
+//! so `?` lifts it into the `anyhow::Result` plumbing everywhere else.
+
+use std::fmt;
+
+/// A failure in the distributed engine, attributed to a rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DistError {
+    /// A peer's end of a link closed (process death, dropped node).
+    PeerDisconnected { rank: usize, peer: usize },
+    /// A send exhausted its retry budget without an acknowledgement.
+    Timeout {
+        rank: usize,
+        peer: usize,
+        class: &'static str,
+        attempts: usize,
+    },
+    /// A worker thread panicked; the panic payload is lost but the
+    /// rank is not.
+    WorkerPanicked { rank: usize },
+    /// A worker process exited with a non-zero status.
+    WorkerExited { rank: usize, code: i32 },
+    /// A worker's comm thread hung up mid-step (its job queue closed
+    /// before the step finished streaming).
+    CommHangup { rank: usize },
+    /// Transport-level I/O failure not covered above.
+    Io { rank: usize, msg: String },
+}
+
+impl DistError {
+    /// The rank that observed the failure.
+    pub fn rank(&self) -> usize {
+        match self {
+            DistError::PeerDisconnected { rank, .. }
+            | DistError::Timeout { rank, .. }
+            | DistError::WorkerPanicked { rank }
+            | DistError::WorkerExited { rank, .. }
+            | DistError::CommHangup { rank }
+            | DistError::Io { rank, .. } => *rank,
+        }
+    }
+}
+
+impl fmt::Display for DistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DistError::PeerDisconnected { rank, peer } => write!(
+                f,
+                "rank {rank}: peer rank {peer} disconnected"
+            ),
+            DistError::Timeout { rank, peer, class, attempts } => {
+                write!(
+                    f,
+                    "rank {rank}: {class} send to rank {peer} timed \
+                     out after {attempts} attempts"
+                )
+            }
+            DistError::WorkerPanicked { rank } => {
+                write!(f, "dist worker thread for rank {rank} panicked")
+            }
+            DistError::WorkerExited { rank, code } => write!(
+                f,
+                "dist worker process for rank {rank} exited with \
+                 status {code}"
+            ),
+            DistError::CommHangup { rank } => write!(
+                f,
+                "rank {rank}: comm thread hung up mid-step"
+            ),
+            DistError::Io { rank, msg } => {
+                write!(f, "rank {rank}: transport i/o error: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DistError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_name_the_rank() {
+        let cases: Vec<(DistError, usize)> = vec![
+            (DistError::PeerDisconnected { rank: 1, peer: 2 }, 1),
+            (
+                DistError::Timeout {
+                    rank: 3,
+                    peer: 0,
+                    class: "grad_reduce",
+                    attempts: 10,
+                },
+                3,
+            ),
+            (DistError::WorkerPanicked { rank: 2 }, 2),
+            (DistError::WorkerExited { rank: 4, code: 1 }, 4),
+            (DistError::CommHangup { rank: 0 }, 0),
+            (DistError::Io { rank: 5, msg: "broken pipe".into() }, 5),
+        ];
+        for (e, rank) in cases {
+            assert_eq!(e.rank(), rank);
+            let msg = e.to_string();
+            assert!(
+                msg.contains(&format!("rank {rank}")),
+                "{msg:?} should name rank {rank}"
+            );
+        }
+    }
+
+    #[test]
+    fn lifts_into_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(DistError::PeerDisconnected { rank: 0, peer: 3 })?;
+            Ok(())
+        }
+        let err = fails().unwrap_err();
+        assert!(err.downcast_ref::<DistError>().is_some());
+        assert!(err.to_string().contains("peer rank 3"));
+    }
+}

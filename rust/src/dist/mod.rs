@@ -48,13 +48,18 @@
 pub mod allreduce;
 pub mod bucket;
 pub mod comm;
+pub mod error;
 pub mod shard;
+pub mod transport;
 pub mod worker;
 
 pub use bucket::{BucketPlan, ComputeModel, OverlapTimeline, StepTiming};
 pub use comm::{CollectiveDone, CollectiveHandle, CommStats, LinkModel,
                TrafficClass};
+pub use error::DistError;
 pub use shard::{shardable, FlatLayout, Partition};
+pub use transport::{parse_transport, FaultSpec, SocketOptions,
+                    TimeoutPolicy, TransportKind};
 pub use worker::{DistOptions, DistTrainer, StepMode, StepStream};
 
 use anyhow::Result;

@@ -1,0 +1,249 @@
+//! Receiver side of the socket transport: the acceptor loop and the
+//! per-connection reader threads.
+//!
+//! Each rank binds one listener. Outbound links identify themselves
+//! with a hello frame (link kind + sender rank) right after
+//! connecting, so the acceptor can accept connections in any order
+//! and still wire each one to the right queue. Every inbound data
+//! connection then gets a detached reader thread that:
+//!
+//! 1. reads frames forever (no timeout on the receive side),
+//! 2. drops corrupt frames *without acking* (the sender's timeout
+//!    turns that into a retransmission),
+//! 3. dedupes by sequence number — exactly-once, in-order delivery:
+//!    the expected seq is delivered then acked; an already-seen seq is
+//!    re-acked and discarded (late duplicates from `dup`/`reorder`
+//!    faults or premature retransmits),
+//! 4. delivers payloads into an in-process mpsc queue drained by
+//!    `RingNode::recv_left` / the root gather.
+//!
+//! Delivery happens *before* the ack: a consumer that died never acks,
+//! so the failure propagates to the sender as a timeout/EOF instead of
+//! being silently swallowed. A reader thread exits on EOF, read error,
+//! or a closed delivery queue — dropping its queue sender, which the
+//! application sees as [`DistError::PeerDisconnected`] naming the
+//! peer.
+//!
+//! [`DistError::PeerDisconnected`]: crate::dist::DistError::PeerDisconnected
+
+use std::io::{self, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::framer::{
+    read_frame, write_frame, Frame, Inbound, KIND_DATA, KIND_HELLO,
+};
+
+/// Link kinds carried in hello frames.
+pub(crate) const LINK_RING: u8 = 0;
+pub(crate) const LINK_GATHER: u8 = 1;
+
+/// Identify an outbound connection to the accepting rank.
+pub(crate) fn send_hello(stream: &mut TcpStream, link_kind: u8,
+                         from_rank: usize) -> io::Result<()> {
+    write_frame(stream, &Frame::hello(link_kind, from_rank))?;
+    stream.flush()
+}
+
+/// Read the identifying hello off a fresh inbound connection.
+pub(crate) fn read_hello(stream: &mut TcpStream)
+    -> io::Result<(u8, usize)> {
+    match read_frame(stream)? {
+        Inbound::Frame(f) if f.kind == KIND_HELLO => {
+            Ok((f.class, f.seq as usize))
+        }
+        other => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("expected hello frame, got {other:?}"),
+        )),
+    }
+}
+
+/// The verify → dedupe → deliver → ack loop shared by both link
+/// kinds. `deliver` returns false when the consumer is gone.
+fn reader_loop(mut stream: TcpStream,
+               mut deliver: impl FnMut(Vec<f32>) -> bool) {
+    if stream.set_read_timeout(None).is_err()
+        || stream.set_nodelay(true).is_err()
+    {
+        return;
+    }
+    let mut expected: u64 = 0;
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Inbound::Frame(f)) if f.kind == KIND_DATA => {
+                if f.seq == expected {
+                    let ack = Frame::ack(f.class, f.seq);
+                    if !deliver(f.payload)
+                        || write_frame(&mut stream, &ack).is_err()
+                    {
+                        return;
+                    }
+                    expected += 1;
+                } else if f.seq < expected {
+                    // Duplicate of a delivered frame: re-ack only.
+                    let ack = Frame::ack(f.class, f.seq);
+                    if write_frame(&mut stream, &ack).is_err() {
+                        return;
+                    }
+                }
+                // f.seq > expected cannot happen under stop-and-wait;
+                // drop it and let the sender retransmit in order.
+            }
+            // Stray acks/hellos are noise on a receive link.
+            Ok(Inbound::Frame(_)) => {}
+            // Corrupt: consume, do NOT ack — sender will retransmit.
+            Ok(Inbound::Corrupt { .. }) => {}
+            Ok(Inbound::Eof) | Err(_) => return,
+        }
+    }
+}
+
+/// Spawn the detached reader for one inbound data connection.
+fn spawn_reader(stream: TcpStream, tx: Sender<Vec<f32>>) {
+    std::thread::spawn(move || {
+        reader_loop(stream, move |payload| tx.send(payload).is_ok());
+    });
+}
+
+/// Inbound queues for one rank, produced by the acceptor loop.
+pub(crate) struct InboundLinks {
+    /// Payloads from the left ring neighbour.
+    pub left_rx: Option<Receiver<Vec<f32>>>,
+    /// Per-sender gather queues at rank 0 (index r-1 ↔ rank r). One
+    /// queue per rank, not one shared queue: a dead worker closes its
+    /// own queue, so the root can name exactly which rank is gone.
+    pub gather_rx: Vec<Receiver<Vec<f32>>>,
+}
+
+/// Accept this rank's expected inbound connections (one ring link,
+/// plus `world - 1` gather links at rank 0), classify each by its
+/// hello, and spawn its reader thread.
+pub(crate) fn accept_inbound(listener: &TcpListener, rank: usize,
+                             world: usize) -> io::Result<InboundLinks> {
+    let ring_expected = usize::from(world > 1);
+    let gather_expected = if rank == 0 { world - 1 } else { 0 };
+    let (ring_tx, ring_rx) = channel();
+    let mut gather_txs: Vec<Option<Sender<Vec<f32>>>> =
+        Vec::with_capacity(gather_expected);
+    let mut gather_rxs: Vec<Receiver<Vec<f32>>> =
+        Vec::with_capacity(gather_expected);
+    for _ in 0..gather_expected {
+        let (tx, rx) = channel();
+        gather_txs.push(Some(tx));
+        gather_rxs.push(rx);
+    }
+    let mut ring_seen = 0usize;
+    let mut gather_seen = 0usize;
+    while ring_seen < ring_expected || gather_seen < gather_expected {
+        let (mut stream, _) = listener.accept()?;
+        let (kind, from) = read_hello(&mut stream)?;
+        match kind {
+            LINK_RING if ring_seen < ring_expected
+                && from == (rank + world - 1) % world => {
+                ring_seen += 1;
+                spawn_reader(stream, ring_tx.clone());
+            }
+            LINK_GATHER if from >= 1
+                && from < world
+                && gather_txs
+                    .get(from - 1)
+                    .is_some_and(Option::is_some) => {
+                gather_seen += 1;
+                let tx = gather_txs[from - 1].take().unwrap();
+                spawn_reader(stream, tx);
+            }
+            _ => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("rank {rank}: unexpected link kind {kind} \
+                             from rank {from}"),
+                ))
+            }
+        }
+    }
+    // The acceptor's own ring clone must die here, or a dead peer's
+    // queue would never close.
+    drop(ring_tx);
+    Ok(InboundLinks {
+        left_rx: (ring_expected > 0).then_some(ring_rx),
+        gather_rx: gather_rxs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let w = TcpStream::connect(addr).unwrap();
+        let (r, _) = l.accept().unwrap();
+        (w, r)
+    }
+
+    #[test]
+    fn hello_identifies_the_link() {
+        let (mut w, mut r) = pair();
+        send_hello(&mut w, LINK_GATHER, 3).unwrap();
+        assert_eq!(read_hello(&mut r).unwrap(), (LINK_GATHER, 3));
+    }
+
+    #[test]
+    fn reader_delivers_in_order_acks_and_dedupes() {
+        let (mut w, r) = pair();
+        let (tx, rx) = channel();
+        spawn_reader(r, tx);
+        // In-order frames deliver and ack.
+        write_frame(&mut w, &Frame::data(0, 0, &[1.0])).unwrap();
+        write_frame(&mut w, &Frame::data(0, 1, &[2.0])).unwrap();
+        // Duplicate of seq 0: re-acked, not redelivered.
+        write_frame(&mut w, &Frame::data(0, 0, &[1.0])).unwrap();
+        write_frame(&mut w, &Frame::data(0, 2, &[3.0])).unwrap();
+        assert_eq!(rx.recv().unwrap(), vec![1.0]);
+        assert_eq!(rx.recv().unwrap(), vec![2.0]);
+        assert_eq!(rx.recv().unwrap(), vec![3.0]);
+        // Four acks came back: seqs 0, 1, 0 (dup), 2.
+        let mut acks = Vec::new();
+        for _ in 0..4 {
+            match read_frame(&mut w).unwrap() {
+                Inbound::Frame(f) => {
+                    assert_eq!(f.kind, super::super::framer::KIND_ACK);
+                    acks.push(f.seq);
+                }
+                other => panic!("expected ack, got {other:?}"),
+            }
+        }
+        assert_eq!(acks, vec![0, 1, 0, 2]);
+    }
+
+    #[test]
+    fn corrupt_frame_is_not_acked_or_delivered() {
+        let (mut w, r) = pair();
+        let (tx, rx) = channel();
+        spawn_reader(r, tx);
+        let mut bytes = Frame::data(0, 0, &[5.0, 6.0]).encode();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xff;
+        w.write_all(&bytes).unwrap();
+        // Resend clean: delivered once, acked once.
+        write_frame(&mut w, &Frame::data(0, 0, &[5.0, 6.0])).unwrap();
+        assert_eq!(rx.recv().unwrap(), vec![5.0, 6.0]);
+        match read_frame(&mut w).unwrap() {
+            Inbound::Frame(f) => assert_eq!(f.seq, 0),
+            other => panic!("expected ack, got {other:?}"),
+        }
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn dead_sender_closes_the_queue() {
+        let (w, r) = pair();
+        let (tx, rx) = channel();
+        spawn_reader(r, tx);
+        drop(w);
+        assert!(rx.recv().is_err());
+    }
+}

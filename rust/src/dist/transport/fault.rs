@@ -1,0 +1,293 @@
+//! Deterministic fault injection between the codec and the retry
+//! middleware.
+//!
+//! The injector sits on the *sender* side of a link and mangles
+//! outgoing DATA frames only — acks and hellos always pass clean, and
+//! it never touches the 18-byte header, so the receiver can always
+//! consume whole frames (a corrupt payload is caught by checksum, not
+//! by a desynchronized stream). Decisions are drawn from a seeded
+//! [`Rng`] per link, so a faulty run is bit-reproducible.
+//!
+//! Semantics per outgoing frame (one roll, cumulative thresholds, so
+//! at most one fault fires per write):
+//!
+//! - **drop**: nothing hits the wire; the retryer's ack timeout fires.
+//! - **corrupt**: one payload byte is flipped; the receiver drops the
+//!   frame on checksum and withholds the ack.
+//! - **dup**: the frame is written twice; the receiver's seq dedupe
+//!   delivers once and re-acks the copy.
+//! - **reorder**: the frame is held back and flushed *after* the next
+//!   write on the link. Under stop-and-wait the next write is the
+//!   retransmission of the same seq, so reordering manifests as a
+//!   timeout plus a late duplicate — which the dedupe absorbs.
+
+use std::io::{self, Write};
+
+use anyhow::{bail, Result};
+
+use super::framer::HEADER_LEN;
+use crate::util::prng::Rng;
+
+/// Per-link fault rates (each in `[0, 1)`), optionally restricted to
+/// one traffic class by name.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSpec {
+    pub drop: f64,
+    pub dup: f64,
+    pub reorder: f64,
+    pub corrupt: f64,
+    /// `Some("grad_reduce")` injects on that class only; `None` on all.
+    pub class: Option<String>,
+}
+
+impl FaultSpec {
+    /// Parse `"drop:0.05,dup:0.02,reorder:0.01,corrupt:0.03"` (any
+    /// subset; `class:NAME` restricts to one traffic class). Empty
+    /// string means no faults.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        if s.trim().is_empty() {
+            return Ok(spec);
+        }
+        for part in s.split(',') {
+            let Some((key, value)) = part.split_once(':') else {
+                bail!("fault spec {part:?}: expected key:value");
+            };
+            let (key, value) = (key.trim(), value.trim());
+            if key == "class" {
+                spec.class = Some(value.to_string());
+                continue;
+            }
+            let rate: f64 = value
+                .parse()
+                .map_err(|_| {
+                    anyhow::anyhow!("fault rate {value:?} is not a \
+                                     number")
+                })?;
+            if !(0.0..1.0).contains(&rate) {
+                bail!("fault rate {key}:{rate} outside [0, 1)");
+            }
+            match key {
+                "drop" => spec.drop = rate,
+                "dup" => spec.dup = rate,
+                "reorder" => spec.reorder = rate,
+                "corrupt" => spec.corrupt = rate,
+                other => bail!("unknown fault kind {other:?}"),
+            }
+        }
+        if spec.drop + spec.corrupt + spec.dup + spec.reorder >= 1.0 {
+            bail!("fault rates sum to >= 1: every frame would fault");
+        }
+        Ok(spec)
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.drop == 0.0
+            && self.dup == 0.0
+            && self.reorder == 0.0
+            && self.corrupt == 0.0
+    }
+}
+
+/// What the injector did to one write (exposed for tests/telemetry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    Pass,
+    Drop,
+    Corrupt,
+    Duplicate,
+    Reorder,
+}
+
+/// Seeded fault shim over one link's outgoing data frames.
+#[derive(Debug)]
+pub struct FaultInjector {
+    spec: FaultSpec,
+    rng: Rng,
+    held: Option<Vec<u8>>,
+    /// Total faults injected on this link so far.
+    pub injected: u64,
+}
+
+impl FaultInjector {
+    pub fn new(spec: FaultSpec, seed: u64) -> FaultInjector {
+        FaultInjector {
+            spec,
+            rng: Rng::new(seed),
+            held: None,
+            injected: 0,
+        }
+    }
+
+    /// Decide this write's fate (and consume one roll when rates are
+    /// live for `class_name`).
+    fn decide(&mut self, class_name: &str, payload_len: usize)
+        -> FaultAction {
+        if self.spec.is_noop() {
+            return FaultAction::Pass;
+        }
+        if let Some(only) = &self.spec.class {
+            if only != class_name {
+                return FaultAction::Pass;
+            }
+        }
+        let r = self.rng.f64();
+        let mut edge = self.spec.drop;
+        if r < edge {
+            return FaultAction::Drop;
+        }
+        edge += self.spec.corrupt;
+        if r < edge && payload_len > 0 {
+            return FaultAction::Corrupt;
+        }
+        edge += self.spec.dup;
+        if r < edge {
+            return FaultAction::Duplicate;
+        }
+        edge += self.spec.reorder;
+        if r < edge {
+            return FaultAction::Reorder;
+        }
+        FaultAction::Pass
+    }
+
+    /// Write one encoded data frame through the shim. Returns the
+    /// action taken so the caller can count injections.
+    pub fn write_data(&mut self, w: &mut impl Write, frame: &[u8],
+                      class_name: &str) -> io::Result<FaultAction> {
+        // A held (reordered) frame flushes behind the next write,
+        // whatever that write's own roll would have been.
+        if let Some(held) = self.held.take() {
+            w.write_all(frame)?;
+            w.write_all(&held)?;
+            return Ok(FaultAction::Pass);
+        }
+        let payload_len = frame.len().saturating_sub(HEADER_LEN);
+        let action = self.decide(class_name, payload_len);
+        if action != FaultAction::Pass {
+            self.injected += 1;
+        }
+        match action {
+            FaultAction::Pass => w.write_all(frame)?,
+            FaultAction::Drop => {}
+            FaultAction::Corrupt => {
+                let mut bytes = frame.to_vec();
+                let at = HEADER_LEN + self.rng.below(payload_len);
+                bytes[at] ^= 0x20;
+                w.write_all(&bytes)?;
+            }
+            FaultAction::Duplicate => {
+                w.write_all(frame)?;
+                w.write_all(frame)?;
+            }
+            FaultAction::Reorder => self.held = Some(frame.to_vec()),
+        }
+        Ok(action)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::transport::framer::{read_frame, Frame, Inbound};
+    use std::io::Cursor;
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        let s = FaultSpec::parse(
+            "drop:0.05,dup:0.02,reorder:0.01,corrupt:0.03",
+        )
+        .unwrap();
+        assert_eq!(s.drop, 0.05);
+        assert_eq!(s.dup, 0.02);
+        assert_eq!(s.reorder, 0.01);
+        assert_eq!(s.corrupt, 0.03);
+        assert!(s.class.is_none());
+        let s = FaultSpec::parse("drop:0.1,class:grad_scatter").unwrap();
+        assert_eq!(s.class.as_deref(), Some("grad_scatter"));
+        assert!(FaultSpec::parse("").unwrap().is_noop());
+        assert!(FaultSpec::parse("drop:1.5").is_err());
+        assert!(FaultSpec::parse("explode:0.5").is_err());
+        assert!(FaultSpec::parse("drop=0.5").is_err());
+        assert!(FaultSpec::parse("drop:0.6,dup:0.5").is_err());
+    }
+
+    #[test]
+    fn injector_is_deterministic_per_seed() {
+        let spec =
+            FaultSpec::parse("drop:0.2,dup:0.2,corrupt:0.2").unwrap();
+        let frame = Frame::data(0, 0, &[1.0, 2.0]).encode();
+        let run = |seed: u64| {
+            let mut inj = FaultInjector::new(spec.clone(), seed);
+            let mut out = Vec::new();
+            let actions: Vec<FaultAction> = (0..64)
+                .map(|_| {
+                    inj.write_data(&mut out, &frame, "grad_reduce")
+                        .unwrap()
+                })
+                .collect();
+            (actions, out)
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7).0, run(8).0);
+    }
+
+    #[test]
+    fn class_filter_passes_other_classes_clean() {
+        let spec =
+            FaultSpec::parse("drop:0.9,class:state_sync").unwrap();
+        let mut inj = FaultInjector::new(spec, 1);
+        let frame = Frame::data(0, 0, &[1.0]).encode();
+        let mut out = Vec::new();
+        for _ in 0..32 {
+            assert_eq!(
+                inj.write_data(&mut out, &frame, "grad_reduce")
+                    .unwrap(),
+                FaultAction::Pass
+            );
+        }
+        assert_eq!(inj.injected, 0);
+    }
+
+    #[test]
+    fn corrupt_keeps_framing_but_fails_checksum() {
+        let spec = FaultSpec::parse("corrupt:0.99").unwrap();
+        let mut inj = FaultInjector::new(spec, 3);
+        let frame = Frame::data(1, 5, &[1.0, 2.0, 3.0]);
+        let mut out = Vec::new();
+        let action = inj
+            .write_data(&mut out, &frame.encode(), "grad_reduce")
+            .unwrap();
+        assert_eq!(action, FaultAction::Corrupt);
+        let mut cur = Cursor::new(out);
+        assert_eq!(
+            read_frame(&mut cur).unwrap(),
+            Inbound::Corrupt { seq: 5 }
+        );
+        assert_eq!(read_frame(&mut cur).unwrap(), Inbound::Eof);
+    }
+
+    #[test]
+    fn reorder_holds_then_flushes_behind_the_next_write() {
+        let spec = FaultSpec::parse("reorder:0.99").unwrap();
+        let mut inj = FaultInjector::new(spec, 4);
+        let first = Frame::data(0, 0, &[1.0]);
+        let second = Frame::data(0, 1, &[2.0]);
+        let mut out = Vec::new();
+        assert_eq!(
+            inj.write_data(&mut out, &first.encode(), "grad_reduce")
+                .unwrap(),
+            FaultAction::Reorder
+        );
+        assert!(out.is_empty());
+        // Next write flushes: second frame lands first, held one after.
+        inj.write_data(&mut out, &second.encode(), "grad_reduce")
+            .unwrap();
+        let mut cur = Cursor::new(out);
+        assert_eq!(
+            read_frame(&mut cur).unwrap(),
+            Inbound::Frame(second)
+        );
+        assert_eq!(read_frame(&mut cur).unwrap(), Inbound::Frame(first));
+    }
+}

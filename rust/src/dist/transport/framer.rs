@@ -1,0 +1,213 @@
+//! Length-framed binary codec for the socket transport.
+//!
+//! Every message on the wire is one frame:
+//!
+//! ```text
+//! offset  size  field
+//!      0     1  kind        (0 = data, 1 = ack, 2 = hello)
+//!      1     1  class       traffic-class index (hello: link kind)
+//!      2     8  seq         u64 LE (hello: sender rank)
+//!     10     4  len         u32 LE, payload length in f32 elements
+//!     14     4  checksum    u32 LE, FNV-1a over the payload bytes
+//!     18   4*len payload    f32 LE elements
+//! ```
+//!
+//! The header is never fault-injected (the injector flips payload
+//! bytes only — see `fault.rs`), so a reader can always consume a
+//! whole frame and the stream never desynchronizes; a payload flip
+//! shows up as a checksum mismatch and the frame is dropped without
+//! an ack, which the retry middleware turns into a retransmission.
+
+use std::io::{self, Read, Write};
+
+pub const KIND_DATA: u8 = 0;
+pub const KIND_ACK: u8 = 1;
+pub const KIND_HELLO: u8 = 2;
+
+/// Fixed frame-header length in bytes.
+pub const HEADER_LEN: usize = 18;
+
+/// Upper bound on a frame's payload (elements); a longer length field
+/// means the stream is corrupt beyond recovery.
+const MAX_PAYLOAD_ELEMS: usize = 1 << 28;
+
+/// FNV-1a over a byte slice (32-bit).
+pub fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: u8,
+    pub class: u8,
+    pub seq: u64,
+    pub payload: Vec<f32>,
+}
+
+impl Frame {
+    pub fn data(class: u8, seq: u64, payload: &[f32]) -> Frame {
+        Frame { kind: KIND_DATA, class, seq, payload: payload.to_vec() }
+    }
+
+    pub fn ack(class: u8, seq: u64) -> Frame {
+        Frame { kind: KIND_ACK, class, seq, payload: Vec::new() }
+    }
+
+    /// `class` carries the link kind, `seq` the sender's rank.
+    pub fn hello(link_kind: u8, rank: usize) -> Frame {
+        Frame {
+            kind: KIND_HELLO,
+            class: link_kind,
+            seq: rank as u64,
+            payload: Vec::new(),
+        }
+    }
+
+    /// Serialize to wire bytes (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(HEADER_LEN + 4 * self.payload.len());
+        out.push(self.kind);
+        out.push(self.class);
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(
+            &(self.payload.len() as u32).to_le_bytes(),
+        );
+        let mut body = Vec::with_capacity(4 * self.payload.len());
+        for x in &self.payload {
+            body.extend_from_slice(&x.to_le_bytes());
+        }
+        out.extend_from_slice(&fnv1a(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+}
+
+/// What a read produced: a verified frame, a checksum failure (frame
+/// consumed but payload untrusted), or a cleanly closed stream.
+#[derive(Debug, PartialEq)]
+pub enum Inbound {
+    Frame(Frame),
+    Corrupt { seq: u64 },
+    Eof,
+}
+
+/// Read one frame. Timeouts and hard I/O failures propagate as
+/// `io::Error`; an EOF at a frame boundary is `Inbound::Eof`.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Inbound> {
+    let mut header = [0u8; HEADER_LEN];
+    if let Err(e) = r.read_exact(&mut header) {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            return Ok(Inbound::Eof);
+        }
+        return Err(e);
+    }
+    let kind = header[0];
+    let class = header[1];
+    let seq = u64::from_le_bytes(header[2..10].try_into().unwrap());
+    let len =
+        u32::from_le_bytes(header[10..14].try_into().unwrap()) as usize;
+    let checksum =
+        u32::from_le_bytes(header[14..18].try_into().unwrap());
+    if len > MAX_PAYLOAD_ELEMS {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds cap"),
+        ));
+    }
+    let mut body = vec![0u8; 4 * len];
+    if let Err(e) = r.read_exact(&mut body) {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            return Ok(Inbound::Eof);
+        }
+        return Err(e);
+    }
+    if fnv1a(&body) != checksum {
+        return Ok(Inbound::Corrupt { seq });
+    }
+    let payload = body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Inbound::Frame(Frame { kind, class, seq, payload }))
+}
+
+/// Write one encoded frame.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
+    w.write_all(&frame.encode())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn data_frame_roundtrips_bit_exactly() {
+        let payload =
+            vec![1.5f32, -0.0, f32::MIN_POSITIVE, 3.0e8, -7.25];
+        let frame = Frame::data(2, 41, &payload);
+        let mut cur = Cursor::new(frame.encode());
+        match read_frame(&mut cur).unwrap() {
+            Inbound::Frame(f) => {
+                assert_eq!(f, frame);
+                let bits: Vec<u32> =
+                    f.payload.iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> =
+                    payload.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(bits, want);
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ack_and_hello_roundtrip() {
+        for frame in [Frame::ack(1, 9), Frame::hello(0, 3)] {
+            let mut cur = Cursor::new(frame.encode());
+            assert_eq!(
+                read_frame(&mut cur).unwrap(),
+                Inbound::Frame(frame)
+            );
+        }
+    }
+
+    #[test]
+    fn corrupted_payload_is_detected_not_delivered() {
+        let frame = Frame::data(0, 7, &[1.0, 2.0, 3.0]);
+        let mut bytes = frame.encode();
+        bytes[HEADER_LEN + 5] ^= 0x40;
+        let mut cur = Cursor::new(bytes);
+        assert_eq!(
+            read_frame(&mut cur).unwrap(),
+            Inbound::Corrupt { seq: 7 }
+        );
+    }
+
+    #[test]
+    fn eof_at_frame_boundary_is_clean() {
+        let mut cur = Cursor::new(Vec::<u8>::new());
+        assert_eq!(read_frame(&mut cur).unwrap(), Inbound::Eof);
+    }
+
+    #[test]
+    fn back_to_back_frames_stay_in_sync() {
+        let a = Frame::data(0, 0, &[1.0]);
+        let b = Frame::ack(0, 0);
+        let c = Frame::data(3, 1, &[2.0, 4.0]);
+        let mut bytes = a.encode();
+        bytes.extend(b.encode());
+        bytes.extend(c.encode());
+        let mut cur = Cursor::new(bytes);
+        assert_eq!(read_frame(&mut cur).unwrap(), Inbound::Frame(a));
+        assert_eq!(read_frame(&mut cur).unwrap(), Inbound::Frame(b));
+        assert_eq!(read_frame(&mut cur).unwrap(), Inbound::Frame(c));
+        assert_eq!(read_frame(&mut cur).unwrap(), Inbound::Eof);
+    }
+}

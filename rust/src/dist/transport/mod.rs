@@ -1,0 +1,500 @@
+//! Socket transport for the dist engine: a real multi-process-capable
+//! wire behind the same [`RingNode`] interface as the in-process
+//! channel transport.
+//!
+//! Layering, bottom to top:
+//!
+//! - [`framer`] — length-framed binary codec (kind, class, seq, len,
+//!   FNV-1a checksum, f32 LE payload).
+//! - [`fault`] — deterministic seeded fault shim on the sender side
+//!   (drop / duplicate / reorder / corrupt, per traffic class).
+//! - [`timeouter`] — ack-timeout policy: exponential backoff, capped,
+//!   bounded attempts.
+//! - [`retryer`] — stop-and-wait ARQ sender ([`ReliableTx`]): write
+//!   through the fault shim, await ack, retransmit on timeout.
+//! - [`acceptor`] — listener + hello handshake + per-connection
+//!   reader threads (verify, dedupe by seq, ack, deliver).
+//! - [`proc`] — the OS-process driver behind
+//!   `repro train transport=socket`.
+//!
+//! The transport guarantees exactly-once in-order delivery of the
+//! exact payload bits: a frame is delivered only when its checksum
+//! verifies and its seq is next expected, so injected faults can cost
+//! retransmissions (accounted under [`TrafficClass::Retry`]) but can
+//! never change what the collectives compute. That is the mechanism
+//! behind the fault-matrix tests asserting bit-exact loss
+//! trajectories against the channel transport.
+//!
+//! [`ReliableTx`]: retryer::ReliableTx
+
+pub mod acceptor;
+pub mod fault;
+pub mod framer;
+pub mod proc;
+pub mod retryer;
+pub mod timeouter;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+pub use fault::{FaultInjector, FaultSpec};
+pub use timeouter::TimeoutPolicy;
+
+use super::comm::{CommStats, LinkModel, RingNode, TrafficClass};
+use super::error::DistError;
+use acceptor::{accept_inbound, send_hello, LINK_GATHER, LINK_RING};
+use retryer::ReliableTx;
+
+/// Which wire a dist world runs over.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum TransportKind {
+    /// In-process mpsc channels (the seed transport).
+    #[default]
+    Channel,
+    /// Framed TCP over localhost with retry/timeout middleware.
+    Socket(SocketOptions),
+}
+
+/// Socket transport knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SocketOptions {
+    pub faults: FaultSpec,
+    /// Seed for the per-link fault injectors.
+    pub seed: u64,
+    pub policy: TimeoutPolicy,
+}
+
+impl Default for SocketOptions {
+    fn default() -> Self {
+        SocketOptions {
+            faults: FaultSpec::default(),
+            seed: 0,
+            // Patient by default: on a fault-free localhost link any
+            // retry would be a bug, not recovery.
+            policy: TimeoutPolicy::patient(),
+        }
+    }
+}
+
+/// Resolve the `transport=` / `fault=` / `fault_seed=` config keys
+/// into a [`TransportKind`] for the in-process trainer. The
+/// multi-process `transport=socket` path is dispatched earlier, in
+/// `main.rs`; reaching here with it means the model needs artifacts
+/// and cannot span processes.
+pub fn parse_transport(transport: &str, fault: &str, fault_seed: u64)
+    -> Result<TransportKind> {
+    match transport {
+        "channel" => {
+            if !fault.trim().is_empty() {
+                bail!("fault injection needs a socket transport \
+                       (transport=tcp or transport=socket)");
+            }
+            Ok(TransportKind::Channel)
+        }
+        "tcp" => Ok(TransportKind::Socket(socket_options(
+            fault, fault_seed)?)),
+        "socket" => bail!(
+            "transport=socket spans OS processes and requires \
+             model=bigram (artifact models cannot re-exec); use \
+             transport=tcp for in-process workers over localhost TCP"
+        ),
+        other => bail!(
+            "unknown transport {other:?} (channel | tcp | socket)"
+        ),
+    }
+}
+
+/// Resolve `fault=` / `fault_seed=` into socket knobs: a noop spec
+/// keeps the patient policy (a retry on a clean localhost link is a
+/// bug); injected faults switch to the twitchy policy so recovery is
+/// fast enough to test.
+pub fn socket_options(fault: &str, fault_seed: u64)
+    -> Result<SocketOptions> {
+    let faults = FaultSpec::parse(fault)?;
+    let policy = if faults.is_noop() {
+        TimeoutPolicy::patient()
+    } else {
+        TimeoutPolicy::twitchy()
+    };
+    Ok(SocketOptions { faults, seed: fault_seed, policy })
+}
+
+/// Independent fault-injector stream per directed link.
+fn link_seed(base: u64, from: usize, to: usize, kind: u8) -> u64 {
+    base ^ ((from as u64) << 32)
+        ^ ((to as u64) << 16)
+        ^ ((kind as u64) << 8)
+        ^ 0x5eed
+}
+
+/// One rank's socket endpoints (lives inside [`RingNode`]).
+pub struct SocketLink {
+    rank: usize,
+    world: usize,
+    right: Option<ReliableTx>,
+    left_rx: Option<Receiver<Vec<f32>>>,
+    to_root: Option<ReliableTx>,
+    /// Rank 0 only: per-sender gather queues (index r-1 ↔ rank r).
+    gather_rx: Vec<Receiver<Vec<f32>>>,
+}
+
+impl SocketLink {
+    pub(crate) fn send_right(&mut self, class: TrafficClass,
+                             data: &[f32], stats: &CommStats)
+        -> Result<(), DistError> {
+        let rank = self.rank;
+        match &mut self.right {
+            Some(tx) => tx.send(class, data, stats),
+            None => Err(DistError::CommHangup { rank }),
+        }
+    }
+
+    pub(crate) fn recv_left(&mut self) -> Result<Vec<f32>, DistError> {
+        let (rank, peer) =
+            (self.rank, (self.rank + self.world - 1) % self.world);
+        match &self.left_rx {
+            Some(rx) => rx
+                .recv()
+                .map_err(|_| DistError::PeerDisconnected { rank, peer }),
+            None => Err(DistError::CommHangup { rank }),
+        }
+    }
+
+    pub(crate) fn gather_to_root(&mut self, class: TrafficClass,
+                                 payload: Vec<f32>, stats: &CommStats)
+        -> Result<Option<Vec<Vec<f32>>>, DistError> {
+        let rank = self.rank;
+        if rank != 0 {
+            let tx = self
+                .to_root
+                .as_mut()
+                .ok_or(DistError::CommHangup { rank })?;
+            tx.send(class, &payload, stats)?;
+            return Ok(None);
+        }
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); self.world];
+        out[0] = payload;
+        for peer in 1..self.world {
+            out[peer] =
+                self.gather_rx[peer - 1].recv().map_err(|_| {
+                    DistError::PeerDisconnected { rank, peer }
+                })?;
+        }
+        Ok(Some(out))
+    }
+}
+
+fn io_dist(rank: usize, e: std::io::Error) -> DistError {
+    DistError::Io { rank, msg: e.to_string() }
+}
+
+/// Build one rank's [`SocketLink`]: connect outbound links (right
+/// ring neighbour, plus the rank-0 gather link), then accept and wire
+/// this rank's inbound connections. Outbound connects never block on
+/// the peer's accept loop (TCP backlog), so all ranks can run this
+/// concurrently — in threads or in separate processes — without a
+/// handshake deadlock.
+pub(crate) fn connect_node(rank: usize, world: usize,
+                           listener: &TcpListener, addrs: &[SocketAddr],
+                           opts: &SocketOptions)
+    -> Result<SocketLink, DistError> {
+    let err = |e| io_dist(rank, e);
+    let mut right = None;
+    let mut to_root = None;
+    if world > 1 {
+        let peer = (rank + 1) % world;
+        let mut stream =
+            TcpStream::connect(addrs[peer]).map_err(err)?;
+        send_hello(&mut stream, LINK_RING, rank).map_err(err)?;
+        right = Some(
+            ReliableTx::new(
+                stream,
+                rank,
+                peer,
+                FaultInjector::new(
+                    opts.faults.clone(),
+                    link_seed(opts.seed, rank, peer, LINK_RING),
+                ),
+                opts.policy.clone(),
+            )
+            .map_err(err)?,
+        );
+        if rank != 0 {
+            let mut stream =
+                TcpStream::connect(addrs[0]).map_err(err)?;
+            send_hello(&mut stream, LINK_GATHER, rank).map_err(err)?;
+            to_root = Some(
+                ReliableTx::new(
+                    stream,
+                    rank,
+                    0,
+                    FaultInjector::new(
+                        opts.faults.clone(),
+                        link_seed(opts.seed, rank, 0, LINK_GATHER),
+                    ),
+                    opts.policy.clone(),
+                )
+                .map_err(err)?,
+            );
+        }
+    }
+    let inbound =
+        accept_inbound(listener, rank, world).map_err(err)?;
+    Ok(SocketLink {
+        rank,
+        world,
+        right,
+        left_rx: inbound.left_rx,
+        to_root,
+        gather_rx: inbound.gather_rx,
+    })
+}
+
+/// Build an N-worker world over localhost TCP — same shape as
+/// `comm::ring_world`, workers still in-process, but every payload
+/// crosses the full framed/retried socket stack.
+pub fn socket_ring_world(world: usize, link: LinkModel,
+                         opts: &SocketOptions)
+    -> Result<(Vec<RingNode>, Arc<CommStats>)> {
+    assert!(world >= 1, "world size must be >= 1");
+    let stats = Arc::new(CommStats::new(link));
+    let mut listeners = Vec::with_capacity(world);
+    let mut addrs = Vec::with_capacity(world);
+    for _ in 0..world {
+        let l = TcpListener::bind("127.0.0.1:0")
+            .context("bind transport listener")?;
+        addrs.push(l.local_addr().context("listener addr")?);
+        listeners.push(l);
+    }
+    let links: Vec<Result<SocketLink, DistError>> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = listeners
+                .iter()
+                .enumerate()
+                .map(|(rank, listener)| {
+                    let addrs = &addrs;
+                    s.spawn(move || {
+                        connect_node(rank, world, listener, addrs, opts)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(rank, h)| {
+                    h.join().unwrap_or(Err(
+                        DistError::WorkerPanicked { rank },
+                    ))
+                })
+                .collect()
+        });
+    let mut nodes = Vec::with_capacity(world);
+    for (rank, link) in links.into_iter().enumerate() {
+        let link = link
+            .with_context(|| format!("connect rank {rank}"))?;
+        nodes.push(RingNode::from_socket(
+            rank,
+            world,
+            link,
+            Arc::clone(&stats),
+        ));
+    }
+    Ok((nodes, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spin_ring(nodes: Vec<RingNode>, payload_len: usize)
+        -> Vec<Result<Vec<f32>, DistError>> {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .map(|mut node| {
+                    s.spawn(move || {
+                        let data: Vec<f32> = (0..payload_len)
+                            .map(|i| {
+                                (node.rank * 1000 + i) as f32 * 1.5
+                            })
+                            .collect();
+                        node.send_right(
+                            TrafficClass::GradReduce,
+                            data,
+                        )?;
+                        node.recv_left()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(rank, h)| {
+                    h.join().unwrap_or(Err(
+                        DistError::WorkerPanicked { rank },
+                    ))
+                })
+                .collect()
+        })
+    }
+
+    #[test]
+    fn socket_ring_matches_channel_ledger_with_zero_retries() {
+        let world = 3;
+        let (sock_nodes, sock_stats) = socket_ring_world(
+            world,
+            LinkModel::default(),
+            &SocketOptions::default(),
+        )
+        .unwrap();
+        let got = spin_ring(sock_nodes, 8);
+        for (rank, r) in got.iter().enumerate() {
+            let left = (rank + world - 1) % world;
+            let want: Vec<f32> = (0..8)
+                .map(|i| (left * 1000 + i) as f32 * 1.5)
+                .collect();
+            assert_eq!(r.as_ref().unwrap(), &want, "rank {rank}");
+        }
+        let (chan_nodes, chan_stats) =
+            super::super::comm::ring_world(world, LinkModel::default());
+        for r in spin_ring(chan_nodes, 8) {
+            r.unwrap();
+        }
+        for class in TrafficClass::ALL {
+            assert_eq!(
+                sock_stats.bytes(class),
+                chan_stats.bytes(class),
+                "{} ledger must match the channel transport",
+                class.name()
+            );
+        }
+        assert_eq!(sock_stats.bytes(TrafficClass::Retry), 0);
+    }
+
+    #[test]
+    fn faulty_ring_still_delivers_exact_bits_and_accounts_retries() {
+        let world = 3;
+        let opts = SocketOptions {
+            faults: FaultSpec::parse(
+                "drop:0.2,dup:0.1,corrupt:0.15,reorder:0.1",
+            )
+            .unwrap(),
+            seed: 42,
+            policy: TimeoutPolicy::twitchy(),
+        };
+        let (nodes, stats) =
+            socket_ring_world(world, LinkModel::default(), &opts)
+                .unwrap();
+        let results: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .map(|mut node| {
+                    s.spawn(move || -> Result<(), DistError> {
+                        for round in 0..20u32 {
+                            let data: Vec<f32> = (0..16)
+                                .map(|i| {
+                                    f32::from_bits(
+                                        0x3f80_0000
+                                            + node.rank as u32 * 977
+                                            + round * 31
+                                            + i,
+                                    )
+                                })
+                                .collect();
+                            node.send_right(
+                                TrafficClass::GradScatter,
+                                data,
+                            )?;
+                            let got = node.recv_left()?;
+                            let left = (node.rank + node.world - 1)
+                                % node.world;
+                            let want: Vec<u32> = (0..16)
+                                .map(|i| {
+                                    0x3f80_0000
+                                        + left as u32 * 977
+                                        + round * 31
+                                        + i
+                                })
+                                .collect();
+                            let bits: Vec<u32> = got
+                                .iter()
+                                .map(|x| x.to_bits())
+                                .collect();
+                            assert_eq!(bits, want);
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in results {
+            r.unwrap();
+        }
+        // Base ledger is fault-independent; retries are visible and
+        // bounded by the attempt budget.
+        let data_msgs = stats.messages(TrafficClass::GradScatter);
+        assert_eq!(stats.bytes(TrafficClass::GradScatter),
+                   world as u64 * 20 * 16 * 4);
+        let retries = stats.messages(TrafficClass::Retry);
+        assert!(retries > 0, "fault rates this high must retry");
+        assert!(
+            retries
+                < data_msgs
+                    * TimeoutPolicy::twitchy().max_attempts as u64,
+            "retries must stay within the attempt budget"
+        );
+    }
+
+    #[test]
+    fn killed_peer_yields_typed_errors_naming_it() {
+        let world = 3;
+        let (mut nodes, _stats) = socket_ring_world(
+            world,
+            LinkModel::default(),
+            &SocketOptions {
+                policy: TimeoutPolicy {
+                    base_ms: 20,
+                    factor: 2.0,
+                    cap_ms: 100,
+                    max_attempts: 4,
+                },
+                ..SocketOptions::default()
+            },
+        )
+        .unwrap();
+        // Rank 1 dies before the step.
+        let dead = nodes.remove(1);
+        drop(dead);
+        let results: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .map(|mut node| {
+                    s.spawn(move || -> Result<(), DistError> {
+                        node.send_right(
+                            TrafficClass::GradReduce,
+                            vec![1.0; 4],
+                        )?;
+                        node.recv_left()?;
+                        Ok(())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let errs: Vec<DistError> =
+            results.into_iter().filter_map(Result::err).collect();
+        assert!(!errs.is_empty(), "a dead rank must surface an error");
+        assert!(
+            errs.iter().any(|e| matches!(
+                e,
+                DistError::PeerDisconnected { peer: 1, .. }
+                    | DistError::Timeout { peer: 1, .. }
+            )),
+            "some error must name the dead rank 1: {errs:?}"
+        );
+    }
+}

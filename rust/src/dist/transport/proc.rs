@@ -1,0 +1,145 @@
+//! Multi-process orchestration: spawn one OS process per rank and
+//! broker the localhost port exchange over stdio.
+//!
+//! The parent re-execs its own binary with the hidden `dist-worker`
+//! subcommand, passing the run config through [`ENV_CFG`] and the
+//! rank through [`ENV_RANK`]. Each child binds an ephemeral listener,
+//! announces `port <p>` as its first stdout line, then blocks reading
+//! one `peers <p0> <p1> ...` line on stdin. Once every child has
+//! reported, the parent broadcasts the full port list and each child
+//! runs [`connect_node`] concurrently — outbound TCP connects succeed
+//! through the listen backlog, so the mesh wires up without any
+//! accept-order coordination.
+//!
+//! Rank 0's remaining stdout (the loss lines) is streamed through to
+//! the parent's stdout so `repro train ... transport=socket` reads
+//! like the single-process run. A child that exits nonzero surfaces
+//! as [`DistError::WorkerExited`] naming the rank.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::super::comm::{CommStats, LinkModel, RingNode};
+use super::super::error::DistError;
+use super::{connect_node, SocketOptions};
+
+/// Env var carrying the run-config JSON into worker processes.
+pub const ENV_CFG: &str = "REPRO_DIST_CFG";
+/// Env var carrying the worker's rank.
+pub const ENV_RANK: &str = "REPRO_DIST_RANK";
+/// Hidden subcommand the parent re-execs workers with.
+pub const WORKER_SUBCOMMAND: &str = "dist-worker";
+
+/// Child side of the handshake: bind, announce the port, read the
+/// peer list, connect this rank's links. Returns the rank's ring node
+/// plus its (process-local) byte ledger.
+pub fn child_world(rank: usize, world: usize, link: LinkModel,
+                   opts: &SocketOptions)
+    -> Result<(RingNode, Arc<CommStats>)> {
+    let listener = TcpListener::bind("127.0.0.1:0")
+        .context("bind worker listener")?;
+    let port = listener.local_addr().context("listener addr")?.port();
+    {
+        let mut out = std::io::stdout().lock();
+        writeln!(out, "port {port}").context("announce port")?;
+        out.flush().context("flush port line")?;
+    }
+    let mut line = String::new();
+    std::io::stdin()
+        .lock()
+        .read_line(&mut line)
+        .context("read peers line")?;
+    let mut it = line.split_whitespace();
+    if it.next() != Some("peers") {
+        bail!("rank {rank}: malformed peers line {line:?}");
+    }
+    let addrs: Vec<SocketAddr> = it
+        .map(|p| {
+            let port: u16 = p.parse()
+                .with_context(|| format!("bad peer port {p:?}"))?;
+            Ok(SocketAddr::from(([127, 0, 0, 1], port)))
+        })
+        .collect::<Result<_>>()?;
+    if addrs.len() != world {
+        bail!("rank {rank}: got {} peers for world {world}",
+              addrs.len());
+    }
+    let sl = connect_node(rank, world, &listener, &addrs, opts)?;
+    let stats = Arc::new(CommStats::new(link));
+    Ok((RingNode::from_socket(rank, world, sl, Arc::clone(&stats)),
+        stats))
+}
+
+/// Parent side: spawn `world` children, broker the port exchange,
+/// stream rank 0's stdout through, and wait for every child. The
+/// first nonzero exit is a typed [`DistError::WorkerExited`].
+pub fn run_parent(world: usize, cfg_json: &str) -> Result<()> {
+    assert!(world >= 1, "world size must be >= 1");
+    let exe = std::env::current_exe().context("locate own binary")?;
+    let mut children: Vec<Child> = Vec::with_capacity(world);
+    for rank in 0..world {
+        let child = Command::new(&exe)
+            .arg(WORKER_SUBCOMMAND)
+            .env(ENV_CFG, cfg_json)
+            .env(ENV_RANK, rank.to_string())
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawn worker rank {rank}"))?;
+        children.push(child);
+    }
+    // Phase 1: every child announces its listener port.
+    let mut ports = Vec::with_capacity(world);
+    let mut stdouts = Vec::with_capacity(world);
+    for (rank, child) in children.iter_mut().enumerate() {
+        let mut out = BufReader::new(
+            child.stdout.take().expect("piped stdout"));
+        let mut line = String::new();
+        out.read_line(&mut line)
+            .with_context(|| format!("read port from rank {rank}"))?;
+        let port = line
+            .strip_prefix("port ")
+            .and_then(|p| p.trim().parse::<u16>().ok())
+            .ok_or_else(|| {
+                DistError::Io {
+                    rank,
+                    msg: format!("bad port line {line:?}"),
+                }
+            })?;
+        ports.push(port.to_string());
+        stdouts.push(out);
+    }
+    // Phase 2: broadcast the full peer list; dropping each stdin
+    // handle closes it (children read exactly one line).
+    let peers = format!("peers {}\n", ports.join(" "));
+    for (rank, child) in children.iter_mut().enumerate() {
+        child
+            .stdin
+            .take()
+            .expect("piped stdin")
+            .write_all(peers.as_bytes())
+            .with_context(|| format!("send peers to rank {rank}"))?;
+    }
+    // Phase 3: rank 0 owns the console; forward its output live.
+    let mut out0 = stdouts.remove(0);
+    std::io::copy(&mut out0, &mut std::io::stdout())
+        .context("stream rank 0 output")?;
+    drop(out0);
+    for (rank, mut child) in children.into_iter().enumerate() {
+        let status = child
+            .wait()
+            .with_context(|| format!("wait for rank {rank}"))?;
+        if !status.success() {
+            return Err(DistError::WorkerExited {
+                rank,
+                code: status.code().unwrap_or(-1),
+            }
+            .into());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Reliable sender middleware: stop-and-wait ARQ over one framed TCP
+//! stream.
+//!
+//! Each [`ReliableTx`] owns the sending end of one directed link. A
+//! send writes a data frame (through the fault shim), then blocks
+//! reading acks with a per-attempt timeout from the
+//! [`TimeoutPolicy`]; no ack in time means retransmit with backoff.
+//! The receiver (`acceptor.rs`) acks every verified in-order frame
+//! immediately on a dedicated reader thread, so ring schedules where
+//! every rank is inside `send_right` at once cannot deadlock — acks
+//! never wait on the application calling `recv_left`.
+//!
+//! Accounting contract: the caller (`RingNode::send_right`) records
+//! the base payload once under its traffic class, identically to the
+//! channel transport, so the base ledgers stay byte-exact across
+//! transports. Every attempt after the first records the payload
+//! again under [`TrafficClass::Retry`] and publishes an
+//! [`Event::RetrySent`]; exhausting the budget publishes
+//! [`Event::CommTimeout`] and returns [`DistError::Timeout`].
+
+use std::io::{self, ErrorKind};
+use std::net::TcpStream;
+
+use super::fault::FaultInjector;
+use super::framer::{read_frame, Frame, Inbound, KIND_ACK};
+use super::timeouter::TimeoutPolicy;
+use crate::dist::comm::{CommStats, TrafficClass};
+use crate::dist::error::DistError;
+use crate::telemetry::Event;
+
+enum AckWait {
+    Acked,
+    Timeout,
+    Disconnected,
+}
+
+/// The sending half of one directed link, with retry middleware.
+pub(crate) struct ReliableTx {
+    stream: TcpStream,
+    rank: usize,
+    peer: usize,
+    seq: u64,
+    fault: FaultInjector,
+    policy: TimeoutPolicy,
+}
+
+impl ReliableTx {
+    pub fn new(stream: TcpStream, rank: usize, peer: usize,
+               fault: FaultInjector, policy: TimeoutPolicy)
+        -> io::Result<ReliableTx> {
+        stream.set_nodelay(true)?;
+        Ok(ReliableTx { stream, rank, peer, seq: 0, fault, policy })
+    }
+
+    fn io_err(&self, e: io::Error) -> DistError {
+        match e.kind() {
+            ErrorKind::BrokenPipe
+            | ErrorKind::ConnectionReset
+            | ErrorKind::ConnectionAborted
+            | ErrorKind::UnexpectedEof => DistError::PeerDisconnected {
+                rank: self.rank,
+                peer: self.peer,
+            },
+            _ => DistError::Io { rank: self.rank, msg: e.to_string() },
+        }
+    }
+
+    /// Reliably deliver one payload. Retransmitted payload bytes are
+    /// accounted under [`TrafficClass::Retry`] on `stats`.
+    pub fn send(&mut self, class: TrafficClass, data: &[f32],
+                stats: &CommStats) -> Result<(), DistError> {
+        let seq = self.seq;
+        self.seq += 1;
+        let wire = Frame::data(class_idx(class), seq, data).encode();
+        let payload_bytes = (data.len() * 4) as u64;
+        for attempt in 0..self.policy.max_attempts {
+            if attempt > 0 {
+                stats.record_from(self.rank, TrafficClass::Retry,
+                                  payload_bytes);
+                stats.publish(Event::RetrySent {
+                    rank: self.rank,
+                    peer: self.peer,
+                    class: class.name(),
+                    seq,
+                    attempt: attempt as u64,
+                    bytes: payload_bytes,
+                });
+            }
+            self.fault
+                .write_data(&mut self.stream, &wire, class.name())
+                .map_err(|e| self.io_err(e))?;
+            self.stream
+                .set_read_timeout(Some(self.policy.wait_for(attempt)))
+                .map_err(|e| self.io_err(e))?;
+            match self.wait_ack(seq) {
+                AckWait::Acked => return Ok(()),
+                AckWait::Timeout => continue,
+                AckWait::Disconnected => {
+                    return Err(DistError::PeerDisconnected {
+                        rank: self.rank,
+                        peer: self.peer,
+                    })
+                }
+            }
+        }
+        stats.publish(Event::CommTimeout {
+            rank: self.rank,
+            peer: self.peer,
+            class: class.name(),
+            seq,
+            attempts: self.policy.max_attempts as u64,
+        });
+        Err(DistError::Timeout {
+            rank: self.rank,
+            peer: self.peer,
+            class: class.name(),
+            attempts: self.policy.max_attempts,
+        })
+    }
+
+    /// Read acks until one covers `seq`. Stale acks (late duplicates
+    /// of earlier seqs) are skipped without consuming the timeout
+    /// budget conceptually — each read re-arms the same deadline.
+    fn wait_ack(&mut self, seq: u64) -> AckWait {
+        loop {
+            match read_frame(&mut self.stream) {
+                Ok(Inbound::Frame(f)) if f.kind == KIND_ACK => {
+                    if f.seq >= seq {
+                        return AckWait::Acked;
+                    }
+                }
+                // Anything else inbound on a send link is noise.
+                Ok(Inbound::Frame(_)) | Ok(Inbound::Corrupt { .. }) => {}
+                Ok(Inbound::Eof) => return AckWait::Disconnected,
+                Err(e) => {
+                    return match e.kind() {
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+                            AckWait::Timeout
+                        }
+                        _ => AckWait::Disconnected,
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Wire index of a traffic class (frame `class` byte).
+pub(crate) fn class_idx(class: TrafficClass) -> u8 {
+    TrafficClass::ALL
+        .iter()
+        .position(|c| *c == class)
+        .expect("class in ALL") as u8
+}
+
+/// Inverse of [`class_idx`]; unknown bytes read as `GradReduce` (the
+/// receiver only echoes the byte into acks, so this is cosmetic).
+pub(crate) fn class_of(idx: u8) -> TrafficClass {
+    TrafficClass::ALL
+        .get(idx as usize)
+        .copied()
+        .unwrap_or(TrafficClass::GradReduce)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_bytes_roundtrip() {
+        for class in TrafficClass::ALL {
+            assert_eq!(class_of(class_idx(class)), class);
+        }
+        assert_eq!(class_of(200), TrafficClass::GradReduce);
+    }
+}

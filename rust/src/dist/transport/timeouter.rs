@@ -1,0 +1,91 @@
+//! Ack-timeout policy for the retry middleware: exponential backoff
+//! with a cap and a bounded attempt budget.
+
+use std::time::Duration;
+
+/// How long to wait for an ack on each attempt, and how many attempts
+/// a send gets before it becomes a [`DistError::Timeout`].
+///
+/// [`DistError::Timeout`]: crate::dist::DistError::Timeout
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimeoutPolicy {
+    /// First attempt's ack wait, in milliseconds.
+    pub base_ms: u64,
+    /// Backoff multiplier between attempts.
+    pub factor: f64,
+    /// Ceiling on any single wait, in milliseconds.
+    pub cap_ms: u64,
+    /// Total send attempts (first try + retries).
+    pub max_attempts: usize,
+}
+
+impl Default for TimeoutPolicy {
+    fn default() -> Self {
+        TimeoutPolicy {
+            base_ms: 50,
+            factor: 2.0,
+            cap_ms: 1_000,
+            max_attempts: 10,
+        }
+    }
+}
+
+impl TimeoutPolicy {
+    /// A patient policy for fault-free links where any retry would be
+    /// a bug (tests assert zero retries under it).
+    pub fn patient() -> Self {
+        TimeoutPolicy { base_ms: 2_000, ..TimeoutPolicy::default() }
+    }
+
+    /// A twitchy policy for fault-injection tests: short waits keep
+    /// retransmission cheap while the dedupe keeps it correct.
+    pub fn twitchy() -> Self {
+        TimeoutPolicy {
+            base_ms: 4,
+            factor: 1.5,
+            cap_ms: 200,
+            max_attempts: 12,
+        }
+    }
+
+    /// Ack wait for `attempt` (0-based): `base * factor^attempt`,
+    /// capped.
+    pub fn wait_for(&self, attempt: usize) -> Duration {
+        let scaled = self.base_ms as f64
+            * self.factor.powi(attempt.min(30) as i32);
+        Duration::from_millis(
+            (scaled as u64).clamp(1, self.cap_ms.max(1)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_then_caps() {
+        let p = TimeoutPolicy {
+            base_ms: 10,
+            factor: 2.0,
+            cap_ms: 65,
+            max_attempts: 8,
+        };
+        assert_eq!(p.wait_for(0), Duration::from_millis(10));
+        assert_eq!(p.wait_for(1), Duration::from_millis(20));
+        assert_eq!(p.wait_for(2), Duration::from_millis(40));
+        assert_eq!(p.wait_for(3), Duration::from_millis(65));
+        assert_eq!(p.wait_for(20), Duration::from_millis(65));
+    }
+
+    #[test]
+    fn waits_are_never_zero() {
+        let p = TimeoutPolicy {
+            base_ms: 0,
+            factor: 2.0,
+            cap_ms: 100,
+            max_attempts: 2,
+        };
+        assert!(p.wait_for(0) >= Duration::from_millis(1));
+    }
+}

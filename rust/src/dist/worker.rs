@@ -55,9 +55,11 @@ use super::bucket::{gather_comm_ns, grad_comm_ns, BucketPlan,
 use super::comm::{collective_handle, ring_world, CollectiveDone,
                   CollectiveHandle, CommStats, LinkModel, RingNode,
                   TrafficClass};
+use super::error::DistError;
 use super::shard::{block_cuts, build_shard_optimizer, pieces_for,
                    shard_spec, shardable, slice_shard, FlatLayout,
                    Partition, SendOptimizer};
+use super::transport::{socket_ring_world, TransportKind};
 use crate::optim::{GradView, Hyper, ParamView, ReduceOp, StateDict};
 use crate::partition::BlockView;
 use crate::telemetry::{Event, EventBus};
@@ -124,6 +126,10 @@ pub struct DistOptions {
     /// Simulated backward- and optimizer-compute costs for the overlap
     /// timeline.
     pub compute: ComputeModel,
+    /// The wire under the worker ring: in-process channels (default,
+    /// the seed behavior, bit-identical) or framed localhost TCP with
+    /// retry/timeout middleware (`transport=tcp`).
+    pub transport: TransportKind,
 }
 
 impl Default for DistOptions {
@@ -140,21 +146,56 @@ impl Default for DistOptions {
             spec: None,
             link: LinkModel::default(),
             compute: ComputeModel::default(),
+            transport: TransportKind::default(),
         }
     }
 }
 
-struct WorkerSlot {
-    node: RingNode,
+pub(crate) struct WorkerSlot {
+    pub(crate) node: RingNode,
     /// Sharded modes only: this worker's shard optimizer, whose arena
     /// is the shard itself (shard-local coordinates).
-    opt: Option<SendOptimizer>,
+    pub(crate) opt: Option<SendOptimizer>,
     /// This worker's contiguous flat range (global coordinates).
-    shard_range: (usize, usize),
+    pub(crate) shard_range: (usize, usize),
     /// Full parameter replica (sharded modes only; kept in flat form).
-    flat_params: Vec<f32>,
+    pub(crate) flat_params: Vec<f32>,
     /// Telemetry publisher handle (None when no bus is attached).
-    bus: Option<Arc<EventBus>>,
+    pub(crate) bus: Option<Arc<EventBus>>,
+}
+
+/// Build one rank's slot: slice its shard out of the flat replica and
+/// stand up the shard-local optimizer. Shared between the in-process
+/// trainer and the multi-process per-rank driver so both worlds run
+/// the identical construction path.
+pub(crate) fn shard_slot(node: RingNode, layout: &FlatLayout,
+                         range: (usize, usize), flat: &[f32],
+                         opts: &DistOptions, sharded: bool)
+    -> Result<WorkerSlot> {
+    let is_mini = opts.optimizer.starts_with("adam_mini");
+    let opt = if sharded {
+        let pieces = pieces_for(layout, range);
+        let shard = slice_shard(layout, &pieces, flat);
+        let spec = if is_mini {
+            let full = opts.spec.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("adam_mini dist run needs a block spec")
+            })?;
+            Some(shard_spec(layout, &pieces, full)?)
+        } else {
+            None
+        };
+        Some(build_shard_optimizer(&opts.optimizer, opts.hp, &shard,
+                                   spec, opts.reduce)?)
+    } else {
+        None
+    };
+    Ok(WorkerSlot {
+        node,
+        opt,
+        shard_range: range,
+        flat_params: if sharded { flat.to_vec() } else { Vec::new() },
+        bus: None,
+    })
 }
 
 /// Step this worker's whole shard against `reduced` (only the shard's
@@ -165,7 +206,8 @@ struct WorkerSlot {
 /// separate scale pass over the buffer.
 fn step_shard_and_gather(slot: &mut WorkerSlot,
                          ranges: &[(usize, usize)], reduced: &[f32],
-                         lr: f32, gscale: f32, step: u64) {
+                         lr: f32, gscale: f32, step: u64)
+    -> std::result::Result<(), DistError> {
     let (a, b) = slot.shard_range;
     if let Some(opt) = &mut slot.opt {
         opt.begin_step();
@@ -179,8 +221,43 @@ fn step_shard_and_gather(slot: &mut WorkerSlot,
     pub_ev(&slot.bus, Event::ShardStepped {
         step, rank: slot.node.rank, bucket: -1, lo: a, hi: b,
     });
-    ring_all_gather(&slot.node, ranges, &mut slot.flat_params,
-                    TrafficClass::ParamGather);
+    ring_all_gather(&mut slot.node, ranges, &mut slot.flat_params,
+                    TrafficClass::ParamGather)
+}
+
+/// One rank's batch-synchronous step body: reduce (or scatter) the
+/// gradient, step the local shard, gather parameters back. Shared by
+/// the in-process worker threads and the multi-process per-rank
+/// driver, so both execute byte-identical arithmetic in the identical
+/// order — N-process vs N-thread bit-exactness holds by construction.
+pub(crate) fn rank_step(slot: &mut WorkerSlot,
+                        ranges: &[(usize, usize)], grad: &mut [f32],
+                        bucket: usize, mode: StepMode, gscale: f32,
+                        lr: f32, step: u64)
+    -> std::result::Result<(), DistError> {
+    match mode {
+        StepMode::Replicated => {
+            ring_all_reduce(&mut slot.node, grad, bucket,
+                            TrafficClass::GradReduce)?;
+            for x in grad.iter_mut() {
+                *x *= gscale;
+            }
+        }
+        StepMode::Zero1 => {
+            ring_all_reduce(&mut slot.node, grad, bucket,
+                            TrafficClass::GradReduce)?;
+            step_shard_and_gather(slot, ranges, grad, lr, gscale,
+                                  step)?;
+        }
+        StepMode::Zero2 => {
+            ring_reduce_scatter_bucketed(&mut slot.node, ranges, grad,
+                                         bucket,
+                                         TrafficClass::GradScatter)?;
+            step_shard_and_gather(slot, ranges, grad, lr, gscale,
+                                  step)?;
+        }
+    }
+    Ok(())
 }
 
 /// The multi-worker data-parallel trainer.
@@ -250,33 +327,18 @@ impl DistTrainer {
                 None => true,
                 Some(c) => plan.aligned_to(c),
             };
-        let (nodes, stats) = ring_world(n, opts.link);
+        let (nodes, stats) = match &opts.transport {
+            TransportKind::Channel => ring_world(n, opts.link),
+            TransportKind::Socket(sopts) => {
+                socket_ring_world(n, opts.link, sopts)?
+            }
+        };
         let flat = layout.flatten(params);
         let mut slots = Vec::with_capacity(n);
         for (w, node) in nodes.into_iter().enumerate() {
             let range = partition.ranges[w];
-            let pieces = pieces_for(&layout, range);
-            let opt = if mode.sharded() {
-                let shard = slice_shard(&layout, &pieces, &flat);
-                let spec = if is_mini {
-                    Some(shard_spec(&layout, &pieces,
-                                    opts.spec.as_ref().unwrap())?)
-                } else {
-                    None
-                };
-                Some(build_shard_optimizer(&opts.optimizer, opts.hp,
-                                           &shard, spec, opts.reduce)?)
-            } else {
-                None
-            };
-            slots.push(WorkerSlot {
-                node,
-                opt,
-                shard_range: range,
-                flat_params: if mode.sharded() { flat.clone() }
-                             else { Vec::new() },
-                bus: None,
-            });
+            slots.push(shard_slot(node, &layout, range, &flat, &opts,
+                                  mode.sharded())?);
         }
         Ok(DistTrainer {
             layout,
@@ -408,42 +470,14 @@ impl DistTrainer {
                 .zip(local_grads.iter_mut())
                 .map(|(slot, grad)| {
                     s.spawn(move || {
-                        match mode {
-                            StepMode::Replicated => {
-                                ring_all_reduce(
-                                    &slot.node, grad, bucket,
-                                    TrafficClass::GradReduce);
-                                for x in grad.iter_mut() {
-                                    *x *= inv;
-                                }
-                            }
-                            StepMode::Zero1 => {
-                                // The 1/n_micro average folds into the
-                                // fused shard step (no scale pass).
-                                ring_all_reduce(
-                                    &slot.node, grad, bucket,
-                                    TrafficClass::GradReduce);
-                                step_shard_and_gather(
-                                    slot, ranges, grad, lr, inv, step);
-                            }
-                            StepMode::Zero2 => {
-                                // Only this worker's shard of the
-                                // gradient is complete; the average
-                                // folds into the fused shard step.
-                                ring_reduce_scatter_bucketed(
-                                    &slot.node, ranges, grad, bucket,
-                                    TrafficClass::GradScatter);
-                                step_shard_and_gather(
-                                    slot, ranges, grad, lr, inv, step);
-                            }
-                        }
+                        rank_step(slot, ranges, grad, bucket, mode,
+                                  inv, lr, step)
                     })
                 })
                 .collect();
-            for h in handles {
-                h.join().map_err(|_| {
-                    anyhow::anyhow!("dist worker thread panicked")
-                })?;
+            for (rank, h) in handles.into_iter().enumerate() {
+                h.join()
+                    .map_err(|_| DistError::WorkerPanicked { rank })??;
             }
             Ok(())
         })?;
@@ -538,33 +572,42 @@ impl DistTrainer {
             })
             .collect();
         let slots = &mut self.slots;
-        let payloads: Vec<Option<Vec<Vec<f32>>>> =
-            std::thread::scope(|s| {
-                // iter_mut: a shared &WorkerSlot is !Send (the node
-                // holds an mpsc Receiver); an exclusive borrow is Send.
-                let handles: Vec<_> = slots
-                    .iter_mut()
-                    .zip(&dicts)
-                    .map(|(slot, dict)| {
-                        s.spawn(move || {
-                            let mut flat = Vec::new();
-                            for t in dict.entries() {
-                                flat.extend_from_slice(&t.data);
-                            }
-                            slot.node.gather_to_root(
-                                TrafficClass::StateSync, flat)
-                        })
+        type GatherOut =
+            std::result::Result<Option<Vec<Vec<f32>>>, DistError>;
+        let payloads: Vec<GatherOut> = std::thread::scope(|s| {
+            // iter_mut: a shared &WorkerSlot is !Send (the node
+            // holds an mpsc Receiver); an exclusive borrow is Send.
+            let handles: Vec<_> = slots
+                .iter_mut()
+                .zip(&dicts)
+                .map(|(slot, dict)| {
+                    s.spawn(move || {
+                        let mut flat = Vec::new();
+                        for t in dict.entries() {
+                            flat.extend_from_slice(&t.data);
+                        }
+                        slot.node.gather_to_root(
+                            TrafficClass::StateSync, flat)
                     })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("state-sync thread"))
-                    .collect()
-            });
-        let gathered = payloads
-            .into_iter()
-            .flatten()
-            .next()
+                })
+                .collect();
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(rank, h)| {
+                    h.join().unwrap_or(Err(DistError::WorkerPanicked {
+                        rank,
+                    }))
+                })
+                .collect()
+        });
+        let mut gathered = None;
+        for p in payloads {
+            if let Some(g) = p? {
+                gathered = Some(g);
+            }
+        }
+        let gathered = gathered
             .ok_or_else(|| anyhow::anyhow!("rank 0 gathered nothing"))?;
         let mut out = StateDict::new();
         for (r, (dict, payload)) in
@@ -628,7 +671,22 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
                       layout: Arc<FlatLayout>,
                       ranges: Vec<(usize, usize)>, mode: StepMode,
                       granular: bool, inv: f32, lr: f32, step: u64)
-    -> (WorkerSlot, Option<Vec<f32>>) {
+    -> (WorkerSlot, std::result::Result<Option<Vec<f32>>, DistError>) {
+    let res = stream_rank_loop(&mut slot, rx, &layout, &ranges, mode,
+                               granular, inv, lr, step);
+    // The slot rides back either way so the trainer survives a failed
+    // step with its workers intact.
+    (slot, res)
+}
+
+/// The body of [`worker_stream_loop`], with `?`-style error exits. An
+/// early return drops the job queue, which the driver observes as a
+/// hangup on its next launch.
+fn stream_rank_loop(slot: &mut WorkerSlot, rx: Receiver<BucketJob>,
+                    layout: &FlatLayout, ranges: &[(usize, usize)],
+                    mode: StepMode, granular: bool, inv: f32, lr: f32,
+                    step: u64)
+    -> std::result::Result<Option<Vec<f32>>, DistError> {
     let rank = slot.node.rank;
     let bus = slot.bus.clone();
     let bucket_step = granular && mode == StepMode::Zero2;
@@ -656,8 +714,8 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
                     bytes: bucket_bytes,
                 });
                 let t = Instant::now();
-                ring_all_reduce(&slot.node, &mut job.data, len,
-                                TrafficClass::GradReduce);
+                ring_all_reduce(&mut slot.node, &mut job.data, len,
+                                TrafficClass::GradReduce)?;
                 pub_ev(&bus, Event::CollectiveLanded {
                     step, rank, bucket: job.idx,
                     class: TrafficClass::GradReduce.name(),
@@ -684,8 +742,9 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
                     bytes: bucket_bytes,
                 });
                 let t = Instant::now();
-                ring_reduce_scatter(&slot.node, &clipped, &mut job.data,
-                                    TrafficClass::GradScatter);
+                ring_reduce_scatter(&mut slot.node, &clipped,
+                                    &mut job.data,
+                                    TrafficClass::GradScatter)?;
                 pub_ev(&bus, Event::CollectiveLanded {
                     step, rank, bucket: job.idx,
                     class: TrafficClass::GradScatter.name(),
@@ -722,9 +781,9 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
                     });
                     let t = Instant::now();
                     ring_all_gather(
-                        &slot.node, &clipped,
+                        &mut slot.node, &clipped,
                         &mut slot.flat_params[job.lo..job.hi],
-                        TrafficClass::ParamGather);
+                        TrafficClass::ParamGather)?;
                     pub_ev(&bus, Event::CollectiveLanded {
                         step, rank, bucket: job.idx,
                         class: TrafficClass::ParamGather.name(),
@@ -741,17 +800,16 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
     }
     match mode {
         StepMode::Replicated => {
-            let out = if rank == 0 { Some(reduced) } else { None };
-            (slot, out)
+            Ok(if rank == 0 { Some(reduced) } else { None })
         }
         StepMode::Zero2 if bucket_step => {
             // Every bucket already stepped + gathered inline.
-            (slot, None)
+            Ok(None)
         }
         StepMode::Zero1 | StepMode::Zero2 => {
-            step_shard_and_gather(&mut slot, &ranges, &reduced, lr,
-                                  inv, step);
-            (slot, None)
+            step_shard_and_gather(slot, ranges, &reduced, lr, inv,
+                                  step)?;
+            Ok(None)
         }
     }
 }
@@ -767,7 +825,9 @@ fn worker_stream_loop(mut slot: WorkerSlot, rx: Receiver<BucketJob>,
 pub struct StepStream<'a> {
     trainer: &'a mut DistTrainer,
     to_workers: Vec<Sender<BucketJob>>,
-    joins: Vec<JoinHandle<(WorkerSlot, Option<Vec<f32>>)>>,
+    joins: Vec<JoinHandle<(WorkerSlot,
+                           std::result::Result<Option<Vec<f32>>,
+                                               DistError>)>>,
     /// One nonblocking handle per (bucket, worker) collective.
     handles: Vec<CollectiveHandle<usize>>,
     /// Per-worker unnormalized gradient accumulation buffers.
@@ -829,7 +889,7 @@ impl StepStream<'_> {
                         spans: bk.n_spans(),
                         elems: bk.elems(),
                     });
-                    self.launch(b);
+                    self.launch(b)?;
                 }
             }
         }
@@ -837,14 +897,22 @@ impl StepStream<'_> {
     }
 
     /// Launch bucket `b`'s collective on every worker's comm thread.
-    fn launch(&mut self, b: usize) {
+    /// A worker whose comm thread hung up mid-step (transport failure
+    /// or panic) surfaces as a typed error naming the rank — the step
+    /// is abandoned, not the process.
+    fn launch(&mut self, b: usize) -> Result<()> {
         let bk = self.trainer.plan.buckets[b];
         for (w, tx) in self.to_workers.iter().enumerate() {
             let (done, handle) = collective_handle();
             let data = self.acc[w][bk.lo..bk.hi].to_vec();
-            tx.send(BucketJob { lo: bk.lo, hi: bk.hi, data, done,
-                                idx: b })
-                .expect("worker comm thread hung up");
+            let job = BucketJob { lo: bk.lo, hi: bk.hi, data, done,
+                                  idx: b };
+            if tx.send(job).is_err() {
+                pub_ev(&self.trainer.bus, Event::CommHangup {
+                    step: self.step, rank: w,
+                });
+                return Err(DistError::CommHangup { rank: w }.into());
+            }
             self.handles.push(handle);
         }
         self.launched += 1;
@@ -880,6 +948,7 @@ impl StepStream<'_> {
                                        bk.elems(), scatter_only);
             self.timeline.launch(comm_ns);
         }
+        Ok(())
     }
 
     /// Close the step: wait for every launched collective, run any
@@ -900,20 +969,34 @@ impl StepStream<'_> {
         self.to_workers.clear();
         let world = self.joins.len();
         let mut replicated_out: Option<Vec<f32>> = None;
-        for j in self.joins.drain(..) {
-            let (slot, out) = j.join().map_err(|_| {
-                anyhow::anyhow!("dist comm thread panicked")
-            })?;
-            self.trainer.slots.push(slot);
-            if let Some(g) = out {
-                replicated_out = Some(g);
+        let mut first_err: Option<DistError> = None;
+        for (rank, j) in self.joins.drain(..).enumerate() {
+            match j.join() {
+                Err(_) => {
+                    first_err.get_or_insert(
+                        DistError::WorkerPanicked { rank });
+                }
+                Ok((slot, res)) => {
+                    self.trainer.slots.push(slot);
+                    match res {
+                        Ok(Some(g)) => replicated_out = Some(g),
+                        Ok(None) => {}
+                        Err(e) => {
+                            first_err.get_or_insert(e);
+                        }
+                    }
+                }
             }
         }
-        // Every launched collective's handle has resolved by now (the
-        // comm threads completed each bucket before exiting); drain
-        // them so an unserved bucket is a loud error, not a leak.
+        // Drain handles with wait_opt: on a clean step every launched
+        // collective resolved before its comm thread exited; on a
+        // failed step completions were dropped mid-flight and the
+        // typed error below is the loud signal, not a handle panic.
         for h in self.handles.drain(..) {
-            h.wait();
+            let _ = h.wait_opt();
+        }
+        if let Some(e) = first_err {
+            return Err(e.into());
         }
         let sharded = self.trainer.mode.sharded();
         if sharded {
@@ -1394,5 +1477,49 @@ mod tests {
         }).unwrap();
         // m (n floats) + one v_b per block, regardless of sharding.
         assert_eq!(dist.state_bytes(), 4 * (n + blocks));
+    }
+
+    #[test]
+    fn tcp_transport_matches_channel_bitwise() {
+        use crate::dist::transport::SocketOptions;
+        let run = |transport: TransportKind, overlap: bool| {
+            let (mut params, meta) = toy();
+            let spec = Some(mini_spec(&params, &meta));
+            let mut opts =
+                toy_options("adam_mini", 3, false, true, spec);
+            opts.transport = transport;
+            let mut dist = DistTrainer::new(&params, opts).unwrap();
+            let mut grng = Rng::new(77);
+            for _ in 0..3 {
+                if overlap {
+                    let grads: Vec<Vec<Tensor>> = (0..2)
+                        .map(|_| rand_grads(&params, &mut grng))
+                        .collect();
+                    let mut stream = dist.begin_step(2, 1e-2);
+                    for (i, g) in grads.iter().enumerate() {
+                        for j in (0..g.len()).rev() {
+                            stream.push_grad(i, j, &g[j]).unwrap();
+                        }
+                    }
+                    stream.finish(&mut params).unwrap();
+                } else {
+                    let mut local = dist.grad_buffers();
+                    for i in 0..2 {
+                        let g = rand_grads(&params, &mut grng);
+                        dist.layout()
+                            .accumulate(&mut local[i % 3], &g);
+                    }
+                    dist.step(&mut params, local, 2, 1e-2).unwrap();
+                }
+            }
+            params
+        };
+        for overlap in [false, true] {
+            let chan = run(TransportKind::Channel, overlap);
+            let sock = run(
+                TransportKind::Socket(SocketOptions::default()),
+                overlap);
+            assert_eq!(chan, sock, "overlap={overlap}");
+        }
     }
 }

@@ -39,6 +39,11 @@ fn usage() -> ! {
          simd=auto|on|off (optimizer kernel dispatch; off = scalar\n\
          parity oracle), clip=X (global-norm gradient clip, folded\n\
          into the fused update sweep; host path only, 0 = off),\n\
+         transport=channel|tcp|socket (dist wire: in-process \
+         channels,\nframed localhost TCP, or one OS process per rank \
+         — socket\nrequires model=bigram), fault=SPEC \
+         (deterministic fault\ninjection on socket transports, e.g. \
+         \"drop:0.2,dup:0.1\"),\nfault_seed=N,\n\
          trace=FILE.jsonl (record every telemetry event; a \
          Chrome-trace\nsibling FILE.chrome.json is exported at the \
          end — load it in\nabout://tracing)\n\ntop: live dashboard \
@@ -56,6 +61,11 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("train") => cmd_train(&args[1..]),
+        // Hidden: re-exec target for multi-process `transport=socket`
+        // runs (config + rank arrive via env vars, see dist::transport::proc).
+        Some("dist-worker") => {
+            adam_mini::coordinator::bigram::worker_main()
+        }
         Some("exp") => cmd_exp(&args[1..]),
         Some("list") => cmd_list(),
         Some("report") => cmd_report(&args[1..]),
@@ -146,6 +156,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
         i += 1;
     }
     println!("config: {}", cfg.to_json());
+    if cfg.model == "bigram" {
+        // Artifact-free path — the only model that can span OS
+        // processes (transport=socket); also runs channel/tcp.
+        return adam_mini::coordinator::bigram::train(&cfg);
+    }
     let engine = Engine::new(manifest::default_dir())?;
     let mut trainer = Trainer::from_config(&engine, &cfg)?;
     let tel = if cfg.trace.is_empty() {

@@ -59,6 +59,30 @@ pub enum Event {
     Message { rank: usize, class: &'static str, bytes: u64 },
     /// A compiled artifact was loaded (cache miss) by the engine.
     ArtifactLoaded { name: String, ms: f64 },
+    /// The socket transport retransmitted a frame (attempt > 0).
+    /// `class` is the base traffic class being carried; the retried
+    /// bytes themselves also flow through [`Event::Message`] under
+    /// the `retry` class, so metrics must count this event but never
+    /// re-add its bytes.
+    RetrySent {
+        rank: usize,
+        peer: usize,
+        class: &'static str,
+        seq: u64,
+        attempt: u64,
+        bytes: u64,
+    },
+    /// A send exhausted its retry budget without an ack.
+    CommTimeout {
+        rank: usize,
+        peer: usize,
+        class: &'static str,
+        seq: u64,
+        attempts: u64,
+    },
+    /// A worker's comm thread hung up mid-step; the step is being
+    /// abandoned with a typed error instead of a crash.
+    CommHangup { step: u64, rank: usize },
 }
 
 impl Event {
@@ -75,6 +99,9 @@ impl Event {
             Event::CheckpointSaved { .. } => "checkpoint",
             Event::Message { .. } => "message",
             Event::ArtifactLoaded { .. } => "artifact",
+            Event::RetrySent { .. } => "retry_sent",
+            Event::CommTimeout { .. } => "comm_timeout",
+            Event::CommHangup { .. } => "comm_hangup",
         }
     }
 }

@@ -280,6 +280,18 @@ impl MetricsRegistry {
                 self.counter_add("artifacts_loaded", 1);
                 self.hist("artifact_load_ns").observe(ms * 1e6);
             }
+            // Counter only: the retried bytes already arrive via
+            // Event::Message under the "retry" class, so adding them
+            // here would double-count the ledger.
+            Event::RetrySent { .. } => {
+                self.counter_add("retries", 1);
+            }
+            Event::CommTimeout { .. } => {
+                self.counter_add("comm_timeouts", 1);
+            }
+            Event::CommHangup { .. } => {
+                self.counter_add("comm_hangups", 1);
+            }
         }
     }
 

@@ -92,6 +92,25 @@ pub fn encode_line(st: &Stamped) -> String {
             kv.push(("name", Json::str(name.clone())));
             kv.push(("ms", Json::num(*ms)));
         }
+        Event::RetrySent { rank, peer, class, seq, attempt, bytes } => {
+            kv.push(("rank", Json::num(*rank as f64)));
+            kv.push(("peer", Json::num(*peer as f64)));
+            kv.push(("class", Json::str(*class)));
+            kv.push(("frame_seq", Json::num(*seq as f64)));
+            kv.push(("attempt", Json::num(*attempt as f64)));
+            kv.push(("bytes", Json::num(*bytes as f64)));
+        }
+        Event::CommTimeout { rank, peer, class, seq, attempts } => {
+            kv.push(("rank", Json::num(*rank as f64)));
+            kv.push(("peer", Json::num(*peer as f64)));
+            kv.push(("class", Json::str(*class)));
+            kv.push(("frame_seq", Json::num(*seq as f64)));
+            kv.push(("attempts", Json::num(*attempts as f64)));
+        }
+        Event::CommHangup { step, rank } => {
+            kv.push(("step", Json::num(*step as f64)));
+            kv.push(("rank", Json::num(*rank as f64)));
+        }
     }
     Json::obj(kv).to_string()
 }
@@ -170,6 +189,25 @@ pub fn decode_line(line: &str) -> Result<Option<Stamped>> {
         "artifact" => Event::ArtifactLoaded {
             name: j.get("name")?.as_str()?.to_string(),
             ms: j.get("ms")?.as_f64()?,
+        },
+        "retry_sent" => Event::RetrySent {
+            rank: rank(&j)?,
+            peer: j.get("peer")?.as_usize()?,
+            class: intern_class(j.get("class")?.as_str()?),
+            seq: j.get("frame_seq")?.as_usize()? as u64,
+            attempt: j.get("attempt")?.as_usize()? as u64,
+            bytes: j.get("bytes")?.as_usize()? as u64,
+        },
+        "comm_timeout" => Event::CommTimeout {
+            rank: rank(&j)?,
+            peer: j.get("peer")?.as_usize()?,
+            class: intern_class(j.get("class")?.as_str()?),
+            seq: j.get("frame_seq")?.as_usize()? as u64,
+            attempts: j.get("attempts")?.as_usize()? as u64,
+        },
+        "comm_hangup" => Event::CommHangup {
+            step: step(&j)?,
+            rank: rank(&j)?,
         },
         other => bail!("unknown event kind {other:?}"),
     };
@@ -366,6 +404,12 @@ mod tests {
             Event::CheckpointSaved { step: 1, path: "x/ck".into() },
             Event::ArtifactLoaded { name: "bigram/fwd".into(),
                                     ms: 3.5 },
+            Event::RetrySent { rank: 1, peer: 2, class: "grad_reduce",
+                               seq: 17, attempt: 2, bytes: 4096 },
+            Event::CommTimeout { rank: 1, peer: 2,
+                                 class: "grad_reduce", seq: 18,
+                                 attempts: 10 },
+            Event::CommHangup { step: 1, rank: 3 },
         ];
         evs.into_iter()
             .enumerate()

@@ -1,0 +1,226 @@
+//! Fault-injection matrix for the socket transport.
+//!
+//! The contract under test: the framed/retried TCP wire is invisible
+//! to the training math. A `workers=4` run over sockets — with or
+//! without injected faults — produces the bit-identical loss
+//! trajectory of the in-process channel run (and, at one micro-batch
+//! per step, of the single-worker run), while every retransmission is
+//! visible in the byte ledgers under the `retry` traffic class.
+
+use adam_mini::data::{Batch, Batcher, Corpus, SyntheticSpec};
+use adam_mini::dist::transport::socket_ring_world;
+use adam_mini::dist::{DistOptions, DistTrainer, FaultSpec,
+                      LinkModel, SocketOptions, TimeoutPolicy,
+                      TrafficClass, TransportKind};
+use adam_mini::optim::ModelMeta;
+use adam_mini::partition::Strategy;
+use adam_mini::tensor::Tensor;
+use adam_mini::util::prng::Rng;
+
+const VOCAB: usize = 32;
+
+fn init_params(seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    vec![Tensor::randn("embed", &[VOCAB, VOCAB], 0.1, &mut rng)]
+}
+
+/// (mean loss, analytic gradient) for the bigram LM over one batch.
+fn loss_grad(params: &[Tensor], batch: &Batch) -> (f32, Vec<Tensor>) {
+    let w = &params[0];
+    let mut grad = Tensor::zeros("embed", &[VOCAB, VOCAB]);
+    let n = batch.tokens.len();
+    let inv = 1.0 / n as f32;
+    let mut total = 0.0f64;
+    for (&tok, &tgt) in batch.tokens.iter().zip(&batch.targets) {
+        let (tok, tgt) = (tok as usize, tgt as usize);
+        let row = &w.data[tok * VOCAB..(tok + 1) * VOCAB];
+        let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+        let exps: Vec<f32> =
+            row.iter().map(|x| (x - mx).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        total += (z.ln() + mx - row[tgt]) as f64;
+        let grow = &mut grad.data[tok * VOCAB..(tok + 1) * VOCAB];
+        for (c, e) in grow.iter_mut().zip(&exps) {
+            *c += e / z * inv;
+        }
+        grow[tgt] -= inv;
+    }
+    ((total * inv as f64) as f32, vec![grad])
+}
+
+fn corpus_batcher(seed: u64) -> Batcher {
+    let corpus = Corpus::synthetic(&SyntheticSpec {
+        vocab: VOCAB,
+        n_tokens: 20_000,
+        seed: seed ^ 0xDA7A,
+        ..Default::default()
+    });
+    Batcher::new(corpus, 4, 16, seed)
+}
+
+struct RunOut {
+    loss_bits: Vec<u32>,
+    bytes: [u64; 5],
+    retry_msgs: u64,
+    data_msgs: u64,
+}
+
+/// One short bigram training run through `DistTrainer` and the given
+/// transport; returns the loss bits plus the full byte ledger.
+fn run(transport: TransportKind, workers: usize, zero2: bool,
+       overlap: bool, steps: usize) -> RunOut {
+    let mut params = init_params(1);
+    let meta = ModelMeta { n_heads: 1, stacked: vec![] };
+    let spec = meta.spec_for(&params, Strategy::Hessian).unwrap();
+    let mut dist = DistTrainer::new(&params, DistOptions {
+        workers,
+        bucket_kb: 1,
+        zero1: true,
+        zero2,
+        optimizer: "adam_mini".into(),
+        spec: Some(spec),
+        transport,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut batcher = corpus_batcher(9);
+    let mut loss_bits = Vec::with_capacity(steps);
+    // One micro-batch per step: every schedule is bit-identical to
+    // the single-worker run (idle workers contribute exact zeros).
+    for _ in 0..steps {
+        let batch = batcher.next_batch();
+        let (loss, g) = loss_grad(&params, &batch);
+        if overlap {
+            let mut stream = dist.begin_step(1, 2e-2);
+            stream.push_grad(0, 0, &g[0]).unwrap();
+            stream.finish(&mut params).unwrap();
+        } else {
+            let mut local = dist.grad_buffers();
+            dist.layout().accumulate(&mut local[0], &g);
+            dist.step(&mut params, local, 1, 2e-2).unwrap();
+        }
+        loss_bits.push(loss.to_bits());
+    }
+    let stats = dist.stats();
+    let mut bytes = [0u64; 5];
+    let mut data_msgs = 0;
+    for (i, c) in TrafficClass::ALL.iter().enumerate() {
+        bytes[i] = stats.bytes(*c);
+        if *c != TrafficClass::Retry {
+            data_msgs += stats.messages(*c);
+        }
+    }
+    RunOut {
+        loss_bits,
+        bytes,
+        retry_msgs: stats.messages(TrafficClass::Retry),
+        data_msgs,
+    }
+}
+
+fn sock(fault: &str, seed: u64) -> TransportKind {
+    TransportKind::Socket(SocketOptions {
+        faults: FaultSpec::parse(fault).unwrap(),
+        seed,
+        policy: TimeoutPolicy::twitchy(),
+    })
+}
+
+#[test]
+fn fault_matrix_is_bit_exact_and_accounts_retries() {
+    const STEPS: usize = 4;
+    let faults = ["drop:0.2", "dup:0.15", "reorder:0.15",
+                  "corrupt:0.2"];
+    for zero2 in [false, true] {
+        for overlap in [false, true] {
+            let reference =
+                run(TransportKind::Channel, 1, zero2, overlap, STEPS);
+            let channel =
+                run(TransportKind::Channel, 4, zero2, overlap, STEPS);
+            // N-vs-1 bit-exactness holds before any socket enters.
+            assert_eq!(channel.loss_bits, reference.loss_bits,
+                       "channel 4-vs-1 zero2={zero2} overlap={overlap}");
+            for fault in faults {
+                let got = run(sock(fault, 42), 4, zero2, overlap,
+                              STEPS);
+                assert_eq!(
+                    got.loss_bits, channel.loss_bits,
+                    "{fault} zero2={zero2} overlap={overlap}");
+                // Base traffic ledgers are byte-identical: faults
+                // cost retries, never payload.
+                for (i, c) in TrafficClass::ALL.iter().enumerate() {
+                    if *c != TrafficClass::Retry {
+                        assert_eq!(
+                            got.bytes[i], channel.bytes[i],
+                            "{} bytes under {fault}", c.name());
+                    }
+                }
+                // Retries are bounded by the attempt budget.
+                let budget = got.data_msgs
+                    * (TimeoutPolicy::twitchy().max_attempts as u64
+                       - 1);
+                assert!(got.retry_msgs <= budget,
+                        "{fault}: {} retries > budget {budget}",
+                        got.retry_msgs);
+            }
+        }
+    }
+}
+
+#[test]
+fn lossy_links_actually_retry() {
+    // High drop rate: the ledger must show retry traffic, proving the
+    // bit-exact trajectories above survived real retransmissions.
+    let got = run(sock("drop:0.3,corrupt:0.2", 7), 4, true, false, 3);
+    assert!(got.retry_msgs > 0, "no retries recorded under 30% drop");
+    assert!(got.bytes[TrafficClass::ALL
+        .iter()
+        .position(|c| *c == TrafficClass::Retry)
+        .unwrap()] > 0);
+}
+
+#[test]
+fn fault_free_sockets_never_retry() {
+    let got = run(
+        TransportKind::Socket(SocketOptions::default()), 3, false,
+        true, 3);
+    assert_eq!(got.retry_msgs, 0,
+               "retry on a clean localhost link is a bug");
+}
+
+#[test]
+fn killed_worker_is_a_typed_error_naming_the_rank() {
+    // Build a 3-rank socket world and kill rank 1 outright; its
+    // neighbours' sends/recvs must fail with typed errors that name
+    // rank 1 — not a panic, not a hang.
+    let opts = SocketOptions {
+        faults: FaultSpec::default(),
+        seed: 0,
+        policy: TimeoutPolicy {
+            base_ms: 20,
+            factor: 2.0,
+            cap_ms: 100,
+            max_attempts: 4,
+        },
+    };
+    let (mut nodes, _stats) =
+        socket_ring_world(3, LinkModel::default(), &opts).unwrap();
+    drop(nodes.remove(1));
+    use adam_mini::dist::DistError;
+    let names_dead_rank = |e: &DistError| {
+        matches!(e,
+                 DistError::PeerDisconnected { peer: 1, .. }
+                 | DistError::Timeout { peer: 1, .. })
+    };
+    // Rank 0 sends right into the dead rank: the ack never comes.
+    let send_err = nodes[0]
+        .send_right(TrafficClass::GradReduce, vec![1.0; 8])
+        .expect_err("send into a dead rank must fail");
+    assert!(names_dead_rank(&send_err), "got {send_err}");
+    // Rank 2 receives from its left — the dead rank's closed
+    // connection — and gets a typed disconnect, not a hang.
+    let recv_err = nodes[1]
+        .recv_left()
+        .expect_err("recv from a dead rank must fail");
+    assert!(names_dead_rank(&recv_err), "got {recv_err}");
+}
