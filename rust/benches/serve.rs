@@ -1,0 +1,67 @@
+//! Bench: multi-tenant serve throughput under each scheduling policy.
+//!
+//! Runs the seeded CI storm (`tenants=4 pool=2 storm_seed=7`) to
+//! all-terminal under `fair`, `fifo`, and `priority`, measuring job
+//! throughput, p50/p95 job latency (in scheduler rounds, scaled by
+//! the measured round wall time), and Jain's fairness index.
+//!
+//! Emits `results/BENCH_serve.json` (provenance `"measured"`) for the
+//! `repro report --bench-history --gate` regression check.
+
+use adam_mini::serve::{run, ServeConfig};
+use adam_mini::util::json::Json;
+
+fn main() {
+    println!("serve bench: seeded storm per scheduling policy\n");
+    let mut records = Vec::new();
+    let mut fairness_fair = 1.0;
+    for sched in ["fair", "fifo", "priority"] {
+        let cfg = ServeConfig { sched: sched.to_string(),
+                                ..Default::default() };
+        let r = run(&cfg).expect("serve run failed");
+        assert!(r.all_terminal(), "{sched}: jobs left non-terminal");
+        if sched == "fair" {
+            fairness_fair = r.fairness;
+        }
+        let jobs = r.jobs.len();
+        let wall_ns = r.wall_secs * 1e9;
+        let ns_per_round = wall_ns / r.rounds.max(1) as f64;
+        records.push(Json::obj(vec![
+            ("name",
+             Json::str(format!("serve/{sched}/t{}_p{}", r.tenants,
+                               r.pool))),
+            ("sched", Json::str(sched)),
+            ("iters", Json::num(jobs as f64)),
+            ("mean_ns", Json::num(wall_ns / jobs.max(1) as f64)),
+            ("p50_ns",
+             Json::num(r.p50_latency_rounds * ns_per_round)),
+            ("p95_ns",
+             Json::num(r.p95_latency_rounds * ns_per_round)),
+            ("rounds", Json::num(r.rounds as f64)),
+            ("done", Json::num(r.done as f64)),
+            ("failed", Json::num(r.failed as f64)),
+            ("throughput_jobs_per_s",
+             Json::num(r.throughput_jobs_per_s)),
+            ("p50_latency_rounds", Json::num(r.p50_latency_rounds)),
+            ("p95_latency_rounds", Json::num(r.p95_latency_rounds)),
+            ("fairness", Json::num(r.fairness)),
+            ("max_tenant_wait", Json::num(r.max_tenant_wait as f64)),
+        ]));
+        println!(
+            "  -> {sched}: {} jobs in {} rounds, {:.1} jobs/s, \
+             latency p50 {:.0} / p95 {:.0} rounds, fairness {:.3}",
+            jobs, r.rounds, r.throughput_jobs_per_s,
+            r.p50_latency_rounds, r.p95_latency_rounds, r.fairness);
+    }
+
+    std::fs::create_dir_all("results").expect("mkdir results");
+    let out = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("provenance", Json::str("measured")),
+        ("fairness_fair", Json::num(fairness_fair)),
+        ("records", Json::Arr(records)),
+    ]);
+    std::fs::write("results/BENCH_serve.json", out.to_string())
+        .expect("write BENCH_serve.json");
+    println!("\nwrote results/BENCH_serve.json");
+}

@@ -265,9 +265,66 @@ impl Job {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Multi-tenant shared-base memory model (cross-checked against the
+// serve subsystem's live tenant runtimes — see `repro report`).
+// ---------------------------------------------------------------------------
+
+/// Parameters of one rank-`r` LoRA adapter over a `d_in × d_out`
+/// base: `A ∈ [d_in × r]` plus `B ∈ [r × d_out]`.
+pub fn lora_adapter_params(d_in: usize, d_out: usize, rank: usize)
+    -> usize {
+    rank * (d_in + d_out)
+}
+
+/// Bytes to serve `tenants` adapters over ONE shared frozen base:
+/// base f32 weights once, plus per-tenant adapter weights and
+/// optimizer state. The base contributes no optimizer state (frozen),
+/// so the per-tenant cost is tiny and scales with
+/// `state_bytes_per_param` — Adam-mini's halved state doubles the
+/// tenant density at fixed memory.
+pub fn shared_base_bytes(base_params: f64, adapter_params: f64,
+                         opt: &OptProfile, tenants: usize) -> f64 {
+    4.0 * base_params
+        + tenants as f64
+            * adapter_params
+            * (4.0 + opt.state_bytes_per_param)
+}
+
+/// Bytes for the naive alternative: every tenant holds a full
+/// trainable replica of the base (weights + optimizer state).
+pub fn full_replica_bytes(base_params: f64, opt: &OptProfile,
+                          tenants: usize) -> f64 {
+    tenants as f64 * base_params * (4.0 + opt.state_bytes_per_param)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shared_base_beats_replicas_and_scales_linearly() {
+        let base = 1024.0 * 1024.0;
+        let adapter = lora_adapter_params(1024, 1024, 8) as f64;
+        for profile in [&ADAMW_PROFILE, &ADAM_MINI_PROFILE] {
+            let one = shared_base_bytes(base, adapter, profile, 1);
+            let ten = shared_base_bytes(base, adapter, profile, 10);
+            // Marginal tenant cost is exactly the adapter term.
+            let marginal = (ten - one) / 9.0;
+            let want = adapter * (4.0 + profile.state_bytes_per_param);
+            assert!((marginal - want).abs() < 1e-6);
+            // Shared base crushes full replication at every scale.
+            let rep = full_replica_bytes(base, profile, 10);
+            assert!(ten < rep / 5.0, "{} vs {}", ten, rep);
+        }
+        // Adam-mini packs more tenants than AdamW at fixed memory:
+        // its per-tenant marginal bytes are strictly smaller.
+        let mini = shared_base_bytes(base, adapter,
+                                     &ADAM_MINI_PROFILE, 16);
+        let adamw =
+            shared_base_bytes(base, adapter, &ADAMW_PROFILE, 16);
+        assert!(mini < adamw);
+    }
 
     #[test]
     fn table2_operating_points() {

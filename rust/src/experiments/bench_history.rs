@@ -22,8 +22,8 @@ use crate::util::json::Json;
 
 use super::RESULTS_DIR;
 
-const BENCHES: [&str; 3] =
-    ["BENCH_dist.json", "BENCH_overlap.json", "BENCH_optim.json"];
+const BENCHES: [&str; 4] = ["BENCH_dist.json", "BENCH_overlap.json",
+                            "BENCH_optim.json", "BENCH_serve.json"];
 
 /// Relative slowdown vs a measured baseline that fails `--gate`.
 pub const GATE_THRESHOLD: f64 = 0.15;

@@ -47,6 +47,7 @@ pub mod partition;
 pub mod quadratic;
 pub mod rlhf;
 pub mod runtime;
+pub mod serve;
 pub mod telemetry;
 pub mod tensor;
 pub mod util;

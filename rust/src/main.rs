@@ -5,6 +5,7 @@
 //!   exp <name|all> [--quick]                regenerate a paper artifact
 //!   list                                    models + experiments
 //!   report [--bench-history [--gate]]       memory/throughput summary
+//!   serve [key=value ...]                   multi-tenant job service
 //!   top [...]                               live telemetry console
 //!   selfcheck                               load+run every artifact once
 //!
@@ -26,6 +27,9 @@ fn usage() -> ! {
         "usage:\n  repro train [--config FILE] [key=value ...]\n  \
          repro exp <name|all> [--quick]\n  repro list\n  \
          repro report [--bench-history [--gate]]\n  \
+         repro serve [tenants=N pool=N sched=fair|fifo|priority \
+         storm_seed=N\n              quantum=K jobs=N rank=R \
+         optimizer=NAME fail_rate=X trace=FILE]\n  \
          repro top [workers=N steps=K zero2=BOOL interval=MS]\n  \
          repro top --replay FILE.jsonl [--once] [interval=MS]\n  \
          repro top --record FILE.jsonl [workers=N steps=K zero2=BOOL]\n  \
@@ -69,6 +73,7 @@ fn main() -> Result<()> {
         Some("exp") => cmd_exp(&args[1..]),
         Some("list") => cmd_list(),
         Some("report") => cmd_report(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("top") => cmd_top(&args[1..]),
         Some("selfcheck") => cmd_selfcheck(),
         _ => usage(),
@@ -82,7 +87,18 @@ fn cmd_report(args: &[String]) -> Result<()> {
     }
     experiments::throughput::table1()?;
     experiments::throughput::table2()?;
-    adam_mini::dist::traffic_report()
+    adam_mini::dist::traffic_report()?;
+    adam_mini::serve::memory_report()
+}
+
+/// `repro serve`: run the seeded storm to all-terminal, print the
+/// report, and exit non-zero if any job is stuck or a tenant starved
+/// (the CI smoke contract).
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cfg = adam_mini::serve::ServeConfig::parse_args(args)?;
+    let report = adam_mini::serve::run(&cfg)?;
+    adam_mini::serve::print_report(&report);
+    report.check()
 }
 
 fn cmd_top(args: &[String]) -> Result<()> {

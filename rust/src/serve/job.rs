@@ -1,0 +1,264 @@
+//! Typed job specs and the job state machine.
+//!
+//! A job is one unit of tenant work (a training run, an SFT pass, or
+//! an eval sweep) scheduled in quanta over the shared worker pool.
+//! States move `Queued → Running → {Done, Failed, Preempted}` and
+//! `Preempted → Resumed → …`; [`Job::advance`] rejects every other
+//! edge, so a scheduler bug surfaces as a typed error instead of a
+//! silently corrupted queue. Failures carry the [`DistError`]
+//! taxonomy's message — a worker dying takes down the JOB, never the
+//! process.
+
+use anyhow::{bail, Result};
+
+/// What kind of work a job runs. The kind picks the per-step learning
+/// rate (and whether parameters update at all); all kinds share the
+/// tenant's adapter and batch stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Pre-training-style pass: full learning rate.
+    Train,
+    /// Supervised fine-tune: reduced learning rate.
+    Sft,
+    /// Eval sweep: losses only, no parameter updates.
+    Eval,
+}
+
+impl JobKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::Train => "train",
+            JobKind::Sft => "sft",
+            JobKind::Eval => "eval",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<JobKind> {
+        Ok(match s {
+            "train" => JobKind::Train,
+            "sft" => JobKind::Sft,
+            "eval" => JobKind::Eval,
+            other => bail!("unknown job kind {other:?}"),
+        })
+    }
+
+    /// Whether steps of this kind update the adapter.
+    pub fn updates_params(&self) -> bool {
+        !matches!(self, JobKind::Eval)
+    }
+
+    /// Per-step learning rate for this kind (constant schedule; the
+    /// service quantum is too short for a warmup to matter).
+    pub fn lr(&self) -> f32 {
+        match self {
+            JobKind::Train => 3e-2,
+            JobKind::Sft => 1e-2,
+            JobKind::Eval => 0.0,
+        }
+    }
+}
+
+/// Immutable description of one job, produced by the request storm
+/// (or a test) before the job is admitted.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: u64,
+    /// Owning tenant (adapter + optimizer state + batch stream).
+    pub tenant: String,
+    /// Seed for the tenant's adapter init and data stream — shared by
+    /// every job of the same tenant.
+    pub tenant_seed: u64,
+    pub kind: JobKind,
+    /// Higher runs earlier under `sched=priority`.
+    pub prio: u8,
+    /// Total optimizer steps (or eval batches) this job demands.
+    pub steps: u64,
+    /// Scheduler round at which the job arrives (Poisson storm).
+    pub arrival_round: u64,
+    /// Fault injection: the worker "panics" when the tenant reaches
+    /// this absolute step — surfaces as a per-job `DistError`.
+    pub fail_at: Option<u64>,
+}
+
+/// The job state machine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobState {
+    /// Admitted, waiting for its first lease.
+    Queued,
+    /// Holding a lease, first quantum.
+    Running { lease: usize },
+    /// Lease returned at a step boundary; waiting to be rescheduled.
+    Preempted { at_step: u64 },
+    /// Holding a lease again after a preemption.
+    Resumed { lease: usize },
+    /// Terminal: every demanded step ran.
+    Done { steps: u64 },
+    /// Terminal: a quantum died with a `DistError` (message kept).
+    Failed { error: String },
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running { .. } => "running",
+            JobState::Preempted { .. } => "preempted",
+            JobState::Resumed { .. } => "resumed",
+            JobState::Done { .. } => "done",
+            JobState::Failed { .. } => "failed",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done { .. } | JobState::Failed { .. })
+    }
+
+    /// Holding a lease right now.
+    pub fn is_active(&self) -> bool {
+        matches!(self,
+                 JobState::Running { .. } | JobState::Resumed { .. })
+    }
+
+    /// Schedulable: waiting for a lease.
+    pub fn is_runnable(&self) -> bool {
+        matches!(self, JobState::Queued | JobState::Preempted { .. })
+    }
+
+    fn legal(&self, next: &JobState) -> bool {
+        use JobState::*;
+        match (self, next) {
+            (Queued, Running { .. }) => true,
+            (Running { .. } | Resumed { .. },
+             Done { .. } | Failed { .. } | Preempted { .. }) => true,
+            (Preempted { .. }, Resumed { .. }) => true,
+            _ => false,
+        }
+    }
+}
+
+/// One job's full scheduler-side record: spec + state machine +
+/// latency bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Optimizer steps (or eval batches) completed so far.
+    pub steps_done: u64,
+    /// Admission order (FIFO tie-break inside a tenant).
+    pub enqueue_seq: u64,
+    /// Round the job finished, if terminal.
+    pub finish_round: Option<u64>,
+    /// Times this job was preempted.
+    pub preemptions: u64,
+}
+
+impl Job {
+    pub fn new(spec: JobSpec, enqueue_seq: u64) -> Job {
+        Job {
+            spec,
+            state: JobState::Queued,
+            steps_done: 0,
+            enqueue_seq,
+            finish_round: None,
+            preemptions: 0,
+        }
+    }
+
+    /// Advance the state machine, rejecting illegal edges.
+    pub fn advance(&mut self, next: JobState) -> Result<()> {
+        if !self.state.legal(&next) {
+            bail!("job {}: illegal transition {} -> {}",
+                  self.spec.id, self.state.name(), next.name());
+        }
+        if let JobState::Preempted { .. } = next {
+            self.preemptions += 1;
+        }
+        self.state = next;
+        Ok(())
+    }
+
+    /// Completion latency in scheduler rounds (arrival inclusive).
+    pub fn latency_rounds(&self) -> Option<u64> {
+        self.finish_round
+            .map(|f| f + 1 - self.spec.arrival_round.min(f + 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(id: u64) -> JobSpec {
+        JobSpec {
+            id,
+            tenant: "t0".into(),
+            tenant_seed: 1,
+            kind: JobKind::Train,
+            prio: 0,
+            steps: 8,
+            arrival_round: 0,
+            fail_at: None,
+        }
+    }
+
+    #[test]
+    fn happy_path_transitions() {
+        let mut j = Job::new(spec(1), 0);
+        j.advance(JobState::Running { lease: 0 }).unwrap();
+        j.advance(JobState::Preempted { at_step: 3 }).unwrap();
+        assert_eq!(j.preemptions, 1);
+        assert!(j.state.is_runnable());
+        j.advance(JobState::Resumed { lease: 1 }).unwrap();
+        assert!(j.state.is_active());
+        j.advance(JobState::Done { steps: 8 }).unwrap();
+        assert!(j.state.is_terminal());
+    }
+
+    #[test]
+    fn failure_is_terminal_from_either_active_state() {
+        let mut j = Job::new(spec(2), 0);
+        j.advance(JobState::Running { lease: 0 }).unwrap();
+        j.advance(JobState::Failed { error: "rank 0: worker \
+                                             panicked".into() })
+            .unwrap();
+        assert!(j.state.is_terminal());
+        // Terminal is a sink.
+        assert!(j.advance(JobState::Running { lease: 0 }).is_err());
+    }
+
+    #[test]
+    fn illegal_edges_are_rejected() {
+        let mut j = Job::new(spec(3), 0);
+        // Queued cannot finish or resume without running first.
+        assert!(j.clone().advance(JobState::Done { steps: 0 }).is_err());
+        assert!(j
+            .clone()
+            .advance(JobState::Resumed { lease: 0 })
+            .is_err());
+        j.advance(JobState::Running { lease: 0 }).unwrap();
+        // Running cannot re-run or go back to queued.
+        assert!(j
+            .clone()
+            .advance(JobState::Running { lease: 1 })
+            .is_err());
+        assert!(j.clone().advance(JobState::Queued).is_err());
+    }
+
+    #[test]
+    fn kind_roundtrip_and_lr() {
+        for k in [JobKind::Train, JobKind::Sft, JobKind::Eval] {
+            assert_eq!(JobKind::from_name(k.name()).unwrap(), k);
+        }
+        assert!(JobKind::Eval.lr() == 0.0);
+        assert!(!JobKind::Eval.updates_params());
+        assert!(JobKind::Train.updates_params());
+    }
+
+    #[test]
+    fn latency_counts_from_arrival() {
+        let mut j = Job::new(spec(4), 0);
+        j.spec.arrival_round = 2;
+        j.finish_round = Some(5);
+        assert_eq!(j.latency_rounds(), Some(4));
+    }
+}

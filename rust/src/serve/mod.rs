@@ -1,0 +1,700 @@
+//! `serve/` — multi-tenant training service over the shared pool.
+//!
+//! The coordinator multiplexes many training / SFT / eval jobs from
+//! `tenants=N` tenants over `pool=N` workers leased from the dist
+//! engine's ring world. Scheduling is round-based gang scheduling:
+//! each round the coordinator admits storm arrivals, asks the
+//! [`scheduler::Scheduler`] which runnable jobs get the free leases
+//! (at most one job per tenant — a tenant's jobs serialize on its
+//! single adapter), runs one quantum (`quantum=K` optimizer steps)
+//! per leased job concurrently, then collects outcomes. Preemption
+//! happens only at quantum (= step) boundaries, and a worker dying
+//! mid-quantum surfaces as that JOB failing with a typed
+//! [`DistError`] — the service and every other tenant keep going.
+//!
+//! Everything is deterministic given `storm_seed`: the workload, the
+//! schedule, and each tenant's loss trajectory (see [`tenant`] for
+//! why trajectories are interleaving-independent). The run emits
+//! `Event::Job*` telemetry (feeding `repro top`'s tenants table) and
+//! a [`ServeReport`] with throughput, latency percentiles, Jain's
+//! fairness index, and the starvation-freedom check that CI enforces.
+
+pub mod job;
+pub mod pool;
+pub mod scheduler;
+pub mod storm;
+pub mod tenant;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dist::DistError;
+use crate::telemetry::event::{Event, EventBus, Stamped};
+use crate::telemetry::trace::TraceWriter;
+use crate::util::json::Json;
+
+pub use job::{Job, JobKind, JobSpec, JobState};
+pub use pool::{Lease, WorkerPool};
+pub use scheduler::{Candidate, Policy, Scheduler};
+pub use tenant::TenantRuntime;
+
+/// Service configuration (the `repro serve key=value` surface).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub tenants: usize,
+    pub pool: usize,
+    pub sched: String,
+    pub storm_seed: u64,
+    /// Optimizer steps per lease before the mandatory preemption
+    /// point.
+    pub quantum: u64,
+    pub jobs_per_tenant: usize,
+    pub lora_rank: usize,
+    pub optimizer: String,
+    /// Seed of the shared frozen base table.
+    pub base_seed: u64,
+    /// Probability a job carries an injected worker fault.
+    pub fail_rate: f64,
+    /// Mean inter-arrival gap between a tenant's jobs, in rounds.
+    pub mean_gap: f64,
+    /// JSONL trace output path ("" = no trace).
+    pub trace: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            tenants: 4,
+            pool: 2,
+            sched: "fair".to_string(),
+            storm_seed: 7,
+            quantum: 3,
+            jobs_per_tenant: 3,
+            lora_rank: 4,
+            optimizer: "adam_mini".to_string(),
+            base_seed: 0xBA5E,
+            fail_rate: 0.0,
+            mean_gap: 1.5,
+            trace: String::new(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse `key=value` CLI arguments over the defaults.
+    pub fn parse_args(args: &[String]) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        for a in args {
+            let (k, v) = a.split_once('=').with_context(|| {
+                format!("serve arg {a:?}: want key=value")
+            })?;
+            let c = || format!("serve arg {a:?}");
+            match k {
+                "tenants" => cfg.tenants = v.parse().with_context(c)?,
+                "pool" => cfg.pool = v.parse().with_context(c)?,
+                "sched" => {
+                    Policy::from_name(v)?;
+                    cfg.sched = v.to_string();
+                }
+                "storm_seed" => {
+                    cfg.storm_seed = v.parse().with_context(c)?
+                }
+                "quantum" => cfg.quantum = v.parse().with_context(c)?,
+                "jobs" => {
+                    cfg.jobs_per_tenant = v.parse().with_context(c)?
+                }
+                "rank" => cfg.lora_rank = v.parse().with_context(c)?,
+                "optimizer" => cfg.optimizer = v.to_string(),
+                "seed" => cfg.base_seed = v.parse().with_context(c)?,
+                "fail_rate" => {
+                    cfg.fail_rate = v.parse().with_context(c)?
+                }
+                "mean_gap" => {
+                    cfg.mean_gap = v.parse().with_context(c)?
+                }
+                "trace" => cfg.trace = v.to_string(),
+                other => bail!("unknown serve key {other:?}"),
+            }
+        }
+        if cfg.tenants == 0 || cfg.pool == 0 || cfg.quantum == 0 {
+            bail!("serve: tenants, pool and quantum must be positive");
+        }
+        Ok(cfg)
+    }
+}
+
+/// Terminal record of one job in the report.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub id: u64,
+    pub tenant: String,
+    pub kind: String,
+    pub state: String,
+    pub error: Option<String>,
+    pub steps: u64,
+    pub latency_rounds: u64,
+    pub preemptions: u64,
+}
+
+/// Everything a serve run produced (the bench + CI surface).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub sched: String,
+    pub tenants: usize,
+    pub pool: usize,
+    pub jobs: Vec<JobOutcome>,
+    pub rounds: u64,
+    pub done: usize,
+    pub failed: usize,
+    /// Longest streak of consecutive rounds any tenant spent
+    /// backlogged without service.
+    pub max_tenant_wait: u64,
+    pub starvation_bound: u64,
+    /// Jain's fairness index over per-tenant service rates.
+    pub fairness: f64,
+    pub p50_latency_rounds: f64,
+    pub p95_latency_rounds: f64,
+    pub wall_secs: f64,
+    pub throughput_jobs_per_s: f64,
+    /// Optimizer steps each tenant completed.
+    pub tenant_steps: BTreeMap<String, u64>,
+    /// Full per-tenant loss trajectories (isolation-test witness).
+    pub tenant_losses: BTreeMap<String, Vec<f32>>,
+    /// Bytes of tenant state shipped over the pool links.
+    pub state_sync_bytes: u64,
+}
+
+impl ServeReport {
+    pub fn all_terminal(&self) -> bool {
+        self.jobs
+            .iter()
+            .all(|j| j.state == "done" || j.state == "failed")
+    }
+
+    /// The CI smoke contract: every job terminal, and under `fair` no
+    /// tenant ever waited past the starvation bound.
+    pub fn check(&self) -> Result<()> {
+        if !self.all_terminal() {
+            bail!("serve: non-terminal jobs left in the queue");
+        }
+        if self.sched == "fair"
+            && self.max_tenant_wait > self.starvation_bound
+        {
+            bail!(
+                "serve: starvation under fair: tenant waited {} rounds \
+                 (bound {})",
+                self.max_tenant_wait, self.starvation_bound
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let jobs: Vec<Json> = self
+            .jobs
+            .iter()
+            .map(|j| {
+                Json::obj(vec![
+                    ("id", Json::num(j.id as f64)),
+                    ("tenant", Json::str(&j.tenant)),
+                    ("kind", Json::str(&j.kind)),
+                    ("state", Json::str(&j.state)),
+                    ("error", match &j.error {
+                        Some(e) => Json::str(e),
+                        None => Json::Null,
+                    }),
+                    ("steps", Json::num(j.steps as f64)),
+                    ("latency_rounds",
+                     Json::num(j.latency_rounds as f64)),
+                    ("preemptions", Json::num(j.preemptions as f64)),
+                ])
+            })
+            .collect();
+        let steps = Json::Obj(
+            self.tenant_steps
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("sched", Json::str(&self.sched)),
+            ("tenants", Json::num(self.tenants as f64)),
+            ("pool", Json::num(self.pool as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("done", Json::num(self.done as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("max_tenant_wait", Json::num(self.max_tenant_wait as f64)),
+            ("starvation_bound",
+             Json::num(self.starvation_bound as f64)),
+            ("fairness", Json::num(self.fairness)),
+            ("p50_latency_rounds", Json::num(self.p50_latency_rounds)),
+            ("p95_latency_rounds", Json::num(self.p95_latency_rounds)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("throughput_jobs_per_s",
+             Json::num(self.throughput_jobs_per_s)),
+            ("state_sync_bytes",
+             Json::num(self.state_sync_bytes as f64)),
+            ("tenant_steps", steps),
+            ("jobs", Json::Arr(jobs)),
+        ])
+    }
+}
+
+/// Jain's fairness index: `(Σx)² / (n·Σx²)`, 1.0 = perfectly fair.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    let active: Vec<f64> =
+        xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if active.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = active.iter().sum();
+    let s2: f64 = active.iter().map(|x| x * x).sum();
+    if s2 == 0.0 {
+        return 1.0;
+    }
+    s * s / (active.len() as f64 * s2)
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// One leased quantum's inputs, moved into its worker thread.
+struct QuantumWork {
+    idx: usize,
+    kind: JobKind,
+    k: u64,
+    fail_at: Option<u64>,
+    lease: Lease,
+    rt: TenantRuntime,
+}
+
+/// Run the seeded storm for this config.
+pub fn run(cfg: &ServeConfig) -> Result<ServeReport> {
+    run_jobs(cfg, storm::generate(cfg))
+}
+
+/// Drive an explicit job list to all-terminal. Public so tests can
+/// hand-craft workloads (isolation, preemption, failure injection)
+/// against the real scheduler instead of a mock.
+pub fn run_jobs(cfg: &ServeConfig, specs: Vec<JobSpec>)
+    -> Result<ServeReport> {
+    let t0 = Instant::now();
+    let policy = Policy::from_name(&cfg.sched)?;
+    let mut sched = Scheduler::new(policy);
+    let mut pool = WorkerPool::new(cfg.pool);
+    let bus = EventBus::new(1 << 16);
+    pool.attach_bus(Arc::clone(&bus));
+    let base = tenant::shared_base(cfg.base_seed);
+
+    let mut jobs: Vec<Job> = specs
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| Job::new(s, i as u64))
+        .collect();
+    let mut admitted = vec![false; jobs.len()];
+    let mut runtimes: BTreeMap<String, TenantRuntime> = BTreeMap::new();
+
+    let mut served_quanta: BTreeMap<String, u64> = BTreeMap::new();
+    let mut backlogged_rounds: BTreeMap<String, u64> = BTreeMap::new();
+    let mut wait: BTreeMap<String, u64> = BTreeMap::new();
+    let mut max_wait = 0u64;
+    let mut collected: Vec<Stamped> = Vec::new();
+
+    let mut round = 0u64;
+    loop {
+        // Admit storm arrivals for this round.
+        for (i, job) in jobs.iter().enumerate() {
+            if !admitted[i] && job.spec.arrival_round <= round {
+                admitted[i] = true;
+                bus.publish(Event::JobQueued {
+                    job: job.spec.id,
+                    tenant: job.spec.tenant.clone(),
+                    kind: job.spec.kind.name().to_string(),
+                    round,
+                });
+            }
+        }
+        if jobs.iter().all(|j| j.state.is_terminal()) {
+            break;
+        }
+        // Runnable candidates.
+        let candidates: Vec<Candidate> = jobs
+            .iter()
+            .enumerate()
+            .filter(|(i, j)| admitted[*i] && j.state.is_runnable())
+            .map(|(_, j)| Candidate {
+                job: j.spec.id,
+                tenant: j.spec.tenant.clone(),
+                prio: j.spec.prio,
+                enqueue_seq: j.enqueue_seq,
+            })
+            .collect();
+        let picked = sched.pick(&candidates, pool.free(), round);
+        // Service accounting per backlogged tenant.
+        let backlogged: std::collections::BTreeSet<&str> =
+            candidates.iter().map(|c| c.tenant.as_str()).collect();
+        let picked_tenants: std::collections::BTreeSet<String> = picked
+            .iter()
+            .filter_map(|id| {
+                jobs.iter()
+                    .find(|j| j.spec.id == *id)
+                    .map(|j| j.spec.tenant.clone())
+            })
+            .collect();
+        for t in &backlogged {
+            *backlogged_rounds.entry(t.to_string()).or_insert(0) += 1;
+            if picked_tenants.contains(*t) {
+                *served_quanta.entry(t.to_string()).or_insert(0) += 1;
+                wait.insert(t.to_string(), 0);
+            } else {
+                let w = wait.entry(t.to_string()).or_insert(0);
+                *w += 1;
+                max_wait = max_wait.max(*w);
+            }
+        }
+        // Lease workers, ship tenant state, launch quanta.
+        let mut work: Vec<QuantumWork> = Vec::new();
+        for id in &picked {
+            let idx =
+                jobs.iter().position(|j| j.spec.id == *id).unwrap();
+            let lease = pool
+                .checkout()
+                .expect("scheduler picked more jobs than free leases");
+            let spec = jobs[idx].spec.clone();
+            let rt = match runtimes.remove(&spec.tenant) {
+                Some(rt) => rt,
+                None => TenantRuntime::new(
+                    &spec.tenant, spec.tenant_seed, cfg.lora_rank,
+                    &cfg.optimizer, Arc::clone(&base))?,
+            };
+            pool.account_ship(lease.id(), rt.state_bytes() as u64);
+            let next = match jobs[idx].state {
+                JobState::Queued => JobState::Running {
+                    lease: lease.id(),
+                },
+                _ => JobState::Resumed { lease: lease.id() },
+            };
+            jobs[idx].advance(next)?;
+            bus.publish(Event::JobStarted {
+                job: spec.id,
+                tenant: spec.tenant.clone(),
+                lease: lease.id(),
+                round,
+            });
+            let k = (spec.steps - jobs[idx].steps_done)
+                .min(cfg.quantum);
+            work.push(QuantumWork {
+                idx,
+                kind: spec.kind,
+                k,
+                fail_at: spec.fail_at,
+                lease,
+                rt,
+            });
+        }
+        // One quantum per leased job, concurrently. `run_quantum`
+        // returns typed errors instead of panicking, so a fault here
+        // fails one job, not the scope.
+        type Done = (usize, Lease, TenantRuntime,
+                     std::result::Result<Vec<f32>, DistError>);
+        let results: Vec<Done> = std::thread::scope(|s| {
+            let handles: Vec<_> = work
+                .into_iter()
+                .map(|w| {
+                    s.spawn(move || {
+                        let QuantumWork {
+                            idx, kind, k, fail_at, lease, mut rt,
+                        } = w;
+                        let res = rt.run_quantum(kind, k, lease.id(),
+                                                 fail_at);
+                        (idx, lease, rt, res)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("quantum thread panicked"))
+                .collect()
+        });
+        // Collect outcomes at the step boundary.
+        for (idx, lease, rt, res) in results {
+            let spec = jobs[idx].spec.clone();
+            match res {
+                Ok(losses) => {
+                    jobs[idx].steps_done += losses.len() as u64;
+                    if jobs[idx].steps_done >= spec.steps {
+                        let steps = jobs[idx].steps_done;
+                        jobs[idx].advance(JobState::Done { steps })?;
+                        jobs[idx].finish_round = Some(round);
+                        bus.publish(Event::JobFinished {
+                            job: spec.id,
+                            tenant: spec.tenant.clone(),
+                            outcome: "done".to_string(),
+                            steps,
+                            rounds: jobs[idx]
+                                .latency_rounds()
+                                .unwrap_or(0),
+                        });
+                    } else {
+                        let at_step = jobs[idx].steps_done;
+                        jobs[idx]
+                            .advance(JobState::Preempted { at_step })?;
+                        bus.publish(Event::JobPreempted {
+                            job: spec.id,
+                            tenant: spec.tenant.clone(),
+                            at_step,
+                            round,
+                        });
+                    }
+                }
+                Err(err) => {
+                    let msg = err.to_string();
+                    jobs[idx].advance(JobState::Failed {
+                        error: msg.clone(),
+                    })?;
+                    jobs[idx].finish_round = Some(round);
+                    bus.publish(Event::JobFinished {
+                        job: spec.id,
+                        tenant: spec.tenant.clone(),
+                        outcome: "failed".to_string(),
+                        steps: jobs[idx].steps_done,
+                        rounds: jobs[idx].latency_rounds().unwrap_or(0),
+                    });
+                }
+            }
+            pool.account_ship(lease.id(), rt.state_bytes() as u64);
+            pool.checkin(lease);
+            runtimes.insert(spec.tenant, rt);
+        }
+        collected.extend(bus.drain());
+        round += 1;
+        if round > 200_000 {
+            bail!("serve: no progress after {round} rounds");
+        }
+    }
+    collected.extend(bus.drain());
+
+    if !cfg.trace.is_empty() {
+        let mut w = TraceWriter::create(&cfg.trace)?;
+        for st in &collected {
+            w.write(st)?;
+        }
+        w.finish(bus.published(), bus.dropped())?;
+    }
+
+    // Report.
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let outcomes: Vec<JobOutcome> = jobs
+        .iter()
+        .map(|j| JobOutcome {
+            id: j.spec.id,
+            tenant: j.spec.tenant.clone(),
+            kind: j.spec.kind.name().to_string(),
+            state: j.state.name().to_string(),
+            error: match &j.state {
+                JobState::Failed { error } => Some(error.clone()),
+                _ => None,
+            },
+            steps: j.steps_done,
+            latency_rounds: j.latency_rounds().unwrap_or(0),
+            preemptions: j.preemptions,
+        })
+        .collect();
+    let done = outcomes.iter().filter(|j| j.state == "done").count();
+    let failed =
+        outcomes.iter().filter(|j| j.state == "failed").count();
+    let rates: Vec<f64> = backlogged_rounds
+        .iter()
+        .map(|(t, b)| {
+            served_quanta.get(t).copied().unwrap_or(0) as f64
+                / (*b).max(1) as f64
+        })
+        .collect();
+    let mut lat: Vec<f64> = outcomes
+        .iter()
+        .map(|j| j.latency_rounds as f64)
+        .collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let tenant_steps = runtimes
+        .iter()
+        .map(|(t, rt)| (t.clone(), rt.steps))
+        .collect();
+    let tenant_losses = runtimes
+        .iter()
+        .map(|(t, rt)| (t.clone(), rt.losses.clone()))
+        .collect();
+    Ok(ServeReport {
+        sched: cfg.sched.clone(),
+        tenants: cfg.tenants,
+        pool: cfg.pool,
+        rounds: round,
+        done,
+        failed,
+        max_tenant_wait: max_wait,
+        starvation_bound: Scheduler::starvation_bound(cfg.tenants,
+                                                      cfg.pool),
+        fairness: jain_index(&rates),
+        p50_latency_rounds: percentile(&lat, 0.50),
+        p95_latency_rounds: percentile(&lat, 0.95),
+        wall_secs,
+        throughput_jobs_per_s: outcomes.len() as f64
+            / wall_secs.max(1e-9),
+        tenant_steps,
+        tenant_losses,
+        state_sync_bytes: pool
+            .stats()
+            .bytes(crate::dist::TrafficClass::StateSync),
+        jobs: outcomes,
+    })
+}
+
+/// Print the operator-facing report for `repro serve`.
+pub fn print_report(r: &ServeReport) {
+    println!("== serve: {} tenants over {} workers (sched={}) ==",
+             r.tenants, r.pool, r.sched);
+    let hdr = ["job", "tenant", "kind", "state", "steps", "latency",
+               "preempts"];
+    let rows: Vec<Vec<String>> = r
+        .jobs
+        .iter()
+        .map(|j| {
+            vec![
+                format!("{}", j.id),
+                j.tenant.clone(),
+                j.kind.clone(),
+                match &j.error {
+                    Some(e) => format!("{} ({e})", j.state),
+                    None => j.state.clone(),
+                },
+                format!("{}", j.steps),
+                format!("{}", j.latency_rounds),
+                format!("{}", j.preemptions),
+            ]
+        })
+        .collect();
+    print!("{}", crate::util::csv::ascii_table(&hdr, &rows));
+    println!(
+        "jobs: {} done, {} failed over {} rounds in {:.2}s \
+         ({:.1} jobs/s)",
+        r.done, r.failed, r.rounds, r.wall_secs,
+        r.throughput_jobs_per_s
+    );
+    println!(
+        "latency p50 {:.0} / p95 {:.0} rounds; fairness {:.3}; \
+         max wait {} (bound {}); state shipped {}",
+        r.p50_latency_rounds, r.p95_latency_rounds, r.fairness,
+        r.max_tenant_wait, r.starvation_bound,
+        crate::telemetry::top::fmt_bytes(r.state_sync_bytes)
+    );
+}
+
+/// Shared-base memory model cross-check for `repro report`
+/// (closed-form `cluster::shared_base_bytes` vs bytes measured from
+/// live tenant runtimes).
+pub fn memory_report() -> Result<()> {
+    use crate::cluster::{full_replica_bytes, shared_base_bytes,
+                         ADAMW_PROFILE, ADAM_MINI_PROFILE};
+    use crate::telemetry::top::fmt_bytes;
+    let tenants = 4;
+    let rank = 4;
+    let base = tenant::shared_base(0xBA5E);
+    let base_params = base.numel();
+    println!();
+    println!(
+        "== serve memory: {tenants} tenants, shared base vs full \
+         replicas =="
+    );
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (opt, profile) in [("adam_mini", &ADAM_MINI_PROFILE),
+                           ("adamw", &ADAMW_PROFILE)] {
+        let mut measured = (base_params * 4) as f64;
+        let mut adapter_params = 0usize;
+        for t in 0..tenants {
+            let rt = TenantRuntime::new(
+                &format!("t{t}"), t as u64 + 1, rank, opt,
+                Arc::clone(&base))?;
+            adapter_params =
+                rt.params.iter().map(|p| p.numel()).sum();
+            measured += rt.state_bytes() as f64;
+        }
+        let modeled = shared_base_bytes(base_params as f64,
+                                        adapter_params as f64,
+                                        profile, tenants);
+        let replicas = full_replica_bytes(base_params as f64, profile,
+                                          tenants);
+        let delta = (measured - modeled).abs() / modeled.max(1.0);
+        rows.push(vec![
+            profile.name.to_string(),
+            fmt_bytes(measured as u64),
+            fmt_bytes(modeled as u64),
+            format!("{:.1}%", delta * 100.0),
+            fmt_bytes(replicas as u64),
+            format!("{:.1}x", replicas / measured),
+            if delta < 0.10 { "OK".into() } else { "FAIL".into() },
+        ]);
+    }
+    let hdr = ["optimizer", "measured", "modeled", "delta",
+               "n replicas", "savings", "check"];
+    print!("{}", crate::util::csv::ascii_table(&hdr, &rows));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_args_overrides_defaults() {
+        let args: Vec<String> =
+            ["tenants=6", "pool=3", "sched=fifo", "storm_seed=9",
+             "quantum=2", "rank=8", "fail_rate=0.5"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let cfg = ServeConfig::parse_args(&args).unwrap();
+        assert_eq!(cfg.tenants, 6);
+        assert_eq!(cfg.pool, 3);
+        assert_eq!(cfg.sched, "fifo");
+        assert_eq!(cfg.storm_seed, 9);
+        assert_eq!(cfg.quantum, 2);
+        assert_eq!(cfg.lora_rank, 8);
+        assert!((cfg.fail_rate - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_args_rejects_junk() {
+        let bad = |s: &str| {
+            ServeConfig::parse_args(&[s.to_string()]).is_err()
+        };
+        assert!(bad("tenants"));
+        assert!(bad("tenants=x"));
+        assert!(bad("sched=lifo"));
+        assert!(bad("warp=9"));
+        assert!(bad("pool=0"));
+    }
+
+    #[test]
+    fn jain_index_behaves() {
+        assert!((jain_index(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        // One tenant hogging everything over n tenants → 1/n.
+        let j = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((j - 0.25).abs() < 1e-12);
+        assert_eq!(jain_index(&[]), 1.0);
+    }
+
+    #[test]
+    fn percentile_picks_sorted_positions() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 0.95), 5.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+}

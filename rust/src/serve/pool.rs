@@ -1,0 +1,125 @@
+//! Shared worker pool: leases over the dist engine's ring world.
+//!
+//! The pool owns `pool=N` ring nodes (the same `RingNode` + link
+//! model the dist engine trains over) and hands them out as [`Lease`]s
+//! for one quantum at a time. Checking a tenant in/out ships its
+//! adapter + optimizer state across the link, which is accounted on
+//! the shared [`CommStats`] ledger under `StateSync` — so `repro top`
+//! and the traffic report see serve traffic through exactly the same
+//! pipe as training traffic.
+
+use std::sync::Arc;
+
+use crate::dist::comm::{ring_world, CommStats, LinkModel, RingNode};
+use crate::dist::TrafficClass;
+use crate::telemetry::event::EventBus;
+
+/// Exclusive use of one pooled worker for one quantum. Returning the
+/// lease (via [`WorkerPool::checkin`]) is the only way the node goes
+/// back — preemption is just an early checkin at a step boundary.
+pub struct Lease {
+    id: usize,
+    node: RingNode,
+}
+
+impl Lease {
+    /// Pool slot index (doubles as the worker rank in events).
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// The leased ring node (rank/world inspection, link access).
+    pub fn node(&self) -> &RingNode {
+        &self.node
+    }
+}
+
+/// Fixed-size pool of ring workers with lease accounting.
+pub struct WorkerPool {
+    slots: Vec<Option<RingNode>>,
+    stats: Arc<CommStats>,
+}
+
+impl WorkerPool {
+    pub fn new(size: usize) -> WorkerPool {
+        let (nodes, stats) = ring_world(size.max(1),
+                                        LinkModel::default());
+        WorkerPool {
+            slots: nodes.into_iter().map(Some).collect(),
+            stats,
+        }
+    }
+
+    /// Mirror serve traffic onto a telemetry bus (feeds `repro top`).
+    pub fn attach_bus(&self, bus: Arc<EventBus>) {
+        self.stats.attach_bus(bus);
+    }
+
+    pub fn size(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Leases currently available.
+    pub fn free(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Lease the lowest free slot, if any.
+    pub fn checkout(&mut self) -> Option<Lease> {
+        let id = self.slots.iter().position(|s| s.is_some())?;
+        let node = self.slots[id].take().unwrap();
+        Some(Lease { id, node })
+    }
+
+    /// Return a lease to its slot.
+    pub fn checkin(&mut self, lease: Lease) {
+        debug_assert!(self.slots[lease.id].is_none(),
+                      "double checkin of lease {}", lease.id);
+        self.slots[lease.id] = Some(lease.node);
+    }
+
+    /// Account shipping `bytes` of tenant state to/from slot `id`
+    /// (adapter + optimizer state at checkout/checkin). Flows into
+    /// the shared comm ledger as `StateSync` traffic and, when a bus
+    /// is attached, into `Event::Message` for the dashboard.
+    pub fn account_ship(&self, id: usize, bytes: u64) {
+        self.stats.record_from(id, TrafficClass::StateSync, bytes);
+    }
+
+    /// The shared comm ledger (serve + dist traffic on one ledger).
+    pub fn stats(&self) -> &Arc<CommStats> {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_exhausts_then_checkin_replenishes() {
+        let mut p = WorkerPool::new(2);
+        assert_eq!(p.free(), 2);
+        let a = p.checkout().unwrap();
+        let b = p.checkout().unwrap();
+        assert_eq!((a.id(), b.id()), (0, 1));
+        assert!(p.checkout().is_none());
+        assert_eq!(p.free(), 0);
+        p.checkin(a);
+        assert_eq!(p.free(), 1);
+        // The freed slot is re-issued with the same identity.
+        let a2 = p.checkout().unwrap();
+        assert_eq!(a2.id(), 0);
+        assert_eq!(a2.node().rank, 0);
+        p.checkin(a2);
+        p.checkin(b);
+        assert_eq!(p.free(), 2);
+    }
+
+    #[test]
+    fn ship_accounting_lands_on_state_sync() {
+        let p = WorkerPool::new(1);
+        p.account_ship(0, 4096);
+        assert_eq!(p.stats().bytes(TrafficClass::StateSync), 4096);
+    }
+}

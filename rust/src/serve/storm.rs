@@ -1,0 +1,143 @@
+//! Seeded request storm: Poisson arrivals of mixed job types.
+//!
+//! Each tenant gets an independent arrival process forked from the
+//! storm seed — exponential inter-arrival gaps (in scheduler rounds),
+//! a weighted kind mix (train-heavy, some SFT, some eval), random
+//! step demands and priorities, and optional fault injection. The
+//! whole storm is a pure function of the config, so
+//! `repro serve storm_seed=7` replays the identical workload on every
+//! machine — which is what lets CI assert terminal states and
+//! fairness on real scheduling, not a mocked queue.
+
+use crate::util::prng::Rng;
+
+use super::job::{JobKind, JobSpec};
+use super::ServeConfig;
+
+/// Draw a job kind from the service mix: half pre-train, a third SFT,
+/// the rest eval sweeps.
+fn draw_kind(rng: &mut Rng) -> JobKind {
+    let u = rng.f64();
+    if u < 0.5 {
+        JobKind::Train
+    } else if u < 0.8 {
+        JobKind::Sft
+    } else {
+        JobKind::Eval
+    }
+}
+
+/// Generate the full storm for a run: `jobs_per_tenant` jobs for each
+/// of `tenants` tenants, sorted by arrival round, ids in arrival
+/// order.
+pub fn generate(cfg: &ServeConfig) -> Vec<JobSpec> {
+    let mut rng = Rng::new(cfg.storm_seed);
+    let mut specs: Vec<JobSpec> = Vec::new();
+    for t in 0..cfg.tenants {
+        let mut trng = rng.fork(t as u64);
+        let tenant = format!("t{t}");
+        let tenant_seed = cfg.storm_seed ^ ((t as u64 + 1) * 0x9E37);
+        // Poisson process: exponential gaps between this tenant's
+        // arrivals, accumulated into a (rounded-down) round index.
+        let mut clock = 0.0f64;
+        for _ in 0..cfg.jobs_per_tenant {
+            let u = trng.f64();
+            clock += -(1.0 - u).ln() * cfg.mean_gap;
+            let kind = draw_kind(&mut trng);
+            let steps = 4 + trng.below(9) as u64;
+            let prio = trng.below(3) as u8;
+            let fail_at = if trng.f64() < cfg.fail_rate {
+                Some(steps / 2)
+            } else {
+                None
+            };
+            specs.push(JobSpec {
+                id: 0, // assigned after the arrival sort
+                tenant: tenant.clone(),
+                tenant_seed,
+                kind,
+                prio,
+                steps,
+                arrival_round: clock as u64,
+                fail_at,
+            });
+        }
+    }
+    specs.sort_by_key(|s| (s.arrival_round, s.tenant.clone()));
+    for (i, s) in specs.iter_mut().enumerate() {
+        s.id = i as u64;
+    }
+    specs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig { tenants: 4, jobs_per_tenant: 3, storm_seed: 7,
+                      ..Default::default() }
+    }
+
+    #[test]
+    fn storm_is_deterministic() {
+        let a = generate(&cfg());
+        let b = generate(&cfg());
+        assert_eq!(a.len(), 12);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.id, &x.tenant, x.kind, x.steps,
+                        x.arrival_round),
+                       (y.id, &y.tenant, y.kind, y.steps,
+                        y.arrival_round));
+        }
+    }
+
+    #[test]
+    fn ids_follow_arrival_order_and_every_tenant_appears() {
+        let specs = generate(&cfg());
+        for w in specs.windows(2) {
+            assert!(w[0].arrival_round <= w[1].arrival_round);
+            assert!(w[0].id < w[1].id);
+        }
+        for t in 0..4 {
+            let name = format!("t{t}");
+            assert_eq!(
+                specs.iter().filter(|s| s.tenant == name).count(), 3);
+        }
+    }
+
+    #[test]
+    fn same_tenant_shares_one_seed() {
+        let specs = generate(&cfg());
+        for t in 0..4 {
+            let name = format!("t{t}");
+            let seeds: Vec<u64> = specs
+                .iter()
+                .filter(|s| s.tenant == name)
+                .map(|s| s.tenant_seed)
+                .collect();
+            assert!(seeds.windows(2).all(|w| w[0] == w[1]));
+        }
+    }
+
+    #[test]
+    fn fail_rate_injects_faults() {
+        let mut c = cfg();
+        c.fail_rate = 1.0;
+        assert!(generate(&c).iter().all(|s| s.fail_at.is_some()));
+        c.fail_rate = 0.0;
+        assert!(generate(&c).iter().all(|s| s.fail_at.is_none()));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut c = cfg();
+        c.storm_seed = 8;
+        let a = generate(&cfg());
+        let b = generate(&c);
+        assert!(a.iter().zip(&b).any(|(x, y)| {
+            x.kind != y.kind || x.steps != y.steps
+                || x.arrival_round != y.arrival_round
+        }));
+    }
+}

@@ -1,0 +1,321 @@
+//! Per-tenant runtime: LoRA-style adapter over one shared frozen base.
+//!
+//! Every tenant owns a tiny low-rank adapter (`lora_a` ∈ [VOCAB×r],
+//! `lora_b` ∈ [r×VOCAB]) applied additively to a single frozen bigram
+//! base shared by the whole service — this is the memory argument for
+//! multi-tenancy: N tenants cost `base + N·adapter·(1 + opt_state)`
+//! bytes instead of N full replicas (see `cluster::shared_base_bytes`,
+//! which `repro report` cross-checks against these structs). With
+//! Adam-mini the per-adapter optimizer state is halved again, so the
+//! same pool packs ~2× the tenants of AdamW.
+//!
+//! The runtime is deliberately self-contained and deterministic:
+//! adapter init and the data stream derive only from the tenant seed,
+//! so a tenant's loss trajectory is a pure function of (seed, number
+//! of batches consumed) — independent of how its quanta interleave
+//! with other tenants. That is the isolation property the serve tests
+//! assert bit-exactly, and it is also what makes preempt → checkpoint
+//! → resume equivalence testable: resume replays the batch cursor and
+//! reloads optimizer state through `StateDict` under the
+//! `tenant/<id>/` key prefix.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::bigram::VOCAB;
+use crate::data::batcher::{Batch, Batcher};
+use crate::data::corpus::{Corpus, SyntheticSpec};
+use crate::dist::shard::{build_shard_optimizer, SendOptimizer};
+use crate::dist::DistError;
+use crate::optim::{Hyper, ModelMeta, ReduceOp};
+use crate::partition::Strategy;
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+use super::job::JobKind;
+
+/// Checkpoint key prefix for one tenant: `tenant/<id>/...`.
+pub fn key_prefix(id: &str) -> String {
+    format!("tenant/{id}/")
+}
+
+/// Build the frozen base table shared by every tenant (same init
+/// idiom as the coordinator's bigram model).
+pub fn shared_base(seed: u64) -> Arc<Tensor> {
+    let mut rng = Rng::new(seed);
+    Arc::new(Tensor::randn("base", &[VOCAB, VOCAB], 0.1, &mut rng))
+}
+
+/// One tenant's live training state: adapter params, optimizer,
+/// deterministic batch stream, and counters.
+pub struct TenantRuntime {
+    pub id: String,
+    pub seed: u64,
+    pub lora_rank: usize,
+    base: Arc<Tensor>,
+    /// `[lora_a [VOCAB,r], lora_b [r,VOCAB]]`.
+    pub params: Vec<Tensor>,
+    opt: SendOptimizer,
+    optimizer_name: String,
+    batcher: Batcher,
+    /// Batches consumed (every kind — this is the resume cursor).
+    pub batches: u64,
+    /// Optimizer steps taken (param-updating kinds only).
+    pub steps: u64,
+    /// Loss of every batch ever run, in order (isolation witness).
+    pub losses: Vec<f32>,
+}
+
+fn adapter_params(seed: u64, rank: usize) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    vec![
+        Tensor::randn("lora_a", &[VOCAB, rank], 0.02, &mut rng),
+        Tensor::zeros("lora_b", &[rank, VOCAB]),
+    ]
+}
+
+fn adapter_meta() -> ModelMeta {
+    ModelMeta { n_heads: 1, stacked: vec![] }
+}
+
+impl TenantRuntime {
+    pub fn new(id: &str, seed: u64, lora_rank: usize, optimizer: &str,
+               base: Arc<Tensor>) -> Result<TenantRuntime> {
+        let params = adapter_params(seed, lora_rank);
+        let spec = adapter_meta().spec_for(&params, Strategy::Hessian)?;
+        let opt = build_shard_optimizer(optimizer, Hyper::default(),
+                                        &params, Some(spec),
+                                        ReduceOp::Mean)?;
+        let corpus = Corpus::synthetic(&SyntheticSpec {
+            vocab: VOCAB,
+            n_tokens: 8_192,
+            seed: seed ^ 0xDA7A,
+            ..Default::default()
+        });
+        let batcher = Batcher::new(corpus, 4, 16, seed);
+        Ok(TenantRuntime {
+            id: id.to_string(),
+            seed,
+            lora_rank,
+            base,
+            params,
+            opt,
+            optimizer_name: optimizer.to_string(),
+            batcher,
+            batches: 0,
+            steps: 0,
+            losses: Vec::new(),
+        })
+    }
+
+    /// Adapted logits loss + analytic adapter gradients for one batch:
+    /// `logits[tok, j] = base[tok, j] + Σ_k A[tok, k]·B[k, j]` with
+    /// softmax cross-entropy, mirroring the coordinator bigram path.
+    fn loss_grad(&self, batch: &Batch) -> (f32, Vec<Tensor>) {
+        let v = VOCAB;
+        let r = self.lora_rank;
+        let a = &self.params[0].data;
+        let b = &self.params[1].data;
+        let base = &self.base.data;
+        let mut da = vec![0f32; v * r];
+        let mut db = vec![0f32; r * v];
+        let inv = 1.0 / batch.tokens.len() as f32;
+        let mut total = 0f64;
+        let mut row = vec![0f32; v];
+        let mut exps = vec![0f32; v];
+        for (&tok, &tgt) in batch.tokens.iter().zip(&batch.targets) {
+            let (tok, tgt) = (tok as usize, tgt as usize);
+            for j in 0..v {
+                let mut acc = base[tok * v + j];
+                for (k, ak) in a[tok * r..(tok + 1) * r].iter()
+                    .enumerate() {
+                    acc += ak * b[k * v + j];
+                }
+                row[j] = acc;
+            }
+            let mx =
+                row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0f32;
+            for j in 0..v {
+                exps[j] = (row[j] - mx).exp();
+                z += exps[j];
+            }
+            total += (z.ln() + mx - row[tgt]) as f64;
+            for j in 0..v {
+                let mut d = exps[j] / z * inv;
+                if j == tgt {
+                    d -= inv;
+                }
+                for k in 0..r {
+                    da[tok * r + k] += d * b[k * v + j];
+                    db[k * v + j] += a[tok * r + k] * d;
+                }
+            }
+        }
+        let loss = (total * inv as f64) as f32;
+        (loss, vec![
+            Tensor::new("lora_a", &[v, r], da),
+            Tensor::new("lora_b", &[r, v], db),
+        ])
+    }
+
+    /// Run up to `k` steps of `kind` on the leased worker. Stops early
+    /// (with a typed per-job error, never a panic) when fault
+    /// injection says the worker dies at this tenant-batch index.
+    /// Returns the losses of the batches that ran.
+    pub fn run_quantum(&mut self, kind: JobKind, k: u64, lease: usize,
+                       fail_at: Option<u64>)
+        -> std::result::Result<Vec<f32>, DistError> {
+        let mut out = Vec::new();
+        for _ in 0..k {
+            if fail_at == Some(self.batches) {
+                return Err(DistError::WorkerPanicked { rank: lease });
+            }
+            let batch = self.batcher.next_batch();
+            let (loss, grads) = self.loss_grad(&batch);
+            if kind.updates_params() {
+                self.opt.step(&mut self.params, &grads, kind.lr());
+                self.steps += 1;
+            }
+            self.batches += 1;
+            self.losses.push(loss);
+            out.push(loss);
+        }
+        Ok(out)
+    }
+
+    /// Serialize adapter + optimizer state + cursor under the
+    /// `tenant/<id>/` prefix: `…/param/<name>`, `…/opt::<key>`, and a
+    /// 2-elem `…/meta` cursor tensor `[batches, steps]`.
+    pub fn checkpoint(&self) -> crate::optim::StateDict {
+        let pre = key_prefix(&self.id);
+        let mut sd = crate::optim::StateDict::new();
+        for t in &self.params {
+            sd.insert(format!("{pre}param/{}", t.name), &t.shape,
+                      t.data.clone());
+        }
+        for t in self.opt.state_dict().into_tensors() {
+            sd.insert(format!("{pre}opt::{}", t.name), &t.shape,
+                      t.data.clone());
+        }
+        sd.insert(format!("{pre}meta"), &[2],
+                  vec![self.batches as f32, self.steps as f32]);
+        sd
+    }
+
+    /// Rebuild a runtime from a checkpoint: fresh init from the same
+    /// seed, overwrite adapter + optimizer state, replay the batch
+    /// cursor. The result is step-for-step identical to the runtime
+    /// that produced the checkpoint (asserted by tier-1 tests).
+    pub fn resume(id: &str, seed: u64, lora_rank: usize,
+                  optimizer: &str, base: Arc<Tensor>,
+                  sd: &crate::optim::StateDict)
+        -> Result<TenantRuntime> {
+        let mut rt =
+            TenantRuntime::new(id, seed, lora_rank, optimizer, base)?;
+        let sub = sd.sub_dict(&key_prefix(id));
+        if sub.is_empty() {
+            bail!("checkpoint has no state for tenant {id:?}");
+        }
+        for p in &mut rt.params {
+            let src = sub.require(&format!("param/{}", p.name))?;
+            src.assert_shape(&p.shape)?;
+            p.data.copy_from_slice(&src.data);
+        }
+        rt.opt.load_state_dict(&sub.sub_dict("opt::"))?;
+        let meta = sub.require("meta")?;
+        if meta.data.len() != 2 {
+            bail!("tenant {id:?}: malformed meta cursor");
+        }
+        rt.batches = meta.data[0] as u64;
+        rt.steps = meta.data[1] as u64;
+        for _ in 0..rt.batches {
+            rt.batcher.next_batch();
+        }
+        Ok(rt)
+    }
+
+    /// Live bytes this tenant adds on top of the shared base: adapter
+    /// params + optimizer state (measured, for the cluster-model
+    /// cross-check).
+    pub fn state_bytes(&self) -> usize {
+        let p: usize =
+            self.params.iter().map(|t| t.numel() * 4).sum::<usize>();
+        p + self.opt.state_bytes()
+    }
+
+    pub fn optimizer_name(&self) -> &str {
+        &self.optimizer_name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(id: &str, seed: u64) -> TenantRuntime {
+        TenantRuntime::new(id, seed, 4, "adam_mini", shared_base(0xBA5E))
+            .unwrap()
+    }
+
+    #[test]
+    fn quantum_updates_adapter_and_counters() {
+        let mut t = rt("a", 11);
+        let before = t.params[0].data.clone();
+        let losses = t.run_quantum(JobKind::Train, 3, 0, None).unwrap();
+        assert_eq!(losses.len(), 3);
+        assert_eq!(t.batches, 3);
+        assert_eq!(t.steps, 3);
+        assert_ne!(t.params[0].data, before, "train must move lora_a");
+    }
+
+    #[test]
+    fn eval_never_touches_params() {
+        let mut t = rt("a", 11);
+        let before = (t.params[0].data.clone(), t.params[1].data.clone());
+        t.run_quantum(JobKind::Eval, 4, 0, None).unwrap();
+        assert_eq!(t.params[0].data, before.0);
+        assert_eq!(t.params[1].data, before.1);
+        assert_eq!(t.steps, 0);
+        assert_eq!(t.batches, 4);
+    }
+
+    #[test]
+    fn fault_injection_is_a_typed_error() {
+        let mut t = rt("a", 11);
+        let err = t.run_quantum(JobKind::Train, 5, 2, Some(3))
+            .unwrap_err();
+        assert!(matches!(err, DistError::WorkerPanicked { rank: 2 }));
+        // Exactly the steps before the fault ran.
+        assert_eq!(t.batches, 3);
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        let base = shared_base(0xBA5E);
+        let mut a = TenantRuntime::new("t0", 7, 4, "adam_mini",
+                                       Arc::clone(&base)).unwrap();
+        a.run_quantum(JobKind::Train, 5, 0, None).unwrap();
+        let sd = a.checkpoint();
+        assert!(sd.keys().all(|k| k.starts_with("tenant/t0/")));
+        let mut b = TenantRuntime::resume("t0", 7, 4, "adam_mini",
+                                          Arc::clone(&base), &sd)
+            .unwrap();
+        let la = a.run_quantum(JobKind::Train, 4, 0, None).unwrap();
+        let lb = b.run_quantum(JobKind::Train, 4, 0, None).unwrap();
+        assert_eq!(la.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                   lb.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+        assert_eq!(a.params[0].data, b.params[0].data);
+        assert_eq!(a.params[1].data, b.params[1].data);
+    }
+
+    #[test]
+    fn different_seeds_different_trajectories() {
+        let mut a = rt("a", 1);
+        let mut b = rt("b", 2);
+        let la = a.run_quantum(JobKind::Train, 3, 0, None).unwrap();
+        let lb = b.run_quantum(JobKind::Train, 3, 0, None).unwrap();
+        assert_ne!(la, lb);
+    }
+}

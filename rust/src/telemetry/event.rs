@@ -83,6 +83,25 @@ pub enum Event {
     /// A worker's comm thread hung up mid-step; the step is being
     /// abandoned with a typed error instead of a crash.
     CommHangup { step: u64, rank: usize },
+    /// A serve job entered the scheduler queue (serve subsystem).
+    JobQueued { job: u64, tenant: String, kind: String, round: u64 },
+    /// A serve job was granted a worker lease and started (or resumed)
+    /// running a quantum.
+    JobStarted { job: u64, tenant: String, lease: usize, round: u64 },
+    /// A serve job was preempted at a step boundary; `at_step` is the
+    /// number of optimizer steps it has completed so far.
+    JobPreempted { job: u64, tenant: String, at_step: u64, round: u64 },
+    /// A serve job reached a terminal state. `outcome` is one of
+    /// `done` / `failed`; `steps` counts completed optimizer steps and
+    /// `rounds` the scheduler rounds from arrival to completion
+    /// (queueing latency in scheduler time).
+    JobFinished {
+        job: u64,
+        tenant: String,
+        outcome: String,
+        steps: u64,
+        rounds: u64,
+    },
 }
 
 impl Event {
@@ -102,6 +121,10 @@ impl Event {
             Event::RetrySent { .. } => "retry_sent",
             Event::CommTimeout { .. } => "comm_timeout",
             Event::CommHangup { .. } => "comm_hangup",
+            Event::JobQueued { .. } => "job_queued",
+            Event::JobStarted { .. } => "job_started",
+            Event::JobPreempted { .. } => "job_preempted",
+            Event::JobFinished { .. } => "job_finished",
         }
     }
 }

@@ -139,6 +139,40 @@ impl WorkerStat {
     }
 }
 
+/// Rolling per-tenant aggregate (serve subsystem), fed by the
+/// `Job*` events.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStat {
+    pub queued: u64,
+    pub running: u64,
+    pub preempted: u64,
+    pub done: u64,
+    pub failed: u64,
+    /// Optimizer steps completed across this tenant's finished jobs.
+    pub steps: u64,
+    /// Scheduler rounds from arrival to completion, summed over
+    /// finished jobs (mean latency = rounds / terminal jobs).
+    pub rounds: u64,
+    /// Job id and kind of the last job observed for this tenant.
+    pub last_job: u64,
+    pub last_kind: String,
+}
+
+impl TenantStat {
+    pub fn terminal(&self) -> u64 {
+        self.done + self.failed
+    }
+
+    /// Mean completion latency in scheduler rounds.
+    pub fn mean_rounds(&self) -> f64 {
+        if self.terminal() == 0 {
+            0.0
+        } else {
+            self.rounds as f64 / self.terminal() as f64
+        }
+    }
+}
+
 /// Cap on the retained cluster-loss series (sparkline source).
 const LOSS_SERIES_CAP: usize = 512;
 
@@ -165,6 +199,9 @@ pub struct MetricsRegistry {
     pub bus_dropped: u64,
     /// Last checkpoint path, if any.
     pub last_checkpoint: Option<String>,
+    /// Per-tenant job aggregates (serve subsystem), keyed by tenant
+    /// id.
+    pub tenants: BTreeMap<String, TenantStat>,
 }
 
 impl MetricsRegistry {
@@ -196,6 +233,10 @@ impl MetricsRegistry {
 
     fn worker(&mut self, rank: usize) -> &mut WorkerStat {
         self.workers.entry(rank).or_default()
+    }
+
+    fn tenant(&mut self, id: &str) -> &mut TenantStat {
+        self.tenants.entry(id.to_string()).or_default()
     }
 
     fn lane_advance(&mut self, rank: usize, bucket: i64, s: LaneState) {
@@ -292,6 +333,40 @@ impl MetricsRegistry {
             Event::CommHangup { .. } => {
                 self.counter_add("comm_hangups", 1);
             }
+            Event::JobQueued { job, tenant, kind, .. } => {
+                self.counter_add("jobs_queued", 1);
+                let t = self.tenant(tenant);
+                t.queued += 1;
+                t.last_job = *job;
+                t.last_kind = kind.clone();
+            }
+            Event::JobStarted { job, tenant, .. } => {
+                self.counter_add("jobs_started", 1);
+                let t = self.tenant(tenant);
+                t.running += 1;
+                t.last_job = *job;
+            }
+            Event::JobPreempted { job, tenant, .. } => {
+                self.counter_add("jobs_preempted", 1);
+                let t = self.tenant(tenant);
+                t.preempted += 1;
+                t.running = t.running.saturating_sub(1);
+                t.last_job = *job;
+            }
+            Event::JobFinished { job, tenant, outcome, steps,
+                                 rounds } => {
+                self.counter_add("jobs_finished", 1);
+                let t = self.tenant(tenant);
+                if outcome == "failed" {
+                    t.failed += 1;
+                } else {
+                    t.done += 1;
+                }
+                t.running = t.running.saturating_sub(1);
+                t.steps += steps;
+                t.rounds += rounds;
+                t.last_job = *job;
+            }
         }
     }
 
@@ -350,11 +425,28 @@ impl MetricsRegistry {
                 })
                 .collect(),
         );
+        let tenants = Json::Obj(
+            self.tenants
+                .iter()
+                .map(|(id, t)| {
+                    (id.clone(), Json::obj(vec![
+                        ("queued", Json::num(t.queued as f64)),
+                        ("running", Json::num(t.running as f64)),
+                        ("preempted", Json::num(t.preempted as f64)),
+                        ("done", Json::num(t.done as f64)),
+                        ("failed", Json::num(t.failed as f64)),
+                        ("steps", Json::num(t.steps as f64)),
+                        ("mean_rounds", Json::num(t.mean_rounds())),
+                    ]))
+                })
+                .collect(),
+        );
         Json::obj(vec![
             ("counters", counters),
             ("gauges", gauges),
             ("histograms", hists),
             ("workers", workers),
+            ("tenants", tenants),
             ("loss_series", Json::arr_f64(&self.loss_series)),
             ("bus_dropped", Json::num(self.bus_dropped as f64)),
         ])
@@ -430,6 +522,38 @@ mod tests {
             step: 2, n_micro: 1, workers: 1,
         }));
         assert!(m.lanes.is_empty());
+    }
+
+    #[test]
+    fn job_events_aggregate_per_tenant() {
+        let mut m = MetricsRegistry::new();
+        m.observe(&stamp(0, Event::JobQueued {
+            job: 1, tenant: "t0".into(), kind: "train".into(),
+            round: 0,
+        }));
+        m.observe(&stamp(1, Event::JobStarted {
+            job: 1, tenant: "t0".into(), lease: 0, round: 1,
+        }));
+        m.observe(&stamp(2, Event::JobPreempted {
+            job: 1, tenant: "t0".into(), at_step: 4, round: 2,
+        }));
+        m.observe(&stamp(3, Event::JobStarted {
+            job: 1, tenant: "t0".into(), lease: 1, round: 3,
+        }));
+        m.observe(&stamp(4, Event::JobFinished {
+            job: 1, tenant: "t0".into(), outcome: "done".into(),
+            steps: 8, rounds: 4,
+        }));
+        let t = &m.tenants["t0"];
+        assert_eq!((t.queued, t.preempted, t.done, t.failed),
+                   (1, 1, 1, 0));
+        assert_eq!(t.running, 0);
+        assert_eq!(t.steps, 8);
+        assert_eq!(t.mean_rounds(), 4.0);
+        assert_eq!(t.last_kind, "train");
+        assert_eq!(m.counter("jobs_finished"), 1);
+        let j = m.to_json();
+        assert!(j.get("tenants").unwrap().opt("t0").is_some());
     }
 
     #[test]

@@ -141,6 +141,39 @@ pub fn render_frame(m: &MetricsRegistry) -> String {
             out.push_str(&format!("w{rank} [{lane}]\n"));
         }
     }
+    // Tenants table (serve subsystem), only when Job* events flowed.
+    if !m.tenants.is_empty() {
+        let hdr = ["tenant", "queued", "run", "preempt", "done",
+                   "failed", "steps", "avg rounds", "last job"];
+        let rows: Vec<Vec<String>> = m
+            .tenants
+            .iter()
+            .map(|(id, t)| {
+                vec![
+                    id.clone(),
+                    format!("{}", t.queued),
+                    format!("{}", t.running),
+                    format!("{}", t.preempted),
+                    format!("{}", t.done),
+                    format!("{}", t.failed),
+                    format!("{}", t.steps),
+                    format!("{:.1}", t.mean_rounds()),
+                    if t.last_kind.is_empty() {
+                        format!("#{}", t.last_job)
+                    } else {
+                        format!("#{} {}", t.last_job, t.last_kind)
+                    },
+                ]
+            })
+            .collect();
+        out.push_str(&format!(
+            "tenants {}  jobs done {}  preemptions {}\n",
+            m.tenants.len(),
+            m.counter("jobs_finished"),
+            m.counter("jobs_preempted")
+        ));
+        out.push_str(&crate::util::csv::ascii_table(&hdr, &rows));
+    }
     // Latency digest.
     let steps = m.counter("steps_done");
     if steps > 0 {
@@ -277,5 +310,31 @@ mod tests {
     fn empty_registry_still_renders() {
         let frame = render_frame(&MetricsRegistry::new());
         assert!(frame.contains("repro top"));
+        // No Job* events → no tenants section.
+        assert!(!frame.contains("tenants"));
+    }
+
+    #[test]
+    fn frame_renders_tenants_table() {
+        let mut m = MetricsRegistry::new();
+        let mut feed = |seq: u64, event: Event| {
+            m.observe(&Stamped { seq, t_us: seq as f64, event });
+        };
+        feed(0, Event::JobQueued {
+            job: 2, tenant: "alice".into(), kind: "eval".into(),
+            round: 0,
+        });
+        feed(1, Event::JobStarted {
+            job: 2, tenant: "alice".into(), lease: 0, round: 1,
+        });
+        feed(2, Event::JobFinished {
+            job: 2, tenant: "alice".into(), outcome: "done".into(),
+            steps: 3, rounds: 2,
+        });
+        let frame = render_frame(&m);
+        assert!(frame.contains("tenants 1"), "{frame}");
+        assert!(frame.contains("alice"));
+        assert!(frame.contains("#2 eval"));
+        assert!(!frame.contains('\x1b'));
     }
 }

@@ -111,13 +111,68 @@ pub fn encode_line(st: &Stamped) -> String {
             kv.push(("step", Json::num(*step as f64)));
             kv.push(("rank", Json::num(*rank as f64)));
         }
+        Event::JobQueued { job, tenant, kind, round } => {
+            kv.push(("job", Json::num(*job as f64)));
+            kv.push(("tenant", Json::str(tenant.clone())));
+            kv.push(("kind", Json::str(kind.clone())));
+            kv.push(("round", Json::num(*round as f64)));
+        }
+        Event::JobStarted { job, tenant, lease, round } => {
+            kv.push(("job", Json::num(*job as f64)));
+            kv.push(("tenant", Json::str(tenant.clone())));
+            kv.push(("lease", Json::num(*lease as f64)));
+            kv.push(("round", Json::num(*round as f64)));
+        }
+        Event::JobPreempted { job, tenant, at_step, round } => {
+            kv.push(("job", Json::num(*job as f64)));
+            kv.push(("tenant", Json::str(tenant.clone())));
+            kv.push(("at_step", Json::num(*at_step as f64)));
+            kv.push(("round", Json::num(*round as f64)));
+        }
+        Event::JobFinished { job, tenant, outcome, steps, rounds } => {
+            kv.push(("job", Json::num(*job as f64)));
+            kv.push(("tenant", Json::str(tenant.clone())));
+            kv.push(("outcome", Json::str(outcome.clone())));
+            kv.push(("steps", Json::num(*steps as f64)));
+            kv.push(("rounds", Json::num(*rounds as f64)));
+        }
     }
     Json::obj(kv).to_string()
 }
 
+/// One decoded trace line. Distinguishing `Unknown` from a parse
+/// error is the forward-compat contract: a reader built before a new
+/// event kind existed must still be able to audit the trace's
+/// sequence numbers (the gap-vs-drop invariant is kind-agnostic), so
+/// unknown kinds carry their `seq` instead of failing the whole read.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceLine {
+    /// A known event.
+    Event(Stamped),
+    /// The `trace_begin` / `trace_end` envelope (footer carries the
+    /// bus totals).
+    Envelope(Json),
+    /// A line written by a newer binary: well-formed v1 line whose
+    /// `ev` kind this reader does not recognize.
+    Unknown { seq: u64, kind: String },
+}
+
 /// Decode one JSONL line back into a stamped event. Header/footer
-/// lines (`trace_begin` / `trace_end`) return `Ok(None)`.
+/// lines (`trace_begin` / `trace_end`) return `Ok(None)`; lines with
+/// an unknown event kind are an error here — use [`decode_record`]
+/// for the forward-compatible reader.
 pub fn decode_line(line: &str) -> Result<Option<Stamped>> {
+    match decode_record(line)? {
+        TraceLine::Event(st) => Ok(Some(st)),
+        TraceLine::Envelope(_) => Ok(None),
+        TraceLine::Unknown { kind, .. } => {
+            bail!("unknown event kind {kind:?}")
+        }
+    }
+}
+
+/// Decode one JSONL line, tolerating event kinds from the future.
+pub fn decode_record(line: &str) -> Result<TraceLine> {
     let j = Json::parse(line).context("unparseable trace line")?;
     let v = j.get("v")?.as_usize()? as u64;
     if v != TRACE_VERSION {
@@ -125,7 +180,7 @@ pub fn decode_line(line: &str) -> Result<Option<Stamped>> {
     }
     let ev = j.get("ev")?.as_str()?.to_string();
     if ev == "trace_begin" || ev == "trace_end" {
-        return Ok(None);
+        return Ok(TraceLine::Envelope(j));
     }
     let seq = j.get("seq")?.as_usize()? as u64;
     let t_us = j.get("t_us")?.as_f64()?;
@@ -209,9 +264,39 @@ pub fn decode_line(line: &str) -> Result<Option<Stamped>> {
             step: step(&j)?,
             rank: rank(&j)?,
         },
-        other => bail!("unknown event kind {other:?}"),
+        "job_queued" => Event::JobQueued {
+            job: j.get("job")?.as_usize()? as u64,
+            tenant: j.get("tenant")?.as_str()?.to_string(),
+            kind: j.get("kind")?.as_str()?.to_string(),
+            round: j.get("round")?.as_usize()? as u64,
+        },
+        "job_started" => Event::JobStarted {
+            job: j.get("job")?.as_usize()? as u64,
+            tenant: j.get("tenant")?.as_str()?.to_string(),
+            lease: j.get("lease")?.as_usize()?,
+            round: j.get("round")?.as_usize()? as u64,
+        },
+        "job_preempted" => Event::JobPreempted {
+            job: j.get("job")?.as_usize()? as u64,
+            tenant: j.get("tenant")?.as_str()?.to_string(),
+            at_step: j.get("at_step")?.as_usize()? as u64,
+            round: j.get("round")?.as_usize()? as u64,
+        },
+        "job_finished" => Event::JobFinished {
+            job: j.get("job")?.as_usize()? as u64,
+            tenant: j.get("tenant")?.as_str()?.to_string(),
+            outcome: j.get("outcome")?.as_str()?.to_string(),
+            steps: j.get("steps")?.as_usize()? as u64,
+            rounds: j.get("rounds")?.as_usize()? as u64,
+        },
+        other => {
+            return Ok(TraceLine::Unknown {
+                seq,
+                kind: other.to_string(),
+            })
+        }
     };
-    Ok(Some(Stamped { seq, t_us, event }))
+    Ok(TraceLine::Event(Stamped { seq, t_us, event }))
 }
 
 /// Buffered JSONL trace sink.
@@ -259,7 +344,10 @@ impl TraceWriter {
 }
 
 /// Read a whole JSONL trace; returns the events plus the footer's
-/// reported drop count (0 if the footer is missing).
+/// reported drop count (0 if the footer is missing). Lines with event
+/// kinds this reader does not know (a trace from a newer binary) are
+/// skipped, not errors — their `seq` numbers are only needed by
+/// [`validate`], which does its own pass.
 pub fn read_trace(path: impl AsRef<Path>) -> Result<(Vec<Stamped>, u64)> {
     let text = std::fs::read_to_string(path.as_ref()).with_context(|| {
         format!("reading trace {}", path.as_ref().display())
@@ -270,12 +358,13 @@ pub fn read_trace(path: impl AsRef<Path>) -> Result<(Vec<Stamped>, u64)> {
         if line.trim().is_empty() {
             continue;
         }
-        if let Some(st) = decode_line(line)? {
-            events.push(st);
-        } else {
-            let j = Json::parse(line)?;
-            if let Some(d) = j.opt("dropped") {
-                dropped = d.as_usize()? as u64;
+        match decode_record(line)? {
+            TraceLine::Event(st) => events.push(st),
+            TraceLine::Unknown { .. } => {}
+            TraceLine::Envelope(j) => {
+                if let Some(d) = j.opt("dropped") {
+                    dropped = d.as_usize()? as u64;
+                }
             }
         }
     }
@@ -284,27 +373,55 @@ pub fn read_trace(path: impl AsRef<Path>) -> Result<(Vec<Stamped>, u64)> {
 
 /// Schema check: every line parses, sequence numbers strictly
 /// increase, and total gaps do not exceed the reported drops. Returns
-/// (events, gaps, dropped) for reporting.
+/// (events, gaps, dropped) for reporting. Unknown event kinds still
+/// count toward the audit — their lines carry a valid `seq`, so a
+/// trace recorded by a newer binary validates cleanly on an older
+/// reader instead of hard-failing (forward compatibility).
 pub fn validate(path: impl AsRef<Path>) -> Result<(usize, u64, u64)> {
-    let (events, dropped) = read_trace(path)?;
+    let text = std::fs::read_to_string(path.as_ref()).with_context(|| {
+        format!("reading trace {}", path.as_ref().display())
+    })?;
+    let mut dropped = 0u64;
+    let mut n_events = 0usize;
     let mut gaps = 0u64;
     let mut prev: Option<u64> = None;
-    for st in &events {
+    let mut audit = |seq: u64| -> Result<()> {
         if let Some(p) = prev {
-            if st.seq <= p {
-                bail!("seq not increasing: {} after {}", st.seq, p);
+            if seq <= p {
+                bail!("seq not increasing: {seq} after {p}");
             }
-            gaps += st.seq - p - 1;
+            gaps += seq - p - 1;
         } else {
-            gaps += st.seq;
+            gaps += seq;
         }
-        prev = Some(st.seq);
+        prev = Some(seq);
+        Ok(())
+    };
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match decode_record(line)? {
+            TraceLine::Event(st) => {
+                audit(st.seq)?;
+                n_events += 1;
+            }
+            TraceLine::Unknown { seq, .. } => {
+                audit(seq)?;
+                n_events += 1;
+            }
+            TraceLine::Envelope(j) => {
+                if let Some(d) = j.opt("dropped") {
+                    dropped = d.as_usize()? as u64;
+                }
+            }
+        }
     }
     if gaps > dropped {
         bail!("trace has {gaps} seq gaps but only {dropped} \
                reported drops");
     }
-    Ok((events.len(), gaps, dropped))
+    Ok((n_events, gaps, dropped))
 }
 
 /// Export a recorded trace as a Chrome trace (about://tracing /
@@ -410,6 +527,15 @@ mod tests {
                                  class: "grad_reduce", seq: 18,
                                  attempts: 10 },
             Event::CommHangup { step: 1, rank: 3 },
+            Event::JobQueued { job: 4, tenant: "t0".into(),
+                               kind: "sft".into(), round: 0 },
+            Event::JobStarted { job: 4, tenant: "t0".into(),
+                                lease: 1, round: 2 },
+            Event::JobPreempted { job: 4, tenant: "t0".into(),
+                                  at_step: 6, round: 3 },
+            Event::JobFinished { job: 4, tenant: "t0".into(),
+                                 outcome: "done".into(), steps: 12,
+                                 rounds: 7 },
         ];
         evs.into_iter()
             .enumerate()
@@ -470,6 +596,45 @@ mod tests {
         }
         w.finish(9, 1).unwrap();
         assert!(validate(&path2).is_ok());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unknown_kinds_tolerated_with_seq_audit() {
+        let dir = std::env::temp_dir().join("adam_mini_trace_fwd");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("future.jsonl");
+        // A trace from a "future" writer: one known event plus two
+        // kinds this reader has never heard of, consecutive seqs.
+        let lines = [
+            r#"{"ev":"trace_begin","v":1}"#.to_string(),
+            encode_line(&Stamped {
+                seq: 0,
+                t_us: 1.0,
+                event: Event::StepBegin { step: 1, n_micro: 1,
+                                          workers: 1 },
+            }),
+            r#"{"ev":"job_migrated","seq":1,"t_us":2.0,"v":1}"#
+                .to_string(),
+            r#"{"ev":"lease_revoked","seq":2,"t_us":3.0,"v":1}"#
+                .to_string(),
+            r#"{"dropped":0,"ev":"trace_end","published":3,"v":1}"#
+                .to_string(),
+        ];
+        std::fs::write(&path, lines.join("\n")).unwrap();
+        // read_trace skips the unknowns; validate audits their seqs
+        // (no false gaps) and passes.
+        let (evs, dropped) = read_trace(&path).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(dropped, 0);
+        let (n, gaps, d) = validate(&path).unwrap();
+        assert_eq!((n, gaps, d), (3, 0, 0));
+        // An unknown line that *hides* a gap still fails the audit.
+        let bad = path.with_file_name("future_gap.jsonl");
+        let mut l2 = lines.to_vec();
+        l2.remove(2); // seq 1 vanishes, footer still claims 0 drops
+        std::fs::write(&bad, l2.join("\n")).unwrap();
+        assert!(validate(&bad).is_err());
         std::fs::remove_dir_all(dir).ok();
     }
 
