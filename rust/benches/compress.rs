@@ -1,0 +1,87 @@
+//! Bench: the gradient-compression codecs under the streamed bucket
+//! pipeline on the probe inventory (~1.6M f32), 4 in-process workers.
+//!
+//! One cell per codec (`none`, `f16`, `topk:0.25`), each driving a
+//! full ZeRO-2 overlapped step — reduce-scatter through the codec,
+//! shard step, all-gather back. Latency tells us what the encode /
+//! decode passes cost on top of the dense pipeline; next to it each
+//! record carries the measured and closed-form modeled step bytes
+//! from the traffic probe, so the history gate tracks both the time
+//! and the wire. Emits `results/BENCH_compress.json`.
+
+use adam_mini::dist::{measure_compressed_traffic, probe_params,
+                      CodecSpec, DistOptions, DistTrainer};
+use adam_mini::tensor::Tensor;
+use adam_mini::util::json::Json;
+use adam_mini::util::timer::Bench;
+
+fn main() {
+    let workers = 4usize;
+    let (params, n) = probe_params(0xC0DE);
+    println!("codec sweep payload: {n} f32 ({:.1} MB), {workers} \
+              workers, zero2 overlap\n",
+             n as f64 * 4.0 / 1e6);
+    let grads: Vec<Tensor> = params
+        .iter()
+        .map(|p| {
+            Tensor::new(&*p.name, &p.shape, vec![1e-3; p.numel()])
+        })
+        .collect();
+
+    let bench = Bench::quick();
+    let mut records = Vec::new();
+    for codec in ["none", "f16", "topk:0.25"] {
+        let spec = CodecSpec::parse(codec).unwrap();
+        let name = format!("compress/w{workers}/{codec}");
+        let mut run_params = params.to_vec();
+        let mut dist = DistTrainer::new(&run_params, DistOptions {
+            workers,
+            bucket_kb: 64,
+            zero1: true,
+            zero2: true,
+            optimizer: "adamw".into(),
+            compress: spec,
+            ..Default::default()
+        })
+        .expect("probe DistTrainer");
+        let r = bench.run(&name, || {
+            let mut stream = dist.begin_step(1, 1e-4);
+            for j in (0..grads.len()).rev() {
+                stream.push_grad(0, j, &grads[j]).unwrap();
+            }
+            stream.finish(&mut run_params).unwrap();
+        });
+        // Wire accounting from the traffic probe: measured per-step
+        // bytes next to the closed-form model.
+        let row = measure_compressed_traffic(spec, workers, 64, 2,
+                                             true)
+            .expect("traffic probe");
+        println!("  -> {codec}: {:.2} ms/step, {:.1} KB/step on the \
+                  wire ({:.3}x of f32, model off by {:+.2}%)\n",
+                 r.mean_ms(), row.measured_bytes / 1e3,
+                 row.ratio_vs_f32, row.delta_pct());
+        records.push(Json::obj(vec![
+            ("name", Json::str(&r.name)),
+            ("workers", Json::num(workers as f64)),
+            ("codec", Json::str(codec)),
+            ("schedule", Json::str("zero2/overlap")),
+            ("iters", Json::num(r.iters as f64)),
+            ("mean_ns", Json::num(r.mean_ns)),
+            ("p50_ns", Json::num(r.p50_ns)),
+            ("p95_ns", Json::num(r.p95_ns)),
+            ("measured_step_bytes", Json::num(row.measured_bytes)),
+            ("modeled_step_bytes", Json::num(row.modeled_bytes)),
+            ("ratio_vs_f32", Json::num(row.ratio_vs_f32)),
+        ]));
+    }
+
+    std::fs::create_dir_all("results").expect("mkdir results");
+    let out = Json::obj(vec![
+        ("bench", Json::str("dist_compress")),
+        ("provenance", Json::str("measured")),
+        ("records", Json::Arr(records)),
+    ]);
+    std::fs::write("results/BENCH_compress.json", out.to_string())
+        .expect("write BENCH_compress.json");
+    println!("wrote results/BENCH_compress.json");
+}

@@ -124,6 +124,55 @@ pub fn ring_reducescatter_bytes(payload_bytes: f64, workers: usize)
     }
 }
 
+/// Wire/dense byte ratio of a gradient codec on SUMMATION messages
+/// (reduce-scatter hops, the reduce phase of all-reduce). `frac` is
+/// the top-k keep fraction (ignored by the other codecs). f16 packs
+/// two half-precision values per f32 wire slot; top-k ships an
+/// (index, value) pair — 8 bytes — per kept element, so it only wins
+/// below `frac = 0.5`. Per-message header slots are excluded: they
+/// are O(1) per hop against O(chunk) payloads, inside the 10%
+/// cross-check tolerance of `repro report`.
+pub fn codec_sum_ratio(codec: &str, frac: f64) -> f64 {
+    match codec {
+        "f16" => 0.5,
+        "topk" => 2.0 * frac,
+        _ => 1.0,
+    }
+}
+
+/// Wire/dense ratio on BROADCAST messages (all-gather hops, the
+/// gather phase of all-reduce). Top-k never compresses broadcasts —
+/// re-sparsifying already-reduced values would drop mass with no
+/// error-feedback path to recover it — so its broadcast ratio is 1.
+pub fn codec_broadcast_ratio(codec: &str) -> f64 {
+    match codec {
+        "f16" => 0.5,
+        _ => 1.0,
+    }
+}
+
+/// Cluster-total bytes one compressed training step moves for a
+/// `payload_bytes` gradient over `workers` ranks. ZeRO-1 runs
+/// all-reduce (one sum hop + one broadcast hop per element) plus the
+/// param all-gather (broadcast); ZeRO-2 replaces the all-reduce with
+/// a single reduce-scatter (sum). Compose with
+/// [`retry_overhead_bytes`] for lossy socket links — the ARQ
+/// retransmits compressed frames, so the overhead multiplies the
+/// compressed base, not the dense one.
+pub fn compressed_step_bytes(payload_bytes: f64, workers: usize,
+                             zero2: bool, codec: &str, frac: f64)
+    -> f64 {
+    let sum = codec_sum_ratio(codec, frac);
+    let bcast = codec_broadcast_ratio(codec);
+    // One hop set: every element travels `workers − 1` links.
+    let hop = ring_reducescatter_bytes(payload_bytes, workers);
+    if zero2 {
+        sum * hop + bcast * hop
+    } else {
+        (sum + bcast) * hop + bcast * hop
+    }
+}
+
 /// Expected extra bytes the socket transport's stop-and-wait ARQ
 /// retransmits when every data frame is independently lost with
 /// probability `p`: a frame needs `1/(1−p)` attempts on average, so
@@ -409,6 +458,42 @@ mod tests {
         assert_eq!(retry_overhead_bytes(1e6, 0.2), 0.25e6);
         assert!(retry_overhead_bytes(1e6, 0.5)
                 > retry_overhead_bytes(1e6, 0.2));
+    }
+
+    #[test]
+    fn compressed_closed_forms() {
+        let (p, n) = (1e6, 4usize);
+        // compress=none degenerates to the dense forms.
+        assert_eq!(
+            compressed_step_bytes(p, n, false, "none", 0.0),
+            ring_allreduce_bytes(p, n) + ring_allgather_bytes(p, n));
+        assert_eq!(
+            compressed_step_bytes(p, n, true, "none", 0.0),
+            ring_reducescatter_bytes(p, n)
+                + ring_allgather_bytes(p, n));
+        // f16 halves every phase.
+        assert_eq!(
+            compressed_step_bytes(p, n, true, "f16", 0.0),
+            0.5 * (ring_reducescatter_bytes(p, n)
+                   + ring_allgather_bytes(p, n)));
+        assert_eq!(
+            compressed_step_bytes(p, n, false, "f16", 0.0),
+            0.5 * (ring_allreduce_bytes(p, n)
+                   + ring_allgather_bytes(p, n)));
+        // topk compresses only the sum hops: at frac=0.25 the zero2
+        // step moves (0.5 + 1)·(N−1)·P against the dense 2·(N−1)·P.
+        let hop = ring_reducescatter_bytes(p, n);
+        assert_eq!(compressed_step_bytes(p, n, true, "topk", 0.25),
+                   1.5 * hop);
+        assert_eq!(compressed_step_bytes(p, n, false, "topk", 0.25),
+                   2.5 * hop);
+        // The 8-byte pair encoding breaks even at frac = 0.5.
+        assert_eq!(codec_sum_ratio("topk", 0.5), 1.0);
+        // Single worker moves nothing, compressed or not.
+        assert_eq!(compressed_step_bytes(p, 1, false, "f16", 0.0), 0.0);
+        // Retry overhead composes on the compressed base.
+        let base = compressed_step_bytes(p, n, true, "f16", 0.0);
+        assert_eq!(retry_overhead_bytes(base, 0.2), 0.25 * base);
     }
 
     #[test]

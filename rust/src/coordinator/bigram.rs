@@ -23,6 +23,7 @@ use crate::config::TrainConfig;
 use crate::data::{Batch, Batcher, Corpus, SyntheticSpec};
 use crate::dist::comm::{ring_world, CommStats, LinkModel,
                         TrafficClass};
+use crate::dist::compress::CodecSpec;
 use crate::dist::error::DistError;
 use crate::dist::shard::{block_cuts, shardable, FlatLayout, Partition};
 use crate::dist::transport::proc::{run_parent, ENV_CFG, ENV_RANK};
@@ -130,6 +131,7 @@ fn plan_for(cfg: &TrainConfig) -> Result<BigramPlan> {
         optimizer: cfg.optimizer.clone(),
         reduce: ReduceOp::Mean,
         spec,
+        compress: CodecSpec::parse(&cfg.compress)?,
         ..Default::default()
     };
     Ok(BigramPlan {
@@ -368,6 +370,23 @@ mod tests {
         assert_eq!(
             a.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
             b.iter().map(|l| l.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn topk_losses_are_transport_invariant() {
+        // The codec runs above the wire, so compressed runs keep the
+        // cross-transport bit-exactness witness.
+        let mut cfg = smoke_cfg();
+        cfg.compress = "topk:0.5".into();
+        let chan = losses_for(&cfg, TransportKind::Channel);
+        let tcp = losses_for(
+            &cfg,
+            TransportKind::Socket(
+                crate::dist::transport::SocketOptions::default()));
+        assert_eq!(
+            chan.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            tcp.iter().map(|l| l.to_bits()).collect::<Vec<_>>());
+        assert!(chan[3] < chan[0]);
     }
 
     #[test]

@@ -199,6 +199,13 @@ impl<'e> Trainer<'e> {
                    kernels only (run workers=1 without fused=true)",
                   cfg.clip);
         }
+        let compress = dist::CodecSpec::parse(&cfg.compress)?;
+        if !compress.is_none() && cfg.workers <= 1 {
+            bail!("compress={} needs the dist engine: gradient codecs \
+                   sit under the worker collectives (run with \
+                   workers > 1)",
+                  cfg.compress);
+        }
 
         let mode = if cfg.fused && cfg.workers <= 1 {
             let key = match cfg.optimizer.as_str() {
@@ -246,6 +253,7 @@ impl<'e> Trainer<'e> {
                 },
                 transport: dist::parse_transport(
                     &cfg.transport, &cfg.fault, cfg.fault_seed)?,
+                compress,
                 ..Default::default()
             })?;
             let replicated = if sharded {

@@ -18,6 +18,7 @@
 //! and the worker layer decides how to unwind the step.
 
 use super::comm::{RingNode, TrafficClass};
+use super::compress::CodedRing;
 use super::error::DistError;
 
 /// Balanced split of `len` elements into `n` chunks: chunk `c` is
@@ -32,6 +33,21 @@ pub fn chunk_range(len: usize, n: usize, c: usize) -> (usize, usize) {
 pub fn ring_all_reduce(node: &mut RingNode, data: &mut [f32],
                        bucket_elems: usize, class: TrafficClass)
     -> Result<(), DistError> {
+    ring_all_reduce_coded(node, data, bucket_elems, class, None)
+}
+
+/// All-reduce with an optional compression context. Summation hops go
+/// through [`CodedRing::encode_sum`] (error-feedback residuals indexed
+/// by each chunk's offset into `data`); gather-phase hops are
+/// compressed only when the codec compresses broadcast payloads, in
+/// which case the owning rank first quantizes its own completed chunk
+/// in place so every replica ends the collective holding identical
+/// bits. With `ctx == None` the statements executed are exactly the
+/// pre-codec pipeline — `compress=none` stays bit-exact.
+pub fn ring_all_reduce_coded(node: &mut RingNode, data: &mut [f32],
+                             bucket_elems: usize, class: TrafficClass,
+                             mut ctx: Option<&mut CodedRing>)
+    -> Result<(), DistError> {
     if node.world <= 1 || data.is_empty() {
         return Ok(());
     }
@@ -39,15 +55,20 @@ pub fn ring_all_reduce(node: &mut RingNode, data: &mut [f32],
     let mut off = 0;
     while off < data.len() {
         let hi = (off + bucket).min(data.len());
-        bucket_all_reduce(node, &mut data[off..hi], class)?;
+        bucket_all_reduce(node, &mut data[off..hi], off, class,
+                          ctx.as_deref_mut())?;
         off = hi;
     }
     Ok(())
 }
 
 /// One bucket: reduce-scatter (N−1 steps) + all-gather (N−1 steps).
-fn bucket_all_reduce(node: &mut RingNode, buf: &mut [f32],
-                     class: TrafficClass) -> Result<(), DistError> {
+/// `base` is the bucket's offset into the full buffer — the index the
+/// error-feedback residual (which spans the full buffer) is keyed by.
+fn bucket_all_reduce(node: &mut RingNode, buf: &mut [f32], base: usize,
+                     class: TrafficClass,
+                     mut ctx: Option<&mut CodedRing>)
+    -> Result<(), DistError> {
     let (n, r) = (node.world, node.rank);
     // Reduce-scatter: after step s, the partial for chunk (r−s−1) has
     // accumulated s+2 ranks' contributions at rank r. After N−1 steps
@@ -55,23 +76,53 @@ fn bucket_all_reduce(node: &mut RingNode, buf: &mut [f32],
     for s in 0..n - 1 {
         let send_c = (r + n - s) % n;
         let (lo, hi) = chunk_range(buf.len(), n, send_c);
-        node.send_right(class, buf[lo..hi].to_vec())?;
+        match &mut ctx {
+            Some(c) => {
+                let wire = c.encode_sum(&buf[lo..hi], base + lo);
+                node.send_right(c.codec.class(), wire)?;
+            }
+            None => node.send_right(class, buf[lo..hi].to_vec())?,
+        }
         let recv_c = (r + n - s - 1) % n;
         let (lo, hi) = chunk_range(buf.len(), n, recv_c);
         let incoming = node.recv_left()?;
+        let incoming = match &ctx {
+            Some(c) => c.decode(&incoming, hi - lo),
+            None => incoming,
+        };
         debug_assert_eq!(incoming.len(), hi - lo);
         for (x, y) in buf[lo..hi].iter_mut().zip(&incoming) {
             *x += y;
         }
     }
-    // All-gather: circulate completed chunks.
+    // All-gather: circulate completed chunks. Forwarded hops re-encode
+    // already-quantized data (lossless projection), so the owner-side
+    // quantize keeps all replicas bit-identical.
+    let coded_bcast =
+        matches!(&ctx, Some(c) if c.codec.compresses_broadcast());
+    if coded_bcast {
+        if let Some(c) = &mut ctx {
+            let (lo, hi) = chunk_range(buf.len(), n, (r + 1) % n);
+            c.quantize_in_place(&mut buf[lo..hi]);
+        }
+    }
     for s in 0..n - 1 {
         let send_c = (r + 1 + n - s) % n;
         let (lo, hi) = chunk_range(buf.len(), n, send_c);
-        node.send_right(class, buf[lo..hi].to_vec())?;
+        match &mut ctx {
+            Some(c) if coded_bcast => {
+                let wire = c.encode_copy(&buf[lo..hi]);
+                node.send_right(c.codec.class(), wire)?;
+            }
+            _ => node.send_right(class, buf[lo..hi].to_vec())?,
+        }
         let recv_c = (r + n - s) % n;
         let (lo, hi) = chunk_range(buf.len(), n, recv_c);
         let incoming = node.recv_left()?;
+        let incoming = match &ctx {
+            Some(c) if coded_bcast => c.decode(&incoming, hi - lo),
+            _ => incoming,
+        };
         debug_assert_eq!(incoming.len(), hi - lo);
         buf[lo..hi].copy_from_slice(&incoming);
     }
@@ -90,6 +141,30 @@ fn bucket_all_reduce(node: &mut RingNode, buf: &mut [f32],
 pub fn ring_reduce_scatter(node: &mut RingNode,
                            chunks: &[(usize, usize)], buf: &mut [f32],
                            class: TrafficClass) -> Result<(), DistError> {
+    ring_reduce_scatter_coded(node, chunks, buf, class, None)
+}
+
+/// Reduce-scatter with an optional compression context. Every hop is
+/// a summation payload, so each send goes through
+/// [`CodedRing::encode_sum`]; the residual is indexed by the chunk's
+/// offset into `buf`. With `ctx == None` this executes exactly the
+/// pre-codec statements.
+pub fn ring_reduce_scatter_coded(node: &mut RingNode,
+                                 chunks: &[(usize, usize)],
+                                 buf: &mut [f32], class: TrafficClass,
+                                 ctx: Option<&mut CodedRing>)
+    -> Result<(), DistError> {
+    reduce_scatter_window(node, chunks, buf, 0, class, ctx)
+}
+
+/// The reduce-scatter kernel. `base` is the window's offset into the
+/// flat space the error-feedback residual is keyed by (0 for a
+/// whole-buffer call; the window start for the bucketed variant).
+fn reduce_scatter_window(node: &mut RingNode,
+                         chunks: &[(usize, usize)], buf: &mut [f32],
+                         base: usize, class: TrafficClass,
+                         mut ctx: Option<&mut CodedRing>)
+    -> Result<(), DistError> {
     let (n, r) = (node.world, node.rank);
     assert_eq!(chunks.len(), n, "one chunk per rank");
     if n <= 1 {
@@ -106,10 +181,20 @@ pub fn ring_reduce_scatter(node: &mut RingNode,
     for s in 0..n - 1 {
         let send_c = (r + n - 1 - s) % n;
         let (lo, hi) = chunks[send_c];
-        node.send_right(class, buf[lo..hi].to_vec())?;
+        match &mut ctx {
+            Some(c) => {
+                let wire = c.encode_sum(&buf[lo..hi], base + lo);
+                node.send_right(c.codec.class(), wire)?;
+            }
+            None => node.send_right(class, buf[lo..hi].to_vec())?,
+        }
         let recv_c = (r + n - 2 - s) % n;
         let (lo, hi) = chunks[recv_c];
         let incoming = node.recv_left()?;
+        let incoming = match &ctx {
+            Some(c) => c.decode(&incoming, hi - lo),
+            None => incoming,
+        };
         debug_assert_eq!(incoming.len(), hi - lo);
         for (x, y) in buf[lo..hi].iter_mut().zip(&incoming) {
             *x += y;
@@ -142,6 +227,20 @@ pub fn ring_reduce_scatter_bucketed(node: &mut RingNode,
                                     buf: &mut [f32], bucket_elems: usize,
                                     class: TrafficClass)
     -> Result<(), DistError> {
+    ring_reduce_scatter_bucketed_coded(node, ranges, buf, bucket_elems,
+                                       class, None)
+}
+
+/// Bucketed reduce-scatter with an optional compression context. The
+/// residual is keyed by offsets into the full `buf`, so each window
+/// passes its start offset down as the residual base.
+pub fn ring_reduce_scatter_bucketed_coded(node: &mut RingNode,
+                                          ranges: &[(usize, usize)],
+                                          buf: &mut [f32],
+                                          bucket_elems: usize,
+                                          class: TrafficClass,
+                                          mut ctx: Option<&mut CodedRing>)
+    -> Result<(), DistError> {
     if node.world <= 1 || buf.is_empty() {
         return Ok(());
     }
@@ -150,7 +249,8 @@ pub fn ring_reduce_scatter_bucketed(node: &mut RingNode,
     while off < buf.len() {
         let hi = (off + bucket).min(buf.len());
         let clipped = clip_ranges(ranges, off, hi);
-        ring_reduce_scatter(node, &clipped, &mut buf[off..hi], class)?;
+        reduce_scatter_window(node, &clipped, &mut buf[off..hi], off,
+                              class, ctx.as_deref_mut())?;
         off = hi;
     }
     Ok(())
@@ -163,18 +263,55 @@ pub fn ring_reduce_scatter_bucketed(node: &mut RingNode,
 pub fn ring_all_gather(node: &mut RingNode, ranges: &[(usize, usize)],
                        buf: &mut [f32], class: TrafficClass)
     -> Result<(), DistError> {
+    ring_all_gather_coded(node, ranges, buf, class, None)
+}
+
+/// All-gather with an optional compression context. Every hop is a
+/// broadcast (copy-semantics) payload: it is compressed only when the
+/// codec opts in via [`Codec::compresses_broadcast`] — top-k never
+/// does, because dropping a parameter corrupts the replica. When
+/// compression is active the owning rank first quantizes its own
+/// range in place, so after the collective every rank (owner
+/// included) holds identical bits; forwarded hops re-encode
+/// already-quantized data, which is lossless.
+///
+/// [`Codec::compresses_broadcast`]:
+///     super::compress::Codec::compresses_broadcast
+pub fn ring_all_gather_coded(node: &mut RingNode,
+                             ranges: &[(usize, usize)],
+                             buf: &mut [f32], class: TrafficClass,
+                             mut ctx: Option<&mut CodedRing>)
+    -> Result<(), DistError> {
     let (n, r) = (node.world, node.rank);
     assert_eq!(ranges.len(), n, "one range per rank");
     if n <= 1 {
         return Ok(());
     }
+    let coded_bcast =
+        matches!(&ctx, Some(c) if c.codec.compresses_broadcast());
+    if coded_bcast {
+        if let Some(c) = &mut ctx {
+            let (lo, hi) = ranges[r];
+            c.quantize_in_place(&mut buf[lo..hi]);
+        }
+    }
     let mut send_c = r;
     for s in 0..n - 1 {
         let (lo, hi) = ranges[send_c];
-        node.send_right(class, buf[lo..hi].to_vec())?;
+        match &mut ctx {
+            Some(c) if coded_bcast => {
+                let wire = c.encode_copy(&buf[lo..hi]);
+                node.send_right(c.codec.class(), wire)?;
+            }
+            _ => node.send_right(class, buf[lo..hi].to_vec())?,
+        }
         let recv_c = (r + n - 1 - s) % n;
         let (lo, hi) = ranges[recv_c];
         let incoming = node.recv_left()?;
+        let incoming = match &ctx {
+            Some(c) if coded_bcast => c.decode(&incoming, hi - lo),
+            _ => incoming,
+        };
         debug_assert_eq!(incoming.len(), hi - lo);
         buf[lo..hi].copy_from_slice(&incoming);
         send_c = recv_c;
@@ -428,5 +565,178 @@ mod tests {
         // (N−1)·payload bytes cluster-total.
         assert_eq!(stats.bytes(TrafficClass::ParamGather),
                    (3 * total * 4) as u64);
+    }
+
+    #[test]
+    fn coded_f16_all_reduce_keeps_ranks_bit_identical() {
+        use crate::dist::compress::{CodedRing, F16Codec};
+        let mut rng = Rng::new(41);
+        let inputs: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.normal_vec(101, 1.0)).collect();
+        let expect = naive_sum(&inputs);
+        let (nodes, stats) = ring_world(4, LinkModel::default());
+        let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .zip(inputs)
+                .map(|(mut node, mut data)| {
+                    s.spawn(move || {
+                        let codec = F16Codec;
+                        let mut ctx = CodedRing::new(&codec, None);
+                        ring_all_reduce_coded(
+                            &mut node, &mut data, 17,
+                            TrafficClass::GradReduce,
+                            Some(&mut ctx))
+                            .unwrap();
+                        data
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // The owner-side quantize before the gather phase is what
+        // keeps replicas identical despite lossy wire payloads.
+        for out in &outs[1..] {
+            assert_eq!(out, &outs[0], "ranks must agree bitwise");
+        }
+        for (i, (a, b)) in outs[0].iter().zip(&expect).enumerate() {
+            assert!((a - b).abs() <= 3e-2 * b.abs().max(1.0),
+                    "elem {i}: {a} vs {b}");
+        }
+        // Compressed payloads land on the codec class, not the base
+        // class, and cost fewer bytes than the dense closed form.
+        assert_eq!(stats.bytes(TrafficClass::GradReduce), 0);
+        let wire = stats.bytes(TrafficClass::CodecF16);
+        assert!(wire > 0 && wire < (2 * 3 * 101 * 4) as u64,
+                "wire bytes {wire}");
+    }
+
+    #[test]
+    fn coded_f16_all_gather_quantizes_every_replica_identically() {
+        use crate::dist::compress::{CodedRing, F16Codec};
+        let total = 23;
+        let ranges = vec![(0, 9), (9, 9), (9, 16), (16, 23)];
+        let (nodes, stats) = ring_world(4, LinkModel::default());
+        let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .enumerate()
+                .map(|(w, mut node)| {
+                    let ranges = &ranges;
+                    s.spawn(move || {
+                        let (lo, hi) = ranges[w];
+                        let mut buf = vec![0.0f32; total];
+                        for i in lo..hi {
+                            // Not f16-exact: the owner must project
+                            // its own range too.
+                            buf[i] = i as f32 + 0.123;
+                        }
+                        let codec = F16Codec;
+                        let mut ctx = CodedRing::new(&codec, None);
+                        ring_all_gather_coded(
+                            &mut node, ranges, &mut buf,
+                            TrafficClass::ParamGather,
+                            Some(&mut ctx))
+                            .unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for out in &outs[1..] {
+            assert_eq!(out, &outs[0], "replicas must agree bitwise");
+        }
+        for (i, &x) in outs[0].iter().enumerate() {
+            let want = i as f32 + 0.123;
+            assert!((x - want).abs() <= want.abs().max(1.0) / 2048.0,
+                    "elem {i}: {x} vs {want}");
+        }
+        assert_eq!(stats.bytes(TrafficClass::ParamGather), 0);
+        assert!(stats.bytes(TrafficClass::CodecF16) > 0);
+    }
+
+    #[test]
+    fn coded_topk_frac_one_reduce_scatter_matches_dense_bitwise() {
+        // frac=1 keeps every entry at full precision, so the coded
+        // path must reproduce the dense accumulation bit-for-bit.
+        use crate::dist::compress::{CodedRing, TopKCodec};
+        let mut rng = Rng::new(43);
+        let len = 33;
+        let inputs: Vec<Vec<f32>> =
+            (0..3).map(|_| rng.normal_vec(len, 1.0)).collect();
+        let ranges: Vec<(usize, usize)> =
+            (0..3).map(|w| chunk_range(len, 3, w)).collect();
+        let (dense, _) =
+            run_reduce_scatter(inputs.clone(), ranges.clone(), 10);
+        let (nodes, _) = ring_world(3, LinkModel::default());
+        let coded: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .zip(inputs)
+                .map(|(mut node, mut data)| {
+                    let ranges = &ranges;
+                    s.spawn(move || {
+                        let codec = TopKCodec { frac: 1.0 };
+                        let mut res = vec![0.0f32; len];
+                        let mut ctx =
+                            CodedRing::new(&codec, Some(&mut res));
+                        ring_reduce_scatter_bucketed_coded(
+                            &mut node, ranges, &mut data, 10,
+                            TrafficClass::GradScatter,
+                            Some(&mut ctx))
+                            .unwrap();
+                        data
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (w, out) in coded.iter().enumerate() {
+            let (lo, hi) = ranges[w];
+            assert_eq!(&out[lo..hi], &dense[w][lo..hi], "rank {w}");
+        }
+    }
+
+    #[test]
+    fn coded_topk_leaves_dropped_mass_in_the_residual() {
+        use crate::dist::compress::{CodedRing, TopKCodec};
+        let mut rng = Rng::new(47);
+        let len = 32;
+        let inputs: Vec<Vec<f32>> =
+            (0..2).map(|_| rng.normal_vec(len, 1.0)).collect();
+        let ranges = vec![(0, 16), (16, 32)];
+        let (nodes, _) = ring_world(2, LinkModel::default());
+        let residuals: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .zip(inputs)
+                .map(|(mut node, mut data)| {
+                    let ranges = &ranges;
+                    s.spawn(move || {
+                        let codec = TopKCodec { frac: 0.25 };
+                        let mut res = vec![0.0f32; len];
+                        let mut ctx =
+                            CodedRing::new(&codec, Some(&mut res));
+                        ring_reduce_scatter_bucketed_coded(
+                            &mut node, ranges, &mut data, 100,
+                            TrafficClass::GradScatter,
+                            Some(&mut ctx))
+                            .unwrap();
+                        let (raw, wire) = ctx.bytes();
+                        assert!(wire < raw,
+                                "topk must shrink the wire");
+                        res
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Each rank sent one 16-element chunk keeping 4 entries: the
+        // other 12 must survive in that rank's residual.
+        for (w, res) in residuals.iter().enumerate() {
+            let nonzero = res.iter().filter(|v| **v != 0.0).count();
+            assert!(nonzero >= 8, "rank {w}: residual too empty");
+        }
     }
 }

@@ -54,15 +54,24 @@ pub enum TrafficClass {
     /// Retransmitted payload bytes (socket transport only): every
     /// attempt after the first, whatever base class it carries.
     Retry,
+    /// Half-precision-compressed collective payloads (`compress=f16`):
+    /// wire bytes actually moved, recorded in place of the base
+    /// gradient/parameter class the payload would have used dense.
+    CodecF16,
+    /// Sparse top-|g| compressed payloads (`compress=topk:<frac>`),
+    /// same in-place-of-base-class discipline as [`Self::CodecF16`].
+    CodecTopK,
 }
 
 impl TrafficClass {
-    pub const ALL: [TrafficClass; 5] = [
+    pub const ALL: [TrafficClass; 7] = [
         TrafficClass::GradReduce,
         TrafficClass::GradScatter,
         TrafficClass::ParamGather,
         TrafficClass::StateSync,
         TrafficClass::Retry,
+        TrafficClass::CodecF16,
+        TrafficClass::CodecTopK,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -72,6 +81,8 @@ impl TrafficClass {
             TrafficClass::ParamGather => "param_gather",
             TrafficClass::StateSync => "state_sync",
             TrafficClass::Retry => "retry",
+            TrafficClass::CodecF16 => "codec_f16",
+            TrafficClass::CodecTopK => "codec_topk",
         }
     }
 
@@ -82,6 +93,8 @@ impl TrafficClass {
             TrafficClass::ParamGather => 2,
             TrafficClass::StateSync => 3,
             TrafficClass::Retry => 4,
+            TrafficClass::CodecF16 => 5,
+            TrafficClass::CodecTopK => 6,
         }
     }
 }
@@ -125,7 +138,7 @@ struct ClassCounters {
 
 /// Cluster-wide traffic ledger, shared by every endpoint.
 pub struct CommStats {
-    classes: [ClassCounters; 5],
+    classes: [ClassCounters; 7],
     /// Sum of per-message modeled times (ns). An aggregate link-time
     /// integral, NOT wall-clock: messages on different links overlap.
     sim_link_ns: AtomicU64,
@@ -199,15 +212,11 @@ impl CommStats {
 
     /// Point-in-time copy of the byte counters (for per-phase deltas).
     pub fn snapshot(&self) -> CommSnapshot {
-        CommSnapshot {
-            bytes: [
-                self.bytes(TrafficClass::GradReduce),
-                self.bytes(TrafficClass::GradScatter),
-                self.bytes(TrafficClass::ParamGather),
-                self.bytes(TrafficClass::StateSync),
-                self.bytes(TrafficClass::Retry),
-            ],
+        let mut bytes = [0u64; 7];
+        for c in TrafficClass::ALL {
+            bytes[c.idx()] = self.bytes(c);
         }
+        CommSnapshot { bytes }
     }
 
     /// Machine-readable ledger: per-class bytes/messages plus the
@@ -234,7 +243,7 @@ impl CommStats {
 /// Byte counters frozen at one instant.
 #[derive(Debug, Clone, Copy)]
 pub struct CommSnapshot {
-    bytes: [u64; 5],
+    bytes: [u64; 7],
 }
 
 impl CommSnapshot {

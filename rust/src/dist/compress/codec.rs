@@ -1,0 +1,281 @@
+//! The [`Codec`] trait, the `compress=` config spec, and the
+//! per-collective [`CodedRing`] context threaded through the coded
+//! ring collectives.
+
+use anyhow::{bail, Context, Result};
+
+use crate::dist::comm::TrafficClass;
+
+use super::f16::F16Codec;
+use super::topk::TopKCodec;
+
+/// Parsed `compress=none|f16|topk:<frac>` config value. Lives on
+/// `DistOptions` and round-trips through `TrainConfig::to_json` for
+/// the multi-process socket path.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum CodecSpec {
+    /// True bypass: the pre-codec pipeline, bit-exact.
+    #[default]
+    None,
+    /// Half-precision quantization of scatter AND gather payloads.
+    F16,
+    /// Sparse top-|g| with error feedback; `frac` is the kept
+    /// fraction of each summation segment, in (0, 1].
+    TopK { frac: f32 },
+}
+
+impl CodecSpec {
+    /// Parse the `compress=` config key.
+    pub fn parse(s: &str) -> Result<CodecSpec> {
+        let s = s.trim();
+        Ok(match s {
+            "" | "none" => CodecSpec::None,
+            "f16" => CodecSpec::F16,
+            "topk" => CodecSpec::TopK { frac: 0.25 },
+            other => match other.strip_prefix("topk:") {
+                Some(arg) => {
+                    let frac: f32 = arg.parse().with_context(|| {
+                        format!("bad topk fraction {arg:?}")
+                    })?;
+                    if !(frac > 0.0 && frac <= 1.0) {
+                        bail!("topk fraction must be in (0, 1], \
+                               got {frac}");
+                    }
+                    CodecSpec::TopK { frac }
+                }
+                None => bail!("unknown compress codec {other:?} \
+                               (none | f16 | topk:<frac>)"),
+            },
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecSpec::None => "none",
+            CodecSpec::F16 => "f16",
+            CodecSpec::TopK { .. } => "topk",
+        }
+    }
+
+    /// The config-string form (`CodecSpec::parse` round-trips it).
+    pub fn config_key(&self) -> String {
+        match self {
+            CodecSpec::None => "none".to_string(),
+            CodecSpec::F16 => "f16".to_string(),
+            CodecSpec::TopK { frac } => format!("topk:{frac}"),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        *self == CodecSpec::None
+    }
+
+    /// The traffic class compressed payloads are accounted under.
+    pub fn class(&self) -> Option<TrafficClass> {
+        match self {
+            CodecSpec::None => None,
+            CodecSpec::F16 => Some(TrafficClass::CodecF16),
+            CodecSpec::TopK { .. } => Some(TrafficClass::CodecTopK),
+        }
+    }
+
+    /// Whether this codec carries a per-rank error-feedback residual.
+    pub fn error_feedback(&self) -> bool {
+        matches!(self, CodecSpec::TopK { .. })
+    }
+
+    /// Instantiate the codec (`None` for the bypass).
+    pub fn build(&self) -> Option<Box<dyn Codec>> {
+        match self {
+            CodecSpec::None => None,
+            CodecSpec::F16 => Some(Box::new(F16Codec)),
+            CodecSpec::TopK { frac } => {
+                Some(Box::new(TopKCodec { frac: *frac }))
+            }
+        }
+    }
+}
+
+/// One gradient/parameter compression scheme. Implementations must be
+/// deterministic pure functions of the input segment: every rank must
+/// produce identical wire bits for identical inputs, or the
+/// cross-transport bit-exactness matrix breaks.
+pub trait Codec: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// The traffic class this codec's wire payloads are recorded
+    /// under (in place of the base class of the collective).
+    fn class(&self) -> TrafficClass;
+
+    /// Encode a dense f32 segment into wire slots (self-describing;
+    /// fewer slots than `data.len()` for a payload worth sending).
+    fn encode(&self, data: &[f32]) -> Vec<f32>;
+
+    /// Decode wire slots back into a dense segment of length `len`.
+    fn decode(&self, wire: &[f32], len: usize) -> Vec<f32>;
+
+    /// True if broadcast (copy-semantics) payloads — the param
+    /// all-gather phases — are compressed too. Summation payloads are
+    /// always compressed.
+    fn compresses_broadcast(&self) -> bool;
+}
+
+/// Per-collective codec context: the codec, the (optional)
+/// error-feedback residual for the active flat window, and the
+/// raw-vs-wire slot accounting the worker layer publishes as
+/// `Event::BucketCompressed`.
+pub struct CodedRing<'a> {
+    pub codec: &'a dyn Codec,
+    /// Window-relative residual slice (`None` for codecs without
+    /// error feedback). Indexed by the same offsets as the window
+    /// buffer the collective runs over.
+    pub residual: Option<&'a mut [f32]>,
+    /// Dense f32 elements that would have crossed the wire.
+    pub raw_elems: u64,
+    /// Wire f32 slots actually sent.
+    pub wire_elems: u64,
+}
+
+impl<'a> CodedRing<'a> {
+    pub fn new(codec: &'a dyn Codec,
+               residual: Option<&'a mut [f32]>) -> CodedRing<'a> {
+        CodedRing { codec, residual, raw_elems: 0, wire_elems: 0 }
+    }
+
+    /// Encode one outgoing SUMMATION segment whose window-relative
+    /// range starts at `lo`: fold the residual into the payload,
+    /// encode, then store the new residual (what this hop dropped).
+    pub fn encode_sum(&mut self, data: &[f32], lo: usize) -> Vec<f32> {
+        let mut out = data.to_vec();
+        if let Some(res) = &mut self.residual {
+            let res = &mut res[lo..lo + data.len()];
+            for (o, r) in out.iter_mut().zip(res.iter()) {
+                *o += *r;
+            }
+        }
+        let wire = self.codec.encode(&out);
+        if let Some(res) = &mut self.residual {
+            let res = &mut res[lo..lo + data.len()];
+            let back = self.codec.decode(&wire, out.len());
+            for ((r, o), b) in res.iter_mut().zip(&out).zip(&back) {
+                *r = o - b;
+            }
+        }
+        self.raw_elems += data.len() as u64;
+        self.wire_elems += wire.len() as u64;
+        wire
+    }
+
+    /// Encode one outgoing BROADCAST (copy-semantics) segment: no
+    /// residual — a broadcast hop forwards, it does not accumulate.
+    pub fn encode_copy(&mut self, data: &[f32]) -> Vec<f32> {
+        let wire = self.codec.encode(data);
+        self.raw_elems += data.len() as u64;
+        self.wire_elems += wire.len() as u64;
+        wire
+    }
+
+    /// Decode an incoming wire payload into a dense segment.
+    pub fn decode(&self, wire: &[f32], len: usize) -> Vec<f32> {
+        self.codec.decode(wire, len)
+    }
+
+    /// Round one segment through the codec in place — the owning
+    /// rank's own chunk in a coded all-gather, so every rank ends the
+    /// collective holding identical (quantized) bits.
+    pub fn quantize_in_place(&self, data: &mut [f32]) {
+        let wire = self.codec.encode(data);
+        data.copy_from_slice(&self.codec.decode(&wire, data.len()));
+    }
+
+    /// (raw, wire) BYTES moved through this context so far.
+    pub fn bytes(&self) -> (u64, u64) {
+        (self.raw_elems * 4, self.wire_elems * 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_round_trips() {
+        assert_eq!(CodecSpec::parse("none").unwrap(), CodecSpec::None);
+        assert_eq!(CodecSpec::parse("").unwrap(), CodecSpec::None);
+        assert_eq!(CodecSpec::parse("f16").unwrap(), CodecSpec::F16);
+        assert_eq!(CodecSpec::parse("topk:0.25").unwrap(),
+                   CodecSpec::TopK { frac: 0.25 });
+        assert_eq!(CodecSpec::parse("topk").unwrap(),
+                   CodecSpec::TopK { frac: 0.25 });
+        for s in ["none", "f16", "topk:0.25", "topk:0.5"] {
+            let spec = CodecSpec::parse(s).unwrap();
+            assert_eq!(CodecSpec::parse(&spec.config_key()).unwrap(),
+                       spec, "{s}");
+        }
+        assert!(CodecSpec::parse("topk:0").is_err());
+        assert!(CodecSpec::parse("topk:1.5").is_err());
+        assert!(CodecSpec::parse("gzip").is_err());
+    }
+
+    #[test]
+    fn spec_capabilities() {
+        assert!(CodecSpec::None.build().is_none());
+        assert!(CodecSpec::None.class().is_none());
+        assert!(!CodecSpec::None.error_feedback());
+        let f = CodecSpec::F16;
+        assert_eq!(f.class(), Some(TrafficClass::CodecF16));
+        assert!(!f.error_feedback());
+        assert!(f.build().unwrap().compresses_broadcast());
+        let t = CodecSpec::TopK { frac: 0.5 };
+        assert_eq!(t.class(), Some(TrafficClass::CodecTopK));
+        assert!(t.error_feedback());
+        assert!(!t.build().unwrap().compresses_broadcast());
+    }
+
+    #[test]
+    fn error_feedback_conserves_dropped_mass() {
+        // The EF invariant: payload-as-sent + residual-after ==
+        // payload-as-meant (input + residual-before), exactly, every
+        // hop. Whatever top-k drops this step is re-injected next.
+        let codec = TopKCodec { frac: 0.25 };
+        let mut residual = vec![0.0f32; 8];
+        let input = vec![4.0, -0.5, 0.25, 8.0, -0.125, 0.0625, 1.0,
+                         -2.0];
+        let mut ctx = CodedRing::new(&codec, Some(&mut residual));
+        let wire = ctx.encode_sum(&input, 0);
+        let sent = ctx.decode(&wire, input.len());
+        for i in 0..input.len() {
+            assert_eq!(sent[i] + residual[i], input[i], "elem {i}");
+        }
+        // Second step over a zero gradient: the residual drains.
+        let mut ctx = CodedRing::new(&codec, Some(&mut residual));
+        let wire = ctx.encode_sum(&[0.0; 8], 0);
+        let sent = ctx.decode(&wire, 8);
+        let drained: f32 = sent.iter().map(|v| v.abs()).sum();
+        assert!(drained > 0.0, "residual mass must re-inject");
+    }
+
+    #[test]
+    fn accounting_counts_raw_and_wire() {
+        let codec = F16Codec;
+        let mut ctx = CodedRing::new(&codec, None);
+        let data = vec![1.0f32; 100];
+        let wire = ctx.encode_copy(&data);
+        assert_eq!(ctx.raw_elems, 100);
+        assert_eq!(ctx.wire_elems, wire.len() as u64);
+        assert_eq!(ctx.bytes(), (400, wire.len() as u64 * 4));
+        // Two f16 per slot + one header slot.
+        assert_eq!(wire.len(), 51);
+    }
+
+    #[test]
+    fn quantize_in_place_is_idempotent() {
+        let codec = F16Codec;
+        let ctx = CodedRing::new(&codec, None);
+        let mut a = vec![0.1f32, -3.7, 1e-5, 42.0];
+        ctx.quantize_in_place(&mut a);
+        let once = a.clone();
+        ctx.quantize_in_place(&mut a);
+        assert_eq!(a, once, "re-quantizing quantized data is a no-op");
+    }
+}

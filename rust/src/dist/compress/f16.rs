@@ -1,0 +1,201 @@
+//! Half-precision (IEEE 754 binary16) quantization codec.
+//!
+//! The conversions are hand-rolled (no `half` crate): round-to-
+//! nearest-even f32→f16, exact f16→f32. Wire format: one header slot
+//! carrying the dense length, then two f16 values packed per f32 slot
+//! — so a segment of n elements costs `1 + ceil(n/2)` slots, ~0.5×
+//! the dense bytes.
+//!
+//! The packed slots are arbitrary bit patterns reinterpreted as f32
+//! (including patterns in the NaN space). That is safe here because
+//! nothing between `encode` and `decode` does floating-point
+//! arithmetic on payloads: the channel transport moves the `Vec<f32>`
+//! verbatim, and the socket framer serializes each slot with
+//! `to_le_bytes`/`from_le_bytes` — both bit-preserving.
+
+use crate::dist::comm::TrafficClass;
+
+use super::codec::Codec;
+
+/// f32 → binary16 bits, round-to-nearest-even. Out-of-range values
+/// overflow to ±inf; NaNs stay NaN (quietened, payload truncated).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        return if man == 0 {
+            sign | 0x7c00
+        } else {
+            sign | 0x7e00 | ((man >> 13) as u16 & 0x01ff)
+        };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00;
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign;
+        }
+        // Subnormal: implicit-1 mantissa shifted into place, then
+        // round to nearest, ties to even.
+        let man = man | 0x0080_0000;
+        let shift = (1 - e) as u32 + 13;
+        let half = (man >> shift) as u16;
+        let rem = man & ((1u32 << shift) - 1);
+        let tie = 1u32 << (shift - 1);
+        return sign
+            | (half
+               + u16::from(rem > tie || (rem == tie && half & 1 == 1)));
+    }
+    let half = sign | ((e as u16) << 10) | ((man >> 13) as u16);
+    let rem = man & 0x1fff;
+    // Mantissa carry propagates into the exponent by construction
+    // (0x...3ff + 1 rolls the exponent field, 30→31 yields inf).
+    half + u16::from(rem > 0x1000 || (rem == 0x1000 && half & 1 == 1))
+}
+
+/// binary16 bits → f32, exact (every f16 value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = match exp {
+        0 => {
+            if man == 0 {
+                sign
+            } else {
+                // Subnormal: value = man × 2⁻²⁴; normalize.
+                let k = 31 - man.leading_zeros();
+                sign | ((k + 103) << 23)
+                    | ((man & !(1 << k)) << (23 - k))
+            }
+        }
+        0x1f => sign | 0x7f80_0000 | (man << 13),
+        e => sign | ((e + 112) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Half-precision codec: quantizes both summation and broadcast
+/// payloads (re-encoding already-quantized data is lossless, so
+/// forwarded all-gather hops stay bit-stable).
+pub struct F16Codec;
+
+impl Codec for F16Codec {
+    fn name(&self) -> &'static str {
+        "f16"
+    }
+
+    fn class(&self) -> TrafficClass {
+        TrafficClass::CodecF16
+    }
+
+    fn encode(&self, data: &[f32]) -> Vec<f32> {
+        debug_assert!(data.len() < (1 << 23), "header slot overflow");
+        let mut wire = Vec::with_capacity(1 + data.len().div_ceil(2));
+        wire.push(f32::from_bits(data.len() as u32));
+        for pair in data.chunks(2) {
+            let lo = f32_to_f16_bits(pair[0]) as u32;
+            let hi = if pair.len() > 1 {
+                f32_to_f16_bits(pair[1]) as u32
+            } else {
+                0
+            };
+            wire.push(f32::from_bits(lo | (hi << 16)));
+        }
+        wire
+    }
+
+    fn decode(&self, wire: &[f32], len: usize) -> Vec<f32> {
+        debug_assert_eq!(wire[0].to_bits() as usize, len,
+                         "f16 wire header disagrees with dense len");
+        let mut out = Vec::with_capacity(len);
+        for slot in &wire[1..] {
+            let bits = slot.to_bits();
+            out.push(f16_bits_to_f32(bits as u16));
+            if out.len() < len {
+                out.push(f16_bits_to_f32((bits >> 16) as u16));
+            }
+        }
+        out.truncate(len);
+        debug_assert_eq!(out.len(), len);
+        out
+    }
+
+    fn compresses_broadcast(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_round_trip_exactly() {
+        // Values exactly representable in f16 must survive bitwise.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0,
+                  -65504.0, 0.25, 1.5, 6.1035156e-5, 5.9604645e-8] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(back.to_bits(), v.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_even_and_bounded() {
+        // Relative error of one round-trip is bounded by 2⁻¹¹ for
+        // normal-range values.
+        let mut x = 1.0001f32;
+        for _ in 0..2000 {
+            let back = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert!(((back - x) / x).abs() <= 1.0 / 2048.0, "{x}");
+            x *= 1.01;
+            if x > 60000.0 {
+                x = 1e-4;
+            }
+        }
+        // Ties round to even mantissa: 1 + 2⁻¹¹ is exactly halfway
+        // between 1.0 and the next f16; even mantissa wins.
+        let tie = f32::from_bits(0x3f80_1000);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tie)), 1.0);
+        let tie_up = f32::from_bits(0x3f80_3000);
+        assert_eq!(f32_to_f16_bits(tie_up), 0x3c02);
+    }
+
+    #[test]
+    fn specials_survive() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f32_to_f16_bits(1e30), 0x7c00, "overflow to inf");
+        assert_eq!(f32_to_f16_bits(1e-30), 0x0000, "underflow to 0");
+        assert_eq!(f32_to_f16_bits(-1e-30), 0x8000);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f16_bits_to_f32(0x7c00), f32::INFINITY);
+    }
+
+    #[test]
+    fn codec_packs_two_per_slot() {
+        let codec = F16Codec;
+        for n in [0usize, 1, 2, 3, 7, 8, 100] {
+            let data: Vec<f32> =
+                (0..n).map(|i| i as f32 * 0.25 - 3.0).collect();
+            let wire = codec.encode(&data);
+            assert_eq!(wire.len(), 1 + n.div_ceil(2), "n={n}");
+            let back = codec.decode(&wire, n);
+            // Quarter-steps near zero are exact in f16.
+            assert_eq!(back, data, "n={n}");
+        }
+    }
+
+    #[test]
+    fn decode_of_encode_is_a_projection() {
+        let codec = F16Codec;
+        let data = vec![0.1f32, -2.7, 3.14159, 1e-6, 123.456];
+        let once = codec.decode(&codec.encode(&data), data.len());
+        let twice = codec.decode(&codec.encode(&once), once.len());
+        assert_eq!(once, twice, "second pass must be lossless");
+    }
+}

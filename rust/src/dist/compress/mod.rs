@@ -1,0 +1,40 @@
+//! Gradient compression: a codec layer under the bucket pipeline.
+//!
+//! Adam-mini's thesis is "move fewer bytes"; this subsystem pushes it
+//! from the optimizer state onto the wire. A [`Codec`] re-encodes
+//! every ring-collective hop: the sender turns a dense f32 segment
+//! into fewer wire slots, the receiver decodes before accumulating
+//! (summation hops) or copying (broadcast hops). The wire stays
+//! `Vec<f32>`, so compression composes UNDER both transports and the
+//! socket ARQ/fault middleware by construction — a corrupted or
+//! dropped frame is retransmitted bit-exactly whether or not its
+//! payload is compressed.
+//!
+//! Two codecs ship behind the `compress=` config key:
+//!
+//! - `f16` ([`F16Codec`]) — half-precision quantization of both
+//!   reduce-scatter and all-gather payloads, two f16 per wire slot
+//!   (~0.5× bytes). Lossy but unbiased enough per step that no error
+//!   feedback is carried.
+//! - `topk:<frac>` ([`TopKCodec`]) — sparse top-|g| gradient drop:
+//!   only the largest-magnitude `frac` of each summation segment
+//!   crosses the wire as (index, value) pairs (~2·frac× bytes), and
+//!   the dropped mass lands in a per-rank error-feedback residual
+//!   that is re-injected into the same segment next step. Broadcast
+//!   payloads (param all-gather) stay dense: dropping a parameter is
+//!   not an approximation, it is corruption.
+//!
+//! Accounting: compressed payloads are recorded under the codec's own
+//! [`TrafficClass`] at the `record_from` choke point, so the base
+//! ledgers keep meaning "dense f32 bytes" and the `cluster.rs` closed
+//! forms for compressed step bytes can be cross-checked per class.
+//!
+//! [`TrafficClass`]: crate::dist::comm::TrafficClass
+
+pub mod codec;
+pub mod f16;
+pub mod topk;
+
+pub use codec::{Codec, CodecSpec, CodedRing};
+pub use f16::F16Codec;
+pub use topk::TopKCodec;

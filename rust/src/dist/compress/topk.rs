@@ -1,0 +1,162 @@
+//! Sparse top-|g| gradient-drop codec (grad_drop style).
+//!
+//! Only the `frac` largest-magnitude entries of a summation segment
+//! cross the wire, as (index, value) pairs with full-f32 values —
+//! `1 + 2·ceil(frac·n)` wire slots for n dense elements, ~2·frac× the
+//! dense bytes. Selection is a deterministic total order (|value|
+//! descending, index ascending as the tie-break), so every rank and
+//! every transport produce identical wire bits for identical inputs.
+//!
+//! The dropped mass is NOT lost: the coded collectives pair this
+//! codec with a per-rank error-feedback residual (see
+//! [`CodedRing`](super::codec::CodedRing)) that re-injects it into
+//! the same segment on the next step. Broadcast payloads (param
+//! all-gather) are never top-k compressed — dropping a parameter
+//! would corrupt the replica, not approximate it — so
+//! [`Codec::compresses_broadcast`] is false and those phases stay
+//! dense f32.
+
+use crate::dist::comm::TrafficClass;
+
+use super::codec::Codec;
+
+/// Top-|g| sparsification with kept fraction `frac` in (0, 1].
+pub struct TopKCodec {
+    pub frac: f32,
+}
+
+impl TopKCodec {
+    /// Entries kept for a dense segment of `len` elements: at least
+    /// one, at most all of them.
+    pub fn kept(&self, len: usize) -> usize {
+        if len == 0 {
+            return 0;
+        }
+        ((len as f64 * self.frac as f64).ceil() as usize).clamp(1, len)
+    }
+}
+
+impl Codec for TopKCodec {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn class(&self) -> TrafficClass {
+        TrafficClass::CodecTopK
+    }
+
+    fn encode(&self, data: &[f32]) -> Vec<f32> {
+        debug_assert!(data.len() < (1 << 23), "header slot overflow");
+        let k = self.kept(data.len());
+        let mut wire = Vec::with_capacity(1 + 2 * k);
+        wire.push(f32::from_bits(k as u32));
+        if k == 0 {
+            return wire;
+        }
+        let mut idx: Vec<u32> = (0..data.len() as u32).collect();
+        // Deterministic total order: |v| descending, index ascending.
+        // total_cmp keeps this well-defined even for NaN gradients.
+        let by_mag = |&a: &u32, &b: &u32| {
+            data[b as usize]
+                .abs()
+                .total_cmp(&data[a as usize].abs())
+                .then(a.cmp(&b))
+        };
+        if k < idx.len() {
+            idx.select_nth_unstable_by(k - 1, by_mag);
+        }
+        let mut top = idx[..k].to_vec();
+        // Wire order is index-ascending: deterministic and decode-
+        // friendly.
+        top.sort_unstable();
+        for i in top {
+            wire.push(f32::from_bits(i));
+            wire.push(data[i as usize]);
+        }
+        wire
+    }
+
+    fn decode(&self, wire: &[f32], len: usize) -> Vec<f32> {
+        let k = wire[0].to_bits() as usize;
+        let mut out = vec![0.0f32; len];
+        for pair in wire[1..1 + 2 * k].chunks_exact(2) {
+            out[pair[0].to_bits() as usize] = pair[1];
+        }
+        out
+    }
+
+    fn compresses_broadcast(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_the_largest_magnitudes_exactly() {
+        let codec = TopKCodec { frac: 0.25 };
+        let data = vec![0.1f32, -5.0, 0.2, 3.0, -0.3, 0.05, 1.0, 0.4];
+        // k = ceil(8 * 0.25) = 2: keeps -5.0 and 3.0, full precision.
+        let wire = codec.encode(&data);
+        assert_eq!(wire.len(), 1 + 2 * 2);
+        let back = codec.decode(&wire, data.len());
+        assert_eq!(back,
+                   vec![0.0, -5.0, 0.0, 3.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn selection_is_deterministic_under_ties() {
+        // Equal magnitudes: the lower index wins, every time.
+        let codec = TopKCodec { frac: 0.5 };
+        let data = vec![1.0f32, -1.0, 1.0, -1.0];
+        let a = codec.encode(&data);
+        let b = codec.encode(&data);
+        let bits = |w: &[f32]| -> Vec<u32> {
+            w.iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&a), bits(&b));
+        assert_eq!(codec.decode(&a, 4), vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn kept_counts_clamp() {
+        let c = TopKCodec { frac: 0.25 };
+        assert_eq!(c.kept(0), 0);
+        assert_eq!(c.kept(1), 1);
+        assert_eq!(c.kept(2), 1);
+        assert_eq!(c.kept(8), 2);
+        assert_eq!(c.kept(100), 25);
+        let all = TopKCodec { frac: 1.0 };
+        assert_eq!(all.kept(7), 7);
+    }
+
+    #[test]
+    fn frac_one_is_dense_in_values() {
+        let codec = TopKCodec { frac: 1.0 };
+        let data = vec![0.5f32, -0.25, 0.0, 7.0];
+        let back = codec.decode(&codec.encode(&data), data.len());
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn empty_segment_is_a_header_only_message() {
+        let codec = TopKCodec { frac: 0.5 };
+        let wire = codec.encode(&[]);
+        assert_eq!(wire.len(), 1);
+        assert!(codec.decode(&wire, 0).is_empty());
+    }
+
+    #[test]
+    fn wire_size_matches_the_closed_form() {
+        let codec = TopKCodec { frac: 0.1 };
+        for n in [1usize, 10, 100, 1000] {
+            let data: Vec<f32> = (0..n)
+                .map(|i| ((i * 37) % 101) as f32 - 50.0)
+                .collect();
+            assert_eq!(codec.encode(&data).len(),
+                       1 + 2 * codec.kept(n), "n={n}");
+        }
+    }
+}

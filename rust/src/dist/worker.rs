@@ -48,13 +48,18 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::allreduce::{clip_ranges, ring_all_gather, ring_all_reduce,
-                       ring_reduce_scatter, ring_reduce_scatter_bucketed};
+use super::allreduce::{clip_ranges, ring_all_gather,
+                       ring_all_gather_coded, ring_all_reduce,
+                       ring_all_reduce_coded, ring_reduce_scatter,
+                       ring_reduce_scatter_bucketed,
+                       ring_reduce_scatter_bucketed_coded,
+                       ring_reduce_scatter_coded};
 use super::bucket::{gather_comm_ns, grad_comm_ns, BucketPlan,
                     ComputeModel, OverlapTimeline, StepTiming};
 use super::comm::{collective_handle, ring_world, CollectiveDone,
                   CollectiveHandle, CommStats, LinkModel, RingNode,
                   TrafficClass};
+use super::compress::{Codec, CodecSpec, CodedRing};
 use super::error::DistError;
 use super::shard::{block_cuts, build_shard_optimizer, pieces_for,
                    shard_spec, shardable, slice_shard, FlatLayout,
@@ -130,6 +135,11 @@ pub struct DistOptions {
     /// the seed behavior, bit-identical) or framed localhost TCP with
     /// retry/timeout middleware (`transport=tcp`).
     pub transport: TransportKind,
+    /// Wire compression for the ring collectives
+    /// (`compress=none|f16|topk:<frac>`). `None` is a true bypass:
+    /// the coded paths are never entered and the pipeline stays
+    /// bit-exact with the pre-codec engine.
+    pub compress: CodecSpec,
 }
 
 impl Default for DistOptions {
@@ -147,6 +157,7 @@ impl Default for DistOptions {
             link: LinkModel::default(),
             compute: ComputeModel::default(),
             transport: TransportKind::default(),
+            compress: CodecSpec::None,
         }
     }
 }
@@ -162,6 +173,14 @@ pub(crate) struct WorkerSlot {
     pub(crate) flat_params: Vec<f32>,
     /// Telemetry publisher handle (None when no bus is attached).
     pub(crate) bus: Option<Arc<EventBus>>,
+    /// Active wire codec (`None` ⇒ the bit-exact dense pipeline).
+    pub(crate) codec: Option<Box<dyn Codec>>,
+    /// Per-rank error-feedback residual over the full flat space:
+    /// gradient mass a lossy codec dropped on this rank's summation
+    /// hops, re-injected into the same positions next step. It is
+    /// optimizer-adjacent state — it rides checkpoints as the
+    /// `rank<r>/ef/residual` entry.
+    pub(crate) residual: Option<Vec<f32>>,
 }
 
 /// Build one rank's slot: slice its shard out of the flat replica and
@@ -195,7 +214,41 @@ pub(crate) fn shard_slot(node: RingNode, layout: &FlatLayout,
         shard_range: range,
         flat_params: if sharded { flat.to_vec() } else { Vec::new() },
         bus: None,
+        codec: opts.compress.build(),
+        residual: if opts.compress.error_feedback() {
+            Some(vec![0.0f32; layout.total])
+        } else {
+            None
+        },
     })
+}
+
+/// Publish one collective's compression accounting (skipped when the
+/// coded path moved nothing — e.g. a top-k all-gather stays dense).
+fn pub_compressed(bus: &Option<Arc<EventBus>>, step: u64, rank: usize,
+                  bucket: i64, ctx: &CodedRing) {
+    if ctx.raw_elems == 0 {
+        return;
+    }
+    let (raw_bytes, wire_bytes) = ctx.bytes();
+    pub_ev(bus, Event::BucketCompressed {
+        step, rank, bucket, codec: ctx.codec.name(), raw_bytes,
+        wire_bytes,
+    });
+}
+
+/// Publish the post-step error-feedback residual norm, when one
+/// exists — the observable that EF mass is bounded, not diverging.
+fn pub_residual_norm(bus: &Option<Arc<EventBus>>, step: u64,
+                     rank: usize, residual: &Option<Vec<f32>>) {
+    if let Some(res) = residual {
+        let norm = res
+            .iter()
+            .map(|&v| v as f64 * v as f64)
+            .sum::<f64>()
+            .sqrt();
+        pub_ev(bus, Event::ResidualNorm { step, rank, norm });
+    }
 }
 
 /// Step this worker's whole shard against `reduced` (only the shard's
@@ -221,8 +274,18 @@ fn step_shard_and_gather(slot: &mut WorkerSlot,
     pub_ev(&slot.bus, Event::ShardStepped {
         step, rank: slot.node.rank, bucket: -1, lo: a, hi: b,
     });
-    ring_all_gather(&mut slot.node, ranges, &mut slot.flat_params,
-                    TrafficClass::ParamGather)
+    if let Some(codec) = &slot.codec {
+        let mut ctx = CodedRing::new(codec.as_ref(), None);
+        ring_all_gather_coded(&mut slot.node, ranges,
+                              &mut slot.flat_params,
+                              TrafficClass::ParamGather,
+                              Some(&mut ctx))?;
+        pub_compressed(&slot.bus, step, slot.node.rank, -1, &ctx);
+        Ok(())
+    } else {
+        ring_all_gather(&mut slot.node, ranges, &mut slot.flat_params,
+                        TrafficClass::ParamGather)
+    }
 }
 
 /// One rank's batch-synchronous step body: reduce (or scatter) the
@@ -235,28 +298,47 @@ pub(crate) fn rank_step(slot: &mut WorkerSlot,
                         bucket: usize, mode: StepMode, gscale: f32,
                         lr: f32, step: u64)
     -> std::result::Result<(), DistError> {
+    let rank = slot.node.rank;
     match mode {
-        StepMode::Replicated => {
-            ring_all_reduce(&mut slot.node, grad, bucket,
-                            TrafficClass::GradReduce)?;
-            for x in grad.iter_mut() {
-                *x *= gscale;
+        StepMode::Replicated | StepMode::Zero1 => {
+            if let Some(codec) = &slot.codec {
+                let mut ctx = CodedRing::new(
+                    codec.as_ref(), slot.residual.as_deref_mut());
+                ring_all_reduce_coded(&mut slot.node, grad, bucket,
+                                      TrafficClass::GradReduce,
+                                      Some(&mut ctx))?;
+                pub_compressed(&slot.bus, step, rank, -1, &ctx);
+            } else {
+                ring_all_reduce(&mut slot.node, grad, bucket,
+                                TrafficClass::GradReduce)?;
+            }
+            if mode == StepMode::Replicated {
+                for x in grad.iter_mut() {
+                    *x *= gscale;
+                }
+            } else {
+                step_shard_and_gather(slot, ranges, grad, lr, gscale,
+                                      step)?;
             }
         }
-        StepMode::Zero1 => {
-            ring_all_reduce(&mut slot.node, grad, bucket,
-                            TrafficClass::GradReduce)?;
-            step_shard_and_gather(slot, ranges, grad, lr, gscale,
-                                  step)?;
-        }
         StepMode::Zero2 => {
-            ring_reduce_scatter_bucketed(&mut slot.node, ranges, grad,
-                                         bucket,
-                                         TrafficClass::GradScatter)?;
+            if let Some(codec) = &slot.codec {
+                let mut ctx = CodedRing::new(
+                    codec.as_ref(), slot.residual.as_deref_mut());
+                ring_reduce_scatter_bucketed_coded(
+                    &mut slot.node, ranges, grad, bucket,
+                    TrafficClass::GradScatter, Some(&mut ctx))?;
+                pub_compressed(&slot.bus, step, rank, -1, &ctx);
+            } else {
+                ring_reduce_scatter_bucketed(
+                    &mut slot.node, ranges, grad, bucket,
+                    TrafficClass::GradScatter)?;
+            }
             step_shard_and_gather(slot, ranges, grad, lr, gscale,
                                   step)?;
         }
     }
+    pub_residual_norm(&slot.bus, step, rank, &slot.residual);
     Ok(())
 }
 
@@ -562,13 +644,20 @@ impl DistTrainer {
             return Ok(StateDict::new());
         }
         // Per-rank export (keys/shapes) — driver side; the data itself
-        // travels through the gather link below.
+        // travels through the gather link below. The error-feedback
+        // residual rides along as an `ef/`-prefixed entry: it is
+        // optimizer-adjacent state, and a topk resume without it would
+        // silently drop the un-sent gradient mass.
         let dicts: Vec<StateDict> = self
             .slots
             .iter()
             .map(|s| {
-                s.opt.as_ref().map(|o| o.state_dict())
-                    .unwrap_or_default()
+                let mut d = s.opt.as_ref().map(|o| o.state_dict())
+                    .unwrap_or_default();
+                if let Some(res) = &s.residual {
+                    d.insert("ef/residual", &[res.len()], res.clone());
+                }
+                d
             })
             .collect();
         let slots = &mut self.slots;
@@ -639,7 +728,20 @@ impl DistTrainer {
         let mut routed = 0;
         for (r, slot) in self.slots.iter_mut().enumerate() {
             let Some(opt) = &mut slot.opt else { continue };
-            let sub = state.sub_dict(&format!("rank{r}/"));
+            let mut sub = state.sub_dict(&format!("rank{r}/"));
+            if let Some(res) = sub.remove("ef/residual") {
+                routed += 1;
+                let Some(dst) = &mut slot.residual else {
+                    bail!("rank {r}: checkpoint carries an \
+                           error-feedback residual but the current \
+                           compress codec keeps none");
+                };
+                if res.data.len() != dst.len() {
+                    bail!("rank {r}: residual has {} elems, \
+                           expected {}", res.data.len(), dst.len());
+                }
+                dst.copy_from_slice(&res.data);
+            }
             routed += sub.len();
             opt.load_state_dict(&sub)?;
         }
@@ -714,8 +816,22 @@ fn stream_rank_loop(slot: &mut WorkerSlot, rx: Receiver<BucketJob>,
                     bytes: bucket_bytes,
                 });
                 let t = Instant::now();
-                ring_all_reduce(&mut slot.node, &mut job.data, len,
-                                TrafficClass::GradReduce)?;
+                if let Some(codec) = &slot.codec {
+                    let mut ctx = CodedRing::new(
+                        codec.as_ref(),
+                        slot.residual
+                            .as_mut()
+                            .map(|r| &mut r[job.lo..job.hi]));
+                    ring_all_reduce_coded(&mut slot.node,
+                                          &mut job.data, len,
+                                          TrafficClass::GradReduce,
+                                          Some(&mut ctx))?;
+                    pub_compressed(&bus, step, rank, job.idx as i64,
+                                   &ctx);
+                } else {
+                    ring_all_reduce(&mut slot.node, &mut job.data,
+                                    len, TrafficClass::GradReduce)?;
+                }
                 pub_ev(&bus, Event::CollectiveLanded {
                     step, rank, bucket: job.idx,
                     class: TrafficClass::GradReduce.name(),
@@ -742,9 +858,22 @@ fn stream_rank_loop(slot: &mut WorkerSlot, rx: Receiver<BucketJob>,
                     bytes: bucket_bytes,
                 });
                 let t = Instant::now();
-                ring_reduce_scatter(&mut slot.node, &clipped,
-                                    &mut job.data,
-                                    TrafficClass::GradScatter)?;
+                if let Some(codec) = &slot.codec {
+                    let mut ctx = CodedRing::new(
+                        codec.as_ref(),
+                        slot.residual
+                            .as_mut()
+                            .map(|r| &mut r[job.lo..job.hi]));
+                    ring_reduce_scatter_coded(
+                        &mut slot.node, &clipped, &mut job.data,
+                        TrafficClass::GradScatter, Some(&mut ctx))?;
+                    pub_compressed(&bus, step, rank, job.idx as i64,
+                                   &ctx);
+                } else {
+                    ring_reduce_scatter(&mut slot.node, &clipped,
+                                        &mut job.data,
+                                        TrafficClass::GradScatter)?;
+                }
                 pub_ev(&bus, Event::CollectiveLanded {
                     step, rank, bucket: job.idx,
                     class: TrafficClass::GradScatter.name(),
@@ -780,10 +909,22 @@ fn stream_rank_loop(slot: &mut WorkerSlot, rx: Receiver<BucketJob>,
                         bytes: bucket_bytes,
                     });
                     let t = Instant::now();
-                    ring_all_gather(
-                        &mut slot.node, &clipped,
-                        &mut slot.flat_params[job.lo..job.hi],
-                        TrafficClass::ParamGather)?;
+                    if let Some(codec) = &slot.codec {
+                        let mut ctx =
+                            CodedRing::new(codec.as_ref(), None);
+                        ring_all_gather_coded(
+                            &mut slot.node, &clipped,
+                            &mut slot.flat_params[job.lo..job.hi],
+                            TrafficClass::ParamGather,
+                            Some(&mut ctx))?;
+                        pub_compressed(&bus, step, rank,
+                                       job.idx as i64, &ctx);
+                    } else {
+                        ring_all_gather(
+                            &mut slot.node, &clipped,
+                            &mut slot.flat_params[job.lo..job.hi],
+                            TrafficClass::ParamGather)?;
+                    }
                     pub_ev(&bus, Event::CollectiveLanded {
                         step, rank, bucket: job.idx,
                         class: TrafficClass::ParamGather.name(),
@@ -798,6 +939,9 @@ fn stream_rank_loop(slot: &mut WorkerSlot, rx: Receiver<BucketJob>,
         }
         job.done.complete(job.idx);
     }
+    // Residual mutations all happen on the reduce hops above; the
+    // trailing phases only step and gather.
+    pub_residual_norm(&bus, step, rank, &slot.residual);
     match mode {
         StepMode::Replicated => {
             Ok(if rank == 0 { Some(reduced) } else { None })
@@ -1521,5 +1665,157 @@ mod tests {
                 overlap);
             assert_eq!(chan, sock, "overlap={overlap}");
         }
+    }
+
+    /// run_dist with a wire codec active (always zero1 fallback on).
+    fn run_dist_codec(optimizer: &str, workers: usize, zero2: bool,
+                      overlap: bool, compress: &str, steps: usize,
+                      micro: usize) -> Vec<Tensor> {
+        let (mut params, meta) = toy();
+        let spec = if optimizer.starts_with("adam_mini") {
+            Some(mini_spec(&params, &meta))
+        } else {
+            None
+        };
+        let mut opts =
+            toy_options(optimizer, workers, true, zero2, spec);
+        opts.compress = CodecSpec::parse(compress).unwrap();
+        let mut dist = DistTrainer::new(&params, opts).unwrap();
+        let mut grng = Rng::new(77);
+        for _ in 0..steps {
+            if overlap {
+                let grads: Vec<Vec<Tensor>> = (0..micro)
+                    .map(|_| rand_grads(&params, &mut grng))
+                    .collect();
+                let mut stream = dist.begin_step(micro, 1e-2);
+                for (i, g) in grads.iter().enumerate() {
+                    for j in (0..g.len()).rev() {
+                        stream.push_grad(i, j, &g[j]).unwrap();
+                    }
+                }
+                stream.finish(&mut params).unwrap();
+            } else {
+                let mut local = dist.grad_buffers();
+                for i in 0..micro {
+                    let g = rand_grads(&params, &mut grng);
+                    dist.layout()
+                        .accumulate(&mut local[i % workers], &g);
+                }
+                dist.step(&mut params, local, micro, 1e-2).unwrap();
+            }
+        }
+        params
+    }
+
+    #[test]
+    fn f16_compression_tracks_the_host_run() {
+        let reference = run_host("adamw", 6, 4);
+        for zero2 in [false, true] {
+            for overlap in [false, true] {
+                let got = run_dist_codec("adamw", 4, zero2, overlap,
+                                         "f16", 6, 4);
+                for (a, b) in reference.iter().zip(&got) {
+                    let d = a.max_abs_diff(b);
+                    assert!(d < 2e-2,
+                            "zero2={zero2} overlap={overlap} {}: \
+                             drift {d}", a.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topk_compression_learns_and_replicas_stay_identical() {
+        let (mut params, _) = toy();
+        let before = params.clone();
+        let mut opts = toy_options("adamw", 4, true, true, None);
+        opts.compress = CodecSpec::TopK { frac: 0.25 };
+        let mut dist = DistTrainer::new(&params, opts).unwrap();
+        let mut grng = Rng::new(7);
+        for _ in 0..4 {
+            let mut local = dist.grad_buffers();
+            for i in 0..3 {
+                let g = rand_grads(&params, &mut grng);
+                dist.layout().accumulate(&mut local[i % 4], &g);
+            }
+            dist.step(&mut params, local, 3, 1e-2).unwrap();
+        }
+        // Params moved and stayed finite.
+        for (a, b) in before.iter().zip(&params) {
+            assert!(a.max_abs_diff(b) > 0.0, "{}: frozen", a.name);
+        }
+        for p in &params {
+            assert!(p.data.iter().all(|v| v.is_finite()));
+        }
+        // Every replica holds identical bits (the dense all-gather
+        // under topk), and every rank carries dropped mass.
+        let flat0 = dist.slots[0].flat_params.clone();
+        for (r, slot) in dist.slots.iter().enumerate().skip(1) {
+            assert_eq!(slot.flat_params, flat0, "rank {r} diverged");
+        }
+        for (r, slot) in dist.slots.iter().enumerate() {
+            let res = slot.residual.as_ref().unwrap();
+            assert!(res.iter().any(|v| *v != 0.0),
+                    "rank {r}: empty residual after lossy steps");
+        }
+        // Wire bytes land on the codec class; the all-gather stays
+        // dense on its own class.
+        assert!(dist.stats().bytes(TrafficClass::CodecTopK) > 0);
+        assert!(dist.stats().bytes(TrafficClass::ParamGather) > 0);
+        assert_eq!(dist.stats().bytes(TrafficClass::GradScatter), 0);
+    }
+
+    #[test]
+    fn ef_residual_rides_the_checkpoint_roundtrip() {
+        let (mut params, meta) = toy();
+        let spec = Some(mini_spec(&params, &meta));
+        let make = |params: &[Tensor]| {
+            DistTrainer::new(params, DistOptions {
+                workers: 3,
+                optimizer: "adam_mini".into(),
+                spec: spec.clone(),
+                zero2: true,
+                compress: CodecSpec::TopK { frac: 0.25 },
+                ..Default::default()
+            }).unwrap()
+        };
+        let mut a = make(&params);
+        let mut grng = Rng::new(3);
+        let mut step =
+            |d: &mut DistTrainer, p: &mut Vec<Tensor>, r: &mut Rng| {
+                let mut local = d.grad_buffers();
+                let g = rand_grads(p, r);
+                d.layout().accumulate(&mut local[0], &g);
+                d.step(p, local, 1, 1e-2).unwrap();
+            };
+        for _ in 0..3 {
+            step(&mut a, &mut params, &mut grng);
+        }
+        let state = a.sync_state().unwrap();
+        for r in 0..3 {
+            let key = format!("rank{r}/ef/residual");
+            let t = state.get(&key).unwrap_or_else(|| {
+                panic!("missing {key}")
+            });
+            assert_eq!(t.numel(), a.layout().total);
+        }
+        // Import restores the residual: both engines continue
+        // bit-identically (the EF mass re-injects the same way).
+        let mut params_b = params.clone();
+        let mut b = make(&params_b);
+        b.import_state(&state).unwrap();
+        let mut grng_b = grng.clone();
+        step(&mut a, &mut params, &mut grng);
+        step(&mut b, &mut params_b, &mut grng_b);
+        assert_eq!(params, params_b);
+        // A residual entry with no residual slot to land in is loud.
+        let mut plain = DistTrainer::new(&params, DistOptions {
+            workers: 3,
+            optimizer: "adam_mini".into(),
+            spec: spec.clone(),
+            zero2: true,
+            ..Default::default()
+        }).unwrap();
+        assert!(plain.import_state(&state).is_err());
     }
 }

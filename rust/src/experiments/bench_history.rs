@@ -22,8 +22,9 @@ use crate::util::json::Json;
 
 use super::RESULTS_DIR;
 
-const BENCHES: [&str; 4] = ["BENCH_dist.json", "BENCH_overlap.json",
-                            "BENCH_optim.json", "BENCH_serve.json"];
+const BENCHES: [&str; 5] = ["BENCH_dist.json", "BENCH_overlap.json",
+                            "BENCH_optim.json", "BENCH_serve.json",
+                            "BENCH_compress.json"];
 
 /// Relative slowdown vs a measured baseline that fails `--gate`.
 pub const GATE_THRESHOLD: f64 = 0.15;

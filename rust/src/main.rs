@@ -47,7 +47,10 @@ fn usage() -> ! {
          channels,\nframed localhost TCP, or one OS process per rank \
          — socket\nrequires model=bigram), fault=SPEC \
          (deterministic fault\ninjection on socket transports, e.g. \
-         \"drop:0.2,dup:0.1\"),\nfault_seed=N,\n\
+         \"drop:0.2,dup:0.1\"),\nfault_seed=N, \
+         compress=none|f16|topk[:FRAC] (gradient codec\nunder the \
+         collectives: f16 quantization or sparse top-|g| with\nerror \
+         feedback; needs workers>1),\n\
          trace=FILE.jsonl (record every telemetry event; a \
          Chrome-trace\nsibling FILE.chrome.json is exported at the \
          end — load it in\nabout://tracing)\n\ntop: live dashboard \
@@ -88,6 +91,7 @@ fn cmd_report(args: &[String]) -> Result<()> {
     experiments::throughput::table1()?;
     experiments::throughput::table2()?;
     adam_mini::dist::traffic_report()?;
+    adam_mini::dist::compression_report()?;
     adam_mini::serve::memory_report()
 }
 
@@ -212,6 +216,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
             stats.bytes(TrafficClass::StateSync) as f64 / 1e3,
             stats.sim_link_secs() * 1e3
         );
+        let coded = per_step(TrafficClass::CodecF16)
+            + per_step(TrafficClass::CodecTopK);
+        if coded > 0.0 {
+            println!("codec ({}): {coded:.1} KB/step coded traffic",
+                     cfg.compress);
+        }
     }
     if let Some(t) = trainer.step_timing() {
         println!(

@@ -314,6 +314,15 @@ impl StateDict {
         Ok(sd)
     }
 
+    /// Remove and return an entry by key (`None` if absent). The ZeRO
+    /// state router uses this to peel engine-owned entries — e.g. the
+    /// `ef/residual` error-feedback residual — out of a rank's dict
+    /// before the remainder reaches the shard optimizer.
+    pub fn remove(&mut self, key: &str) -> Option<Tensor> {
+        let i = self.entries.iter().position(|t| t.name == key)?;
+        Some(self.entries.remove(i))
+    }
+
     /// The sub-dict of entries whose key starts with `prefix`, with
     /// the prefix stripped (ZeRO rank routing).
     pub fn sub_dict(&self, prefix: &str) -> StateDict {
@@ -538,6 +547,21 @@ mod tests {
         assert_eq!(r1.data("m", 2).unwrap(), &[3.0, 4.0]);
         assert_eq!(r1.data("v", 1).unwrap(), &[5.0]);
         assert_eq!(sd.sub_dict("rank9/").len(), 0);
+    }
+
+    #[test]
+    fn state_dict_remove_peels_one_entry() {
+        let mut sd = StateDict::new();
+        sd.insert("m", &[2], vec![1.0, 2.0]);
+        sd.insert("ef/residual", &[3], vec![0.5, 0.0, -0.5]);
+        let t = sd.remove("ef/residual").unwrap();
+        assert_eq!(t.data, vec![0.5, 0.0, -0.5]);
+        assert_eq!(sd.len(), 1);
+        assert!(sd.get("ef/residual").is_none());
+        assert!(sd.remove("ef/residual").is_none());
+        // The key can be re-inserted after removal.
+        sd.insert("ef/residual", &[1], vec![9.0]);
+        assert_eq!(sd.len(), 2);
     }
 
     #[test]

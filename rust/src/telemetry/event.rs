@@ -83,6 +83,22 @@ pub enum Event {
     /// A worker's comm thread hung up mid-step; the step is being
     /// abandoned with a typed error instead of a crash.
     CommHangup { step: u64, rank: usize },
+    /// A coded collective finished on one rank: `raw_bytes` dense f32
+    /// payload shrank to `wire_bytes` on the wire. `bucket == -1` is
+    /// the batch-path / whole-buffer collective; streamed buckets
+    /// carry their bucket index.
+    BucketCompressed {
+        step: u64,
+        rank: usize,
+        bucket: i64,
+        codec: &'static str,
+        raw_bytes: u64,
+        wire_bytes: u64,
+    },
+    /// Post-step L2 norm of one rank's error-feedback residual — the
+    /// observable that dropped gradient mass stays bounded instead of
+    /// accumulating.
+    ResidualNorm { step: u64, rank: usize, norm: f64 },
     /// A serve job entered the scheduler queue (serve subsystem).
     JobQueued { job: u64, tenant: String, kind: String, round: u64 },
     /// A serve job was granted a worker lease and started (or resumed)
@@ -121,6 +137,8 @@ impl Event {
             Event::RetrySent { .. } => "retry_sent",
             Event::CommTimeout { .. } => "comm_timeout",
             Event::CommHangup { .. } => "comm_hangup",
+            Event::BucketCompressed { .. } => "bucket_compressed",
+            Event::ResidualNorm { .. } => "residual_norm",
             Event::JobQueued { .. } => "job_queued",
             Event::JobStarted { .. } => "job_started",
             Event::JobPreempted { .. } => "job_preempted",
@@ -138,6 +156,18 @@ pub fn intern_class(name: &str) -> &'static str {
         }
     }
     "unknown"
+}
+
+/// Map a codec name back to the `&'static str` the
+/// [`Event::BucketCompressed`] variant carries (trace reconstruction,
+/// mirroring [`intern_class`]).
+pub fn intern_codec(name: &str) -> &'static str {
+    match name {
+        "f16" => "f16",
+        "topk" => "topk",
+        "none" => "none",
+        _ => "unknown",
+    }
 }
 
 /// An event stamped with its bus-assigned sequence number and

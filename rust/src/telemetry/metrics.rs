@@ -131,11 +131,28 @@ pub struct WorkerStat {
     pub messages: u64,
     pub collectives: u64,
     pub shard_steps: u64,
+    /// Dense f32 bytes that entered the codec (from
+    /// `Event::BucketCompressed`); zero when `compress=none`.
+    pub comp_raw: u64,
+    /// Wire bytes those payloads shrank to.
+    pub comp_wire: u64,
+    /// Latest error-feedback residual L2 norm, if the codec keeps one.
+    pub residual_norm: Option<f64>,
 }
 
 impl WorkerStat {
     pub fn total_bytes(&self) -> u64 {
         self.bytes.values().sum()
+    }
+
+    /// wire/raw compression ratio, or `None` before any coded
+    /// collective has landed.
+    pub fn comp_ratio(&self) -> Option<f64> {
+        if self.comp_raw == 0 {
+            None
+        } else {
+            Some(self.comp_wire as f64 / self.comp_raw as f64)
+        }
     }
 }
 
@@ -333,6 +350,17 @@ impl MetricsRegistry {
             Event::CommHangup { .. } => {
                 self.counter_add("comm_hangups", 1);
             }
+            Event::BucketCompressed { rank, raw_bytes, wire_bytes,
+                                      .. } => {
+                self.counter_add("buckets_compressed", 1);
+                let w = self.worker(*rank);
+                w.comp_raw += raw_bytes;
+                w.comp_wire += wire_bytes;
+            }
+            Event::ResidualNorm { rank, norm, .. } => {
+                let w = self.worker(*rank);
+                w.residual_norm = Some(*norm);
+            }
             Event::JobQueued { job, tenant, kind, .. } => {
                 self.counter_add("jobs_queued", 1);
                 let t = self.tenant(tenant);
@@ -421,6 +449,11 @@ impl MetricsRegistry {
                         ("collectives", Json::num(w.collectives as f64)),
                         ("shard_steps",
                          Json::num(w.shard_steps as f64)),
+                        ("comp_raw", Json::num(w.comp_raw as f64)),
+                        ("comp_wire", Json::num(w.comp_wire as f64)),
+                        ("residual_norm",
+                         w.residual_norm.map(Json::Num)
+                             .unwrap_or(Json::Null)),
                     ])
                 })
                 .collect(),
@@ -522,6 +555,37 @@ mod tests {
             step: 2, n_micro: 1, workers: 1,
         }));
         assert!(m.lanes.is_empty());
+    }
+
+    #[test]
+    fn compression_events_aggregate_per_worker() {
+        let mut m = MetricsRegistry::new();
+        assert_eq!(WorkerStat::default().comp_ratio(), None);
+        m.observe(&stamp(0, Event::BucketCompressed {
+            step: 1, rank: 0, bucket: -1, codec: "f16",
+            raw_bytes: 4000, wire_bytes: 2000,
+        }));
+        m.observe(&stamp(1, Event::BucketCompressed {
+            step: 1, rank: 0, bucket: 2, codec: "f16",
+            raw_bytes: 1000, wire_bytes: 500,
+        }));
+        m.observe(&stamp(2, Event::ResidualNorm {
+            step: 1, rank: 0, norm: 0.125,
+        }));
+        let w = &m.workers[&0];
+        assert_eq!((w.comp_raw, w.comp_wire), (5000, 2500));
+        assert_eq!(w.comp_ratio(), Some(0.5));
+        assert_eq!(w.residual_norm, Some(0.125));
+        assert_eq!(m.counter("buckets_compressed"), 2);
+        let j = m.to_json();
+        let ws = match j.get("workers").unwrap() {
+            Json::Arr(v) => v,
+            _ => panic!("workers should be an array"),
+        };
+        assert_eq!(
+            ws[0].get("comp_wire").unwrap().as_usize().unwrap(),
+            2500
+        );
     }
 
     #[test]

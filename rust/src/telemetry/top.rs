@@ -96,6 +96,7 @@ pub fn render_frame(m: &MetricsRegistry) -> String {
     }
     header.push("coll".to_string());
     header.push("msgs".to_string());
+    header.push("comp".to_string());
     let mut rows: Vec<Vec<String>> = Vec::new();
     for (rank, w) in &m.workers {
         let mut row = vec![
@@ -109,6 +110,10 @@ pub fn render_frame(m: &MetricsRegistry) -> String {
         }
         row.push(format!("{}", w.collectives));
         row.push(format!("{}", w.messages));
+        row.push(match w.comp_ratio() {
+            Some(r) => format!("{r:.2}x"),
+            None => "-".to_string(),
+        });
         rows.push(row);
     }
     if rows.is_empty() {
@@ -304,6 +309,23 @@ mod tests {
         assert!(frame.contains("1.5000"));
         assert!(frame.contains("[.~]"), "lane row missing: {frame}");
         assert!(!frame.contains('\x1b'), "plain frame must be ANSI-free");
+    }
+
+    #[test]
+    fn frame_shows_compression_ratio_when_coded() {
+        let mut m = MetricsRegistry::new();
+        let mut feed = |seq: u64, event: Event| {
+            m.observe(&Stamped { seq, t_us: seq as f64, event });
+        };
+        feed(0, Event::StepBegin { step: 1, n_micro: 1, workers: 1 });
+        feed(1, Event::BucketCompressed {
+            step: 1, rank: 0, bucket: -1, codec: "f16",
+            raw_bytes: 8000, wire_bytes: 4000,
+        });
+        feed(2, Event::ResidualNorm { step: 1, rank: 0, norm: 0.1 });
+        let frame = render_frame(&m);
+        assert!(frame.contains("comp"), "{frame}");
+        assert!(frame.contains("0.50x"), "{frame}");
     }
 
     #[test]

@@ -18,7 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
-use super::event::{intern_class, Event, Stamped};
+use super::event::{intern_class, intern_codec, Event, Stamped};
 
 /// Trace schema version written into every line.
 pub const TRACE_VERSION: u64 = 1;
@@ -110,6 +110,21 @@ pub fn encode_line(st: &Stamped) -> String {
         Event::CommHangup { step, rank } => {
             kv.push(("step", Json::num(*step as f64)));
             kv.push(("rank", Json::num(*rank as f64)));
+        }
+        Event::BucketCompressed {
+            step, rank, bucket, codec, raw_bytes, wire_bytes,
+        } => {
+            kv.push(("step", Json::num(*step as f64)));
+            kv.push(("rank", Json::num(*rank as f64)));
+            kv.push(("bucket", Json::num(*bucket as f64)));
+            kv.push(("codec", Json::str(*codec)));
+            kv.push(("raw_bytes", Json::num(*raw_bytes as f64)));
+            kv.push(("wire_bytes", Json::num(*wire_bytes as f64)));
+        }
+        Event::ResidualNorm { step, rank, norm } => {
+            kv.push(("step", Json::num(*step as f64)));
+            kv.push(("rank", Json::num(*rank as f64)));
+            kv.push(("norm", Json::num(*norm)));
         }
         Event::JobQueued { job, tenant, kind, round } => {
             kv.push(("job", Json::num(*job as f64)));
@@ -263,6 +278,19 @@ pub fn decode_record(line: &str) -> Result<TraceLine> {
         "comm_hangup" => Event::CommHangup {
             step: step(&j)?,
             rank: rank(&j)?,
+        },
+        "bucket_compressed" => Event::BucketCompressed {
+            step: step(&j)?,
+            rank: rank(&j)?,
+            bucket: j.get("bucket")?.as_f64()? as i64,
+            codec: intern_codec(j.get("codec")?.as_str()?),
+            raw_bytes: j.get("raw_bytes")?.as_usize()? as u64,
+            wire_bytes: j.get("wire_bytes")?.as_usize()? as u64,
+        },
+        "residual_norm" => Event::ResidualNorm {
+            step: step(&j)?,
+            rank: rank(&j)?,
+            norm: j.get("norm")?.as_f64()?,
         },
         "job_queued" => Event::JobQueued {
             job: j.get("job")?.as_usize()? as u64,
@@ -527,6 +555,11 @@ mod tests {
                                  class: "grad_reduce", seq: 18,
                                  attempts: 10 },
             Event::CommHangup { step: 1, rank: 3 },
+            Event::BucketCompressed {
+                step: 1, rank: 0, bucket: -1, codec: "topk",
+                raw_bytes: 4096, wire_bytes: 2056,
+            },
+            Event::ResidualNorm { step: 1, rank: 0, norm: 0.75 },
             Event::JobQueued { job: 4, tenant: "t0".into(),
                                kind: "sft".into(), round: 0 },
             Event::JobStarted { job: 4, tenant: "t0".into(),

@@ -60,7 +60,7 @@ fn corpus_batcher(seed: u64) -> Batcher {
 
 struct RunOut {
     loss_bits: Vec<u32>,
-    bytes: [u64; 5],
+    bytes: [u64; TrafficClass::ALL.len()],
     retry_msgs: u64,
     data_msgs: u64,
 }
@@ -102,7 +102,7 @@ fn run(transport: TransportKind, workers: usize, zero2: bool,
         loss_bits.push(loss.to_bits());
     }
     let stats = dist.stats();
-    let mut bytes = [0u64; 5];
+    let mut bytes = [0u64; TrafficClass::ALL.len()];
     let mut data_msgs = 0;
     for (i, c) in TrafficClass::ALL.iter().enumerate() {
         bytes[i] = stats.bytes(*c);
